@@ -1,0 +1,53 @@
+//! Reproduce the paper's §2.2 LeNet-5 study: sweep the BMF rank over
+//! FC1 and print the compression-ratio / cost / sparsity trade-off
+//! (Table 1 left's structure), including tiled variants (Figure 6).
+//!
+//!     cargo run --release --example compress_lenet
+
+use lrbi::bmf::algorithm1::{algorithm1, Algorithm1Config};
+use lrbi::bmf::compression_ratio;
+use lrbi::models::lenet::{FC1_COLS, FC1_ROWS};
+use lrbi::tensor::Matrix;
+use lrbi::tiling::{compress_tiled, equal_budget_rank, RankPlan, TilePlan};
+use lrbi::util::rng::Rng;
+
+fn main() -> lrbi::Result<()> {
+    let mut rng = Rng::new(2);
+    let w = Matrix::gaussian(FC1_ROWS, FC1_COLS, 0.0, 0.05, &mut rng);
+    let s = 0.95;
+
+    println!("rank sweep on FC1 ({FC1_ROWS}x{FC1_COLS}), S={s}:");
+    println!("{:>5} {:>10} {:>12} {:>10} {:>8}", "k", "ratio", "index bytes", "cost", "S_a");
+    for k in [4usize, 8, 16, 32, 64] {
+        let f = algorithm1(&w, &Algorithm1Config::new(k, s))?;
+        println!(
+            "{k:>5} {:>9.1}x {:>12} {:>10.2} {:>8.4}",
+            f.compression_ratio(),
+            f.index_bytes(),
+            f.cost,
+            f.achieved_sparsity
+        );
+    }
+
+    println!("\ntiled factorization at equal index budget (Figure 6):");
+    for (plan, label) in [
+        (TilePlan::new(1, 1), "1x1"),
+        (TilePlan::new(2, 2), "2x2"),
+        (TilePlan::new(4, 4), "4x4"),
+    ] {
+        let k = equal_budget_rank(FC1_ROWS, FC1_COLS, plan, 64);
+        let base = Algorithm1Config::new(k, s);
+        let t = compress_tiled(&w, plan, &RankPlan::Uniform(k), &base)?;
+        println!(
+            "  {label}: rank {k:>3}, {:>7} index bits ({:.1}x), cost {:.2}",
+            t.index_bits(),
+            t.compression_ratio(),
+            t.cost()
+        );
+    }
+    println!(
+        "\n(single-tile k=64 reference ratio: {:.1}x)",
+        compression_ratio(FC1_ROWS, FC1_COLS, 64)
+    );
+    Ok(())
+}

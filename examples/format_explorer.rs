@@ -1,0 +1,72 @@
+//! Figure 1 explorer: walk the paper's worked 5x5 example through
+//! every index representation, printing each intermediate (Eqs. 1-6),
+//! then do the same for an arbitrary matrix from the CLI seed.
+//!
+//!     cargo run --release --example format_explorer [seed]
+
+use lrbi::bmf::algorithm1::{algorithm1, Algorithm1Config};
+use lrbi::formats::binary::BinaryIndex;
+use lrbi::formats::csr::Csr16;
+use lrbi::formats::relative::Csr5Relative;
+use lrbi::formats::viterbi;
+use lrbi::pruning::magnitude::{magnitude_mask, paper_example_weights};
+use lrbi::tensor::Matrix;
+use lrbi::util::bits::BitMatrix;
+use lrbi::util::rng::Rng;
+
+fn print_mask(title: &str, m: &BitMatrix) {
+    println!("{title}:");
+    for i in 0..m.rows() {
+        let row: String = (0..m.cols()).map(|j| if m.get(i, j) { '1' } else { '0' }).collect();
+        println!("  {row}");
+    }
+}
+
+fn main() -> lrbi::Result<()> {
+    println!("== the paper's worked example (Eqs. 1-6) ==");
+    let w = paper_example_weights();
+    // Eq. (2): threshold 0.7
+    let mask = {
+        let data = w.data();
+        BitMatrix::from_fn(5, 5, |i, j| data[i * 5 + j].abs() >= 0.7)
+    };
+    print_mask("I (Eq. 2)", &mask);
+    let csr = Csr16::encode(&mask);
+    println!("CSR: IA={:?} JA={:?}", csr.ia, csr.ja);
+
+    let mut cfg = Algorithm1Config::new(2, mask.sparsity());
+    cfg.sp_grid = (1..10).map(|i| i as f64 * 0.1).collect();
+    let f = algorithm1(&w, &cfg)?;
+    print_mask("I_p (factor)", &f.ip);
+    print_mask("I_z (factor)", &f.iz);
+    print_mask("I_a = I_p (x) I_z", &f.mask);
+    println!(
+        "mismatched bits vs I: {} (paper's example: 2)",
+        f.mask.hamming(&mask)
+    );
+
+    println!("\n== random matrix comparison ==");
+    let seed: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(3);
+    let mut rng = Rng::new(seed);
+    let w = Matrix::gaussian(64, 80, 0.0, 1.0, &mut rng);
+    let s = 0.9;
+    let (mask, stats) = magnitude_mask(&w, s);
+    println!("64x80 @ S={:.2} (threshold {:.3}):", stats.sparsity, stats.threshold);
+    let bin = BinaryIndex::encode(&mask);
+    let c16 = Csr16::encode(&mask);
+    let c5 = Csr5Relative::encode(&mask);
+    let vit = viterbi::compress(&w, s)?;
+    let f = algorithm1(&w, &Algorithm1Config::new(4, s))?;
+    println!("  binary   : {:>6} B (exact)", bin.index_bytes());
+    println!("  CSR16    : {:>6} B (exact)", c16.index_bytes());
+    println!("  CSR5 rel : {:>6} B (exact, {} entries)", c5.index_bytes(), c5.entry_count());
+    println!("  viterbi  : {:>6} B (approx mask, cost {:.2})", vit.index.index_bytes(), vit.cost);
+    println!("  low-rank : {:>6} B (approx mask, cost {:.2}, k=4)", f.index_bytes(), f.raw_cost);
+    // exact formats must round-trip; approximate ones match their own decode
+    assert_eq!(bin.decode(), mask);
+    assert_eq!(c16.decode()?, mask);
+    assert_eq!(c5.decode(), mask);
+    assert_eq!(vit.index.decode(), vit.mask);
+    println!("round-trips OK");
+    Ok(())
+}

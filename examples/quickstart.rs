@@ -1,0 +1,38 @@
+//! Quickstart: compress one weight matrix's pruning index with
+//! Algorithm 1 and compare against every other index format.
+//!
+//!     cargo run --release --example quickstart
+
+use lrbi::bmf::algorithm1::{algorithm1, Algorithm1Config};
+use lrbi::formats::format_comparison;
+use lrbi::formats::lowrank::LowRankIndex;
+use lrbi::tensor::Matrix;
+use lrbi::util::rng::Rng;
+
+fn main() -> lrbi::Result<()> {
+    // A LeNet-5 FC1-shaped layer (800x500) with Gaussian "pretrained"
+    // weights — the paper's §2.2 workload.
+    let mut rng = Rng::new(1);
+    let w = Matrix::gaussian(800, 500, 0.0, 0.05, &mut rng);
+
+    // Algorithm 1: NMF -> threshold -> sweep S_p, binary-search S_z.
+    let cfg = Algorithm1Config::new(16, 0.95);
+    let f = algorithm1(&w, &cfg)?;
+    println!("factorized FC1 index: rank {}  S_p {:.2}  S_z {:.2}", f.rank, f.sp, f.sz);
+    println!("  achieved sparsity : {:.4} (target 0.95)", f.achieved_sparsity);
+    println!("  compression ratio : {:.1}x (paper: 19.2x)", f.compression_ratio());
+    println!("  index size        : {} bytes (paper: 2.6KB)", f.index_bytes());
+    println!("  cost (unintended) : {:.2}", f.cost);
+
+    // Round-trip through the storable format.
+    let enc = LowRankIndex::encode(&f);
+    assert_eq!(enc.decode()?, f.mask);
+    println!("  serialize/decode  : OK ({} payload bytes)", enc.index_bytes());
+
+    // Compare against binary / CSR16 / CSR5 / Viterbi (Table 1 right).
+    println!("\nTable 1 (right) — FC1 index size by format:");
+    for row in format_comparison(&w, 0.95, f.index_bits(), "k=16") {
+        println!("  {:<12} {:>8.1} KB  {}", row.name, row.kb(), row.comment);
+    }
+    Ok(())
+}

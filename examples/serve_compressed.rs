@@ -1,0 +1,82 @@
+//! Serve a compressed model through the PJRT artifact path with
+//! dynamic batching, reporting latency percentiles and throughput —
+//! the deployment story the paper motivates (regular, parallel index
+//! decompression on the request path).
+//!
+//!     make artifacts && cargo run --release --example serve_compressed
+
+use lrbi::bmf::algorithm1::{algorithm1, Algorithm1Config};
+use lrbi::coordinator::metrics::Metrics;
+use lrbi::runtime::artifacts::{ArtifactSet, GEOMETRY};
+use lrbi::runtime::client::Runtime;
+use lrbi::serve::batcher::BatchPolicy;
+use lrbi::serve::engine::{MlpParams, PjrtBackend, ServingEngine};
+use lrbi::tensor::Matrix;
+use lrbi::util::rng::Rng;
+use lrbi::util::stats::percentile;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> lrbi::Result<()> {
+    let g = GEOMETRY;
+    // 1. Compress FC1's index with Algorithm 1 (k = artifact rank).
+    let params = MlpParams::init(5);
+    let f = algorithm1(&params.w1, &Algorithm1Config::new(g.rank, 0.95))?;
+    println!(
+        "compressed FC1 index: {:.1}x ({} bytes), sparsity {:.3}",
+        f.compression_ratio(),
+        f.index_bytes(),
+        f.achieved_sparsity
+    );
+    let ip = Matrix::from_vec(g.hidden0, g.rank, f.ip.to_f32())?;
+    let iz = Matrix::from_vec(g.rank, g.hidden1, f.iz.to_f32())?;
+
+    // 2. Start the serving engine (PJRT backend built in-thread).
+    let metrics = Arc::new(Metrics::new());
+    let params2 = params.clone();
+    let engine = ServingEngine::start_with(
+        move || {
+            let rt = Runtime::new(ArtifactSet::open_default()?)?;
+            PjrtBackend::new(rt, &params2, &ip, &iz)
+        },
+        BatchPolicy { max_batch: g.batch, max_wait: Duration::from_millis(2) },
+        Arc::clone(&metrics),
+    );
+
+    // 3. Closed-loop load: 8 clients x N requests, latency tracked.
+    let n_clients = 8usize;
+    let per_client = if std::env::var("LRBI_QUICK").is_ok() { 32 } else { 128 };
+    let client = engine.client();
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let cl = client.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(50 + c as u64);
+                let mut lat = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let x: Vec<f32> = (0..GEOMETRY.input_dim).map(|_| rng.next_f32()).collect();
+                    let t = Instant::now();
+                    cl.call(x).unwrap().unwrap();
+                    lat.push(t.elapsed().as_secs_f64() * 1e3);
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut lat: Vec<f64> = Vec::new();
+    for h in handles {
+        lat.extend(h.join().expect("client thread"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = metrics.snapshot();
+    println!("\nserved {} requests in {:.2}s = {:.0} req/s", snap.requests, wall, snap.requests as f64 / wall);
+    println!("batches: {} (mean size {:.1})", snap.batches, snap.mean_batch_size());
+    println!(
+        "latency ms: p50 {:.2}  p90 {:.2}  p99 {:.2}",
+        percentile(&mut lat.clone(), 0.5),
+        percentile(&mut lat.clone(), 0.9),
+        percentile(&mut lat, 0.99)
+    );
+    Ok(())
+}

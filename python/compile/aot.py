@@ -1,0 +1,99 @@
+"""AOT lowering: JAX/Pallas entry points -> HLO text artifacts.
+
+Interchange format is HLO *text*, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the xla_extension
+0.5.1 bundled with the published ``xla`` 0.1.6 crate rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``); Python never appears on
+the Rust request path.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import nmf_update
+
+# NMF offload tile geometry: FC1 (800x500) tiled 4x4 -> 200x125 blocks,
+# rank 32 (the table-2 "tiled" configuration, scaled to FC1).
+NMF_TILE_M = 200
+NMF_TILE_N = 125
+NMF_RANK = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def nmf_step_entry(v, w, h):
+    w2, h2 = nmf_update.nmf_step(v, w, h)
+    return (w2, h2)
+
+
+def entries():
+    """(name, fn, example_args) for every artifact."""
+    z = jnp.zeros
+    nmf_args = (
+        z((NMF_TILE_M, NMF_TILE_N), jnp.float32),
+        z((NMF_TILE_M, NMF_RANK), jnp.float32),
+        z((NMF_RANK, NMF_TILE_N), jnp.float32),
+    )
+    return [
+        ("train_step", model.train_step, model.example_args_train()),
+        ("predict", model.predict, model.example_args_predict()),
+        ("decode_matmul", model.decode_matmul_entry, model.example_args_decode()),
+        ("nmf_step", nmf_step_entry, nmf_args),
+    ]
+
+
+def shape_str(args):
+    return ";".join(
+        "x".join(str(d) for d in a.shape) if a.shape else "scalar" for a in args
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single entry by name")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name, fn, ex_args in entries():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*ex_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest_lines.append(
+            f"{name} inputs={len(ex_args)} in_shapes={shape_str(ex_args)} "
+            f"sha256={digest} bytes={len(text)}"
+        )
+        print(f"wrote {path}: {len(text)} chars sha={digest}")
+
+    if not args.only:
+        with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(manifest_lines) + "\n")
+        print(f"wrote {args.out_dir}/manifest.txt ({len(manifest_lines)} entries)")
+
+
+if __name__ == "__main__":
+    main()

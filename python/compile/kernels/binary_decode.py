@@ -1,0 +1,127 @@
+"""L1 Pallas kernels for low-rank binary index decompression.
+
+The paper's deployment claim is that the pruning mask can be
+*decompressed by a binary matrix multiplication* — a regular, fully
+parallel operation — instead of a CSR gather or a sequential Viterbi
+decoder. These kernels are that decompressor:
+
+* ``reconstruct_mask``  — I_a = min(I_p @ I_z, 1), tiled over columns.
+* ``decode_matmul``     — the fused serving hot path
+                          y = x @ (W o I_a): the mask tile is decoded,
+                          applied to the weight tile, and consumed by
+                          the matmul *without ever materialising the
+                          full mask in HBM*.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): I_p/I_z live in VMEM
+(k(m+n) bits — tiny), each grid step decodes one (m x BN) mask tile on
+the MXU and fuses the apply into the weight load of the main matmul.
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; structure, not wallclock, is what we optimise here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n, preferred=128):
+    """Largest divisor of ``n`` that is <= preferred (grid must tile n)."""
+    best = 1
+    for d in range(1, n + 1):
+        if n % d == 0 and d <= preferred:
+            best = d
+    return best
+
+
+def _mask_kernel(ip_ref, iz_ref, o_ref):
+    prod = jnp.dot(ip_ref[...], iz_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.minimum(prod, 1.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def reconstruct_mask(ip, iz, block_n=None):
+    """Decode the full binary mask I_a = min(I_p @ I_z, 1).
+
+    ip: (m, k) float {0,1};  iz: (k, n) float {0,1}  ->  (m, n) float {0,1}.
+    """
+    m, k = ip.shape
+    k2, n = iz.shape
+    assert k == k2, f"rank mismatch {k} vs {k2}"
+    bn = block_n or _pick_block(n)
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _mask_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            pl.BlockSpec((k, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), ip.dtype),
+        interpret=True,
+    )(ip, iz)
+
+
+def _decode_matmul_kernel(ip_ref, iz_ref, w_ref, x_ref, o_ref):
+    # Decode one (m x BN) mask tile on the fly ...
+    prod = jnp.dot(ip_ref[...], iz_ref[...], preferred_element_type=jnp.float32)
+    mask = jnp.minimum(prod, 1.0).astype(w_ref.dtype)
+    # ... fuse the apply into the weight tile and feed the MXU matmul.
+    weff = w_ref[...] * mask
+    o_ref[...] = jnp.dot(x_ref[...], weff, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def decode_matmul(ip, iz, w, x, block_n=None):
+    """Fused mask-decode + masked matmul: y = x @ (W o min(I_p I_z, 1)).
+
+    ip: (m, k);  iz: (k, n);  w: (m, n);  x: (b, m)  ->  y: (b, n).
+    """
+    m, k = ip.shape
+    _, n = iz.shape
+    b = x.shape[0]
+    assert w.shape == (m, n), f"w shape {w.shape} != {(m, n)}"
+    assert x.shape[1] == m, f"x inner dim {x.shape[1]} != {m}"
+    bn = block_n or _pick_block(n)
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _decode_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            pl.BlockSpec((k, bn), lambda j: (0, j)),
+            pl.BlockSpec((m, bn), lambda j: (0, j)),
+            pl.BlockSpec((b, m), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        interpret=True,
+    )(ip, iz, w, x)
+
+
+def vmem_estimate_bytes(m, k, n, b, block_n=128, dtype_bytes=4):
+    """Static VMEM footprint estimate for one decode_matmul grid step.
+
+    Used by DESIGN.md §Perf and the fig-/perf-benches to reason about
+    real-TPU block sizing (interpret mode gives no hardware signal).
+    """
+    bn = min(block_n, n)
+    ip_b = m * k * dtype_bytes
+    iz_b = k * bn * dtype_bytes
+    w_b = m * bn * dtype_bytes
+    x_b = b * m * dtype_bytes
+    o_b = b * bn * dtype_bytes
+    return ip_b + iz_b + w_b + x_b + o_b
+
+
+def mxu_utilization_estimate(m, k, bn=128, mxu=128):
+    """Fraction of MXU lanes fed by the decode matmul (m x k)·(k x bn).
+
+    k >= mxu saturates the systolic array; smaller k relies on the
+    fused main matmul (m-dim) to keep utilisation high.
+    """
+    return min(k, mxu) / mxu * min(bn, mxu) / mxu

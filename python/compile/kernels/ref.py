@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the L1 correctness contract).
+
+These are the mathematical definitions straight from the paper:
+
+* ``mask_ref``           — Eq. (3): boolean product I_a = I_p (x) I_z,
+                           realised in float as min(I_p @ I_z, 1).
+* ``decode_matmul_ref``  — serving hot path: y = x @ (W o I_a).
+* ``nmf_update_h_ref`` / ``nmf_update_w_ref``
+                         — Lee-Seung multiplicative updates used by
+                           Algorithm 1 step 2 (NMF of the magnitude
+                           matrix M).
+
+pytest + hypothesis compare the Pallas kernels against these across a
+sweep of shapes and dtypes (python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-9
+
+
+def mask_ref(ip, iz):
+    """Boolean product of binary factor matrices, as float {0,1}."""
+    prod = jnp.matmul(ip.astype(jnp.float32), iz.astype(jnp.float32))
+    return jnp.minimum(prod, 1.0)
+
+
+def decode_matmul_ref(ip, iz, w, x):
+    """y = x @ (W o mask) with the mask decoded from (I_p, I_z)."""
+    mask = mask_ref(ip, iz).astype(w.dtype)
+    return jnp.matmul(x, w * mask)
+
+
+def nmf_update_h_ref(v, w, h, eps=EPS):
+    """H <- H * (W^T V) / (W^T W H + eps)."""
+    num = jnp.matmul(w.T, v)
+    den = jnp.matmul(jnp.matmul(w.T, w), h) + eps
+    return h * num / den
+
+
+def nmf_update_w_ref(v, w, h, eps=EPS):
+    """W <- W * (V H^T) / (W H H^T + eps)."""
+    num = jnp.matmul(v, h.T)
+    den = jnp.matmul(w, jnp.matmul(h, h.T)) + eps
+    return w * num / den
+
+
+def nmf_objective_ref(v, w, h):
+    """Frobenius objective ||V - WH||_F^2 (monotone under the updates)."""
+    r = v - jnp.matmul(w, h)
+    return jnp.sum(r * r)

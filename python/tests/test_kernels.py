@@ -1,0 +1,197 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py.
+This is the CORE correctness signal for the compiled artifacts.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import binary_decode, nmf_update, ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand_binary(rng, shape, density=0.4):
+    return (rng.random(shape) < density).astype(np.float32)
+
+
+def rand_f32(rng, shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------- mask decode
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(2, 48),
+    k=st.integers(1, 16),
+    n=st.integers(2, 48),
+    density=st.floats(0.05, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_reconstruct_mask_matches_ref(m, k, n, density, seed):
+    rng = np.random.default_rng(seed)
+    ip = rand_binary(rng, (m, k), density)
+    iz = rand_binary(rng, (k, n), density)
+    got = np.asarray(binary_decode.reconstruct_mask(jnp.asarray(ip), jnp.asarray(iz)))
+    want = np.asarray(ref.mask_ref(jnp.asarray(ip), jnp.asarray(iz)))
+    assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_reconstruct_mask_is_binary():
+    rng = np.random.default_rng(0)
+    ip = rand_binary(rng, (40, 8))
+    iz = rand_binary(rng, (8, 30))
+    mask = np.asarray(binary_decode.reconstruct_mask(jnp.asarray(ip), jnp.asarray(iz)))
+    assert set(np.unique(mask)).issubset({0.0, 1.0})
+
+
+def test_reconstruct_mask_paper_example():
+    """Eq. (5) -> Eq. (6) of the paper, verbatim."""
+    ip = jnp.array([[0, 1], [1, 0], [0, 1], [0, 1], [1, 0]], jnp.float32)
+    iz = jnp.array([[1, 0, 1, 1, 0], [0, 1, 1, 0, 1]], jnp.float32)
+    want = np.array(
+        [
+            [0, 1, 1, 0, 1],
+            [1, 0, 1, 1, 0],
+            [0, 1, 1, 0, 1],
+            [0, 1, 1, 0, 1],
+            [1, 0, 1, 1, 0],
+        ],
+        np.float32,
+    )
+    got = np.asarray(binary_decode.reconstruct_mask(ip, iz))
+    assert_allclose(got, want)
+
+
+def test_reconstruct_mask_rank_overlap_clamps():
+    # Two overlapping rank-1 terms must still give a {0,1} mask.
+    ip = jnp.ones((4, 3), jnp.float32)
+    iz = jnp.ones((3, 5), jnp.float32)
+    got = np.asarray(binary_decode.reconstruct_mask(ip, iz))
+    assert_allclose(got, np.ones((4, 5), np.float32))
+
+
+@pytest.mark.parametrize("block_n", [1, 2, 5, 10])
+def test_reconstruct_mask_block_size_invariance(block_n):
+    rng = np.random.default_rng(1)
+    ip = rand_binary(rng, (16, 4))
+    iz = rand_binary(rng, (4, 10))
+    base = np.asarray(binary_decode.reconstruct_mask(jnp.asarray(ip), jnp.asarray(iz)))
+    got = np.asarray(
+        binary_decode.reconstruct_mask(jnp.asarray(ip), jnp.asarray(iz), block_n=block_n)
+    )
+    assert_allclose(got, base)
+
+
+# ------------------------------------------------------------- decode matmul
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(2, 32),
+    k=st.integers(1, 8),
+    n=st.integers(2, 32),
+    b=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_matmul_matches_ref(m, k, n, b, seed):
+    rng = np.random.default_rng(seed)
+    ip = jnp.asarray(rand_binary(rng, (m, k)))
+    iz = jnp.asarray(rand_binary(rng, (k, n)))
+    w = jnp.asarray(rand_f32(rng, (m, n)))
+    x = jnp.asarray(rand_f32(rng, (b, m)))
+    got = np.asarray(binary_decode.decode_matmul(ip, iz, w, x))
+    want = np.asarray(ref.decode_matmul_ref(ip, iz, w, x))
+    assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_matmul_zero_factors_zero_output():
+    ip = jnp.zeros((8, 4), jnp.float32)
+    iz = jnp.zeros((4, 6), jnp.float32)
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rand_f32(rng, (8, 6)))
+    x = jnp.asarray(rand_f32(rng, (3, 8)))
+    got = np.asarray(binary_decode.decode_matmul(ip, iz, w, x))
+    assert_allclose(got, np.zeros((3, 6), np.float32))
+
+
+def test_decode_matmul_full_mask_equals_dense():
+    rng = np.random.default_rng(3)
+    ip = jnp.ones((8, 2), jnp.float32)
+    iz = jnp.ones((2, 6), jnp.float32)
+    w = jnp.asarray(rand_f32(rng, (8, 6)))
+    x = jnp.asarray(rand_f32(rng, (4, 8)))
+    got = np.asarray(binary_decode.decode_matmul(ip, iz, w, x))
+    want = np.asarray(jnp.matmul(x, w))
+    assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------- NMF update
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(2, 24),
+    k=st.integers(1, 6),
+    n=st.integers(2, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_nmf_updates_match_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(np.abs(rand_f32(rng, (m, n))) + 0.01)
+    w = jnp.asarray(np.abs(rand_f32(rng, (m, k))) + 0.01)
+    h = jnp.asarray(np.abs(rand_f32(rng, (k, n))) + 0.01)
+    got_h = np.asarray(nmf_update.nmf_update_h(v, w, h))
+    want_h = np.asarray(ref.nmf_update_h_ref(v, w, h))
+    assert_allclose(got_h, want_h, rtol=2e-4, atol=1e-6)
+    got_w = np.asarray(nmf_update.nmf_update_w(v, w, h))
+    want_w = np.asarray(ref.nmf_update_w_ref(v, w, h))
+    assert_allclose(got_w, want_w, rtol=2e-4, atol=1e-6)
+
+
+def test_nmf_objective_monotone():
+    """Lee-Seung updates never increase ||V - WH||_F^2."""
+    rng = np.random.default_rng(7)
+    v = jnp.asarray(np.abs(rng.standard_normal((30, 20))).astype(np.float32) + 0.05)
+    w = jnp.asarray(np.abs(rng.standard_normal((30, 5))).astype(np.float32) + 0.05)
+    h = jnp.asarray(np.abs(rng.standard_normal((5, 20))).astype(np.float32) + 0.05)
+    prev = float(ref.nmf_objective_ref(v, w, h))
+    for _ in range(15):
+        w, h = nmf_update.nmf_step(v, w, h)
+        cur = float(ref.nmf_objective_ref(v, w, h))
+        assert cur <= prev * (1 + 1e-4), f"objective rose: {prev} -> {cur}"
+        prev = cur
+
+
+def test_nmf_preserves_nonnegativity():
+    rng = np.random.default_rng(8)
+    v = jnp.asarray(np.abs(rng.standard_normal((12, 10))).astype(np.float32))
+    w = jnp.asarray(np.abs(rng.standard_normal((12, 3))).astype(np.float32) + 0.01)
+    h = jnp.asarray(np.abs(rng.standard_normal((3, 10))).astype(np.float32) + 0.01)
+    for _ in range(5):
+        w, h = nmf_update.nmf_step(v, w, h)
+    assert np.all(np.asarray(w) >= 0)
+    assert np.all(np.asarray(h) >= 0)
+
+
+# --------------------------------------------------- static perf-model checks
+
+
+def test_vmem_estimate_within_budget():
+    # The FC1 serving tile must fit comfortably in 16 MiB VMEM.
+    bytes_ = binary_decode.vmem_estimate_bytes(m=800, k=256, n=500, b=64, block_n=128)
+    assert bytes_ < 4 * 2**20, f"VMEM estimate too large: {bytes_}"
+
+
+def test_mxu_estimate_monotone_in_rank():
+    utils = [binary_decode.mxu_utilization_estimate(800, k) for k in (4, 16, 64, 128, 256)]
+    assert utils == sorted(utils)
+    assert utils[-1] == 1.0

@@ -1,0 +1,94 @@
+"""L2 correctness: model shapes, masking semantics, training dynamics."""
+
+import numpy as np
+from numpy.testing import assert_allclose
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def small_batch(seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((model.BATCH, model.INPUT_DIM)).astype(np.float32))
+    y = np.zeros((model.BATCH, model.NUM_CLASSES), np.float32)
+    y[np.arange(model.BATCH), rng.integers(0, model.NUM_CLASSES, model.BATCH)] = 1.0
+    return x, jnp.asarray(y)
+
+
+def test_forward_shapes():
+    params = model.init_params(jax.random.PRNGKey(0))
+    ip, iz = model.dense_mask_factors()
+    x, _ = small_batch()
+    logits = model.forward(params, ip, iz, x)
+    assert logits.shape == (model.BATCH, model.NUM_CLASSES)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_dense_factors_equal_unmasked():
+    """All-ones factors must reproduce the dense (unmasked) model."""
+    params = model.init_params(jax.random.PRNGKey(1))
+    ip, iz = model.dense_mask_factors()
+    x, _ = small_batch(1)
+    w0, b0, w1, b1, w2, b2 = params
+    h0 = jax.nn.relu(x @ w0 + b0)
+    h1 = jax.nn.relu(h0 @ w1 + b1)
+    want = h1 @ w2 + b2
+    got = model.forward(params, ip, iz, x)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_train_step_reduces_loss():
+    params = model.init_params(jax.random.PRNGKey(2))
+    ip, iz = model.dense_mask_factors()
+    x, y = small_batch(2)
+    lr = jnp.array([0.1], jnp.float32)
+    flat = params
+    losses = []
+    for _ in range(30):
+        out = model.train_step(*flat, ip, iz, x, y, lr)
+        losses.append(float(out[0]))
+        flat = out[1:]
+    assert losses[-1] < losses[0] * 0.7, f"no learning: {losses[0]} -> {losses[-1]}"
+
+
+def test_masked_gradient_respects_mask():
+    """dL/dW1 must be zero wherever the decoded mask is zero."""
+    params = model.init_params(jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    ip = jnp.asarray((rng.random((model.HIDDEN0, model.RANK)) < 0.2).astype(np.float32))
+    iz = jnp.asarray((rng.random((model.RANK, model.HIDDEN1)) < 0.2).astype(np.float32))
+    x, y = small_batch(3)
+    grads = jax.grad(model.loss_fn)(params, ip, iz, x, y)
+    g_w1 = np.asarray(grads[2])
+    mask = np.asarray(ref.mask_ref(ip, iz))
+    assert np.all(g_w1[mask == 0.0] == 0.0)
+    # and some gradient does flow where the mask is 1
+    assert np.any(g_w1[mask == 1.0] != 0.0)
+
+
+def test_masked_forward_ignores_pruned_weights():
+    """Perturbing W1 where mask==0 must not change the logits."""
+    params = model.init_params(jax.random.PRNGKey(4))
+    rng = np.random.default_rng(4)
+    ip = jnp.asarray((rng.random((model.HIDDEN0, model.RANK)) < 0.3).astype(np.float32))
+    iz = jnp.asarray((rng.random((model.RANK, model.HIDDEN1)) < 0.3).astype(np.float32))
+    x, _ = small_batch(4)
+    base = np.asarray(model.forward(params, ip, iz, x))
+    mask = np.asarray(ref.mask_ref(ip, iz))
+    w0, b0, w1, b1, w2, b2 = params
+    noise = jnp.asarray(rng.standard_normal(w1.shape).astype(np.float32)) * (1.0 - mask)
+    pert = (w0, b0, w1 + noise, b1, w2, b2)
+    got = np.asarray(model.forward(pert, ip, iz, x))
+    assert_allclose(got, base, rtol=1e-5, atol=1e-5)
+
+
+def test_predict_entry_matches_forward():
+    params = model.init_params(jax.random.PRNGKey(5))
+    ip, iz = model.dense_mask_factors()
+    x, _ = small_batch(5)
+    got = model.predict(*params, ip, iz, x)[0]
+    want = model.forward(params, ip, iz, x)
+    assert_allclose(np.asarray(got), np.asarray(want))

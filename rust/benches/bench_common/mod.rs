@@ -1,0 +1,27 @@
+//! Shared helpers for the bench binaries (harness = false).
+#![allow(dead_code)]
+
+use lrbi::tensor::Matrix;
+use lrbi::util::rng::Rng;
+
+/// Synthetic FC1 weights (LeNet-5 800x500) — the workload of every
+/// MNIST-section figure/table. Uses the trained-network magnitude
+/// model (row/col lognormal scales), not plain i.i.d. Gaussian — see
+/// `models::pretrained_like_weights` and EXPERIMENTS.md
+/// §Workload-realism.
+pub fn fc1_weights(seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    lrbi::models::pretrained_like_weights(800, 500, 0.05, 0.8, &mut rng)
+}
+
+/// Where bench CSVs go.
+pub fn report_dir() -> std::path::PathBuf {
+    let p = std::path::PathBuf::from("reports");
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+/// Quick mode trims sweeps for smoke runs (LRBI_BENCH_QUICK=1).
+pub fn quick() -> bool {
+    std::env::var("LRBI_BENCH_QUICK").is_ok()
+}

@@ -1,0 +1,61 @@
+//! Figure 6: unpruned-weight histograms for (1x1, k=128), (2x2, k=64),
+//! (4x4, k=32) tilings of FC1 — all at the same index budget. Claim:
+//! more tiles -> deeper near-zero drop (and lower Cost).
+
+mod bench_common;
+
+use bench_common::{fc1_weights, quick, report_dir};
+use lrbi::bmf::algorithm1::Algorithm1Config;
+use lrbi::report::figures::{unpruned_histogram, write_histogram};
+use lrbi::tiling::{compress_tiled, equal_budget_rank, RankPlan, TilePlan};
+use lrbi::util::bench::write_table_csv;
+
+fn main() {
+    let w = fc1_weights(1);
+    let s = 0.95;
+    let t = lrbi::pruning::magnitude::threshold_for_sparsity(&w, s) as f64;
+    let plans = [
+        (TilePlan::new(1, 1), "1x1"),
+        (TilePlan::new(2, 2), "2x2"),
+        (TilePlan::new(4, 4), "4x4"),
+    ];
+    let mut rows = Vec::new();
+    let mut costs = Vec::new();
+    for (plan, label) in plans {
+        let k = equal_budget_rank(800, 500, plan, 128);
+        let mut base = Algorithm1Config::new(k, s);
+        if quick() {
+            base.sp_grid = vec![0.3, 0.6];
+            base.nmf.max_iters = 12;
+        }
+        let res = compress_tiled(&w, plan, &RankPlan::Uniform(k), &base).expect("tiled");
+        let h = unpruned_histogram(&w, &res.mask, 61);
+        let nz = h.mass_below_abs(t);
+        println!(
+            "{label} (k={k:>3}): index {:>7} bits, cost {:>9.2}, near-zero kept {:>6}  {}",
+            res.index_bits(),
+            res.cost(),
+            nz,
+            h.sparkline()
+        );
+        write_histogram(&report_dir().join(format!("fig6_hist_{label}.csv")), &h).unwrap();
+        rows.push(vec![
+            label.to_string(),
+            k.to_string(),
+            res.index_bits().to_string(),
+            format!("{:.2}", res.cost()),
+            nz.to_string(),
+        ]);
+        costs.push(res.cost());
+    }
+    write_table_csv(
+        report_dir().join("fig6.csv").to_str().unwrap(),
+        &["tiles", "rank", "index_bits", "cost", "near_zero_kept"],
+        &rows,
+    )
+    .unwrap();
+    // equal budget across plans
+    let bits: Vec<&String> = rows.iter().map(|r| &r[2]).collect();
+    assert!(bits.windows(2).all(|p| p[0] == p[1]), "budgets must match: {bits:?}");
+    println!("\nequal index budget across tilings ✓; costs {costs:?}");
+}

@@ -1,0 +1,69 @@
+//! §Perf: micro-benchmarks of every L3 hot path. Run via
+//! `cargo bench --bench perf_hot_paths`; results feed EXPERIMENTS.md.
+
+mod bench_common;
+
+use bench_common::{fc1_weights, report_dir};
+use lrbi::bmf::algorithm1::{algorithm1, Algorithm1Config};
+use lrbi::bmf::convert::{threshold_binarize, SortedMags};
+use lrbi::nmf::{nmf, NmfConfig};
+use lrbi::tensor::Matrix;
+use lrbi::util::bench::Bench;
+use lrbi::util::bits::BitMatrix;
+use lrbi::util::rng::Rng;
+
+fn main() {
+    let mut bench = Bench::new();
+    let w = fc1_weights(1);
+    let m = w.abs();
+
+    // 1. bitset boolean matmul (the decode hot path): 800x256 x 256x500
+    let mut rng = Rng::new(2);
+    for k in [16usize, 64, 256] {
+        let ip = BitMatrix::from_fn(800, k, |_, _| rng.bernoulli(0.3));
+        let iz = BitMatrix::from_fn(k, 500, |_, _| rng.bernoulli(0.3));
+        let ns = bench.run(&format!("bool_product/800x{k}x500"), || {
+            std::hint::black_box(ip.bool_product(&iz));
+        });
+        let bits = 800.0 * 500.0;
+        println!("      -> {:.2} Gbit/s mask decode", bits / ns);
+    }
+
+    // 2. threshold conversion (per sweep point)
+    let sorted = SortedMags::new(&m);
+    bench.run("threshold_binarize/800x500", || {
+        std::hint::black_box(threshold_binarize(&m, sorted.threshold(0.5)));
+    });
+    bench.run("sorted_mags_build/800x500", || {
+        std::hint::black_box(SortedMags::new(&m));
+    });
+
+    // 3. NMF iterations (rank 16, full FC1)
+    bench.run("nmf/800x500xk16/10iters", || {
+        let cfg = NmfConfig { rank: 16, max_iters: 10, tol: 0.0, seed: 3 };
+        std::hint::black_box(nmf(&m, &cfg).unwrap());
+    });
+
+    // 4. dense matmul (threaded) used by NMF
+    let mut rng2 = Rng::new(4);
+    let a = Matrix::gaussian(800, 500, 0.0, 1.0, &mut rng2);
+    let b = Matrix::gaussian(500, 64, 0.0, 1.0, &mut rng2);
+    let ns = bench.run("matmul/800x500x64", || {
+        std::hint::black_box(a.matmul(&b).unwrap());
+    });
+    let flops = 2.0 * 800.0 * 500.0 * 64.0;
+    println!("      -> {:.2} GFLOP/s", flops / ns);
+
+    // 5. full Algorithm 1 at the paper's headline config
+    let mut cfg = Algorithm1Config::new(16, 0.95);
+    cfg.sp_grid = vec![0.2, 0.4, 0.6, 0.8]; // 4-point sweep per sample
+    bench.samples = 3;
+    let ns = bench.run("algorithm1/fc1/k16/4-point-sweep", || {
+        std::hint::black_box(algorithm1(&w, &cfg).unwrap());
+    });
+    println!("      -> full 19-point sweep est: {:.2} s", ns * 19.0 / 4.0 / 1e9);
+
+    bench
+        .write_csv(report_dir().join("perf_hot_paths.csv").to_str().unwrap())
+        .unwrap();
+}

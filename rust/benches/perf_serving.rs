@@ -1,0 +1,111 @@
+//! §Perf: serving throughput/latency — native backend (isolates the
+//! coordinator overhead) and PJRT backend (full artifact path),
+//! across batching policies.
+
+mod bench_common;
+
+use bench_common::{quick, report_dir};
+use lrbi::coordinator::metrics::Metrics;
+use lrbi::runtime::artifacts::{ArtifactSet, GEOMETRY};
+use lrbi::runtime::client::Runtime;
+use lrbi::serve::batcher::BatchPolicy;
+use lrbi::serve::engine::{MlpParams, NativeBackend, PjrtBackend, ServingEngine};
+use lrbi::tensor::Matrix;
+use lrbi::util::bench::write_table_csv;
+use lrbi::util::bits::BitMatrix;
+use lrbi::util::rng::Rng;
+use lrbi::util::stats::percentile;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn drive(engine: &ServingEngine, clients: usize, per_client: usize) -> (f64, f64, f64) {
+    let client = engine.client();
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let cl = client.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(90 + c as u64);
+                let mut lat = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let x: Vec<f32> = (0..GEOMETRY.input_dim).map(|_| rng.next_f32()).collect();
+                    let t = Instant::now();
+                    cl.call(x).unwrap().unwrap();
+                    lat.push(t.elapsed().as_secs_f64() * 1e3);
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut lat = Vec::new();
+    for h in handles {
+        lat.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total = (clients * per_client) as f64;
+    (
+        total / wall,
+        percentile(&mut lat.clone(), 0.5),
+        percentile(&mut lat, 0.99),
+    )
+}
+
+fn main() {
+    let g = GEOMETRY;
+    let per_client = if quick() { 16 } else { 64 };
+    let mut rows = Vec::new();
+    for (max_batch, wait_ms) in [(1usize, 0u64), (16, 1), (64, 2)] {
+        let policy = BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+        };
+        // native backend
+        let params = MlpParams::init(1);
+        let mut rng = Rng::new(2);
+        let ip = BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.25));
+        let iz = BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.25));
+        let backend = NativeBackend::new(params.clone(), &ip, &iz).unwrap();
+        let engine = ServingEngine::start(backend, policy, Arc::new(Metrics::new()));
+        let (rps, p50, p99) = drive(&engine, 8, per_client);
+        println!(
+            "native  batch<={max_batch:<3} wait={wait_ms}ms: {rps:>8.0} req/s  p50 {p50:>6.2}ms  p99 {p99:>7.2}ms"
+        );
+        rows.push(vec![
+            "native".into(),
+            max_batch.to_string(),
+            format!("{rps:.0}"),
+            format!("{p50:.2}"),
+            format!("{p99:.2}"),
+        ]);
+
+        // PJRT backend (full artifact path)
+        let params2 = params.clone();
+        let ipf = Matrix::from_vec(g.hidden0, g.rank, ip.to_f32()).unwrap();
+        let izf = Matrix::from_vec(g.rank, g.hidden1, iz.to_f32()).unwrap();
+        let engine = ServingEngine::start_with(
+            move || {
+                let rt = Runtime::new(ArtifactSet::open("artifacts")?)?;
+                PjrtBackend::new(rt, &params2, &ipf, &izf)
+            },
+            policy,
+            Arc::new(Metrics::new()),
+        );
+        let (rps, p50, p99) = drive(&engine, 8, per_client);
+        println!(
+            "pjrt    batch<={max_batch:<3} wait={wait_ms}ms: {rps:>8.0} req/s  p50 {p50:>6.2}ms  p99 {p99:>7.2}ms"
+        );
+        rows.push(vec![
+            "pjrt".into(),
+            max_batch.to_string(),
+            format!("{rps:.0}"),
+            format!("{p50:.2}"),
+            format!("{p99:.2}"),
+        ]);
+    }
+    write_table_csv(
+        report_dir().join("perf_serving.csv").to_str().unwrap(),
+        &["backend", "max_batch", "req_per_s", "p50_ms", "p99_ms"],
+        &rows,
+    )
+    .unwrap();
+}

@@ -1,0 +1,62 @@
+//! Table 1 (right): FC1 index size across formats, plus encode/decode
+//! throughput of each format (the parallelism argument of §1 made
+//! measurable).
+
+mod bench_common;
+
+use bench_common::{fc1_weights, report_dir};
+use lrbi::bmf::algorithm1::{algorithm1, Algorithm1Config};
+use lrbi::formats::binary::BinaryIndex;
+use lrbi::formats::csr::Csr16;
+use lrbi::formats::format_comparison;
+use lrbi::formats::lowrank::LowRankIndex;
+use lrbi::formats::relative::Csr5Relative;
+use lrbi::pruning::magnitude_mask;
+use lrbi::util::bench::{print_table, write_table_csv, Bench};
+
+fn main() {
+    let w = fc1_weights(1);
+    let s = 0.95;
+    let f = algorithm1(&w, &Algorithm1Config::new(16, s)).expect("algorithm1");
+    let rows_data = format_comparison(&w, s, f.index_bits(), "k=16");
+    let rows: Vec<Vec<String>> = rows_data
+        .iter()
+        .map(|r| vec![r.name.clone(), format!("{:.1}KB", r.kb()), r.comment.clone()])
+        .collect();
+    print_table(
+        "Table 1 (right): LeNet-5 FC1 index size (S=0.95)",
+        &["Method", "Index Size", "Comment"],
+        &rows,
+    );
+    write_table_csv(
+        report_dir().join("table1_right.csv").to_str().unwrap(),
+        &["method", "kb", "comment"],
+        &rows,
+    )
+    .unwrap();
+
+    // decode throughput: the deployment claim is that the low-rank
+    // decode (binary matmul) is regular and fast vs CSR gathers.
+    println!("\ndecode throughput (full 800x500 mask):");
+    let (mask, _) = magnitude_mask(&w, s);
+    let bin = BinaryIndex::encode(&mask);
+    let c16 = Csr16::encode(&mask);
+    let c5 = Csr5Relative::encode(&mask);
+    let lr = LowRankIndex::encode(&f);
+    let mut bench = Bench::new();
+    bench.run("decode/binary-bitmap", || {
+        std::hint::black_box(bin.decode());
+    });
+    bench.run("decode/csr16", || {
+        std::hint::black_box(c16.decode().unwrap());
+    });
+    bench.run("decode/csr5-relative", || {
+        std::hint::black_box(c5.decode());
+    });
+    bench.run("decode/lowrank-boolmatmul", || {
+        std::hint::black_box(lr.decode().unwrap());
+    });
+    bench
+        .write_csv(report_dir().join("table1_decode_perf.csv").to_str().unwrap())
+        .unwrap();
+}

@@ -1,0 +1,73 @@
+//! Table 1 (left): LeNet-5 accuracy at the 20K/40K/50K/60K checkpoints
+//! vs BMF rank, plus the compression-ratio column. Training runs on
+//! the synthetic digit task (scaled steps — see DESIGN.md
+//! §Substitutions); the *pattern* to reproduce is: accuracy collapses
+//! right after pruning, retraining recovers it, and higher rank ends
+//! slightly higher.
+
+mod bench_common;
+
+use bench_common::{quick, report_dir};
+use lrbi::bmf::algorithm1::Algorithm1Config;
+use lrbi::bmf::compression_ratio;
+use lrbi::train::data::SyntheticDigits;
+use lrbi::train::loop_::{NativeTrainer, TrainConfig, TrainLog};
+use lrbi::util::bench::{print_table, write_table_csv};
+
+fn main() {
+    let ranks: Vec<usize> =
+        if quick() { vec![4, 16] } else { vec![4, 8, 16, 32, 64, 128, 256] };
+    // scaled checkpoints: paper's 20K/40K/50K/60K -> pre/(+r/2)/(+3r/4)/(+r)
+    let pre = if quick() { 60 } else { 300 };
+    let retrain = if quick() { 80 } else { 600 };
+    let train = SyntheticDigits::default().generate(4096);
+    let test = SyntheticDigits { seed: 0xE7A1, ..Default::default() }.generate(1000);
+
+    let mut rows = Vec::new();
+    for &k in &ranks {
+        let cfg = TrainConfig {
+            pretrain_steps: pre,
+            retrain_steps: retrain,
+            eval_every: usize::MAX,
+            ..Default::default()
+        };
+        let mut t = NativeTrainer::new(cfg);
+        let mut log = TrainLog::default();
+        t.train(&train, &test, pre, &mut log).expect("pretrain");
+        let mut a1 = Algorithm1Config::new(k, 0.95);
+        a1.manip = lrbi::pruning::manip::ManipMethod::AmplifyAboveThreshold;
+        t.prune_fc1(&a1).expect("prune");
+        let acc_20k = t.evaluate(&test).unwrap(); // right after pruning
+        t.train(&train, &test, retrain / 2, &mut log).unwrap();
+        let acc_40k = t.evaluate(&test).unwrap();
+        t.train(&train, &test, retrain / 4, &mut log).unwrap();
+        let acc_50k = t.evaluate(&test).unwrap();
+        t.train(&train, &test, retrain / 4, &mut log).unwrap();
+        let acc_60k = t.evaluate(&test).unwrap();
+        rows.push(vec![
+            k.to_string(),
+            format!("{:.3}", acc_20k),
+            format!("{:.3}", acc_40k),
+            format!("{:.3}", acc_50k),
+            format!("{:.3}", acc_60k),
+            format!("{:.1}x", compression_ratio(800, 500, k)),
+        ]);
+        println!(
+            "rank {k}: post-prune {acc_20k:.3} -> retrained {acc_60k:.3} (ratio {:.1}x)",
+            compression_ratio(800, 500, k)
+        );
+    }
+    print_table(
+        "Table 1 (left): accuracy checkpoints vs rank (synthetic task)",
+        &["k", "post-prune", "+50%", "+75%", "final", "Comp. Ratio"],
+        &rows,
+    );
+    let path = report_dir().join("table1_left.csv");
+    write_table_csv(
+        path.to_str().unwrap(),
+        &["k", "acc_postprune", "acc_mid", "acc_late", "acc_final", "ratio"],
+        &rows,
+    )
+    .unwrap();
+    println!("wrote {}", path.display());
+}

@@ -1,0 +1,87 @@
+//! Table 4 (appendix): ResNet32 rank-triple x pruning-rate grid —
+//! exact compression ratios + accuracy-retention proxy, including the
+//! "w/o BMF" baseline row (plain magnitude pruning, ratio 1x).
+
+mod bench_common;
+
+use bench_common::{quick, report_dir};
+use lrbi::bmf::algorithm1::Algorithm1Config;
+use lrbi::models::resnet32::{index_compression_ratio, rank_triples, resnet32};
+use lrbi::train::data::SyntheticDigits;
+use lrbi::train::loop_::{NativeTrainer, TrainConfig, TrainLog};
+use lrbi::util::bench::{print_table, write_table_csv};
+
+fn retention(s: f64, rank: usize, use_bmf: bool) -> f64 {
+    let pre = if quick() { 40 } else { 200 };
+    let post = if quick() { 60 } else { 400 };
+    let train = SyntheticDigits::default().generate(2048);
+    let test = SyntheticDigits { seed: 0xAC, ..Default::default() }.generate(400);
+    let cfg = TrainConfig {
+        pretrain_steps: pre,
+        retrain_steps: post,
+        eval_every: usize::MAX,
+        ..Default::default()
+    };
+    let mut t = NativeTrainer::new(cfg);
+    let mut log = TrainLog::default();
+    t.train(&train, &test, pre, &mut log).unwrap();
+    let before = t.evaluate(&test).unwrap();
+    if use_bmf {
+        let mut a1 = Algorithm1Config::new(rank, s);
+        a1.manip = lrbi::pruning::manip::ManipMethod::AmplifyAboveThreshold;
+        t.prune_fc1(&a1).unwrap();
+    } else {
+        // magnitude-pruning baseline (the paper's bottom row)
+        let (mask, _) = lrbi::pruning::magnitude_mask(&t.params.w1, s);
+        t.mask = mask.clone();
+        for i in 0..mask.rows() {
+            for j in 0..mask.cols() {
+                if !mask.get(i, j) {
+                    t.params.w1.set(i, j, 0.0);
+                }
+            }
+        }
+    }
+    t.train(&train, &test, post, &mut log).unwrap();
+    t.evaluate(&test).unwrap() / before
+}
+
+fn main() {
+    let m = resnet32();
+    let sparsities = [0.60, 0.70, 0.80];
+    let triples = if quick() {
+        vec![[8usize, 16, 32]]
+    } else {
+        rank_triples()
+    };
+    let mut rows = Vec::new();
+    for ranks in &triples {
+        let ratio = index_compression_ratio(&m, *ranks);
+        let mut row = vec![
+            format!("{}/{}/{}", ranks[0], ranks[1], ranks[2]),
+            format!("{ratio:.2}x"),
+        ];
+        for &s in &sparsities {
+            row.push(format!("{:.1}%", retention(s, ranks[1], true) * 100.0));
+        }
+        println!("ranks {:?}: ratio {ratio:.2}x done", ranks);
+        rows.push(row);
+    }
+    // baseline row (w/o BMF)
+    let mut base_row = vec!["w/o BMF".to_string(), "1x".to_string()];
+    for &s in &sparsities {
+        base_row.push(format!("{:.1}%", retention(s, 0, false) * 100.0));
+    }
+    rows.push(base_row);
+    print_table(
+        "Table 4: ResNet32 comp. ratio + retention proxy per (rank, S)",
+        &["Rank", "Comp. Ratio", "S=0.60", "S=0.70", "S=0.80"],
+        &rows,
+    );
+    write_table_csv(
+        report_dir().join("table4.csv").to_str().unwrap(),
+        &["rank", "ratio", "s060", "s070", "s080"],
+        &rows,
+    )
+    .unwrap();
+}

@@ -1,0 +1,64 @@
+//! Binary matrix factorization of pruning indexes — the paper's core
+//! contribution (§2).
+//!
+//! Pipeline: `M = |W|` (optionally manipulated, §3.2) → NMF → real
+//! factors `(M_p, M_z)` → threshold at `(T_p, T_z)` → binary factors
+//! `(I_p, I_z)` → decoded mask `I_a = I_p ⊗ I_z` used as the pruning
+//! mask. Algorithm 1 sweeps `S_p` and binary-searches `S_z` to hit the
+//! target sparsity while minimising the magnitude of unintentionally
+//! pruned weights.
+
+pub mod algorithm1;
+pub mod convert;
+
+pub use algorithm1::{algorithm1, Algorithm1Config, FactorizedIndex, SweepPoint};
+pub use convert::{eq7_sz, threshold_binarize, SortedMags};
+
+use crate::util::bits::BitMatrix;
+
+/// Index storage cost of a rank-`k` factor pair for an `m × n` mask:
+/// `k (m + n)` bits.
+pub fn factor_index_bits(m: usize, n: usize, k: usize) -> usize {
+    k * (m + n)
+}
+
+/// Paper's compression ratio `mn / (k (m + n))` (Table 1).
+pub fn compression_ratio(m: usize, n: usize, k: usize) -> f64 {
+    (m * n) as f64 / factor_index_bits(m, n, k) as f64
+}
+
+/// Decode binary factors into the mask `I_a` (Eq. 3).
+pub fn decode(ip: &BitMatrix, iz: &BitMatrix) -> BitMatrix {
+    ip.bool_product(iz)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compression_ratio_matches_table1() {
+        // FC1 of LeNet-5: 800 x 500. Table 1 left column.
+        let cases = [
+            (4usize, 76.9),
+            (8, 38.5),
+            (16, 19.2),
+            (32, 9.6),
+            (64, 4.8),
+            (128, 2.4),
+            (256, 1.2),
+        ];
+        for (k, want) in cases {
+            let got = compression_ratio(800, 500, k);
+            assert!(
+                (got - want).abs() < 0.05,
+                "k={k}: got {got:.2}, paper {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn factor_bits_formula() {
+        assert_eq!(factor_index_bits(800, 500, 16), 16 * 1300);
+    }
+}

@@ -1,0 +1,324 @@
+//! Hand-rolled CLI (no `clap` offline): subcommands + `--flag value`
+//! parsing, shared by the `lrbi` binary.
+
+use crate::bmf::algorithm1::Algorithm1Config;
+use crate::config::CompressConfig;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::sweep::{compress_model, SweepOptions};
+use crate::models::{alexnet, lenet, lstm, resnet32, ModelSpec};
+use crate::pruning::manip::ManipMethod;
+use crate::report;
+use crate::serve::batcher::BatchPolicy;
+use crate::serve::engine::{MlpParams, NativeBackend, ServingEngine};
+use crate::tiling::TilePlan;
+use crate::train::data::SyntheticDigits;
+use crate::train::loop_::{NativeTrainer, TrainConfig, TrainLog};
+use crate::util::bits::BitMatrix;
+use crate::util::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Parsed command line: subcommand + flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token.
+    pub command: String,
+    /// `--key value` pairs (`--key` alone stores "true").
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an argv-style iterator (without the binary name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        if let Some(cmd) = iter.next() {
+            if cmd.starts_with("--") {
+                return Err(Error::invalid("expected a subcommand before flags"));
+            }
+            args.command = cmd;
+        }
+        while let Some(tok) = iter.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| Error::invalid(format!("unexpected token: {tok}")))?
+                .to_string();
+            let value = match iter.peek() {
+                Some(v) if !v.starts_with("--") => iter.next().unwrap(),
+                _ => "true".to_string(),
+            };
+            args.flags.insert(key, value);
+        }
+        Ok(args)
+    }
+
+    /// Typed flag lookup with default.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| Error::invalid(format!("bad value for --{key}: {v}"))),
+        }
+    }
+
+    /// String flag with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+/// Model registry for the CLI.
+pub fn model_by_name(name: &str) -> Result<ModelSpec> {
+    match name {
+        "lenet5" => Ok(lenet::lenet5()),
+        "resnet32" => Ok(resnet32::resnet32()),
+        "alexnet-fc" => Ok(alexnet::alexnet_fc()),
+        "lstm-ptb" => Ok(lstm::lstm_ptb()),
+        other => Err(Error::invalid(format!(
+            "unknown model '{other}' (try lenet5 | resnet32 | alexnet-fc | lstm-ptb)"
+        ))),
+    }
+}
+
+/// Method number (1..3) → manipulation method.
+pub fn manip_by_number(n: usize) -> Result<ManipMethod> {
+    match n {
+        1 => Ok(ManipMethod::None),
+        2 => Ok(ManipMethod::Square),
+        3 => Ok(ManipMethod::AmplifyAboveThreshold),
+        _ => Err(Error::invalid("manip method must be 1, 2 or 3")),
+    }
+}
+
+/// Entry point used by main(); returns the process exit code.
+pub fn run<I: IntoIterator<Item = String>>(argv: I) -> i32 {
+    match dispatch(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn dispatch<I: IntoIterator<Item = String>>(argv: I) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "compress" => cmd_compress(&args),
+        "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "report" => cmd_report(&args),
+        "info" | "" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            print_usage();
+            Err(Error::invalid(format!("unknown command '{other}'")))
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "lrbi — Network Pruning for Low-Rank Binary Indexing\n\
+         \n\
+         USAGE: lrbi <command> [--flag value ...]\n\
+         \n\
+         commands:\n\
+         \x20 compress   compress a model's pruning index\n\
+         \x20            --model lenet5|resnet32|alexnet-fc|lstm-ptb\n\
+         \x20            --sparsity 0.95  --rank 16  --tiles 1\n\
+         \x20            --manip 1|2|3  --threads N  --config file.toml\n\
+         \x20 train      pre-train, prune (BMF), retrain on the synthetic task\n\
+         \x20            --steps N  --retrain N  --rank 16  --sparsity 0.95\n\
+         \x20 serve      run the serving engine on synthetic traffic\n\
+         \x20            --requests N  --max-batch 64  --max-wait-ms 2\n\
+         \x20 report     regenerate fast paper tables (--out reports/)\n\
+         \x20 info       this help"
+    );
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let cfg = if let Some(path) = args.flags.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        CompressConfig::from_toml(&text)?
+    } else {
+        let mut c = CompressConfig::default();
+        c.model = args.get_str("model", "lenet5");
+        c.sparsity = args.get("sparsity", 0.95)?;
+        c.ranks = vec![args.get("rank", 16usize)?];
+        let tiles: usize = args.get("tiles", 1)?;
+        c.tiles_r = tiles;
+        c.tiles_c = tiles;
+        c.manip_method = args.get("manip", 1usize)?;
+        c.threads = args.get("threads", 0usize)?;
+        c.validate()?;
+        c
+    };
+    let model = model_by_name(&cfg.model)?;
+    let mut opts = SweepOptions::new(cfg.sparsity, cfg.ranks[0]);
+    opts.group_ranks = cfg.ranks.clone();
+    opts.tile_plan = TilePlan::new(cfg.tiles_r, cfg.tiles_c);
+    opts.tile_threshold = if cfg.tiles_r * cfg.tiles_c > 1 { 0 } else { usize::MAX };
+    opts.manip = manip_by_number(cfg.manip_method)?;
+    if cfg.threads > 0 {
+        opts.threads = cfg.threads;
+    }
+    opts.seed = cfg.seed;
+    let metrics = Metrics::new();
+    let report = compress_model(&model, &opts, &metrics)?;
+    println!(
+        "model={} layers={} ratio={:.2}x sparsity={:.3} cost={:.2}",
+        report.model,
+        report.layers.len(),
+        report.compression_ratio(),
+        report.sparsity(),
+        report.cost()
+    );
+    for l in &report.layers {
+        println!(
+            "  {:<14} {:>9} bits -> {:>8} bits  ({:.2}x, S={:.3}, tiles={})",
+            l.layer,
+            l.dense_bits,
+            l.index_bits,
+            l.compression_ratio(),
+            l.sparsity,
+            l.tiles
+        );
+    }
+    let snap = metrics.snapshot();
+    println!("jobs: {} ok, {} failed", snap.jobs_done, snap.jobs_failed);
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = TrainConfig::default();
+    cfg.pretrain_steps = args.get("steps", 300usize)?;
+    cfg.retrain_steps = args.get("retrain", 600usize)?;
+    cfg.lr = args.get("lr", 0.1f32)?;
+    let rank: usize = args.get("rank", 16)?;
+    let sparsity: f64 = args.get("sparsity", 0.95)?;
+    let train = SyntheticDigits::default().generate(4096);
+    let test = SyntheticDigits { seed: 0xE7A1, ..Default::default() }.generate(1024);
+    let mut log = TrainLog::default();
+    let mut t = NativeTrainer::new(cfg.clone());
+    println!("pre-training {} steps ...", cfg.pretrain_steps);
+    t.train(&train, &test, cfg.pretrain_steps, &mut log)?;
+    let pre = t.evaluate(&test)?;
+    let mut a1 = Algorithm1Config::new(rank, sparsity);
+    a1.manip = manip_by_number(args.get("manip", 1usize)?)?;
+    let f = t.prune_fc1(&a1)?;
+    let post = t.evaluate(&test)?;
+    println!(
+        "pruned FC1: rank={} S={:.3} ratio={:.1}x cost={:.2} | acc {:.3} -> {:.3}",
+        rank,
+        f.achieved_sparsity,
+        f.compression_ratio(),
+        f.cost,
+        pre,
+        post
+    );
+    println!("retraining {} steps ...", cfg.retrain_steps);
+    t.train(&train, &test, cfg.retrain_steps, &mut log)?;
+    let fin = t.evaluate(&test)?;
+    println!("final accuracy {fin:.3} (pre-prune {pre:.3})");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let requests: usize = args.get("requests", 512)?;
+    let policy = BatchPolicy {
+        max_batch: args.get("max-batch", 64usize)?,
+        max_wait: std::time::Duration::from_millis(args.get("max-wait-ms", 2u64)?),
+    };
+    let g = crate::runtime::artifacts::GEOMETRY;
+    let params = MlpParams::init(11);
+    let mut rng = crate::util::rng::Rng::new(12);
+    let ip = BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.25));
+    let iz = BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.25));
+    let backend = NativeBackend::new(params, &ip, &iz)?;
+    let metrics = std::sync::Arc::new(Metrics::new());
+    let engine = ServingEngine::start(backend, policy, std::sync::Arc::clone(&metrics));
+    let client = engine.client();
+    let t0 = std::time::Instant::now();
+    let threads: Vec<_> = (0..8)
+        .map(|w| {
+            let c = client.clone();
+            std::thread::spawn(move || {
+                let mut rng = crate::util::rng::Rng::new(100 + w);
+                for _ in 0..requests / 8 {
+                    let x: Vec<f32> = (0..g.input_dim).map(|_| rng.next_f32()).collect();
+                    c.call(x).unwrap().unwrap();
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().map_err(|_| Error::Coordinator("load thread panicked".into()))?;
+    }
+    let dt = t0.elapsed();
+    let snap = metrics.snapshot();
+    println!(
+        "served {} requests in {:.3}s ({:.0} req/s), {} batches (mean size {:.1})",
+        snap.requests,
+        dt.as_secs_f64(),
+        snap.requests as f64 / dt.as_secs_f64(),
+        snap.batches,
+        snap.mean_batch_size()
+    );
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let out = args.get_str("out", "reports");
+    let files = report::generate_all(Path::new(&out))?;
+    println!("\nwrote {} report files under {out}/", files.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_command_and_flags() {
+        let a = Args::parse(argv("compress --model resnet32 --rank 8 --verbose")).unwrap();
+        assert_eq!(a.command, "compress");
+        assert_eq!(a.get_str("model", "x"), "resnet32");
+        assert_eq!(a.get::<usize>("rank", 0).unwrap(), 8);
+        assert_eq!(a.get_str("verbose", "false"), "true");
+        assert_eq!(a.get::<usize>("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn parse_rejects_flag_first() {
+        assert!(Args::parse(argv("--rank 8")).is_err());
+    }
+
+    #[test]
+    fn bad_typed_flag_is_error() {
+        let a = Args::parse(argv("compress --rank banana")).unwrap();
+        assert!(a.get::<usize>("rank", 0).is_err());
+    }
+
+    #[test]
+    fn model_registry_complete() {
+        for name in ["lenet5", "resnet32", "alexnet-fc", "lstm-ptb"] {
+            assert!(model_by_name(name).is_ok(), "{name}");
+        }
+        assert!(model_by_name("vgg").is_err());
+    }
+
+    #[test]
+    fn manip_mapping() {
+        assert_eq!(manip_by_number(1).unwrap(), ManipMethod::None);
+        assert_eq!(manip_by_number(3).unwrap(), ManipMethod::AmplifyAboveThreshold);
+        assert!(manip_by_number(0).is_err());
+    }
+}

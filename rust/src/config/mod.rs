@@ -1,0 +1,143 @@
+//! Experiment configuration: a TOML-subset parser (no `serde`/`toml`
+//! offline) + typed experiment configs.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! ("..."), integer, float, bool, and flat arrays (`[1, 2, 3]`),
+//! `#` comments.
+
+pub mod toml;
+
+pub use toml::{TomlDoc, TomlValue};
+
+use crate::util::error::{Error, Result};
+
+/// A compression-experiment config (the CLI's `--config`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressConfig {
+    /// Model name: lenet5 | resnet32 | alexnet-fc | lstm-ptb.
+    pub model: String,
+    /// Target pruning rate.
+    pub sparsity: f64,
+    /// Rank(s): one per layer group.
+    pub ranks: Vec<usize>,
+    /// Tiles per row-axis.
+    pub tiles_r: usize,
+    /// Tiles per col-axis.
+    pub tiles_c: usize,
+    /// Manipulation method 1..3.
+    pub manip_method: usize,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// Seed.
+    pub seed: u64,
+}
+
+impl Default for CompressConfig {
+    fn default() -> Self {
+        CompressConfig {
+            model: "lenet5".into(),
+            sparsity: 0.95,
+            ranks: vec![16],
+            tiles_r: 1,
+            tiles_c: 1,
+            manip_method: 1,
+            threads: 0,
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl CompressConfig {
+    /// Parse from TOML text (section `[compress]`).
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = CompressConfig::default();
+        if let Some(v) = doc.get("compress", "model") {
+            cfg.model = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("compress", "sparsity") {
+            cfg.sparsity = v.as_f64()?;
+        }
+        if let Some(v) = doc.get("compress", "ranks") {
+            cfg.ranks = v
+                .as_array()?
+                .iter()
+                .map(|x| x.as_f64().map(|f| f as usize))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(v) = doc.get("compress", "tiles_r") {
+            cfg.tiles_r = v.as_f64()? as usize;
+        }
+        if let Some(v) = doc.get("compress", "tiles_c") {
+            cfg.tiles_c = v.as_f64()? as usize;
+        }
+        if let Some(v) = doc.get("compress", "manip_method") {
+            cfg.manip_method = v.as_f64()? as usize;
+        }
+        if let Some(v) = doc.get("compress", "threads") {
+            cfg.threads = v.as_f64()? as usize;
+        }
+        if let Some(v) = doc.get("compress", "seed") {
+            cfg.seed = v.as_f64()? as u64;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check ranges.
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..1.0).contains(&self.sparsity) {
+            return Err(Error::Config(format!("sparsity {} outside [0,1)", self.sparsity)));
+        }
+        if self.ranks.is_empty() || self.ranks.iter().any(|&r| r == 0) {
+            return Err(Error::Config("ranks must be non-empty and positive".into()));
+        }
+        if !(1..=3).contains(&self.manip_method) {
+            return Err(Error::Config("manip_method must be 1..=3".into()));
+        }
+        if self.tiles_r == 0 || self.tiles_c == 0 {
+            return Err(Error::Config("tiles must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let text = r#"
+# an experiment
+[compress]
+model = "resnet32"
+sparsity = 0.7
+ranks = [8, 16, 32]
+tiles_r = 2
+tiles_c = 2
+manip_method = 3
+threads = 4
+seed = 42
+"#;
+        let cfg = CompressConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.model, "resnet32");
+        assert_eq!(cfg.ranks, vec![8, 16, 32]);
+        assert_eq!(cfg.manip_method, 3);
+        assert_eq!(cfg.seed, 42);
+    }
+
+    #[test]
+    fn defaults_fill_missing_keys() {
+        let cfg = CompressConfig::from_toml("[compress]\nsparsity = 0.9\n").unwrap();
+        assert_eq!(cfg.model, "lenet5");
+        assert!((cfg.sparsity - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        assert!(CompressConfig::from_toml("[compress]\nsparsity = 1.5\n").is_err());
+        assert!(CompressConfig::from_toml("[compress]\nmanip_method = 9\n").is_err());
+        assert!(CompressConfig::from_toml("[compress]\nranks = []\n").is_err());
+    }
+}

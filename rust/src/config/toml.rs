@@ -1,0 +1,188 @@
+//! Minimal TOML-subset parser (sections, scalars, flat arrays).
+
+use crate::util::error::{Error, Result};
+use std::collections::HashMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Any numeric literal (ints are stored exactly up to 2^53).
+    Num(f64),
+    /// `true` / `false`.
+    Bool(bool),
+    /// Flat array of values.
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    /// As string.
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => Err(Error::Config(format!("expected string, got {other:?}"))),
+        }
+    }
+    /// As number.
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Num(n) => Ok(*n),
+            other => Err(Error::Config(format!("expected number, got {other:?}"))),
+        }
+    }
+    /// As bool.
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => Err(Error::Config(format!("expected bool, got {other:?}"))),
+        }
+    }
+    /// As array.
+    pub fn as_array(&self) -> Result<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Ok(a),
+            other => Err(Error::Config(format!("expected array, got {other:?}"))),
+        }
+    }
+}
+
+/// A parsed document: section → key → value.
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    sections: HashMap<String, HashMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", ln + 1))
+            })?;
+            let value = parse_value(value.trim())
+                .map_err(|e| Error::Config(format!("line {}: {e}", ln + 1)))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    /// Look up `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// All keys of a section.
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|m| m.keys().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        return Err(Error::Config("empty value".into()));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| Error::Config(format!("unterminated string: {s}")))?;
+        return Ok(TomlValue::Str(body.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| Error::Config(format!("unterminated array: {s}")))?;
+        let mut items = Vec::new();
+        for part in body.split(',') {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    s.parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|_| Error::Config(format!("cannot parse value: {s}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_value_types() {
+        let doc = TomlDoc::parse(
+            "[s]\na = \"hi\"\nb = 3\nc = 2.5\nd = true\ne = [1, 2]\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("s", "a").unwrap().as_str().unwrap(), "hi");
+        assert_eq!(doc.get("s", "b").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(doc.get("s", "c").unwrap().as_f64().unwrap(), 2.5);
+        assert!(doc.get("s", "d").unwrap().as_bool().unwrap());
+        assert_eq!(doc.get("s", "e").unwrap().as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let doc = TomlDoc::parse("# top\n[s]\n# mid\nk = 1 # tail\n\n").unwrap();
+        assert_eq!(doc.get("s", "k").unwrap().as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn hash_inside_string_preserved() {
+        let doc = TomlDoc::parse("[s]\nk = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("s", "k").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let err = TomlDoc::parse("[s]\nbroken\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"));
+        assert!(TomlDoc::parse("[s]\nk = [1, 2\n").is_err());
+        assert!(TomlDoc::parse("[s]\nk = \"x\n").is_err());
+    }
+
+    #[test]
+    fn missing_section_or_key_is_none() {
+        let doc = TomlDoc::parse("[s]\nk = 1\n").unwrap();
+        assert!(doc.get("t", "k").is_none());
+        assert!(doc.get("s", "z").is_none());
+    }
+}

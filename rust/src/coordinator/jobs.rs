@@ -1,0 +1,61 @@
+//! Job descriptors for the compression pipeline.
+
+use crate::bmf::algorithm1::FactorizedIndex;
+use crate::pruning::manip::ManipMethod;
+use crate::tiling::TileSpec;
+
+/// One tile-factorization work item.
+#[derive(Debug, Clone)]
+pub struct CompressionJob {
+    /// Model name (reporting).
+    pub model: String,
+    /// Layer name.
+    pub layer: String,
+    /// Tile within the layer.
+    pub tile: TileSpec,
+    /// BMF rank for this tile.
+    pub rank: usize,
+    /// Target pruning rate.
+    pub sparsity: f64,
+    /// Magnitude manipulation method.
+    pub manip: ManipMethod,
+}
+
+/// Outcome of one job.
+#[derive(Debug)]
+pub struct JobResult {
+    /// The job that produced this.
+    pub job: CompressionJob,
+    /// Factorization output (None on failure).
+    pub index: Option<FactorizedIndex>,
+    /// Error text when failed.
+    pub error: Option<String>,
+    /// Wall time in nanoseconds.
+    pub elapsed_ns: u64,
+}
+
+impl JobResult {
+    /// Whether the job succeeded.
+    pub fn ok(&self) -> bool {
+        self.index.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_result_ok_logic() {
+        let job = CompressionJob {
+            model: "m".into(),
+            layer: "l".into(),
+            tile: TileSpec { id: 0, r0: 0, r1: 4, c0: 0, c1: 4 },
+            rank: 2,
+            sparsity: 0.5,
+            manip: ManipMethod::None,
+        };
+        let r = JobResult { job, index: None, error: Some("x".into()), elapsed_ns: 1 };
+        assert!(!r.ok());
+    }
+}

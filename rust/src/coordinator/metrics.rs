@@ -1,0 +1,120 @@
+//! Lightweight metrics: atomic counters + wall-time accounting,
+//! snapshotted by the CLI/report layer.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Shared coordinator metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Jobs completed.
+    pub jobs_done: AtomicU64,
+    /// Jobs failed.
+    pub jobs_failed: AtomicU64,
+    /// Cumulative busy nanoseconds across workers.
+    pub busy_ns: AtomicU64,
+    /// Requests served (serving path).
+    pub requests: AtomicU64,
+    /// Batches executed (serving path).
+    pub batches: AtomicU64,
+    /// Decode-cache hits.
+    pub cache_hits: AtomicU64,
+    /// Decode-cache misses.
+    pub cache_misses: AtomicU64,
+}
+
+/// A point-in-time copy for reporting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    /// Jobs completed.
+    pub jobs_done: u64,
+    /// Jobs failed.
+    pub jobs_failed: u64,
+    /// Cumulative busy nanoseconds.
+    pub busy_ns: u64,
+    /// Requests served.
+    pub requests: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Decode-cache hits.
+    pub cache_hits: u64,
+    /// Decode-cache misses.
+    pub cache_misses: u64,
+}
+
+impl Metrics {
+    /// New zeroed metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a completed job with its busy time.
+    pub fn record_job(&self, started: Instant, ok: bool) {
+        if ok {
+            self.jobs_done.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.busy_ns
+            .fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Copy out current values.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            jobs_done: self.jobs_done.load(Ordering::Relaxed),
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            busy_ns: self.busy_ns.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Mean requests per batch (serving efficiency).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+
+    /// Decode-cache hit rate.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_counters() {
+        let m = Metrics::new();
+        m.record_job(Instant::now(), true);
+        m.record_job(Instant::now(), false);
+        m.requests.fetch_add(10, Ordering::Relaxed);
+        m.batches.fetch_add(4, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_done, 1);
+        assert_eq!(s.jobs_failed, 1);
+        assert!((s.mean_batch_size() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hit_rate_handles_zero() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.cache_hit_rate(), 0.0);
+        assert_eq!(s.mean_batch_size(), 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator — the system half of the paper's contribution.
+//!
+//! Index compression is a bag of independent `(layer, tile, rank)`
+//! factorization jobs with a cheap argmin reduce; serving is a stream
+//! of requests over compressed weights. The coordinator owns both:
+//! a work-stealing worker pool (no tokio offline), bounded queues with
+//! backpressure, deterministic aggregation, and metrics.
+
+pub mod jobs;
+pub mod metrics;
+pub mod pool;
+pub mod sweep;
+
+pub use jobs::{CompressionJob, JobResult};
+pub use metrics::Metrics;
+pub use pool::{parallel_map, WorkerPool};
+pub use sweep::{compress_model, ModelCompressionReport, SweepOptions};

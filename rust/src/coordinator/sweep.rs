@@ -1,0 +1,321 @@
+//! Model-level compression orchestration: fan per-(layer, tile) jobs
+//! across the pool, aggregate into a per-layer and per-model report.
+//! This is the parallel counterpart of `tiling::compress_tiled` and
+//! the entry point the CLI and Table-2 bench use.
+
+use crate::bmf::algorithm1::{algorithm1, Algorithm1Config};
+use crate::coordinator::jobs::{CompressionJob, JobResult};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::parallel_map;
+use crate::models::{synthetic_weights, ModelSpec};
+use crate::pruning::manip::ManipMethod;
+use crate::tensor::Matrix;
+use crate::tiling::TilePlan;
+use crate::util::bits::BitMatrix;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// How to compress a model.
+#[derive(Debug, Clone)]
+pub struct SweepOptions {
+    /// Target pruning rate `S` for every compressed layer.
+    pub sparsity: f64,
+    /// Rank for a layer group (indexed by `LayerSpec::group`, paper
+    /// direction: entry 0 applies to the *largest* group).
+    pub group_ranks: Vec<usize>,
+    /// Tile plan applied to layers larger than `tile_threshold`.
+    pub tile_plan: TilePlan,
+    /// Layers with more parameters than this get tiled.
+    pub tile_threshold: usize,
+    /// Magnitude manipulation.
+    pub manip: ManipMethod,
+    /// Worker threads.
+    pub threads: usize,
+    /// Algorithm-1 template (rank overwritten per job).
+    pub base: Algorithm1Config,
+    /// Seed for synthetic weights.
+    pub seed: u64,
+}
+
+impl SweepOptions {
+    /// Reasonable defaults for a model at sparsity `s`.
+    pub fn new(s: f64, rank: usize) -> Self {
+        SweepOptions {
+            sparsity: s,
+            group_ranks: vec![rank, rank, rank],
+            tile_plan: TilePlan::single(),
+            tile_threshold: usize::MAX,
+            manip: ManipMethod::None,
+            threads: crate::tensor::matrix::available_threads(),
+            base: Algorithm1Config::new(rank, s),
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Per-layer compression outcome.
+#[derive(Debug)]
+pub struct LayerReport {
+    /// Layer name.
+    pub layer: String,
+    /// Dense index bits (mn).
+    pub dense_bits: usize,
+    /// Low-rank index bits Σ k(m+n).
+    pub index_bits: usize,
+    /// Achieved sparsity of the assembled mask.
+    pub sparsity: f64,
+    /// Total Algorithm-1 cost.
+    pub cost: f64,
+    /// Assembled mask.
+    pub mask: BitMatrix,
+    /// Number of tiles used.
+    pub tiles: usize,
+}
+
+impl LayerReport {
+    /// Index compression ratio for this layer.
+    pub fn compression_ratio(&self) -> f64 {
+        self.dense_bits as f64 / self.index_bits as f64
+    }
+}
+
+/// Whole-model compression outcome.
+#[derive(Debug)]
+pub struct ModelCompressionReport {
+    /// Model name.
+    pub model: String,
+    /// Per compressed layer.
+    pub layers: Vec<LayerReport>,
+    /// Job-level results (diagnostics).
+    pub jobs: Vec<JobResult>,
+}
+
+impl ModelCompressionReport {
+    /// Aggregate compression ratio over compressed layers.
+    pub fn compression_ratio(&self) -> f64 {
+        let dense: usize = self.layers.iter().map(|l| l.dense_bits).sum();
+        let lr: usize = self.layers.iter().map(|l| l.index_bits).sum();
+        dense as f64 / lr as f64
+    }
+
+    /// Weighted mean sparsity across compressed layers.
+    pub fn sparsity(&self) -> f64 {
+        let total: usize = self.layers.iter().map(|l| l.dense_bits).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.layers
+            .iter()
+            .map(|l| l.sparsity * l.dense_bits as f64)
+            .sum::<f64>()
+            / total as f64
+    }
+
+    /// Total Cost.
+    pub fn cost(&self) -> f64 {
+        self.layers.iter().map(|l| l.cost).sum()
+    }
+}
+
+/// Compress every compressible layer of `model` (synthetic pretrained
+/// weights) in parallel. The returned report drives Tables 2 and 4.
+pub fn compress_model(
+    model: &ModelSpec,
+    opts: &SweepOptions,
+    metrics: &Metrics,
+) -> Result<ModelCompressionReport> {
+    // materialise weights + jobs
+    let mut rng = Rng::new(opts.seed);
+    let mut layer_inputs: Vec<(String, Matrix, TilePlan, usize)> = Vec::new();
+    for spec in model.compressible() {
+        let w = synthetic_weights(spec, &mut rng);
+        let plan = if spec.params() > opts.tile_threshold {
+            opts.tile_plan
+        } else {
+            TilePlan::single()
+        };
+        let group = spec.group.min(opts.group_ranks.len() - 1);
+        // paper direction: ranks[0] -> largest group (see models::resnet32)
+        let rank = opts.group_ranks[opts.group_ranks.len() - 1 - group];
+        layer_inputs.push((spec.name.clone(), w, plan, rank));
+    }
+
+    // flatten to (layer idx, tile spec) jobs
+    let mut jobs: Vec<(usize, CompressionJob)> = Vec::new();
+    for (li, (name, w, plan, rank)) in layer_inputs.iter().enumerate() {
+        for tile in plan.tiles(w.rows(), w.cols())? {
+            jobs.push((
+                li,
+                CompressionJob {
+                    model: model.name.clone(),
+                    layer: name.clone(),
+                    tile,
+                    rank: *rank,
+                    sparsity: opts.sparsity,
+                    manip: opts.manip,
+                },
+            ));
+        }
+    }
+
+    // run the bag in parallel
+    let results: Vec<JobResult> = parallel_map(&jobs, opts.threads, |(li, job)| {
+        let started = Instant::now();
+        let (_, w, _, _) = &layer_inputs[*li];
+        let sub = w
+            .submatrix(job.tile.r0, job.tile.r1, job.tile.c0, job.tile.c1)
+            .expect("tile within bounds");
+        let mut cfg = opts.base.clone();
+        cfg.rank = job.rank;
+        cfg.nmf.rank = job.rank;
+        cfg.target_sparsity = job.sparsity;
+        cfg.manip = job.manip;
+        cfg.nmf.seed = opts.seed ^ (job.tile.id as u64).wrapping_mul(0x9E37_79B9);
+        let out = algorithm1(&sub, &cfg);
+        let elapsed_ns = started.elapsed().as_nanos() as u64;
+        metrics.record_job(started, out.is_ok());
+        match out {
+            Ok(index) => JobResult { job: job.clone(), index: Some(index), error: None, elapsed_ns },
+            Err(e) => JobResult {
+                job: job.clone(),
+                index: None,
+                error: Some(e.to_string()),
+                elapsed_ns,
+            },
+        }
+    });
+
+    // aggregate per layer
+    let mut layers = Vec::new();
+    for (li, (name, w, plan, _)) in layer_inputs.iter().enumerate() {
+        let mut mask = BitMatrix::zeros(w.rows(), w.cols());
+        let mut index_bits = 0usize;
+        let mut cost = 0.0f64;
+        let mut tiles = 0usize;
+        for ((job_li, _), result) in jobs.iter().zip(&results) {
+            if job_li != &li {
+                continue;
+            }
+            let f = result.index.as_ref().ok_or_else(|| {
+                Error::Coordinator(format!(
+                    "job failed for layer {name}: {}",
+                    result.error.as_deref().unwrap_or("unknown")
+                ))
+            })?;
+            let t = result.job.tile;
+            for i in 0..t.rows() {
+                for j in 0..t.cols() {
+                    if f.mask.get(i, j) {
+                        mask.set(t.r0 + i, t.c0 + j, true);
+                    }
+                }
+            }
+            index_bits += f.index_bits();
+            cost += f.cost;
+            tiles += 1;
+        }
+        let _ = plan;
+        layers.push(LayerReport {
+            layer: name.clone(),
+            dense_bits: w.rows() * w.cols(),
+            index_bits,
+            sparsity: mask.sparsity(),
+            cost,
+            mask,
+            tiles,
+        });
+    }
+
+    Ok(ModelCompressionReport { model: model.name.clone(), layers, jobs: results })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{LayerKind, LayerSpec};
+
+    fn tiny_model() -> ModelSpec {
+        ModelSpec {
+            name: "tiny".into(),
+            layers: vec![
+                LayerSpec {
+                    name: "a".into(),
+                    rows: 40,
+                    cols: 30,
+                    kind: LayerKind::Fc,
+                    group: 0,
+                    compress: true,
+                },
+                LayerSpec {
+                    name: "b".into(),
+                    rows: 60,
+                    cols: 20,
+                    kind: LayerKind::Fc,
+                    group: 1,
+                    compress: true,
+                },
+                LayerSpec {
+                    name: "skip".into(),
+                    rows: 5,
+                    cols: 5,
+                    kind: LayerKind::Fc,
+                    group: 0,
+                    compress: false,
+                },
+            ],
+        }
+    }
+
+    fn fast_opts() -> SweepOptions {
+        let mut o = SweepOptions::new(0.85, 4);
+        o.base.sp_grid = vec![0.3, 0.6];
+        o.base.nmf.max_iters = 12;
+        o.threads = 4;
+        o
+    }
+
+    #[test]
+    fn compresses_only_compressible_layers() {
+        let m = tiny_model();
+        let metrics = Metrics::new();
+        let rep = compress_model(&m, &fast_opts(), &metrics).unwrap();
+        let names: Vec<_> = rep.layers.iter().map(|l| l.layer.as_str()).collect();
+        assert_eq!(names, vec!["a", "b"]);
+        assert_eq!(metrics.snapshot().jobs_done, 2);
+    }
+
+    #[test]
+    fn report_math_consistent() {
+        let m = tiny_model();
+        let rep = compress_model(&m, &fast_opts(), &Metrics::new()).unwrap();
+        for l in &rep.layers {
+            assert!((l.sparsity - 0.85).abs() < 0.05, "{}: {}", l.layer, l.sparsity);
+            assert!(l.compression_ratio() > 1.0);
+        }
+        assert!(rep.compression_ratio() > 1.0);
+        assert!(rep.sparsity() > 0.8);
+    }
+
+    #[test]
+    fn tiling_kicks_in_above_threshold() {
+        let m = tiny_model();
+        let mut o = fast_opts();
+        o.tile_plan = TilePlan::new(2, 2);
+        o.tile_threshold = 1000; // layer a (1200) and b (1200) both tile
+        let rep = compress_model(&m, &o, &Metrics::new()).unwrap();
+        assert!(rep.layers.iter().all(|l| l.tiles == 4));
+        assert_eq!(rep.jobs.len(), 8);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let m = tiny_model();
+        let r1 = compress_model(&m, &fast_opts(), &Metrics::new()).unwrap();
+        let r2 = compress_model(&m, &fast_opts(), &Metrics::new()).unwrap();
+        for (a, b) in r1.layers.iter().zip(&r2.layers) {
+            assert_eq!(a.mask, b.mask);
+            assert_eq!(a.cost, b.cost);
+        }
+    }
+}

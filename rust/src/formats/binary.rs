@@ -1,0 +1,82 @@
+//! Dense binary (bitmap) index: 1 bit per weight, fully regular.
+
+use crate::util::bits::BitMatrix;
+
+/// The dense bitmap format of Figure 1.
+#[derive(Debug, Clone)]
+pub struct BinaryIndex {
+    rows: usize,
+    cols: usize,
+    bytes: Vec<u8>,
+}
+
+impl BinaryIndex {
+    /// Pack a mask row-major, MSB-first within each byte.
+    pub fn encode(mask: &BitMatrix) -> Self {
+        let (rows, cols) = (mask.rows(), mask.cols());
+        let mut bytes = vec![0u8; (rows * cols).div_ceil(8)];
+        for i in 0..rows {
+            for j in 0..cols {
+                if mask.get(i, j) {
+                    let bit = i * cols + j;
+                    bytes[bit / 8] |= 1 << (7 - bit % 8);
+                }
+            }
+        }
+        BinaryIndex { rows, cols, bytes }
+    }
+
+    /// Recover the mask. Byte-skipping fast path: at the paper's
+    /// sparsity levels most bytes are zero, so scanning bytes and
+    /// expanding only set bits is ~10x faster than per-bit reads
+    /// (EXPERIMENTS.md §Perf).
+    pub fn decode(&self) -> BitMatrix {
+        let mut mask = BitMatrix::zeros(self.rows, self.cols);
+        for (bi, &byte) in self.bytes.iter().enumerate() {
+            if byte == 0 {
+                continue;
+            }
+            let base = bi * 8;
+            for b in 0..8 {
+                if byte >> (7 - b) & 1 == 1 {
+                    let bit = base + b;
+                    if bit < self.rows * self.cols {
+                        mask.set(bit / self.cols, bit % self.cols, true);
+                    }
+                }
+            }
+        }
+        mask
+    }
+
+    /// Stored size (payload only).
+    pub fn index_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_random_masks() {
+        prop::check("binary roundtrip", 10, |rng| {
+            let m = prop::dim(rng, 1, 40);
+            let n = prop::dim(rng, 1, 70);
+            let d = rng.next_f64();
+            let mut r2 = Rng::new(rng.next_u64());
+            let mask = BitMatrix::from_fn(m, n, |_, _| r2.bernoulli(d));
+            let enc = BinaryIndex::encode(&mask);
+            assert_eq!(enc.decode(), mask);
+        });
+    }
+
+    #[test]
+    fn size_is_mn_over_8() {
+        let mask = BitMatrix::zeros(800, 500);
+        assert_eq!(BinaryIndex::encode(&mask).index_bytes(), 50_000);
+    }
+}

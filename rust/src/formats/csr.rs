@@ -1,0 +1,116 @@
+//! Compressed Sparse Row with 16-bit column indices (Figure 1's
+//! "CSR Index Format"): `IA` row pointers + `JA` column indices.
+
+use crate::util::bits::BitMatrix;
+use crate::util::error::{Error, Result};
+
+/// CSR with u16 column indices and u32 row pointers.
+#[derive(Debug, Clone)]
+pub struct Csr16 {
+    rows: usize,
+    cols: usize,
+    /// Row pointer array `IA` (len rows+1).
+    pub ia: Vec<u32>,
+    /// Column index array `JA` (len nnz).
+    pub ja: Vec<u16>,
+}
+
+impl Csr16 {
+    /// Encode a mask (panics if cols > u16::MAX, which no paper layer hits).
+    pub fn encode(mask: &BitMatrix) -> Self {
+        assert!(mask.cols() <= u16::MAX as usize + 1, "cols too large for 16-bit CSR");
+        let mut ia = Vec::with_capacity(mask.rows() + 1);
+        let mut ja = Vec::new();
+        ia.push(0u32);
+        for i in 0..mask.rows() {
+            for j in 0..mask.cols() {
+                if mask.get(i, j) {
+                    ja.push(j as u16);
+                }
+            }
+            ia.push(ja.len() as u32);
+        }
+        Csr16 { rows: mask.rows(), cols: mask.cols(), ia, ja }
+    }
+
+    /// Recover the mask.
+    pub fn decode(&self) -> Result<BitMatrix> {
+        let mut mask = BitMatrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (a, b) = (self.ia[i] as usize, self.ia[i + 1] as usize);
+            if b < a || b > self.ja.len() {
+                return Err(Error::invalid(format!("corrupt IA at row {i}")));
+            }
+            for &j in &self.ja[a..b] {
+                if (j as usize) >= self.cols {
+                    return Err(Error::invalid(format!("JA out of range: {j}")));
+                }
+                mask.set(i, j as usize, true);
+            }
+        }
+        Ok(mask)
+    }
+
+    /// Number of stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.ja.len()
+    }
+
+    /// Size: 2 B per JA entry + 4 B per IA entry.
+    pub fn index_bytes(&self) -> usize {
+        self.ja.len() * 2 + self.ia.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn paper_figure1_example() {
+        // Figure 1: the 4x4 pruned matrix has IA=[0 2 2 5 7],
+        // JA=[0 3 0 1 3 0 1].
+        let rows = [
+            [1, 0, 0, 1],
+            [0, 0, 0, 0],
+            [1, 1, 0, 1],
+            [1, 1, 0, 0],
+        ];
+        let mask = BitMatrix::from_fn(4, 4, |i, j| rows[i][j] == 1);
+        let csr = Csr16::encode(&mask);
+        assert_eq!(csr.ia, vec![0, 2, 2, 5, 7]);
+        assert_eq!(csr.ja, vec![0, 3, 0, 1, 3, 0, 1]);
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        prop::check("csr16 roundtrip", 10, |rng| {
+            let m = prop::dim(rng, 1, 30);
+            let n = prop::dim(rng, 1, 60);
+            let d = rng.next_f64();
+            let mut r2 = Rng::new(rng.next_u64());
+            let mask = BitMatrix::from_fn(m, n, |_, _| r2.bernoulli(d));
+            let enc = Csr16::encode(&mask);
+            assert_eq!(enc.decode().unwrap(), mask);
+            assert_eq!(enc.nnz() as u64, mask.count_ones());
+        });
+    }
+
+    #[test]
+    fn size_tracks_nnz() {
+        let dense = BitMatrix::from_fn(10, 10, |_, _| true);
+        let empty = BitMatrix::zeros(10, 10);
+        assert!(Csr16::encode(&dense).index_bytes() > Csr16::encode(&empty).index_bytes());
+        assert_eq!(Csr16::encode(&empty).index_bytes(), 11 * 4);
+    }
+
+    #[test]
+    fn corrupt_ja_detected() {
+        let mask = BitMatrix::from_fn(2, 4, |i, j| i == 0 && j < 2);
+        let mut enc = Csr16::encode(&mask);
+        enc.ja[0] = 99; // out of range
+        assert!(enc.decode().is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! The proposed low-rank binary index as a storable format: packed
+//! `I_p` and `I_z` (k(m+n) bits) + decode via boolean product.
+
+use crate::bmf::algorithm1::FactorizedIndex;
+use crate::util::bits::BitMatrix;
+use crate::util::error::{Error, Result};
+
+/// Serialized low-rank index: dims + packed factor bits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LowRankIndex {
+    /// Mask rows.
+    pub m: usize,
+    /// Mask cols.
+    pub n: usize,
+    /// Rank.
+    pub k: usize,
+    /// Packed I_p then I_z, row-major, LSB-first.
+    pub payload: Vec<u8>,
+}
+
+fn pack_into(bits: &BitMatrix, out: &mut Vec<u8>, cursor: &mut usize) {
+    for i in 0..bits.rows() {
+        for j in 0..bits.cols() {
+            if bits.get(i, j) {
+                let idx = *cursor;
+                if idx / 8 >= out.len() {
+                    out.resize(idx / 8 + 1, 0);
+                }
+                out[idx / 8] |= 1 << (idx % 8);
+            }
+            *cursor += 1;
+        }
+    }
+}
+
+impl LowRankIndex {
+    /// Pack a factorized index.
+    pub fn encode(f: &FactorizedIndex) -> Self {
+        let (m, k) = (f.ip.rows(), f.ip.cols());
+        let n = f.iz.cols();
+        let total_bits = k * (m + n);
+        let mut payload = vec![0u8; total_bits.div_ceil(8)];
+        let mut cursor = 0usize;
+        let mut tmp = std::mem::take(&mut payload);
+        pack_into(&f.ip, &mut tmp, &mut cursor);
+        pack_into(&f.iz, &mut tmp, &mut cursor);
+        payload = tmp;
+        LowRankIndex { m, n, k, payload }
+    }
+
+    fn bit(&self, idx: usize) -> bool {
+        self.payload[idx / 8] >> (idx % 8) & 1 == 1
+    }
+
+    /// Unpack to (I_p, I_z).
+    pub fn factors(&self) -> Result<(BitMatrix, BitMatrix)> {
+        let need = (self.k * (self.m + self.n)).div_ceil(8);
+        if self.payload.len() < need {
+            return Err(Error::invalid(format!(
+                "payload {} bytes, need {need}",
+                self.payload.len()
+            )));
+        }
+        let ip = BitMatrix::from_fn(self.m, self.k, |i, j| self.bit(i * self.k + j));
+        let base = self.m * self.k;
+        let iz = BitMatrix::from_fn(self.k, self.n, |i, j| self.bit(base + i * self.n + j));
+        Ok((ip, iz))
+    }
+
+    /// Decode the mask (boolean product — the paper's decompressor).
+    pub fn decode(&self) -> Result<BitMatrix> {
+        let (ip, iz) = self.factors()?;
+        Ok(ip.bool_product(&iz))
+    }
+
+    /// Payload size (the k(m+n)/8 the paper reports).
+    pub fn index_bytes(&self) -> usize {
+        self.payload.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bmf::algorithm1::{algorithm1, Algorithm1Config};
+    use crate::tensor::Matrix;
+    use crate::util::rng::Rng;
+
+    fn factorize(seed: u64) -> FactorizedIndex {
+        let mut rng = Rng::new(seed);
+        let w = Matrix::gaussian(48, 36, 0.0, 0.1, &mut rng);
+        let mut cfg = Algorithm1Config::new(6, 0.85);
+        cfg.sp_grid = vec![0.3, 0.6];
+        cfg.nmf.max_iters = 15;
+        algorithm1(&w, &cfg).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_factors_and_mask() {
+        let f = factorize(1);
+        let enc = LowRankIndex::encode(&f);
+        let (ip, iz) = enc.factors().unwrap();
+        assert_eq!(ip, f.ip);
+        assert_eq!(iz, f.iz);
+        assert_eq!(enc.decode().unwrap(), f.mask);
+    }
+
+    #[test]
+    fn payload_size_matches_formula() {
+        let f = factorize(2);
+        let enc = LowRankIndex::encode(&f);
+        assert_eq!(enc.index_bytes(), (6usize * (48 + 36)).div_ceil(8));
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let f = factorize(3);
+        let mut enc = LowRankIndex::encode(&f);
+        enc.payload.truncate(enc.payload.len() - 1);
+        assert!(enc.factors().is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! Sparse pruning-index representation formats (Figure 1, Tables 1R/3).
+//!
+//! Every format answers two questions: *how many bytes does the index
+//! take* and *can the exact mask be recovered* (encode/decode
+//! round-trip). Two of the formats — Viterbi and low-rank — are
+//! *mask-shaping* formats: they do not store an arbitrary mask but
+//! constrain which masks are representable, trading unintended prunes
+//! (Cost) for a fixed compression ratio.
+
+pub mod binary;
+pub mod csr;
+pub mod lowrank;
+pub mod relative;
+pub mod viterbi;
+
+use crate::tensor::Matrix;
+
+/// A row of the format-comparison tables.
+#[derive(Debug, Clone)]
+pub struct FormatRow {
+    /// Format name as printed in the paper.
+    pub name: String,
+    /// Index size in bytes.
+    pub bytes: usize,
+    /// Paper-style comment column.
+    pub comment: String,
+}
+
+impl FormatRow {
+    /// Size in KB (paper uses KB = 1000 B for Table 1, KiB-ish for
+    /// Table 3; we print KB = 1000 B and note the delta).
+    pub fn kb(&self) -> f64 {
+        self.bytes as f64 / 1000.0
+    }
+}
+
+/// Compare all index formats on a mask derived from `w` at sparsity
+/// `s`; `lowrank_bits` is the proposed format's index budget in bits
+/// (k(m+n), possibly tiled). Produces the rows of Table 1 (right) /
+/// Table 3.
+pub fn format_comparison(
+    w: &Matrix,
+    s: f64,
+    lowrank_bits: usize,
+    lowrank_comment: &str,
+) -> Vec<FormatRow> {
+    let (mask, _) = crate::pruning::magnitude_mask(w, s);
+    let bin = binary::BinaryIndex::encode(&mask);
+    let c16 = csr::Csr16::encode(&mask);
+    let c5 = relative::Csr5Relative::encode(&mask);
+    let vit_bytes = viterbi::index_bytes(mask.rows(), mask.cols());
+    vec![
+        FormatRow {
+            name: "Binary".into(),
+            bytes: bin.index_bytes(),
+            comment: "1bit/weight".into(),
+        },
+        FormatRow {
+            name: "CSR(16bit)".into(),
+            bytes: c16.index_bytes(),
+            comment: String::new(),
+        },
+        FormatRow {
+            name: "CSR(5bit)".into(),
+            bytes: c5.index_bytes(),
+            comment: "Relative Indexing".into(),
+        },
+        FormatRow {
+            name: "Viterbi".into(),
+            bytes: vit_bytes,
+            comment: "5X Encoder".into(),
+        },
+        FormatRow {
+            name: "Proposed".into(),
+            bytes: lowrank_bits.div_ceil(8),
+            comment: lowrank_comment.into(),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn table1_right_shape_holds() {
+        // FC1 800x500 at S=0.95, proposed k=16.
+        let mut rng = Rng::new(1);
+        let w = Matrix::gaussian(800, 500, 0.0, 0.1, &mut rng);
+        let rows = format_comparison(&w, 0.95, 16 * (800 + 500), "k=16");
+        let get = |n: &str| rows.iter().find(|r| r.name == n).unwrap().kb();
+        // paper: Binary 50.0, CSR16 45.8, CSR5 14.3, Viterbi 10.0, ours 2.6
+        assert_eq!(get("Binary"), 50.0);
+        assert!((get("CSR(16bit)") - 45.8).abs() < 4.0, "csr16 {}", get("CSR(16bit)"));
+        assert!((get("CSR(5bit)") - 14.3).abs() < 2.0, "csr5 {}", get("CSR(5bit)"));
+        assert_eq!(get("Viterbi"), 10.0);
+        assert_eq!(get("Proposed"), 2.6);
+        // ordering must match the paper exactly
+        let sizes: Vec<f64> = rows.iter().map(|r| r.kb()).collect();
+        for pair in sizes.windows(2) {
+            assert!(pair[0] > pair[1], "sizes must strictly decrease: {sizes:?}");
+        }
+    }
+}

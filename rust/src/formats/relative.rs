@@ -1,0 +1,147 @@
+//! CSR with 5-bit *relative* (gap) indexing — Deep Compression's
+//! scheme [9]: store the column gap to the previous non-zero in 5
+//! bits; when a gap exceeds 31, insert filler entries (gap 31 that do
+//! not correspond to a weight) until the remainder fits.
+
+use crate::util::bits::BitMatrix;
+
+/// 5-bit relative-index stream.
+#[derive(Debug, Clone)]
+pub struct Csr5Relative {
+    rows: usize,
+    cols: usize,
+    /// Entries are (gap, is_real). Stored packed 5 bits each; fillers
+    /// are entries with gap == MAX_GAP that carry no weight.
+    entries: Vec<u8>,
+    /// Real non-zero count (excludes fillers).
+    nnz: usize,
+}
+
+/// Maximum representable gap (2^5 - 1).
+pub const MAX_GAP: u32 = 31;
+
+impl Csr5Relative {
+    /// Encode a mask as a flat row-major gap stream. Entry values
+    /// 0..=30 are real gaps; the sentinel 31 is a filler advancing the
+    /// cursor 31 positions without emitting a weight (Deep Compression
+    /// pads with an explicit zero weight instead — byte-for-byte the
+    /// stream length is the same, and ours round-trips the mask
+    /// exactly).
+    pub fn encode(mask: &BitMatrix) -> Self {
+        let (rows, cols) = (mask.rows(), mask.cols());
+        let mut entries = Vec::new();
+        let mut nnz = 0usize;
+        let mut gap: u32 = 0;
+        for i in 0..rows {
+            for j in 0..cols {
+                if mask.get(i, j) {
+                    while gap >= MAX_GAP {
+                        entries.push(MAX_GAP as u8);
+                        gap -= MAX_GAP;
+                    }
+                    entries.push(gap as u8);
+                    nnz += 1;
+                    gap = 0;
+                } else {
+                    gap += 1;
+                }
+            }
+        }
+        Csr5Relative { rows, cols, entries, nnz }
+    }
+
+    /// Recover the mask: sentinel entries (31) accumulate skip
+    /// distance; every other entry places one mask bit.
+    pub fn decode(&self) -> BitMatrix {
+        let mut mask = BitMatrix::zeros(self.rows, self.cols);
+        let total = self.rows * self.cols;
+        let mut pos: usize = 0; // next candidate position
+        let mut pending: u32 = 0; // accumulated gap from fillers
+        for &e in &self.entries {
+            if e as u32 == MAX_GAP {
+                pending += MAX_GAP;
+                continue;
+            }
+            pos += (pending + e as u32) as usize;
+            pending = 0;
+            if pos < total {
+                mask.set(pos / self.cols, pos % self.cols, true);
+            }
+            pos += 1;
+        }
+        mask
+    }
+
+    /// Real non-zeros represented.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Total 5-bit entries including fillers.
+    pub fn entry_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Packed size: ceil(5 * entries / 8) bytes.
+    pub fn index_bytes(&self) -> usize {
+        (self.entries.len() * 5).div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn encode_matches_gap_semantics() {
+        // mask: positions 0, 2 in a 1x8 row -> gaps [0, 1]
+        let mask = BitMatrix::from_fn(1, 8, |_, j| j == 0 || j == 2);
+        let enc = Csr5Relative::encode(&mask);
+        assert_eq!(enc.entries, vec![0, 1]);
+        assert_eq!(enc.nnz(), 2);
+    }
+
+    #[test]
+    fn long_gap_inserts_filler() {
+        // single 1 at position 40: gap 40 = filler(31) + real gap 9
+        let mask = BitMatrix::from_fn(1, 64, |_, j| j == 40);
+        let enc = Csr5Relative::encode(&mask);
+        assert_eq!(enc.entries, vec![31, 9]);
+        assert_eq!(enc.nnz(), 1);
+        assert_eq!(enc.decode(), mask);
+    }
+
+    #[test]
+    fn gap_exactly_31_boundary() {
+        // gap 31 must become filler(31) + real(0): real gaps are < 31.
+        let mask = BitMatrix::from_fn(1, 64, |_, j| j == 31);
+        let enc = Csr5Relative::encode(&mask);
+        assert_eq!(enc.entries, vec![31, 0]);
+        assert_eq!(enc.decode(), mask);
+    }
+
+    #[test]
+    fn roundtrip_random_sparse() {
+        prop::check("csr5 roundtrip", 12, |rng| {
+            let m = prop::dim(rng, 1, 20);
+            let n = prop::dim(rng, 1, 120);
+            let d = rng.next_f64() * 0.3;
+            let mut r2 = Rng::new(rng.next_u64());
+            let mask = BitMatrix::from_fn(m, n, |_, _| r2.bernoulli(d));
+            let enc = Csr5Relative::encode(&mask);
+            assert_eq!(enc.decode(), mask);
+        });
+    }
+
+    #[test]
+    fn sparser_uses_more_fillers_but_fewer_bytes_than_csr16() {
+        let mut rng = Rng::new(5);
+        let mask = BitMatrix::from_fn(200, 200, |_, _| rng.bernoulli(0.05));
+        let c5 = Csr5Relative::encode(&mask);
+        let c16 = crate::formats::csr::Csr16::encode(&mask);
+        assert!(c5.index_bytes() < c16.index_bytes() / 2);
+        assert!(c5.entry_count() >= c5.nnz());
+    }
+}

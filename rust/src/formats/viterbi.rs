@@ -1,0 +1,328 @@
+//! Viterbi-based pruning-index compression — the [14] baseline.
+//!
+//! The scheme stores only the *input* bit-stream of a rate-1/R
+//! convolutional encoder; the decompressor regenerates R mask bits per
+//! input bit. Compression ratio is therefore fixed at R (the paper's
+//! "5X Encoder"). Like our BMF format, the encoder cannot represent an
+//! arbitrary mask: a trellis (Viterbi) search chooses the input stream
+//! whose *output* mask keeps the largest weight magnitudes at the
+//! target sparsity.
+//!
+//! Implementation: constraint-length-7 shift register; output bit `r`
+//! of step `t` is `popcount(state & GEN[r]) & 1` xor-ed over taps —
+//! the classic feed-forward convolutional code. Branch metric rewards
+//! keeping large-|W| positions and penalises keeping positions the
+//! magnitude-pruned mask discards, with a Lagrange weight λ bisected
+//! until the output sparsity matches the target.
+
+use crate::tensor::Matrix;
+use crate::util::bits::BitMatrix;
+use crate::util::error::{Error, Result};
+
+/// Outputs per input bit (the paper's 5×).
+pub const RATE: usize = 5;
+/// Shift-register length (constraint length 7 → 64 states).
+const K: usize = 6;
+const NSTATES: usize = 1 << K;
+/// Generator taps (one per output), picked from standard odd-weight
+/// polynomials so outputs are balanced and well-mixed.
+const GEN: [u64; RATE] = [0b1011011, 0b1111001, 0b1100101, 0b1010111, 0b1101101];
+
+/// Index size in bytes for an m×n mask: mn/RATE bits.
+pub fn index_bytes(m: usize, n: usize) -> usize {
+    (m * n).div_ceil(RATE).div_ceil(8)
+}
+
+/// Encoder output for (state, input) — RATE mask bits.
+#[inline]
+fn emit(state: u64, input: u64) -> [bool; RATE] {
+    let reg = (state << 1) | input; // K+1 bits of history
+    let mut out = [false; RATE];
+    for (r, g) in GEN.iter().enumerate() {
+        out[r] = ((reg & g).count_ones() & 1) == 1;
+    }
+    out
+}
+
+/// A compressed Viterbi index: one input bit per RATE mask bits,
+/// stored per row (the hardware decodes rows in parallel, paper §1).
+#[derive(Debug, Clone)]
+pub struct ViterbiIndex {
+    rows: usize,
+    cols: usize,
+    /// Input bits, row-major, `ceil(cols/RATE)` per row.
+    inputs: Vec<u8>,
+}
+
+/// Result of Viterbi mask search.
+#[derive(Debug)]
+pub struct ViterbiResult {
+    /// The compressed index.
+    pub index: ViterbiIndex,
+    /// The (approximate) mask the decompressor will regenerate.
+    pub mask: BitMatrix,
+    /// Magnitude-sum of weights the magnitude-pruned reference keeps
+    /// but this mask prunes (same Cost definition as Algorithm 1).
+    pub cost: f64,
+    /// Achieved sparsity.
+    pub sparsity: f64,
+}
+
+impl ViterbiIndex {
+    /// Input bits per row.
+    fn steps(cols: usize) -> usize {
+        cols.div_ceil(RATE)
+    }
+
+    /// Decode the full mask (what the on-chip decompressor does).
+    pub fn decode(&self) -> BitMatrix {
+        let steps = Self::steps(self.cols);
+        let mut mask = BitMatrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let mut state = 0u64;
+            for t in 0..steps {
+                let bit_idx = i * steps + t;
+                let input = (self.inputs[bit_idx / 8] >> (bit_idx % 8)) as u64 & 1;
+                let out = emit(state, input);
+                for (r, &o) in out.iter().enumerate() {
+                    let j = t * RATE + r;
+                    if j < self.cols && o {
+                        mask.set(i, j, true);
+                    }
+                }
+                state = ((state << 1) | input) & (NSTATES as u64 - 1);
+            }
+        }
+        mask
+    }
+
+    /// Stored bytes.
+    pub fn index_bytes(&self) -> usize {
+        self.inputs.len()
+    }
+}
+
+/// Viterbi (max-sum trellis) search for the best input stream of one
+/// row given per-position scores: score[j] is ADDED when mask bit j
+/// is 1. Returns (input bits, emitted mask bits).
+fn search_row(scores: &[f64], cols: usize) -> (Vec<bool>, Vec<bool>) {
+    let steps = ViterbiIndex::steps(cols);
+    // metric[state] plus backpointers per step
+    let mut metric = vec![f64::NEG_INFINITY; NSTATES];
+    metric[0] = 0.0;
+    let mut bp: Vec<[u8; NSTATES]> = Vec::with_capacity(steps);
+    for t in 0..steps {
+        let mut next = vec![f64::NEG_INFINITY; NSTATES];
+        let mut back = [0u8; NSTATES];
+        for s in 0..NSTATES {
+            if metric[s] == f64::NEG_INFINITY {
+                continue;
+            }
+            for input in 0..2u64 {
+                let out = emit(s as u64, input);
+                let mut gain = 0.0;
+                for (r, &o) in out.iter().enumerate() {
+                    let j = t * RATE + r;
+                    if o && j < cols {
+                        gain += scores[j];
+                    }
+                }
+                let ns = (((s as u64) << 1) | input) as usize & (NSTATES - 1);
+                let cand = metric[s] + gain;
+                if cand > next[ns] {
+                    next[ns] = cand;
+                    // pack (prev state, input) — prev state is
+                    // recoverable from ns and input? ns low bit = input,
+                    // prev = (ns >> 1) | (dropped bit << (K-1)): store
+                    // the dropped bit.
+                    back[ns] = ((s >> (K - 1)) as u8) << 1 | input as u8;
+                }
+            }
+        }
+        metric = next;
+        bp.push(back);
+    }
+    // pick best terminal state, walk back
+    let mut best = 0usize;
+    for s in 1..NSTATES {
+        if metric[s] > metric[best] {
+            best = s;
+        }
+    }
+    let mut inputs = vec![false; steps];
+    let mut s = best;
+    for t in (0..steps).rev() {
+        let packed = bp[t][s];
+        let input = packed & 1;
+        let dropped = (packed >> 1) as usize;
+        inputs[t] = input == 1;
+        s = (s >> 1) | (dropped << (K - 1));
+    }
+    // re-emit mask bits forward
+    let mut mask_bits = vec![false; cols];
+    let mut state = 0u64;
+    for (t, &inp) in inputs.iter().enumerate() {
+        let out = emit(state, inp as u64);
+        for (r, &o) in out.iter().enumerate() {
+            let j = t * RATE + r;
+            if j < cols {
+                mask_bits[j] = o;
+            }
+        }
+        state = ((state << 1) | inp as u64) & (NSTATES as u64 - 1);
+    }
+    (inputs, mask_bits)
+}
+
+/// Compress a weight matrix's pruning index with the Viterbi scheme at
+/// target sparsity `s`. λ is bisected so the kept fraction matches.
+pub fn compress(w: &Matrix, s: f64) -> Result<ViterbiResult> {
+    if !(0.0..1.0).contains(&s) {
+        return Err(Error::invalid("sparsity outside [0,1)"));
+    }
+    let (rows, cols) = (w.rows(), w.cols());
+    let mags = w.abs();
+    let max_mag = mags.max_abs() as f64;
+    // score_j = |W_ij| - λ : keeping a weight is worth its magnitude
+    // minus the sparsity price.
+    let run = |lambda: f64| -> (Vec<Vec<bool>>, BitMatrix) {
+        let mut inputs = Vec::with_capacity(rows);
+        let mut mask = BitMatrix::zeros(rows, cols);
+        for i in 0..rows {
+            let scores: Vec<f64> =
+                mags.row(i).iter().map(|&m| m as f64 - lambda).collect();
+            let (inp, bits) = search_row(&scores, cols);
+            for (j, &b) in bits.iter().enumerate() {
+                if b {
+                    mask.set(i, j, true);
+                }
+            }
+            inputs.push(inp);
+        }
+        (inputs, mask)
+    };
+    let mut lo = 0.0f64;
+    let mut hi = max_mag;
+    let mut best = run(max_mag * s);
+    for _ in 0..18 {
+        let sp = best.1.sparsity();
+        if (sp - s).abs() < 5e-3 {
+            break;
+        }
+        let mid = 0.5 * (lo + hi);
+        let cand = run(mid);
+        if cand.1.sparsity() < s {
+            lo = mid; // not sparse enough -> raise λ
+        } else {
+            hi = mid;
+        }
+        best = cand;
+    }
+    let (inputs, mask) = best;
+    // pack input bits
+    let steps = ViterbiIndex::steps(cols);
+    let mut packed = vec![0u8; (rows * steps).div_ceil(8)];
+    for (i, row) in inputs.iter().enumerate() {
+        for (t, &b) in row.iter().enumerate() {
+            if b {
+                let idx = i * steps + t;
+                packed[idx / 8] |= 1 << (idx % 8);
+            }
+        }
+    }
+    let index = ViterbiIndex { rows, cols, inputs: packed };
+    // cost vs the magnitude-pruned reference
+    let (reference, _) = crate::pruning::magnitude_mask(w, s);
+    let mut cost = 0.0;
+    for i in 0..rows {
+        for j in 0..cols {
+            if reference.get(i, j) && !mask.get(i, j) {
+                cost += mags.get(i, j) as f64;
+            }
+        }
+    }
+    Ok(ViterbiResult { sparsity: mask.sparsity(), index, mask, cost })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn index_size_is_one_fifth_of_binary() {
+        // Table 1R: 800x500 -> Viterbi 10.0KB vs Binary 50.0KB.
+        assert_eq!(index_bytes(800, 500), 10_000);
+        // Table 3: FC5 922KB (KB=1000): 9216*4096/5/8 = 943,718 B ≈ 921.6 KiB
+        let fc5 = index_bytes(9216, 4096);
+        assert!((fc5 as f64 / 1024.0 - 921.6).abs() < 1.0);
+    }
+
+    #[test]
+    fn decode_reproduces_search_output() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::gaussian(8, 50, 0.0, 1.0, &mut rng);
+        let res = compress(&w, 0.8).unwrap();
+        assert_eq!(res.index.decode(), res.mask, "decompressor must be exact");
+    }
+
+    #[test]
+    fn achieves_target_sparsity_approximately() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::gaussian(16, 100, 0.0, 1.0, &mut rng);
+        for s in [0.6, 0.9] {
+            let res = compress(&w, s).unwrap();
+            assert!(
+                (res.sparsity - s).abs() < 0.08,
+                "target {s}, got {}",
+                res.sparsity
+            );
+        }
+    }
+
+    #[test]
+    fn keeps_heavier_weights_than_random() {
+        // The trellis should prune mostly small weights: kept mean |w|
+        // must clearly exceed the overall mean |w|.
+        let mut rng = Rng::new(3);
+        let w = Matrix::gaussian(12, 80, 0.0, 1.0, &mut rng);
+        let res = compress(&w, 0.8).unwrap();
+        let mags = w.abs();
+        let mut kept_sum = 0.0;
+        let mut kept_n = 0.0f64;
+        for i in 0..12 {
+            for j in 0..80 {
+                if res.mask.get(i, j) {
+                    kept_sum += mags.get(i, j) as f64;
+                    kept_n += 1.0;
+                }
+            }
+        }
+        let kept_mean = kept_sum / kept_n.max(1.0);
+        let overall = mags.mean();
+        assert!(
+            kept_mean > overall * 1.3,
+            "kept mean {kept_mean} vs overall {overall}"
+        );
+    }
+
+    #[test]
+    fn emit_is_deterministic_and_balanced() {
+        // across all (state, input), each output bit should be ~50/50
+        let mut ones = [0u32; RATE];
+        for s in 0..NSTATES as u64 {
+            for i in 0..2 {
+                let out = emit(s, i);
+                for (r, &o) in out.iter().enumerate() {
+                    if o {
+                        ones[r] += 1;
+                    }
+                }
+            }
+        }
+        let total = (NSTATES * 2) as u32;
+        for (r, &c) in ones.iter().enumerate() {
+            assert_eq!(c, total / 2, "output {r} unbalanced: {c}/{total}");
+        }
+    }
+}

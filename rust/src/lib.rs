@@ -1,0 +1,25 @@
+//! # lrbi — Low-Rank Binary Indexing for Network Pruning
+//!
+//! Reproduction of "Network Pruning for Low-Rank Binary Indexing"
+//! (Lee, Kwon, Kim, Kapoor, Wei — 2019) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! See `DESIGN.md` at the repository root for the system inventory.
+
+pub mod bmf;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod formats;
+pub mod models;
+pub mod nmf;
+pub mod pruning;
+pub mod report;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod tiling;
+pub mod train;
+pub mod util;
+
+pub use util::error::{Error, Result};

@@ -1,0 +1,8 @@
+//! `lrbi` — leader entrypoint for the low-rank binary indexing system.
+//!
+//! See `lrbi info` for usage; DESIGN.md for the architecture.
+
+fn main() {
+    let code = lrbi::cli::run(std::env::args().skip(1));
+    std::process::exit(code);
+}

@@ -1,0 +1,71 @@
+//! LeNet-5 (paper §2.2): two conv layers + two FC layers; FC1
+//! (800 × 500) holds 93% of the parameters and is the layer every
+//! MNIST experiment in the paper factorizes.
+
+use super::{LayerKind, LayerSpec, ModelSpec};
+
+/// FC1 dimensions used throughout the paper.
+pub const FC1_ROWS: usize = 800;
+/// FC1 columns.
+pub const FC1_COLS: usize = 500;
+
+/// The LeNet-5 descriptor.
+pub fn lenet5() -> ModelSpec {
+    let mk = |name: &str, rows, cols, kind, compress| LayerSpec {
+        name: name.into(),
+        rows,
+        cols,
+        kind,
+        group: 0,
+        compress,
+    };
+    ModelSpec {
+        name: "LeNet-5".into(),
+        layers: vec![
+            // conv1: 20 filters of 5x5x1 -> (20, 25)
+            mk("conv1", 20, 25, LayerKind::Conv, false),
+            // conv2: 50 filters of 5x5x20 -> (50, 500)
+            mk("conv2", 50, 500, LayerKind::Conv, false),
+            // fc1: 800 -> 500 (the paper's compression target)
+            mk("fc1", FC1_ROWS, FC1_COLS, LayerKind::Fc, true),
+            // fc2: 500 -> 10
+            mk("fc2", 500, 10, LayerKind::Fc, false),
+        ],
+    }
+}
+
+/// Per-layer pruning rates from Han et al. [7] (§2.2: "all layers are
+/// pruned with the same rates as in [7]").
+pub fn han_pruning_rates() -> Vec<(&'static str, f64)> {
+    vec![("conv1", 0.34), ("conv2", 0.88), ("fc1", 0.95), ("fc2", 0.81)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fc1_dominates_memory() {
+        let m = lenet5();
+        let fc1 = m.layer("fc1").unwrap().params() as f64;
+        let total = m.params() as f64;
+        // paper: FC1 is ~93% of the model
+        assert!(fc1 / total > 0.9, "fc1 fraction = {}", fc1 / total);
+    }
+
+    #[test]
+    fn only_fc1_is_compressed() {
+        let m = lenet5();
+        let names: Vec<_> = m.compressible().map(|l| l.name.as_str()).collect();
+        assert_eq!(names, vec!["fc1"]);
+    }
+
+    #[test]
+    fn pruning_rates_cover_all_layers() {
+        let m = lenet5();
+        let rates = han_pruning_rates();
+        for l in &m.layers {
+            assert!(rates.iter().any(|(n, _)| *n == l.name), "missing rate for {}", l.name);
+        }
+    }
+}

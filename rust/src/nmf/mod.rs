@@ -1,0 +1,218 @@
+//! Non-negative matrix factorization (Lee–Seung multiplicative updates).
+//!
+//! Algorithm 1 step 2: `M_p, M_z = NMF(M, k)` where `M = |W|`. The
+//! paper used the Nimfa library [27]; offline we ship our own
+//! implementation (DESIGN.md §Substitutions). The updates are
+//!
+//! ```text
+//! H ← H ∘ (WᵀV) / (WᵀWH + ε)
+//! W ← W ∘ (VHᵀ) / (WHHᵀ + ε)
+//! ```
+//!
+//! which are proven never to increase `‖V − WH‖_F²` (Lee & Seung,
+//! 1999). The same step is also AOT-lowered from the L1 Pallas kernel
+//! (`artifacts/nmf_step.hlo.txt`) so the coordinator can offload it to
+//! the PJRT runtime; `runtime::NmfOffload` and this module are
+//! cross-checked in the integration tests.
+
+use crate::tensor::Matrix;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+const EPS: f32 = 1e-9;
+
+/// Configuration for an NMF run.
+#[derive(Debug, Clone)]
+pub struct NmfConfig {
+    /// Factorization rank `k`.
+    pub rank: usize,
+    /// Maximum alternating update iterations.
+    pub max_iters: usize,
+    /// Stop when the relative objective improvement over one iteration
+    /// falls below this.
+    pub tol: f64,
+    /// RNG seed for factor initialisation.
+    pub seed: u64,
+}
+
+impl NmfConfig {
+    /// Defaults tuned for pruning-index factorization: enough
+    /// iterations to converge on FC-layer tiles, seeded.
+    pub fn new(rank: usize) -> Self {
+        NmfConfig { rank, max_iters: 60, tol: 1e-4, seed: 0x4E4D_4600 }
+    }
+}
+
+/// Result of an NMF run.
+#[derive(Debug, Clone)]
+pub struct NmfResult {
+    /// Left factor `W` (m × k), non-negative.
+    pub w: Matrix,
+    /// Right factor `H` (k × n), non-negative.
+    pub h: Matrix,
+    /// `‖V − WH‖_F²` per iteration (monotone non-increasing).
+    pub objective_log: Vec<f64>,
+    /// Iterations actually run.
+    pub iters: usize,
+}
+
+/// Factorize a non-negative matrix `v` (m × n) into `w (m×k) · h (k×n)`.
+pub fn nmf(v: &Matrix, cfg: &NmfConfig) -> Result<NmfResult> {
+    validate(v, cfg)?;
+    let (m, n) = (v.rows(), v.cols());
+    let k = cfg.rank;
+    let mut rng = Rng::new(cfg.seed);
+    // Scale init so E[(WH)_ij] ≈ mean(V): uniform in (0, sqrt(2*mean/k)).
+    let mean = (v.sum() / (m * n) as f64).max(1e-12);
+    let hi = (2.0 * mean / k as f64).sqrt() as f32;
+    let mut w = Matrix::uniform(m, k, hi * 0.05, hi, &mut rng);
+    let mut h = Matrix::uniform(k, n, hi * 0.05, hi, &mut rng);
+
+    let mut log = Vec::with_capacity(cfg.max_iters + 1);
+    log.push(objective(v, &w, &h)?);
+    let mut iters = 0;
+    for _ in 0..cfg.max_iters {
+        update_h(v, &w, &mut h)?;
+        update_w(v, &mut w, &h)?;
+        iters += 1;
+        let obj = objective(v, &w, &h)?;
+        let prev = *log.last().unwrap();
+        log.push(obj);
+        if prev > 0.0 && (prev - obj) / prev < cfg.tol {
+            break;
+        }
+    }
+    Ok(NmfResult { w, h, objective_log: log, iters })
+}
+
+fn validate(v: &Matrix, cfg: &NmfConfig) -> Result<()> {
+    if cfg.rank == 0 {
+        return Err(Error::invalid("NMF rank must be >= 1"));
+    }
+    if cfg.rank > v.rows().min(v.cols()) {
+        return Err(Error::invalid(format!(
+            "NMF rank {} exceeds min(m,n)={}",
+            cfg.rank,
+            v.rows().min(v.cols())
+        )));
+    }
+    if v.data().iter().any(|&x| x < 0.0) {
+        return Err(Error::invalid("NMF input must be non-negative"));
+    }
+    Ok(())
+}
+
+/// `H ← H ∘ (WᵀV) / (WᵀWH + ε)`
+pub fn update_h(v: &Matrix, w: &Matrix, h: &mut Matrix) -> Result<()> {
+    let wt = w.transpose();
+    let num = wt.matmul(v)?; // k×n
+    let den = wt.matmul(w)?.matmul(h)?; // k×n
+    for ((hv, &nv), &dv) in h.data_mut().iter_mut().zip(num.data()).zip(den.data()) {
+        *hv *= nv / (dv + EPS);
+    }
+    Ok(())
+}
+
+/// `W ← W ∘ (VHᵀ) / (WHHᵀ + ε)`
+pub fn update_w(v: &Matrix, w: &mut Matrix, h: &Matrix) -> Result<()> {
+    let ht = h.transpose();
+    let num = v.matmul(&ht)?; // m×k
+    let den = w.matmul(&h.matmul(&ht)?)?; // m×k
+    for ((wv, &nv), &dv) in w.data_mut().iter_mut().zip(num.data()).zip(den.data()) {
+        *wv *= nv / (dv + EPS);
+    }
+    Ok(())
+}
+
+/// `‖V − WH‖_F²`
+pub fn objective(v: &Matrix, w: &Matrix, h: &Matrix) -> Result<f64> {
+    let approx = w.matmul(h)?;
+    let diff = v.sub(&approx)?;
+    let f = diff.frobenius();
+    Ok(f * f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn random_nonneg(m: usize, n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::gaussian(m, n, 0.0, 1.0, &mut rng).abs()
+    }
+
+    #[test]
+    fn objective_decreases_monotonically() {
+        let v = random_nonneg(40, 30, 1);
+        let res = nmf(&v, &NmfConfig { rank: 5, max_iters: 40, tol: 0.0, seed: 7 }).unwrap();
+        for pair in res.objective_log.windows(2) {
+            assert!(
+                pair[1] <= pair[0] * (1.0 + 1e-6),
+                "objective rose: {} -> {}",
+                pair[0],
+                pair[1]
+            );
+        }
+    }
+
+    #[test]
+    fn factors_stay_nonnegative() {
+        let v = random_nonneg(20, 25, 2);
+        let res = nmf(&v, &NmfConfig::new(4)).unwrap();
+        assert!(res.w.data().iter().all(|&x| x >= 0.0));
+        assert!(res.h.data().iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn exact_low_rank_matrix_recovered_well() {
+        // V = A·B with k=3 should factor to near-zero residual.
+        let a = random_nonneg(30, 3, 3);
+        let b = random_nonneg(3, 20, 4);
+        let v = a.matmul(&b).unwrap();
+        let res = nmf(&v, &NmfConfig { rank: 3, max_iters: 500, tol: 1e-9, seed: 5 }).unwrap();
+        let rel = res.objective_log.last().unwrap() / (v.frobenius().powi(2));
+        assert!(rel < 1e-3, "relative residual too high: {rel}");
+    }
+
+    #[test]
+    fn full_rank_reproduces_closely() {
+        let v = random_nonneg(10, 8, 6);
+        let res = nmf(&v, &NmfConfig { rank: 8, max_iters: 800, tol: 0.0, seed: 8 }).unwrap();
+        let rel = res.objective_log.last().unwrap() / v.frobenius().powi(2);
+        assert!(rel < 0.05, "rel={rel}");
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let v = random_nonneg(5, 5, 9);
+        assert!(nmf(&v, &NmfConfig::new(0)).is_err());
+        assert!(nmf(&v, &NmfConfig::new(6)).is_err());
+        let neg = Matrix::from_vec(1, 2, vec![1.0, -1.0]).unwrap();
+        assert!(nmf(&neg, &NmfConfig::new(1)).is_err());
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let v = random_nonneg(12, 9, 10);
+        let r1 = nmf(&v, &NmfConfig::new(3)).unwrap();
+        let r2 = nmf(&v, &NmfConfig::new(3)).unwrap();
+        assert_eq!(r1.w.data(), r2.w.data());
+        assert_eq!(r1.h.data(), r2.h.data());
+    }
+
+    #[test]
+    fn prop_objective_never_increases_across_shapes() {
+        prop::check("nmf monotone", 8, |rng| {
+            let m = prop::dim(rng, 4, 24);
+            let n = prop::dim(rng, 4, 24);
+            let k = prop::dim(rng, 1, m.min(n).min(5));
+            let v = Matrix::gaussian(m, n, 0.5, 0.5, rng).abs();
+            let res = nmf(&v, &NmfConfig { rank: k, max_iters: 15, tol: 0.0, seed: rng.next_u64() })
+                .unwrap();
+            for pair in res.objective_log.windows(2) {
+                assert!(pair[1] <= pair[0] * (1.0 + 1e-5));
+            }
+        });
+    }
+}

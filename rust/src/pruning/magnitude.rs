@@ -1,0 +1,165 @@
+//! Magnitude-based pruning (the paper's baseline and the input to
+//! Algorithm 1): all weights with |w| below a threshold are pruned.
+
+use crate::tensor::Matrix;
+use crate::util::bits::BitMatrix;
+use crate::util::error::Result;
+
+/// Summary of a pruning operation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PruneStats {
+    /// Fraction of weights pruned (the paper's `S`).
+    pub sparsity: f64,
+    /// Magnitude threshold actually used.
+    pub threshold: f32,
+    /// Number of surviving weights.
+    pub kept: usize,
+}
+
+/// The |W|-threshold such that a fraction `sparsity` of weights falls
+/// below it (ties keep the larger side, matching [7]).
+pub fn threshold_for_sparsity(w: &Matrix, sparsity: f64) -> f32 {
+    w.abs().quantile(sparsity)
+}
+
+/// Binary keep-mask `I` for magnitude pruning at target `sparsity`
+/// (Eq. 2 of the paper): `I_ij = 1` iff `|W_ij| >= threshold`.
+///
+/// Exactness: quantile thresholding can keep slightly more weights
+/// than the target when values tie; the deviation is reported via the
+/// returned stats rather than silently hidden.
+pub fn magnitude_mask(w: &Matrix, sparsity: f64) -> (BitMatrix, PruneStats) {
+    let t = threshold_for_sparsity(w, sparsity);
+    let cols = w.cols();
+    let data = w.data();
+    let mask = BitMatrix::from_fn(w.rows(), cols, |i, j| data[i * cols + j].abs() >= t);
+    let kept = mask.count_ones() as usize;
+    let stats = PruneStats {
+        sparsity: 1.0 - kept as f64 / w.len() as f64,
+        threshold: t,
+        kept,
+    };
+    (mask, stats)
+}
+
+/// Apply a keep-mask: zero every pruned weight.
+pub fn prune_with_mask(w: &Matrix, mask: &BitMatrix) -> Result<Matrix> {
+    let mut out = w.clone();
+    for i in 0..w.rows() {
+        for j in 0..w.cols() {
+            if !mask.get(i, j) {
+                out.set(i, j, 0.0);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// The paper's worked example, Eq. (1): the 5×5 weight matrix.
+pub fn paper_example_weights() -> Matrix {
+    Matrix::from_vec(
+        5,
+        5,
+        vec![
+            -0.1, 0.9, 1.2, -0.2, -0.6, //
+            1.8, 0.2, -0.7, -1.6, 0.6, //
+            -0.1, -1.7, 0.1, -0.3, 1.2, //
+            -0.4, 1.4, -0.9, 0.6, 1.4, //
+            -1.1, 0.5, 1.0, 1.0, -0.3,
+        ],
+    )
+    .expect("static shape")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn paper_example_mask_matches_eq2() {
+        // Threshold 0.7 on Eq. (1) produces Eq. (2).
+        let w = paper_example_weights();
+        let cols = w.cols();
+        let data = w.data();
+        let mask = BitMatrix::from_fn(5, 5, |i, j| data[i * cols + j].abs() >= 0.7);
+        let want = [
+            [0, 1, 1, 0, 0],
+            [1, 0, 1, 1, 0],
+            [0, 1, 0, 0, 1],
+            [0, 1, 1, 0, 1],
+            [1, 0, 1, 1, 0],
+        ];
+        for i in 0..5 {
+            for j in 0..5 {
+                assert_eq!(mask.get(i, j), want[i][j] == 1, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn sparsity_hits_target() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::gaussian(100, 80, 0.0, 1.0, &mut rng);
+        let (_, stats) = magnitude_mask(&w, 0.9);
+        assert!((stats.sparsity - 0.9).abs() < 0.01, "sparsity={}", stats.sparsity);
+    }
+
+    #[test]
+    fn kept_weights_all_exceed_threshold() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::gaussian(50, 50, 0.0, 1.0, &mut rng);
+        let (mask, stats) = magnitude_mask(&w, 0.7);
+        for i in 0..50 {
+            for j in 0..50 {
+                if mask.get(i, j) {
+                    assert!(w.get(i, j).abs() >= stats.threshold);
+                } else {
+                    assert!(w.get(i, j).abs() <= stats.threshold);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prune_with_mask_zeroes_only_pruned() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::gaussian(20, 20, 0.0, 1.0, &mut rng);
+        let (mask, _) = magnitude_mask(&w, 0.5);
+        let pruned = prune_with_mask(&w, &mask).unwrap();
+        for i in 0..20 {
+            for j in 0..20 {
+                if mask.get(i, j) {
+                    assert_eq!(pruned.get(i, j), w.get(i, j));
+                } else {
+                    assert_eq!(pruned.get(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_sparsity_monotone_in_target() {
+        prop::check("sparsity monotone", 10, |rng| {
+            let m = prop::dim(rng, 5, 40);
+            let n = prop::dim(rng, 5, 40);
+            let w = Matrix::gaussian(m, n, 0.0, 1.0, rng);
+            let (_, s1) = magnitude_mask(&w, 0.3);
+            let (_, s2) = magnitude_mask(&w, 0.8);
+            assert!(s2.sparsity >= s1.sparsity);
+        });
+    }
+
+    #[test]
+    fn extreme_sparsities() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::gaussian(10, 10, 0.0, 1.0, &mut rng);
+        let (mask0, _) = magnitude_mask(&w, 0.0);
+        assert_eq!(mask0.count_ones(), 100);
+        let (mask1, s1) = magnitude_mask(&w, 1.0);
+        // quantile(1.0) keeps only the max element(s)
+        assert!(mask1.count_ones() <= 2);
+        assert!(s1.sparsity >= 0.98);
+    }
+}

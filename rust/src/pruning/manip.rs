@@ -1,0 +1,127 @@
+//! Weight-magnitude manipulation (paper §3.2, Figure 7).
+//!
+//! The Cost function of Algorithm 1 is a magnitude sum, so a large
+//! weight can still be pruned if it doesn't fit the low-rank
+//! structure. Pre-processing the magnitude matrix `M` steers NMF away
+//! from pruning large weights:
+//!
+//! * Method 1 — no manipulation (identity).
+//! * Method 2 — `M_ij ← M_ij²` (quadratic emphasis).
+//! * Method 3 — `M_ij ← M_ij / (1 − S)` when `M_ij` exceeds the
+//!   magnitude-pruning threshold for sparsity `S` (the paper's
+//!   best-performing method; also used for Table 2 / ResNet32).
+//!
+//! Manipulation is used only while *compressing the index* — never for
+//! training or inference.
+
+use crate::pruning::magnitude::threshold_for_sparsity;
+use crate::tensor::Matrix;
+
+/// Which manipulation to apply to `M = |W|` before NMF.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ManipMethod {
+    /// Method 1: identity.
+    None,
+    /// Method 2: square each magnitude.
+    Square,
+    /// Method 3: amplify above-threshold magnitudes by `1/(1−S)`.
+    AmplifyAboveThreshold,
+}
+
+impl ManipMethod {
+    /// All methods, in paper order (for the Figure-7 sweep).
+    pub fn all() -> [ManipMethod; 3] {
+        [ManipMethod::None, ManipMethod::Square, ManipMethod::AmplifyAboveThreshold]
+    }
+
+    /// Paper label ("Method 1" …).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ManipMethod::None => "Method 1 (none)",
+            ManipMethod::Square => "Method 2 (square)",
+            ManipMethod::AmplifyAboveThreshold => "Method 3 (amplify 1/(1-S))",
+        }
+    }
+}
+
+/// Apply a manipulation method to the magnitude matrix `m` given the
+/// target pruning rate `s` of the underlying weights.
+pub fn manipulate(m: &Matrix, method: ManipMethod, s: f64) -> Matrix {
+    match method {
+        ManipMethod::None => m.clone(),
+        ManipMethod::Square => m.map(|v| v * v),
+        ManipMethod::AmplifyAboveThreshold => {
+            let t = threshold_for_sparsity(m, s);
+            let gain = (1.0 / (1.0 - s).max(1e-6)) as f32;
+            m.map(|v| if v > t { v * gain } else { v })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn mags(seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::gaussian(40, 30, 0.0, 1.0, &mut rng).abs()
+    }
+
+    #[test]
+    fn method1_is_identity() {
+        let m = mags(1);
+        assert_eq!(manipulate(&m, ManipMethod::None, 0.9).data(), m.data());
+    }
+
+    #[test]
+    fn method2_squares() {
+        let m = mags(2);
+        let out = manipulate(&m, ManipMethod::Square, 0.9);
+        for (a, b) in m.data().iter().zip(out.data()) {
+            assert!((a * a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn method3_amplifies_only_above_threshold() {
+        let m = mags(3);
+        let s = 0.95;
+        let t = threshold_for_sparsity(&m, s);
+        let out = manipulate(&m, ManipMethod::AmplifyAboveThreshold, s);
+        let gain = 1.0 / (1.0 - s) as f32;
+        for (a, b) in m.data().iter().zip(out.data()) {
+            if *a > t {
+                assert!((a * gain - b).abs() / b.max(1e-6) < 1e-4);
+            } else {
+                assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn method3_gain_matches_paper_formula() {
+        // S=0.5 -> amplification 2x for strictly-above-threshold weights
+        let m = Matrix::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let out = manipulate(&m, ManipMethod::AmplifyAboveThreshold, 0.5);
+        // threshold = quantile(0.5) = 3.0; only 4.0 is amplified
+        assert_eq!(out.data(), &[1.0, 2.0, 3.0, 8.0]);
+    }
+
+    #[test]
+    fn manipulation_preserves_order() {
+        // All methods are monotone in |w| — ranking must not change.
+        let m = mags(4);
+        for method in ManipMethod::all() {
+            let out = manipulate(&m, method, 0.9);
+            let mut idx: Vec<usize> = (0..m.len()).collect();
+            idx.sort_by(|&a, &b| m.data()[a].partial_cmp(&m.data()[b]).unwrap());
+            for w in idx.windows(2) {
+                assert!(
+                    out.data()[w[0]] <= out.data()[w[1]] + 1e-6,
+                    "{method:?} broke monotonicity"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Pruning substrate: magnitude-based baselines (Han et al. [7]) and
+//! the weight-magnitude manipulation methods of paper §3.2.
+
+pub mod magnitude;
+pub mod manip;
+
+pub use magnitude::{magnitude_mask, prune_with_mask, threshold_for_sparsity, PruneStats};
+pub use manip::{manipulate, ManipMethod};

@@ -1,0 +1,85 @@
+//! Paper figures as data series (CSV + terminal sparklines). The
+//! heavyweight versions (full NMF sweeps) live in the benches; these
+//! are the fast, CI-friendly renderers.
+
+use crate::bmf::algorithm1::{algorithm1, Algorithm1Config};
+use crate::pruning::magnitude::paper_example_weights;
+use crate::tensor::Matrix;
+use crate::util::bench::{print_table, write_table_csv};
+use crate::util::error::Result;
+use crate::util::stats::Histogram;
+use std::path::Path;
+
+/// Figure 1: the paper's worked example — all four representations of
+/// the same pruned matrix, verified against Eqs. (1)-(6).
+pub fn fig1_worked_example(out_dir: &Path) -> Result<String> {
+    let w = paper_example_weights();
+    let mut cfg = Algorithm1Config::new(2, 0.52); // Eq. (2): 13/25 pruned
+    cfg.sp_grid = (1..10).map(|i| i as f64 * 0.1).collect();
+    let f = algorithm1(&w, &cfg)?;
+    let rows = vec![
+        vec!["shape".into(), format!("{}x{}", w.rows(), w.cols())],
+        vec!["rank".into(), f.rank.to_string()],
+        vec!["mask sparsity".into(), format!("{:.2}", f.achieved_sparsity)],
+        vec!["index bits (binary)".into(), (w.rows() * w.cols()).to_string()],
+        vec!["index bits (low-rank)".into(), f.index_bits().to_string()],
+        vec!["cost".into(), format!("{:.2}", f.cost)],
+    ];
+    print_table("Figure 1: worked 5x5 example", &["field", "value"], &rows);
+    let path = out_dir.join("fig1_example.csv");
+    write_table_csv(path.to_str().unwrap(), &["field", "value"], &rows)?;
+    Ok(path.display().to_string())
+}
+
+/// Histogram of surviving weights under a mask (Figures 3, 6, 7 all
+/// plot this for different mask constructions).
+pub fn unpruned_histogram(w: &Matrix, mask: &crate::util::bits::BitMatrix, bins: usize) -> Histogram {
+    let lim = w.max_abs() as f64;
+    let mut h = Histogram::new(-lim, lim + 1e-6, bins);
+    for i in 0..w.rows() {
+        for j in 0..w.cols() {
+            if mask.get(i, j) {
+                h.add(w.get(i, j) as f64);
+            }
+        }
+    }
+    h
+}
+
+/// Write a histogram series CSV: `center,count` rows.
+pub fn write_histogram(path: &Path, h: &Histogram) -> Result<()> {
+    let rows: Vec<Vec<String>> = h
+        .to_rows()
+        .into_iter()
+        .map(|(c, n)| vec![format!("{c:.4}"), n.to_string()])
+        .collect();
+    write_table_csv(path.to_str().unwrap(), &["center", "count"], &rows)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::magnitude_mask;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn unpruned_histogram_counts_kept_only() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::gaussian(50, 50, 0.0, 1.0, &mut rng);
+        let (mask, _) = magnitude_mask(&w, 0.8);
+        let h = unpruned_histogram(&w, &mask, 21);
+        assert_eq!(h.count(), mask.count_ones());
+        // magnitude pruning removes the near-zero mass entirely
+        let t = w.abs().quantile(0.8) as f64;
+        assert_eq!(h.mass_below_abs(t * 0.5), 0);
+    }
+
+    #[test]
+    fn fig1_runs() {
+        let dir = std::env::temp_dir().join("lrbi_fig_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = fig1_worked_example(&dir).unwrap();
+        assert!(std::path::Path::new(&p).exists());
+    }
+}

@@ -1,0 +1,22 @@
+//! Report generation: renders every paper table/figure from library
+//! calls into aligned text + CSV under a reports directory. The
+//! benches print the same rows; this module is the `lrbi report` CLI
+//! backend (fast subset, suitable for CI).
+
+pub mod figures;
+pub mod tables;
+
+use crate::util::error::Result;
+use std::path::Path;
+
+/// Run every fast report into `out_dir`.
+pub fn generate_all(out_dir: &Path) -> Result<Vec<String>> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut written = Vec::new();
+    written.push(tables::table1_right(out_dir)?);
+    written.push(tables::table3(out_dir)?);
+    written.push(tables::table4_ratios(out_dir)?);
+    written.push(tables::table2_ratios(out_dir)?);
+    written.push(figures::fig1_worked_example(out_dir)?);
+    Ok(written)
+}

@@ -1,0 +1,182 @@
+//! Paper tables as report files. The heavyweight accuracy columns live
+//! in the benches (they train/retrain); the size/ratio columns here
+//! are exact arithmetic and run in milliseconds.
+
+use crate::bmf::compression_ratio;
+use crate::formats::format_comparison;
+use crate::models::alexnet::{
+    fc5_tiling, fc6_tiling, tiled_index_bits, FC5_COLS, FC5_ROWS, FC6_COLS, FC6_ROWS,
+};
+use crate::models::resnet32::{index_compression_ratio, rank_triples, resnet32};
+use crate::tensor::Matrix;
+use crate::util::bench::{print_table, write_table_csv};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+use std::path::Path;
+
+/// Table 1 (right): FC1 index size across formats.
+pub fn table1_right(out_dir: &Path) -> Result<String> {
+    let mut rng = Rng::new(1);
+    let w = Matrix::gaussian(800, 500, 0.0, 0.05, &mut rng);
+    let rows_data = format_comparison(&w, 0.95, 16 * (800 + 500), "k=16");
+    let rows: Vec<Vec<String>> = rows_data
+        .iter()
+        .map(|r| vec![r.name.clone(), format!("{:.1}KB", r.kb()), r.comment.clone()])
+        .collect();
+    print_table("Table 1 (right): LeNet-5 FC1 index size", &["Method", "Index Size", "Comment"], &rows);
+    let path = out_dir.join("table1_right.csv");
+    write_table_csv(path.to_str().unwrap(), &["method", "kb", "comment"], &rows)?;
+    Ok(path.display().to_string())
+}
+
+/// Table 1 (left): compression-ratio column (accuracy comes from the
+/// bench, which actually trains).
+pub fn table1_left_ratios() -> Vec<(usize, f64)> {
+    [4usize, 8, 16, 32, 64, 128, 256]
+        .iter()
+        .map(|&k| (k, compression_ratio(800, 500, k)))
+        .collect()
+}
+
+/// Table 2: compression-ratio columns for all three models.
+pub fn table2_ratios(out_dir: &Path) -> Result<String> {
+    let resnet = resnet32();
+    let mut rows = vec![
+        vec![
+            "ResNet32".into(),
+            "0.70".into(),
+            "8/16/32".into(),
+            format!("{:.2}x", index_compression_ratio(&resnet, [8, 16, 32])),
+        ],
+        vec![
+            "ResNet32".into(),
+            "0.70".into(),
+            "8/8/8".into(),
+            format!("{:.2}x", index_compression_ratio(&resnet, [8, 8, 8])),
+        ],
+    ];
+    let (p5, k5) = fc5_tiling();
+    rows.push(vec![
+        "AlexNet FC5".into(),
+        "0.91".into(),
+        format!("{k5} tiled"),
+        format!(
+            "{:.2}x",
+            (FC5_ROWS * FC5_COLS) as f64 / tiled_index_bits(FC5_ROWS, FC5_COLS, p5, k5) as f64
+        ),
+    ]);
+    let (p6, k6) = fc6_tiling();
+    rows.push(vec![
+        "AlexNet FC6".into(),
+        "0.91".into(),
+        format!("{k6} tiled"),
+        format!(
+            "{:.2}x",
+            (FC6_ROWS * FC6_COLS) as f64 / tiled_index_bits(FC6_ROWS, FC6_COLS, p6, k6) as f64
+        ),
+    ]);
+    rows.push(vec![
+        "LSTM-PTB".into(),
+        "0.60".into(),
+        "145".into(),
+        format!("{:.2}x", compression_ratio(600, 1200, 145)),
+    ]);
+    print_table("Table 2: compression ratios", &["Model", "S", "Rank", "Comp. Ratio"], &rows);
+    let path = out_dir.join("table2_ratios.csv");
+    write_table_csv(path.to_str().unwrap(), &["model", "s", "rank", "ratio"], &rows)?;
+    Ok(path.display().to_string())
+}
+
+/// Table 3: AlexNet FC5/FC6 index sizes across formats.
+pub fn table3(out_dir: &Path) -> Result<String> {
+    // Sizes are arithmetic except CSR variants, which depend on nnz and
+    // gap statistics — those we compute on smaller sampled blocks and
+    // scale (documented in EXPERIMENTS.md; identical statistics since
+    // masks are i.i.d. at fixed sparsity).
+    let s = 0.91;
+    let sample = 1024usize;
+    let mut rng = Rng::new(2);
+    let w5 = Matrix::gaussian(sample, sample, 0.0, 0.02, &mut rng);
+    let rows5 = format_comparison(&w5, s, 0, "");
+    let scale5 = (FC5_ROWS * FC5_COLS) as f64 / (sample * sample) as f64;
+    let w6 = Matrix::gaussian(sample, sample, 0.0, 0.02, &mut rng);
+    let rows6 = format_comparison(&w6, s, 0, "");
+    let scale6 = (FC6_ROWS * FC6_COLS) as f64 / (sample * sample) as f64;
+
+    let (p5, _) = fc5_tiling();
+    let (p6, _) = fc6_tiling();
+    let proposed5 = tiled_index_bits(FC5_ROWS, FC5_COLS, p5, 32) as f64 / 8.0;
+    let proposed6 = tiled_index_bits(FC6_ROWS, FC6_COLS, p6, 32) as f64 / 8.0;
+
+    let kb = |b: f64| format!("{:.0}KB", b / 1024.0);
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for (i, name) in ["Binary", "CSR(16bit)", "CSR(5bit)", "Viterbi"].iter().enumerate() {
+        let b5 = rows5[i].bytes as f64 * scale5;
+        let b6 = rows6[i].bytes as f64 * scale6;
+        rows.push(vec![
+            name.to_string(),
+            kb(b5),
+            kb(b6),
+            kb(b5 + b6),
+            rows5[i].comment.clone(),
+        ]);
+    }
+    rows.push(vec![
+        "Proposed".into(),
+        kb(proposed5),
+        kb(proposed6),
+        kb(proposed5 + proposed6),
+        "k=32, tiled".into(),
+    ]);
+    print_table(
+        "Table 3: AlexNet FC5/FC6 index size (S=0.91)",
+        &["Method", "FC5", "FC6", "Sum", "Comment"],
+        &rows,
+    );
+    let path = out_dir.join("table3.csv");
+    write_table_csv(path.to_str().unwrap(), &["method", "fc5", "fc6", "sum", "comment"], &rows)?;
+    Ok(path.display().to_string())
+}
+
+/// Table 4: ResNet32 rank-triple compression ratios.
+pub fn table4_ratios(out_dir: &Path) -> Result<String> {
+    let m = resnet32();
+    let rows: Vec<Vec<String>> = rank_triples()
+        .into_iter()
+        .map(|r| {
+            vec![
+                format!("{}/{}/{}", r[0], r[1], r[2]),
+                format!("{:.2}x", index_compression_ratio(&m, r)),
+            ]
+        })
+        .collect();
+    print_table("Table 4: ResNet32 comp. ratio per rank triple", &["Rank", "Comp. Ratio"], &rows);
+    let path = out_dir.join("table4_ratios.csv");
+    write_table_csv(path.to_str().unwrap(), &["rank", "ratio"], &rows)?;
+    Ok(path.display().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_left_matches_paper_column() {
+        let ratios = table1_left_ratios();
+        let paper = [76.9, 38.5, 19.2, 9.6, 4.8, 2.4, 1.2];
+        for ((_, got), want) in ratios.iter().zip(paper) {
+            assert!((got - want).abs() < 0.06, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn reports_write_files() {
+        let dir = std::env::temp_dir().join("lrbi_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = table4_ratios(&dir).unwrap();
+        assert!(std::path::Path::new(&p).exists());
+        let content = std::fs::read_to_string(&p).unwrap();
+        assert!(content.contains("10.")); // 4/4/4 row ~10.7x
+    }
+}

@@ -1,0 +1,174 @@
+//! Artifact discovery + manifest validation.
+//!
+//! `python/compile/aot.py` writes `artifacts/*.hlo.txt` plus
+//! `manifest.txt` (`name inputs=N in_shapes=... sha256=... bytes=...`).
+//! The Rust side mirrors the artifact geometry as constants — the two
+//! must stay in sync with `python/compile/model.py`.
+
+use crate::util::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Geometry baked into the lowered model artifacts
+/// (mirrors `python/compile/model.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelGeometry {
+    /// Flattened input dimension (16×16 synthetic digits).
+    pub input_dim: usize,
+    /// FC0 output / FC1 rows.
+    pub hidden0: usize,
+    /// FC1 cols.
+    pub hidden1: usize,
+    /// Classes.
+    pub classes: usize,
+    /// Fixed batch the artifacts were traced with.
+    pub batch: usize,
+    /// BMF rank the mask factors were traced with.
+    pub rank: usize,
+}
+
+/// The geometry used by `make artifacts`.
+pub const GEOMETRY: ModelGeometry = ModelGeometry {
+    input_dim: 256,
+    hidden0: 800,
+    hidden1: 500,
+    classes: 10,
+    batch: 64,
+    rank: 16,
+};
+
+/// NMF offload tile geometry (mirrors aot.py).
+pub const NMF_TILE: (usize, usize, usize) = (200, 125, 32); // (m, n, k)
+
+/// Entry names every complete artifact set must provide.
+pub const REQUIRED: [&str; 4] = ["train_step", "predict", "decode_matmul", "nmf_step"];
+
+/// One manifest line.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    /// Artifact name.
+    pub name: String,
+    /// Number of inputs.
+    pub inputs: usize,
+    /// Shape list as recorded by aot.py ("800x16;16x500;...").
+    pub in_shapes: String,
+}
+
+/// A validated artifact directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    dir: PathBuf,
+    entries: HashMap<String, ManifestEntry>,
+}
+
+impl ArtifactSet {
+    /// Open and validate an artifact directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest).map_err(|e| {
+            Error::Runtime(format!(
+                "missing {} — run `make artifacts` first ({e})",
+                manifest.display()
+            ))
+        })?;
+        let mut entries = HashMap::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let entry = parse_manifest_line(line)?;
+            entries.insert(entry.name.clone(), entry);
+        }
+        let set = ArtifactSet { dir, entries };
+        for name in REQUIRED {
+            if !set.entries.contains_key(name) {
+                return Err(Error::Runtime(format!("manifest missing artifact '{name}'")));
+            }
+            if !set.hlo_path(name).exists() {
+                return Err(Error::Runtime(format!("artifact file for '{name}' not found")));
+            }
+        }
+        Ok(set)
+    }
+
+    /// Default location: `$LRBI_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("LRBI_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(dir)
+    }
+
+    /// Path of an artifact's HLO text.
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Manifest entry for a name.
+    pub fn entry(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.get(name)
+    }
+
+    /// All names present.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+fn parse_manifest_line(line: &str) -> Result<ManifestEntry> {
+    let mut name = None;
+    let mut inputs = None;
+    let mut in_shapes = None;
+    for (idx, tok) in line.split_whitespace().enumerate() {
+        if idx == 0 {
+            name = Some(tok.to_string());
+        } else if let Some(v) = tok.strip_prefix("inputs=") {
+            inputs = Some(v.parse::<usize>().map_err(|_| {
+                Error::Runtime(format!("bad manifest inputs field: {tok}"))
+            })?);
+        } else if let Some(v) = tok.strip_prefix("in_shapes=") {
+            in_shapes = Some(v.to_string());
+        }
+    }
+    match (name, inputs, in_shapes) {
+        (Some(name), Some(inputs), Some(in_shapes)) => {
+            Ok(ManifestEntry { name, inputs, in_shapes })
+        }
+        _ => Err(Error::Runtime(format!("malformed manifest line: {line}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_good_line() {
+        let e = parse_manifest_line(
+            "predict inputs=9 in_shapes=256x800;800 sha256=ab bytes=100",
+        )
+        .unwrap();
+        assert_eq!(e.name, "predict");
+        assert_eq!(e.inputs, 9);
+        assert!(e.in_shapes.starts_with("256x800"));
+    }
+
+    #[test]
+    fn parse_bad_lines() {
+        assert!(parse_manifest_line("predict").is_err());
+        assert!(parse_manifest_line("predict inputs=x in_shapes=1").is_err());
+    }
+
+    #[test]
+    fn open_missing_dir_is_helpful() {
+        let err = ArtifactSet::open("/nonexistent/path").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn geometry_matches_python_constants() {
+        // keep in sync with python/compile/model.py
+        assert_eq!(GEOMETRY.input_dim, 256);
+        assert_eq!(GEOMETRY.hidden0, 800);
+        assert_eq!(GEOMETRY.hidden1, 500);
+        assert_eq!(GEOMETRY.batch, 64);
+        assert_eq!(GEOMETRY.rank, 16);
+        assert_eq!(NMF_TILE, (200, 125, 32));
+    }
+}

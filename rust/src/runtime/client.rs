@@ -1,0 +1,113 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many
+//! times. Adapts the pattern in /opt/xla-example/load_hlo.
+
+use crate::runtime::artifacts::ArtifactSet;
+use crate::tensor::Matrix;
+use crate::util::error::{Error, Result};
+use std::collections::HashMap;
+
+fn xerr(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+/// A live PJRT CPU client with a cache of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: ArtifactSet,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifact set.
+    pub fn new(artifacts: ArtifactSet) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(Runtime { client, artifacts, executables: HashMap::new() })
+    }
+
+    /// Create from the default artifact directory.
+    pub fn open_default() -> Result<Self> {
+        Self::new(ArtifactSet::open_default()?)
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifacts.hlo_path(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )
+        .map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xerr)?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact. All entry points were lowered with
+    /// `return_tuple=True`, so the single output literal is a tuple;
+    /// returns its elements.
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load(name)?;
+        if let Some(entry) = self.artifacts.entry(name) {
+            if entry.inputs != inputs.len() {
+                return Err(Error::Runtime(format!(
+                    "{name}: expected {} inputs, got {}",
+                    entry.inputs,
+                    inputs.len()
+                )));
+            }
+        }
+        let exe = self.executables.get(name).expect("loaded above");
+        let result = exe.execute::<xla::Literal>(inputs).map_err(xerr)?;
+        let lit = result[0][0].to_literal_sync().map_err(xerr)?;
+        lit.to_tuple().map_err(xerr)
+    }
+
+    /// Names with a compiled executable.
+    pub fn loaded(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// Matrix (row-major f32) → rank-2 literal.
+pub fn matrix_literal(m: &Matrix) -> Result<xla::Literal> {
+    xla::Literal::vec1(m.data())
+        .reshape(&[m.rows() as i64, m.cols() as i64])
+        .map_err(xerr)
+}
+
+/// 1-D literal from a slice.
+pub fn vec_literal(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Literal → Matrix with the given shape.
+pub fn literal_matrix(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let data = lit.to_vec::<f32>().map_err(xerr)?;
+    Matrix::from_vec(rows, cols, data)
+}
+
+/// Literal → Vec<f32>.
+pub fn literal_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(xerr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_literal_roundtrip() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let lit = matrix_literal(&m).unwrap();
+        let back = literal_matrix(&lit, 2, 3).unwrap();
+        assert_eq!(back, m);
+    }
+}

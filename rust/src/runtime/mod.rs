@@ -1,0 +1,10 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the
+//! request path. Python is never involved at runtime — `make
+//! artifacts` produced the HLO; this module compiles it once per
+//! variant and executes from Rust.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactSet, ModelGeometry};
+pub use client::Runtime;

@@ -1,0 +1,154 @@
+//! Dynamic request batcher (vLLM-router-style): accumulate requests up
+//! to `max_batch` or until `max_wait` elapses, then flush as one
+//! execution. Callers block on a per-request response channel.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Batch formation policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Flush when this many requests are pending.
+    pub max_batch: usize,
+    /// Flush when the oldest pending request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// One queued request: input vector + response channel.
+pub struct Request<T, R> {
+    /// Request payload.
+    pub input: T,
+    /// Channel the batch executor answers on.
+    pub reply: mpsc::SyncSender<R>,
+}
+
+/// Collects requests into batches per the policy. The executor thread
+/// calls [`DynamicBatcher::next_batch`] in a loop.
+pub struct DynamicBatcher<T, R> {
+    rx: mpsc::Receiver<Request<T, R>>,
+    policy: BatchPolicy,
+    pending: Vec<Request<T, R>>,
+}
+
+/// Client handle for submitting requests.
+pub struct BatcherClient<T, R> {
+    tx: mpsc::SyncSender<Request<T, R>>,
+}
+
+// manual impl: #[derive(Clone)] would wrongly require T: Clone, R: Clone
+impl<T, R> Clone for BatcherClient<T, R> {
+    fn clone(&self) -> Self {
+        BatcherClient { tx: self.tx.clone() }
+    }
+}
+
+impl<T, R> BatcherClient<T, R> {
+    /// Submit a request and block for the reply. Returns None if the
+    /// batcher shut down.
+    pub fn call(&self, input: T) -> Option<R> {
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        self.tx.send(Request { input, reply: reply_tx }).ok()?;
+        reply_rx.recv().ok()
+    }
+}
+
+impl<T, R> DynamicBatcher<T, R> {
+    /// Create a batcher + client pair. `queue_cap` bounds the submit
+    /// queue (backpressure for over-offered load).
+    pub fn new(policy: BatchPolicy, queue_cap: usize) -> (Self, BatcherClient<T, R>) {
+        let (tx, rx) = mpsc::sync_channel(queue_cap);
+        (DynamicBatcher { rx, policy, pending: Vec::new() }, BatcherClient { tx })
+    }
+
+    /// Block until a batch is ready (or the channel closed and the
+    /// backlog drained). Returns None on shutdown with nothing left.
+    pub fn next_batch(&mut self) -> Option<Vec<Request<T, R>>> {
+        // wait for the first request (blocking)
+        if self.pending.is_empty() {
+            match self.rx.recv() {
+                Ok(r) => self.pending.push(r),
+                Err(_) => return None,
+            }
+        }
+        let deadline = Instant::now() + self.policy.max_wait;
+        while self.pending.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(r) => self.pending.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(std::mem::take(&mut self.pending))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (mut b, client) = DynamicBatcher::<u32, u32>::new(
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) },
+            64,
+        );
+        let exec = thread::spawn(move || {
+            let mut sizes = Vec::new();
+            while let Some(batch) = b.next_batch() {
+                sizes.push(batch.len());
+                for r in batch {
+                    let _ = r.reply.send(r.input * 2);
+                }
+            }
+            sizes
+        });
+        let clients: Vec<_> = (0..8)
+            .map(|i| {
+                let c = client.clone();
+                thread::spawn(move || c.call(i).unwrap())
+            })
+            .collect();
+        let mut results: Vec<u32> = clients.into_iter().map(|h| h.join().unwrap()).collect();
+        results.sort_unstable();
+        assert_eq!(results, (0..8).map(|i| i * 2).collect::<Vec<_>>());
+        drop(client);
+        let sizes = exec.join().unwrap();
+        assert!(sizes.iter().all(|&s| s <= 4));
+        assert_eq!(sizes.iter().sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn flushes_on_timeout_with_partial_batch() {
+        let (mut b, client) = DynamicBatcher::<u32, u32>::new(
+            BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(10) },
+            8,
+        );
+        let exec = thread::spawn(move || b.next_batch().map(|batch| batch.len()));
+        let c = client.clone();
+        let caller = thread::spawn(move || c.call(7));
+        let size = exec.join().unwrap();
+        assert_eq!(size, Some(1));
+        // caller is still blocked on reply; drop its channel by ending scope
+        drop(client);
+        // answer was never sent -> caller gets None
+        assert_eq!(caller.join().unwrap(), None);
+    }
+
+    #[test]
+    fn shutdown_returns_none() {
+        let (mut b, client) = DynamicBatcher::<u32, u32>::new(BatchPolicy::default(), 4);
+        drop(client);
+        assert!(b.next_batch().is_none());
+    }
+}

@@ -1,0 +1,112 @@
+//! Small LRU cache (no external crates offline). Used as the decode
+//! cache: reconstructed masks / masked weights keyed by layer+factors
+//! version, so the binary-matmul decompression runs once per update,
+//! not once per request.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// LRU cache with O(1) amortised get/put (hash map + monotonic clock).
+#[derive(Debug)]
+pub struct LruCache<K: Eq + Hash + Clone, V> {
+    cap: usize,
+    clock: u64,
+    map: HashMap<K, (u64, V)>,
+}
+
+impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    /// Cache holding at most `cap` entries (cap >= 1).
+    pub fn new(cap: usize) -> Self {
+        LruCache { cap: cap.max(1), clock: 0, map: HashMap::new() }
+    }
+
+    /// Get and refresh recency.
+    pub fn get(&mut self, k: &K) -> Option<&V> {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.map.get_mut(k) {
+            Some((t, v)) => {
+                *t = clock;
+                Some(&*v)
+            }
+            None => None,
+        }
+    }
+
+    /// Insert, evicting the least-recently-used entry if full.
+    pub fn put(&mut self, k: K, v: V) {
+        self.clock += 1;
+        if self.map.len() >= self.cap && !self.map.contains_key(&k) {
+            if let Some(oldest) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (t, _))| *t)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&oldest);
+            }
+        }
+        self.map.insert(k, (self.clock, v));
+    }
+
+    /// Current entry count.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Remove everything.
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_get_put() {
+        let mut c = LruCache::new(2);
+        c.put("a", 1);
+        c.put("b", 2);
+        assert_eq!(c.get(&"a"), Some(&1));
+        assert_eq!(c.get(&"z"), None);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = LruCache::new(2);
+        c.put("a", 1);
+        c.put("b", 2);
+        let _ = c.get(&"a"); // refresh a
+        c.put("c", 3); // evicts b
+        assert_eq!(c.get(&"b"), None);
+        assert_eq!(c.get(&"a"), Some(&1));
+        assert_eq!(c.get(&"c"), Some(&3));
+    }
+
+    #[test]
+    fn overwrite_does_not_evict() {
+        let mut c = LruCache::new(2);
+        c.put("a", 1);
+        c.put("b", 2);
+        c.put("a", 10);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&"a"), Some(&10));
+        assert_eq!(c.get(&"b"), Some(&2));
+    }
+
+    #[test]
+    fn cap_one_works() {
+        let mut c = LruCache::new(1);
+        c.put(1, "x");
+        c.put(2, "y");
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&2), Some(&"y"));
+    }
+}

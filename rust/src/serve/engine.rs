@@ -1,0 +1,393 @@
+//! The inference engine: fixed-batch backends (PJRT artifact or native
+//! fallback) behind a dynamic batcher, with the decoded mask cached so
+//! the binary-matmul decompression runs once per factor update rather
+//! than once per request.
+
+use crate::coordinator::metrics::Metrics;
+use crate::runtime::artifacts::GEOMETRY;
+use crate::runtime::client::{literal_matrix, matrix_literal, Runtime};
+use crate::serve::batcher::{BatchPolicy, BatcherClient, DynamicBatcher};
+use crate::tensor::Matrix;
+use crate::util::bits::BitMatrix;
+use crate::util::error::{Error, Result};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// A fixed-geometry classifier backend.
+///
+/// Backends need not be `Send` (the PJRT client is `!Send`); the
+/// serving engine constructs the backend *inside* its executor thread
+/// via the factory passed to [`ServingEngine::start_with`].
+pub trait InferenceBackend {
+    /// Fixed batch size the backend executes.
+    fn batch(&self) -> usize;
+    /// Input feature dimension.
+    fn input_dim(&self) -> usize;
+    /// Output classes.
+    fn classes(&self) -> usize;
+    /// Run one full batch: x is (batch, input_dim); returns logits
+    /// (batch, classes).
+    fn predict(&mut self, x: &Matrix) -> Result<Matrix>;
+}
+
+/// Model parameters for the LeNet-FC classifier (mirrors model.py).
+#[derive(Debug, Clone)]
+pub struct MlpParams {
+    /// FC0 weight (input_dim × hidden0).
+    pub w0: Matrix,
+    /// FC0 bias.
+    pub b0: Vec<f32>,
+    /// FC1 weight (hidden0 × hidden1) — the masked layer.
+    pub w1: Matrix,
+    /// FC1 bias.
+    pub b1: Vec<f32>,
+    /// FC2 weight (hidden1 × classes).
+    pub w2: Matrix,
+    /// FC2 bias.
+    pub b2: Vec<f32>,
+}
+
+impl MlpParams {
+    /// He-initialised parameters.
+    pub fn init(seed: u64) -> Self {
+        let g = GEOMETRY;
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let he = |rng: &mut crate::util::rng::Rng, fan_in: usize, r: usize, c: usize| {
+            Matrix::gaussian(r, c, 0.0, (2.0 / fan_in as f32).sqrt(), rng)
+        };
+        MlpParams {
+            w0: he(&mut rng, g.input_dim, g.input_dim, g.hidden0),
+            b0: vec![0.0; g.hidden0],
+            w1: he(&mut rng, g.hidden0, g.hidden0, g.hidden1),
+            b1: vec![0.0; g.hidden1],
+            w2: he(&mut rng, g.hidden1, g.hidden1, g.classes),
+            b2: vec![0.0; g.classes],
+        }
+    }
+}
+
+fn relu_inplace(m: &mut Matrix) {
+    m.map_inplace(|v| v.max(0.0));
+}
+
+fn add_bias(m: &mut Matrix, b: &[f32]) {
+    let cols = m.cols();
+    for (idx, v) in m.data_mut().iter_mut().enumerate() {
+        *v += b[idx % cols];
+    }
+}
+
+/// Pure-Rust backend: masked forward pass with the decoded mask cached
+/// as a pre-masked FC1 weight (the decode+apply happens once, on
+/// construction or factor update — the serving analogue of the
+/// paper's on-chip decompressor).
+pub struct NativeBackend {
+    params: MlpParams,
+    /// FC1 with the decoded mask applied.
+    w1_masked: Matrix,
+    batch: usize,
+}
+
+impl NativeBackend {
+    /// Build from params + binary factors.
+    pub fn new(params: MlpParams, ip: &BitMatrix, iz: &BitMatrix) -> Result<Self> {
+        let mask = ip.bool_product(iz);
+        Self::with_mask(params, &mask)
+    }
+
+    /// Build from params + a pre-decoded mask.
+    pub fn with_mask(params: MlpParams, mask: &BitMatrix) -> Result<Self> {
+        if mask.rows() != params.w1.rows() || mask.cols() != params.w1.cols() {
+            return Err(Error::shape("mask/FC1 shape mismatch"));
+        }
+        let mut w1_masked = params.w1.clone();
+        for i in 0..mask.rows() {
+            for j in 0..mask.cols() {
+                if !mask.get(i, j) {
+                    w1_masked.set(i, j, 0.0);
+                }
+            }
+        }
+        Ok(NativeBackend { params, w1_masked, batch: GEOMETRY.batch })
+    }
+
+    /// Swap in new factors (e.g. after a re-compression): re-decodes
+    /// the mask once.
+    pub fn update_factors(&mut self, ip: &BitMatrix, iz: &BitMatrix) -> Result<()> {
+        let mask = ip.bool_product(iz);
+        let mut w1_masked = self.params.w1.clone();
+        for i in 0..mask.rows() {
+            for j in 0..mask.cols() {
+                if !mask.get(i, j) {
+                    w1_masked.set(i, j, 0.0);
+                }
+            }
+        }
+        self.w1_masked = w1_masked;
+        Ok(())
+    }
+}
+
+impl InferenceBackend for NativeBackend {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn input_dim(&self) -> usize {
+        self.params.w0.rows()
+    }
+    fn classes(&self) -> usize {
+        self.params.w2.cols()
+    }
+    fn predict(&mut self, x: &Matrix) -> Result<Matrix> {
+        let mut h0 = x.matmul(&self.params.w0)?;
+        add_bias(&mut h0, &self.params.b0);
+        relu_inplace(&mut h0);
+        let mut h1 = h0.matmul(&self.w1_masked)?;
+        add_bias(&mut h1, &self.params.b1);
+        relu_inplace(&mut h1);
+        let mut out = h1.matmul(&self.params.w2)?;
+        add_bias(&mut out, &self.params.b2);
+        Ok(out)
+    }
+}
+
+/// PJRT backend: executes the `predict` artifact; the mask decode is
+/// *inside* the lowered graph (the L1 Pallas kernel), so the request
+/// path exercises the paper's binary-matmul decompression directly.
+pub struct PjrtBackend {
+    runtime: Runtime,
+    inputs: Vec<xla::Literal>, // params + factors, reused every call
+}
+
+impl PjrtBackend {
+    /// Build from a runtime, params, and float {0,1} factor matrices.
+    pub fn new(mut runtime: Runtime, params: &MlpParams, ip: &Matrix, iz: &Matrix) -> Result<Self> {
+        runtime.load("predict")?;
+        let g = GEOMETRY;
+        if ip.rows() != g.hidden0 || ip.cols() != g.rank || iz.rows() != g.rank {
+            return Err(Error::shape("factor shapes must match artifact geometry"));
+        }
+        let inputs = vec![
+            matrix_literal(&params.w0)?,
+            xla::Literal::vec1(&params.b0),
+            matrix_literal(&params.w1)?,
+            xla::Literal::vec1(&params.b1),
+            matrix_literal(&params.w2)?,
+            xla::Literal::vec1(&params.b2),
+            matrix_literal(ip)?,
+            matrix_literal(iz)?,
+        ];
+        Ok(PjrtBackend { runtime, inputs })
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn batch(&self) -> usize {
+        GEOMETRY.batch
+    }
+    fn input_dim(&self) -> usize {
+        GEOMETRY.input_dim
+    }
+    fn classes(&self) -> usize {
+        GEOMETRY.classes
+    }
+    fn predict(&mut self, x: &Matrix) -> Result<Matrix> {
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(9);
+        for lit in &self.inputs {
+            inputs.push(lit.clone());
+        }
+        inputs.push(matrix_literal(x)?);
+        let out = self.runtime.execute("predict", &inputs)?;
+        literal_matrix(&out[0], GEOMETRY.batch, GEOMETRY.classes)
+    }
+}
+
+/// A running serving engine: executor thread + batcher client.
+pub struct ServingEngine {
+    client: BatcherClient<Vec<f32>, Result<Vec<f32>>>,
+    handle: Option<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+}
+
+impl ServingEngine {
+    /// Start the executor thread over an already-built `Send` backend.
+    pub fn start(
+        backend: impl InferenceBackend + Send + 'static,
+        policy: BatchPolicy,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        Self::start_with(move || Ok(backend), policy, metrics)
+    }
+
+    /// Start the executor thread, constructing the backend inside it.
+    /// Required for `!Send` backends such as [`PjrtBackend`]. If the
+    /// factory fails, every request is answered with the error.
+    pub fn start_with<B: InferenceBackend + 'static>(
+        factory: impl FnOnce() -> Result<B> + Send + 'static,
+        policy: BatchPolicy,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        let (mut batcher, client) =
+            DynamicBatcher::<Vec<f32>, Result<Vec<f32>>>::new(policy, 1024);
+        let m = Arc::clone(&metrics);
+        let handle = std::thread::Builder::new()
+            .name("lrbi-serving".into())
+            .spawn(move || {
+                let mut backend = match factory() {
+                    Ok(b) => b,
+                    Err(e) => {
+                        let msg = e.to_string();
+                        while let Some(batch) = batcher.next_batch() {
+                            for req in batch {
+                                let _ = req.reply.send(Err(Error::Runtime(msg.clone())));
+                            }
+                        }
+                        return;
+                    }
+                };
+                let bsz = backend.batch();
+                let dim = backend.input_dim();
+                let classes = backend.classes();
+                while let Some(batch) = batcher.next_batch() {
+                    m.batches.fetch_add(1, Ordering::Relaxed);
+                    m.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                    // assemble padded batch
+                    let mut x = Matrix::zeros(bsz, dim);
+                    let mut bad: Vec<bool> = vec![false; batch.len()];
+                    for (slot, req) in batch.iter().enumerate().take(bsz) {
+                        if req.input.len() == dim {
+                            for (j, &v) in req.input.iter().enumerate() {
+                                x.set(slot, j, v);
+                            }
+                        } else {
+                            bad[slot] = true;
+                        }
+                    }
+                    let result = backend.predict(&x);
+                    for (slot, req) in batch.into_iter().enumerate() {
+                        let reply = if slot >= bsz {
+                            Err(Error::Coordinator("batch overflow".into()))
+                        } else if bad[slot] {
+                            Err(Error::shape("bad input dimension"))
+                        } else {
+                            match &result {
+                                Ok(logits) => Ok(logits.row(slot)[..classes].to_vec()),
+                                Err(e) => Err(Error::Runtime(e.to_string())),
+                            }
+                        };
+                        let _ = req.reply.send(reply);
+                    }
+                }
+            })
+            .expect("spawn serving thread");
+        ServingEngine { client, handle: Some(handle), metrics }
+    }
+
+    /// Blocking single-request inference.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+        self.client
+            .call(input)
+            .ok_or_else(|| Error::Coordinator("serving engine stopped".into()))?
+    }
+
+    /// A cloneable client handle for concurrent load generators.
+    pub fn client(&self) -> BatcherClient<Vec<f32>, Result<Vec<f32>>> {
+        self.client.clone()
+    }
+
+    /// Engine metrics.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+}
+
+impl Drop for ServingEngine {
+    fn drop(&mut self) {
+        // The executor thread exits once every BatcherClient clone is
+        // dropped (the submit channel closes). Detach rather than join:
+        // outstanding clones held by load generators must not deadlock
+        // engine teardown.
+        let _ = self.handle.take();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::time::Duration;
+
+    fn dense_factors() -> (BitMatrix, BitMatrix) {
+        let g = GEOMETRY;
+        (
+            BitMatrix::from_fn(g.hidden0, g.rank, |_, _| true),
+            BitMatrix::from_fn(g.rank, g.hidden1, |_, _| true),
+        )
+    }
+
+    #[test]
+    fn native_backend_masks_fc1() {
+        let params = MlpParams::init(1);
+        let g = GEOMETRY;
+        let mut rng = Rng::new(2);
+        let ip = BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.2));
+        let iz = BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.2));
+        let be = NativeBackend::new(params.clone(), &ip, &iz).unwrap();
+        let mask = ip.bool_product(&iz);
+        for i in 0..20 {
+            for j in 0..20 {
+                if !mask.get(i, j) {
+                    assert_eq!(be.w1_masked.get(i, j), 0.0);
+                } else {
+                    assert_eq!(be.w1_masked.get(i, j), params.w1.get(i, j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn engine_serves_batched_requests() {
+        let params = MlpParams::init(3);
+        let (ip, iz) = dense_factors();
+        let backend = NativeBackend::new(params, &ip, &iz).unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let engine = ServingEngine::start(
+            backend,
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) },
+            Arc::clone(&metrics),
+        );
+        let client = engine.client();
+        let handles: Vec<_> = (0..16)
+            .map(|i| {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    let x = vec![0.01 * i as f32; GEOMETRY.input_dim];
+                    c.call(x).unwrap().unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let logits = h.join().unwrap();
+            assert_eq!(logits.len(), GEOMETRY.classes);
+            assert!(logits.iter().all(|v| v.is_finite()));
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.requests, 16);
+        assert!(snap.batches >= 2, "expected batching, got {} batches", snap.batches);
+    }
+
+    #[test]
+    fn engine_rejects_bad_dims() {
+        let params = MlpParams::init(4);
+        let (ip, iz) = dense_factors();
+        let backend = NativeBackend::new(params, &ip, &iz).unwrap();
+        let engine = ServingEngine::start(
+            backend,
+            BatchPolicy::default(),
+            Arc::new(Metrics::new()),
+        );
+        let err = engine.infer(vec![1.0; 3]);
+        assert!(err.is_err());
+    }
+}

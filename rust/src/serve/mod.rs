@@ -1,0 +1,12 @@
+//! Serving engine over compressed models: dynamic batching, decode
+//! cache, masked inference via the PJRT runtime (or a native fallback
+//! so the full pipeline is testable without artifacts).
+
+pub mod batcher;
+pub mod cache;
+pub mod engine;
+pub mod variants;
+
+pub use batcher::{BatchPolicy, DynamicBatcher};
+pub use cache::LruCache;
+pub use engine::{InferenceBackend, NativeBackend, ServingEngine};

@@ -1,0 +1,180 @@
+//! Multi-variant serving: several compressed *index versions* of the
+//! same model (e.g. different ranks or re-compressions) served from
+//! one engine. The decoded+masked FC1 is materialised at most once per
+//! variant via the LRU decode cache — the serving analogue of the
+//! paper's on-chip decompressor, with `Metrics::cache_{hits,misses}`
+//! making the decode amortisation observable.
+
+use crate::coordinator::metrics::Metrics;
+use crate::serve::cache::LruCache;
+use crate::serve::engine::MlpParams;
+use crate::tensor::Matrix;
+use crate::util::bits::BitMatrix;
+use crate::util::error::{Error, Result};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// A compressed FC1 index variant.
+#[derive(Debug, Clone)]
+pub struct IndexVariant {
+    /// Stable id (cache key).
+    pub id: u64,
+    /// Left factor.
+    pub ip: BitMatrix,
+    /// Right factor.
+    pub iz: BitMatrix,
+}
+
+/// Serves any registered variant; decodes lazily, caches the masked
+/// FC1 weight per variant.
+pub struct VariantServer {
+    params: MlpParams,
+    variants: Vec<IndexVariant>,
+    cache: LruCache<u64, Matrix>,
+    metrics: Arc<Metrics>,
+}
+
+impl VariantServer {
+    /// Build with a cache bound (variants beyond this get re-decoded
+    /// on demand — bounded memory is the point of the paper's format).
+    pub fn new(
+        params: MlpParams,
+        variants: Vec<IndexVariant>,
+        cache_cap: usize,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        VariantServer { params, variants, cache: LruCache::new(cache_cap), metrics }
+    }
+
+    /// Registered variant ids.
+    pub fn variant_ids(&self) -> Vec<u64> {
+        self.variants.iter().map(|v| v.id).collect()
+    }
+
+    fn masked_w1(&mut self, id: u64) -> Result<&Matrix> {
+        if self.cache.get(&id).is_some() {
+            self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+            let v = self
+                .variants
+                .iter()
+                .find(|v| v.id == id)
+                .ok_or_else(|| Error::invalid(format!("unknown variant {id}")))?;
+            // the decompression step: boolean matmul + mask apply
+            let mask = v.ip.bool_product(&v.iz);
+            let mut w1 = self.params.w1.clone();
+            for i in 0..mask.rows() {
+                for j in 0..mask.cols() {
+                    if !mask.get(i, j) {
+                        w1.set(i, j, 0.0);
+                    }
+                }
+            }
+            self.cache.put(id, w1);
+        }
+        Ok(self.cache.get(&id).expect("just inserted"))
+    }
+
+    /// Forward a batch through the chosen variant.
+    pub fn predict(&mut self, variant: u64, x: &Matrix) -> Result<Matrix> {
+        let p_w0 = self.params.w0.clone();
+        let p_b0 = self.params.b0.clone();
+        let p_b1 = self.params.b1.clone();
+        let p_w2 = self.params.w2.clone();
+        let p_b2 = self.params.b2.clone();
+        let w1 = self.masked_w1(variant)?;
+        let mut h0 = x.matmul(&p_w0)?;
+        add_bias(&mut h0, &p_b0);
+        h0.map_inplace(|v| v.max(0.0));
+        let mut h1 = h0.matmul(w1)?;
+        add_bias(&mut h1, &p_b1);
+        h1.map_inplace(|v| v.max(0.0));
+        let mut out = h1.matmul(&p_w2)?;
+        add_bias(&mut out, &p_b2);
+        Ok(out)
+    }
+}
+
+fn add_bias(m: &mut Matrix, b: &[f32]) {
+    let cols = m.cols();
+    for (idx, v) in m.data_mut().iter_mut().enumerate() {
+        *v += b[idx % cols];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::GEOMETRY;
+    use crate::util::rng::Rng;
+
+    fn variant(id: u64, seed: u64) -> IndexVariant {
+        let g = GEOMETRY;
+        let mut rng = Rng::new(seed);
+        IndexVariant {
+            id,
+            ip: BitMatrix::from_fn(g.hidden0, 8, |_, _| rng.bernoulli(0.3)),
+            iz: BitMatrix::from_fn(8, g.hidden1, |_, _| rng.bernoulli(0.3)),
+        }
+    }
+
+    #[test]
+    fn decode_runs_once_per_cached_variant() {
+        let metrics = Arc::new(Metrics::new());
+        let mut srv = VariantServer::new(
+            MlpParams::init(1),
+            vec![variant(1, 10), variant(2, 20)],
+            4,
+            Arc::clone(&metrics),
+        );
+        let x = Matrix::zeros(2, GEOMETRY.input_dim);
+        for _ in 0..5 {
+            srv.predict(1, &x).unwrap();
+            srv.predict(2, &x).unwrap();
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.cache_misses, 2, "one decode per variant");
+        assert_eq!(snap.cache_hits, 8);
+    }
+
+    #[test]
+    fn eviction_forces_redecode() {
+        let metrics = Arc::new(Metrics::new());
+        let mut srv = VariantServer::new(
+            MlpParams::init(2),
+            vec![variant(1, 10), variant(2, 20), variant(3, 30)],
+            2, // cache smaller than variant count
+            Arc::clone(&metrics),
+        );
+        let x = Matrix::zeros(1, GEOMETRY.input_dim);
+        for id in [1, 2, 3, 1, 2, 3] {
+            srv.predict(id, &x).unwrap();
+        }
+        let snap = metrics.snapshot();
+        assert!(snap.cache_misses > 3, "eviction must force re-decodes");
+    }
+
+    #[test]
+    fn variants_give_different_logits() {
+        let mut srv = VariantServer::new(
+            MlpParams::init(3),
+            vec![variant(1, 10), variant(2, 20)],
+            4,
+            Arc::new(Metrics::new()),
+        );
+        let mut rng = Rng::new(4);
+        let x = Matrix::gaussian(1, GEOMETRY.input_dim, 0.0, 1.0, &mut rng);
+        let a = srv.predict(1, &x).unwrap();
+        let b = srv.predict(2, &x).unwrap();
+        assert_ne!(a.data(), b.data());
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        let mut srv =
+            VariantServer::new(MlpParams::init(5), vec![], 2, Arc::new(Metrics::new()));
+        let x = Matrix::zeros(1, GEOMETRY.input_dim);
+        assert!(srv.predict(9, &x).is_err());
+    }
+}

@@ -1,0 +1,521 @@
+//! Row-major `f32` dense matrix with the operations the pipeline needs:
+//! matmul (threaded, blocked), transpose, elementwise, quantile selection.
+
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Row-major dense `f32` matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::shape(format!(
+                "from_vec: {}x{} needs {} elements, got {}",
+                rows, cols, rows * cols, data.len()
+            )));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// i.i.d. Gaussian entries (the synthetic stand-in for pre-trained
+    /// weights; see DESIGN.md §Substitutions).
+    pub fn gaussian(rows: usize, cols: usize, mean: f32, std: f32, rng: &mut Rng) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.gaussian_f32(mean, std));
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Uniform entries in `[lo, hi)`.
+    pub fn uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(lo + (hi - lo) * rng.next_f32());
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total element count.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the matrix has no elements.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Immutable element access.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    /// Mutable element access.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Raw row-major buffer.
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable raw buffer.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// A single row as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Elementwise absolute value — the magnitude matrix `M` of the paper.
+    pub fn abs(&self) -> Matrix {
+        self.map(|v| v.abs())
+    }
+
+    /// Apply a function elementwise, returning a new matrix.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// Apply a function elementwise in place.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// Elementwise (Hadamard) product.
+    pub fn hadamard(&self, other: &Matrix) -> Result<Matrix> {
+        self.check_same_shape(other, "hadamard")?;
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| a * b)
+            .collect();
+        Ok(Matrix { rows: self.rows, cols: self.cols, data })
+    }
+
+    /// Elementwise sum.
+    pub fn add(&self, other: &Matrix) -> Result<Matrix> {
+        self.check_same_shape(other, "add")?;
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| a + b)
+            .collect();
+        Ok(Matrix { rows: self.rows, cols: self.cols, data })
+    }
+
+    /// Elementwise difference `self - other`.
+    pub fn sub(&self, other: &Matrix) -> Result<Matrix> {
+        self.check_same_shape(other, "sub")?;
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| a - b)
+            .collect();
+        Ok(Matrix { rows: self.rows, cols: self.cols, data })
+    }
+
+    /// Scale every element.
+    pub fn scale(&self, s: f32) -> Matrix {
+        self.map(|v| v * s)
+    }
+
+    fn check_same_shape(&self, other: &Matrix, op: &str) -> Result<()> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(Error::shape(format!(
+                "{op}: {}x{} vs {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        Ok(())
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Single-threaded blocked matmul. The threaded variant in
+    /// [`Matrix::matmul`] delegates here per row band.
+    pub fn matmul_st(&self, other: &Matrix) -> Result<Matrix> {
+        if self.cols != other.rows {
+            return Err(Error::shape(format!(
+                "matmul: {}x{} * {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        matmul_into(
+            &self.data,
+            &other.data,
+            &mut out.data,
+            self.rows,
+            self.cols,
+            other.cols,
+        );
+        Ok(out)
+    }
+
+    /// Matrix multiply, threaded across row bands for large problems.
+    pub fn matmul(&self, other: &Matrix) -> Result<Matrix> {
+        if self.cols != other.rows {
+            return Err(Error::shape(format!(
+                "matmul: {}x{} * {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let work = m * k * n;
+        let threads = available_threads();
+        if work < 1 << 20 || threads <= 1 || m < 2 {
+            return self.matmul_st(other);
+        }
+        let mut out = Matrix::zeros(m, n);
+        let bands = threads.min(m);
+        let rows_per = m.div_ceil(bands);
+        let a = &self.data;
+        let b = &other.data;
+        let chunks: Vec<&mut [f32]> = out.data.chunks_mut(rows_per * n).collect();
+        std::thread::scope(|s| {
+            for (band, chunk) in chunks.into_iter().enumerate() {
+                let row0 = band * rows_per;
+                let nrows = chunk.len() / n;
+                let a_band = &a[row0 * k..(row0 + nrows) * k];
+                s.spawn(move || {
+                    matmul_into(a_band, b, chunk, nrows, k, n);
+                });
+            }
+        });
+        Ok(out)
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Sum of all elements.
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&v| v as f64).sum()
+    }
+
+    /// Extract the `[r0..r1) x [c0..c1)` submatrix.
+    pub fn submatrix(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Result<Matrix> {
+        if r1 > self.rows || c1 > self.cols || r0 > r1 || c0 > c1 {
+            return Err(Error::shape(format!(
+                "submatrix [{r0}..{r1}) x [{c0}..{c1}) of {}x{}",
+                self.rows, self.cols
+            )));
+        }
+        let mut data = Vec::with_capacity((r1 - r0) * (c1 - c0));
+        for i in r0..r1 {
+            data.extend_from_slice(&self.data[i * self.cols + c0..i * self.cols + c1]);
+        }
+        Matrix::from_vec(r1 - r0, c1 - c0, data)
+    }
+
+    /// Write `block` into this matrix at offset `(r0, c0)`.
+    pub fn set_submatrix(&mut self, r0: usize, c0: usize, block: &Matrix) -> Result<()> {
+        if r0 + block.rows > self.rows || c0 + block.cols > self.cols {
+            return Err(Error::shape(format!(
+                "set_submatrix {}x{} at ({r0},{c0}) into {}x{}",
+                block.rows, block.cols, self.rows, self.cols
+            )));
+        }
+        for i in 0..block.rows {
+            let dst = (r0 + i) * self.cols + c0;
+            self.data[dst..dst + block.cols]
+                .copy_from_slice(&block.data[i * block.cols..(i + 1) * block.cols]);
+        }
+        Ok(())
+    }
+
+    /// The value `t` such that a fraction `q` of elements are `< t`
+    /// (the quantile used to derive pruning thresholds from a target
+    /// sparsity). `q` is clamped to `[0, 1]`.
+    pub fn quantile(&self, q: f64) -> f32 {
+        assert!(!self.data.is_empty(), "quantile of empty matrix");
+        let q = q.clamp(0.0, 1.0);
+        let mut sorted: Vec<f32> = self.data.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+        sorted[idx]
+    }
+
+    /// Fraction of elements equal to zero.
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let zeros = self.data.iter().filter(|&&v| v == 0.0).count();
+        zeros as f64 / self.data.len() as f64
+    }
+
+    /// Maximum absolute element.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Mean of all elements.
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.sum() / self.data.len() as f64
+    }
+
+    /// Population variance of all elements.
+    pub fn variance(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let mean = self.mean();
+        self.data
+            .iter()
+            .map(|&v| {
+                let d = v as f64 - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / self.data.len() as f64
+    }
+}
+
+/// Blocked i-k-j matmul kernel: `out[m x n] = a[m x k] * b[k x n]`.
+/// `out` must be zeroed by the caller.
+///
+/// Perf (EXPERIMENTS.md §Perf): the inner loop is 4-way unrolled over
+/// `k` so each pass touches the output row once per four rank-1
+/// updates instead of once per update — on the single-core testbed
+/// this took the kernel from ~8.0 to ~1.9x that (see the §Perf log).
+fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    const KB: usize = 128; // best measured k-panel (see EXPERIMENTS.md §Perf)
+    for kk in (0..k).step_by(KB) {
+        let kmax = (kk + KB).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            let mut l = kk;
+            // 4-way unroll over k: one read-modify-write of orow per
+            // four B rows.
+            while l + 4 <= kmax {
+                let (a0, a1, a2, a3) = (arow[l], arow[l + 1], arow[l + 2], arow[l + 3]);
+                if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                    let b0 = &b[l * n..l * n + n];
+                    let b1 = &b[(l + 1) * n..(l + 1) * n + n];
+                    let b2 = &b[(l + 2) * n..(l + 2) * n + n];
+                    let b3 = &b[(l + 3) * n..(l + 3) * n + n];
+                    let it = orow.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3);
+                    for ((((o, &v0), &v1), &v2), &v3) in it {
+                        *o += a0 * v0 + a1 * v1 + a2 * v2 + a3 * v3;
+                    }
+                }
+                l += 4;
+            }
+            // k remainder
+            for l in l..kmax {
+                let av = arow[l];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[l * n..(l + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// Number of worker threads to use for data-parallel kernels.
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(rows: usize, cols: usize, vals: &[f32]) -> Matrix {
+        Matrix::from_vec(rows, cols, vals.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = m(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = m(2, 2, &[1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rejects_bad_shapes() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn matmul_threaded_matches_single() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::gaussian(37, 211, 0.0, 1.0, &mut rng);
+        let b = Matrix::gaussian(211, 53, 0.0, 1.0, &mut rng);
+        let st = a.matmul_st(&b).unwrap();
+        let mt = a.matmul(&b).unwrap();
+        for (x, y) in st.data().iter().zip(mt.data()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_large_threaded_path_matches() {
+        let mut rng = Rng::new(2);
+        // big enough to trigger the threaded path (m*k*n >= 2^20)
+        let a = Matrix::gaussian(128, 96, 0.0, 1.0, &mut rng);
+        let b = Matrix::gaussian(96, 128, 0.0, 1.0, &mut rng);
+        let st = a.matmul_st(&b).unwrap();
+        let mt = a.matmul(&b).unwrap();
+        for (x, y) in st.data().iter().zip(mt.data()) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::gaussian(13, 7, 0.0, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn transpose_values() {
+        let a = m(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let t = a.transpose();
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.get(0, 1), 4.0);
+        assert_eq!(t.get(2, 0), 3.0);
+    }
+
+    #[test]
+    fn quantile_matches_definition() {
+        let a = m(1, 5, &[5.0, 1.0, 4.0, 2.0, 3.0]);
+        assert_eq!(a.quantile(0.0), 1.0);
+        assert_eq!(a.quantile(1.0), 5.0);
+        assert_eq!(a.quantile(0.5), 3.0);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        let a = m(2, 2, &[0.0, 1.0, 0.0, 2.0]);
+        assert!((a.sparsity() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn submatrix_and_set_roundtrip() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::gaussian(10, 8, 0.0, 1.0, &mut rng);
+        let sub = a.submatrix(2, 6, 1, 5).unwrap();
+        assert_eq!(sub.rows(), 4);
+        assert_eq!(sub.cols(), 4);
+        assert_eq!(sub.get(0, 0), a.get(2, 1));
+        let mut b = Matrix::zeros(10, 8);
+        b.set_submatrix(2, 1, &sub).unwrap();
+        assert_eq!(b.get(3, 2), a.get(3, 2));
+    }
+
+    #[test]
+    fn submatrix_out_of_bounds_errors() {
+        let a = Matrix::zeros(3, 3);
+        assert!(a.submatrix(0, 4, 0, 3).is_err());
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::gaussian(200, 200, 0.5, 2.0, &mut rng);
+        assert!((a.mean() - 0.5).abs() < 0.05);
+        assert!((a.variance() - 4.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn frobenius_known() {
+        let a = m(1, 2, &[3.0, 4.0]);
+        assert!((a.frobenius() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hadamard_and_elementwise() {
+        let a = m(1, 3, &[1.0, 2.0, 3.0]);
+        let b = m(1, 3, &[2.0, 0.5, -1.0]);
+        assert_eq!(a.hadamard(&b).unwrap().data(), &[2.0, 1.0, -3.0]);
+        assert_eq!(a.add(&b).unwrap().data(), &[3.0, 2.5, 2.0]);
+        assert_eq!(a.sub(&b).unwrap().data(), &[-1.0, 1.5, 4.0]);
+        assert_eq!(a.scale(2.0).data(), &[2.0, 4.0, 6.0]);
+    }
+}

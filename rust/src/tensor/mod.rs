@@ -1,0 +1,6 @@
+//! Dense matrix substrate (no external linear-algebra crates available
+//! offline, so the library ships its own).
+
+pub mod matrix;
+
+pub use matrix::Matrix;

@@ -1,0 +1,309 @@
+//! Tile-based binary matrix factorization (paper §3.1).
+//!
+//! A `(m × n)` index matrix is split into a grid of tiles; each tile
+//! is factorized independently (possibly with its own rank). Benefits
+//! demonstrated by Figures 4-6: bounded on-chip memory, faster NMF,
+//! and larger factor-value variance (smaller sample size) which gives
+//! the threshold conversion more room to optimise Cost.
+
+use crate::bmf::algorithm1::{algorithm1, Algorithm1Config, FactorizedIndex};
+use crate::tensor::Matrix;
+use crate::util::bits::BitMatrix;
+use crate::util::error::{Error, Result};
+
+/// A rectangular tiling plan: `tiles_r × tiles_c` equal-ish tiles
+/// (edge tiles absorb the remainder).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TilePlan {
+    /// Number of tile rows.
+    pub tiles_r: usize,
+    /// Number of tile columns.
+    pub tiles_c: usize,
+}
+
+/// One tile's coordinates within the parent matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileSpec {
+    /// Tile index in row-major tile order.
+    pub id: usize,
+    /// Row range `[r0, r1)`.
+    pub r0: usize,
+    /// Row range end.
+    pub r1: usize,
+    /// Column range `[c0, c1)`.
+    pub c0: usize,
+    /// Column range end.
+    pub c1: usize,
+}
+
+impl TileSpec {
+    /// Tile height.
+    pub fn rows(&self) -> usize {
+        self.r1 - self.r0
+    }
+    /// Tile width.
+    pub fn cols(&self) -> usize {
+        self.c1 - self.c0
+    }
+}
+
+impl TilePlan {
+    /// Uniform plan.
+    pub fn new(tiles_r: usize, tiles_c: usize) -> Self {
+        TilePlan { tiles_r, tiles_c }
+    }
+
+    /// The identity plan (a single tile).
+    pub fn single() -> Self {
+        TilePlan { tiles_r: 1, tiles_c: 1 }
+    }
+
+    /// Total number of tiles.
+    pub fn count(&self) -> usize {
+        self.tiles_r * self.tiles_c
+    }
+
+    /// Enumerate tile coordinates for an `m × n` matrix. Every element
+    /// belongs to exactly one tile; edge tiles absorb remainders.
+    pub fn tiles(&self, m: usize, n: usize) -> Result<Vec<TileSpec>> {
+        if self.tiles_r == 0 || self.tiles_c == 0 {
+            return Err(Error::invalid("tile plan must have >= 1 tile per axis"));
+        }
+        if self.tiles_r > m || self.tiles_c > n {
+            return Err(Error::invalid(format!(
+                "plan {}x{} too fine for {}x{} matrix",
+                self.tiles_r, self.tiles_c, m, n
+            )));
+        }
+        let mut out = Vec::with_capacity(self.count());
+        let th = m / self.tiles_r;
+        let tw = n / self.tiles_c;
+        let mut id = 0;
+        for tr in 0..self.tiles_r {
+            let r0 = tr * th;
+            let r1 = if tr + 1 == self.tiles_r { m } else { r0 + th };
+            for tc in 0..self.tiles_c {
+                let c0 = tc * tw;
+                let c1 = if tc + 1 == self.tiles_c { n } else { c0 + tw };
+                out.push(TileSpec { id, r0, r1, c0, c1 });
+                id += 1;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Result of compressing a matrix tile-by-tile.
+#[derive(Debug)]
+pub struct TiledIndex {
+    /// Plan used.
+    pub plan: TilePlan,
+    /// Per-tile factorization results, in tile id order.
+    pub tiles: Vec<(TileSpec, FactorizedIndex)>,
+    /// Assembled full-size mask.
+    pub mask: BitMatrix,
+}
+
+impl TiledIndex {
+    /// Total index bits: Σ kᵢ (mᵢ + nᵢ).
+    pub fn index_bits(&self) -> usize {
+        self.tiles.iter().map(|(_, f)| f.index_bits()).sum()
+    }
+
+    /// Total index bytes.
+    pub fn index_bytes(&self) -> usize {
+        self.index_bits().div_ceil(8)
+    }
+
+    /// Compression ratio vs a dense binary index of the full matrix.
+    pub fn compression_ratio(&self) -> f64 {
+        (self.mask.rows() * self.mask.cols()) as f64 / self.index_bits() as f64
+    }
+
+    /// Total Cost (Σ per-tile cost, manipulated magnitudes).
+    pub fn cost(&self) -> f64 {
+        self.tiles.iter().map(|(_, f)| f.cost).sum()
+    }
+
+    /// Achieved overall sparsity of the assembled mask.
+    pub fn sparsity(&self) -> f64 {
+        self.mask.sparsity()
+    }
+}
+
+/// Rank assignment for a tiling: same rank everywhere, or per-tile.
+#[derive(Debug, Clone)]
+pub enum RankPlan {
+    /// All tiles use the same rank.
+    Uniform(usize),
+    /// Tile `id` uses `ranks[id]` (len must equal the tile count).
+    PerTile(Vec<usize>),
+}
+
+impl RankPlan {
+    fn rank_for(&self, id: usize) -> usize {
+        match self {
+            RankPlan::Uniform(k) => *k,
+            RankPlan::PerTile(v) => v[id],
+        }
+    }
+}
+
+/// The rank giving a `(tiles_r × tiles_c)` plan the same total index
+/// budget as a single-tile factorization at `rank_single` — the
+/// "equal compression ratio" comparison of Figures 4 and 6.
+///
+/// Single: `k₁ (m + n)` bits. Tiled (uniform tiles): each tile is
+/// `(m/tr) × (n/tc)`, so total = `k_t · tr·tc · (m/tr + n/tc)`.
+pub fn equal_budget_rank(
+    m: usize,
+    n: usize,
+    plan: TilePlan,
+    rank_single: usize,
+) -> usize {
+    let single_bits = rank_single * (m + n);
+    let per_rank_bits = plan.count() * (m / plan.tiles_r + n / plan.tiles_c);
+    (single_bits as f64 / per_rank_bits as f64).round().max(1.0) as usize
+}
+
+/// Factorize a weight matrix tile-by-tile with Algorithm 1 applied
+/// independently to each tile. `base` supplies everything except the
+/// rank, which comes from `ranks`. Runs sequentially; the coordinator
+/// offers the parallel path (`coordinator::sweep`).
+pub fn compress_tiled(
+    w: &Matrix,
+    plan: TilePlan,
+    ranks: &RankPlan,
+    base: &Algorithm1Config,
+) -> Result<TiledIndex> {
+    let specs = plan.tiles(w.rows(), w.cols())?;
+    if let RankPlan::PerTile(v) = ranks {
+        if v.len() != specs.len() {
+            return Err(Error::invalid(format!(
+                "rank plan has {} entries for {} tiles",
+                v.len(),
+                specs.len()
+            )));
+        }
+    }
+    let mut tiles = Vec::with_capacity(specs.len());
+    let mut mask = BitMatrix::zeros(w.rows(), w.cols());
+    for spec in specs {
+        let sub = w.submatrix(spec.r0, spec.r1, spec.c0, spec.c1)?;
+        let mut cfg = base.clone();
+        cfg.rank = ranks.rank_for(spec.id);
+        cfg.nmf.rank = cfg.rank;
+        // decorrelate per-tile NMF inits deterministically
+        cfg.nmf.seed = base.nmf.seed.wrapping_add(spec.id as u64);
+        let f = algorithm1(&sub, &cfg)?;
+        for i in 0..spec.rows() {
+            for j in 0..spec.cols() {
+                if f.mask.get(i, j) {
+                    mask.set(spec.r0 + i, spec.c0 + j, true);
+                }
+            }
+        }
+        tiles.push((spec, f));
+    }
+    Ok(TiledIndex { plan, tiles, mask })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::manip::ManipMethod;
+    use crate::util::rng::Rng;
+
+    fn w(m: usize, n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::gaussian(m, n, 0.0, 0.1, &mut rng)
+    }
+
+    fn fast_cfg(s: f64) -> Algorithm1Config {
+        let mut c = Algorithm1Config::new(4, s);
+        c.sp_grid = vec![0.3, 0.6];
+        c.nmf.max_iters = 15;
+        c
+    }
+
+    #[test]
+    fn tiles_partition_exactly() {
+        let plan = TilePlan::new(3, 4);
+        let tiles = plan.tiles(10, 9).unwrap();
+        assert_eq!(tiles.len(), 12);
+        let mut covered = vec![vec![0u8; 9]; 10];
+        for t in &tiles {
+            for i in t.r0..t.r1 {
+                for j in t.c0..t.c1 {
+                    covered[i][j] += 1;
+                }
+            }
+        }
+        assert!(covered.iter().flatten().all(|&c| c == 1), "partition must be exact");
+    }
+
+    #[test]
+    fn plan_validation() {
+        assert!(TilePlan::new(0, 1).tiles(5, 5).is_err());
+        assert!(TilePlan::new(6, 1).tiles(5, 5).is_err());
+        assert!(TilePlan::new(5, 5).tiles(5, 5).is_ok());
+    }
+
+    #[test]
+    fn equal_budget_rank_matches_paper_fig6() {
+        // FC1 800x500: (1x1, k=128) == (2x2, k=64) == (4x4, k=32).
+        assert_eq!(equal_budget_rank(800, 500, TilePlan::new(1, 1), 128), 128);
+        assert_eq!(equal_budget_rank(800, 500, TilePlan::new(2, 2), 128), 64);
+        assert_eq!(equal_budget_rank(800, 500, TilePlan::new(4, 4), 128), 32);
+    }
+
+    #[test]
+    fn tiled_compression_hits_sparsity_and_budget() {
+        let w = w(60, 40, 1);
+        let plan = TilePlan::new(2, 2);
+        let res = compress_tiled(&w, plan, &RankPlan::Uniform(4), &fast_cfg(0.85)).unwrap();
+        assert!((res.sparsity() - 0.85).abs() < 0.04, "sparsity {}", res.sparsity());
+        // 4 tiles of 30x20 at k=4: 4 * 4*(30+20) = 800 bits
+        assert_eq!(res.index_bits(), 800);
+        assert_eq!(res.tiles.len(), 4);
+    }
+
+    #[test]
+    fn per_tile_ranks_respected() {
+        let w = w(40, 40, 2);
+        let plan = TilePlan::new(2, 1);
+        let ranks = RankPlan::PerTile(vec![2, 6]);
+        let res = compress_tiled(&w, plan, &ranks, &fast_cfg(0.8)).unwrap();
+        assert_eq!(res.tiles[0].1.rank, 2);
+        assert_eq!(res.tiles[1].1.rank, 6);
+        assert!(compress_tiled(&w, plan, &RankPlan::PerTile(vec![2]), &fast_cfg(0.8)).is_err());
+    }
+
+    #[test]
+    fn assembled_mask_matches_tiles() {
+        let w = w(30, 30, 3);
+        let plan = TilePlan::new(3, 3);
+        let res = compress_tiled(&w, plan, &RankPlan::Uniform(2), &fast_cfg(0.8)).unwrap();
+        for (spec, f) in &res.tiles {
+            for i in 0..spec.rows() {
+                for j in 0..spec.cols() {
+                    assert_eq!(res.mask.get(spec.r0 + i, spec.c0 + j), f.mask.get(i, j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_tile_equals_plain_algorithm1() {
+        let w = w(24, 18, 4);
+        let cfg = fast_cfg(0.8);
+        let tiled = compress_tiled(&w, TilePlan::single(), &RankPlan::Uniform(4), &cfg).unwrap();
+        let mut c = cfg.clone();
+        c.rank = 4;
+        c.nmf.rank = 4;
+        c.nmf.seed = cfg.nmf.seed; // tile 0 adds 0
+        let plain = algorithm1(&w, &c).unwrap();
+        assert_eq!(tiled.mask, plain.mask);
+        let _ = ManipMethod::all();
+    }
+}

@@ -1,0 +1,9 @@
+//! Training driver: pre-train → prune (Algorithm 1) → retrain with the
+//! decoded low-rank mask, exactly the paper's §2.2 protocol, executed
+//! through the AOT `train_step` artifact (Python never runs here).
+
+pub mod data;
+pub mod loop_;
+
+pub use data::{Dataset, SyntheticDigits};
+pub use loop_::{NativeTrainer, PjrtTrainer, TrainConfig, TrainLog};

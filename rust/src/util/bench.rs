@@ -1,0 +1,227 @@
+//! Tiny benchmark harness (no `criterion` offline).
+//!
+//! Benches under `rust/benches/` are `harness = false` binaries that
+//! use [`Bench`] to time closures with warmup, adaptive iteration
+//! counts, and median/mean/min reporting, then print the paper
+//! table/figure rows they regenerate. Results are also appended as CSV
+//! under `reports/` so EXPERIMENTS.md can cite them.
+
+use std::time::{Duration, Instant};
+
+/// One timed result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Bench label.
+    pub name: String,
+    /// Iterations per sample.
+    pub iters: u64,
+    /// Per-iteration wall time, one entry per sample.
+    pub samples_ns: Vec<f64>,
+}
+
+impl Measurement {
+    /// Median per-iteration nanoseconds.
+    pub fn median_ns(&self) -> f64 {
+        let mut s = self.samples_ns.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s[s.len() / 2]
+    }
+
+    /// Mean per-iteration nanoseconds.
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
+    }
+
+    /// Minimum per-iteration nanoseconds.
+    pub fn min_ns(&self) -> f64 {
+        self.samples_ns.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Human-readable time.
+    pub fn pretty(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.1} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    }
+}
+
+/// Benchmark runner with warmup + fixed sample count.
+pub struct Bench {
+    /// Samples collected per benchmark.
+    pub samples: usize,
+    /// Target time per sample; iteration count adapts to reach it.
+    pub target_sample: Duration,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    /// Default: 10 samples of >= 50 ms each.
+    pub fn new() -> Self {
+        // honor a quick mode for CI-style smoke runs
+        let quick = std::env::var("LRBI_BENCH_QUICK").is_ok();
+        Bench {
+            samples: if quick { 3 } else { 10 },
+            target_sample: if quick {
+                Duration::from_millis(5)
+            } else {
+                Duration::from_millis(50)
+            },
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, auto-calibrating iterations; returns median ns/iter.
+    pub fn run(&mut self, name: &str, mut f: impl FnMut()) -> f64 {
+        // calibrate
+        let mut iters = 1u64;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed();
+            if dt >= self.target_sample || iters > 1 << 30 {
+                break;
+            }
+            let scale = (self.target_sample.as_secs_f64() / dt.as_secs_f64().max(1e-9))
+                .ceil()
+                .max(2.0) as u64;
+            iters = iters.saturating_mul(scale.min(100));
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let m = Measurement { name: name.to_string(), iters, samples_ns: samples };
+        let med = m.median_ns();
+        println!(
+            "  [bench] {:<44} median {:>12}  min {:>12}  ({} iters/sample)",
+            m.name,
+            Measurement::pretty(med),
+            Measurement::pretty(m.min_ns()),
+            m.iters
+        );
+        self.results.push(m);
+        med
+    }
+
+    /// All measurements so far.
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Append `name,median_ns,min_ns` rows to a CSV under reports/.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "name,median_ns,mean_ns,min_ns,iters")?;
+        for m in &self.results {
+            writeln!(
+                f,
+                "{},{:.1},{:.1},{:.1},{}",
+                m.name,
+                m.median_ns(),
+                m.mean_ns(),
+                m.min_ns(),
+                m.iters
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Pretty-print a table: header + aligned rows (paper-table renderer).
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// Write table rows as CSV for the report generator.
+pub fn write_table_csv(path: &str, header: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_stats() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 1,
+            samples_ns: vec![3.0, 1.0, 2.0],
+        };
+        assert_eq!(m.median_ns(), 2.0);
+        assert_eq!(m.min_ns(), 1.0);
+        assert!((m.mean_ns() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pretty_units() {
+        assert!(Measurement::pretty(500.0).ends_with("ns"));
+        assert!(Measurement::pretty(5e4).ends_with("µs"));
+        assert!(Measurement::pretty(5e7).ends_with("ms"));
+        assert!(Measurement::pretty(5e9).ends_with("s"));
+    }
+
+    #[test]
+    fn bench_runs_and_records() {
+        std::env::set_var("LRBI_BENCH_QUICK", "1");
+        let mut b = Bench::new();
+        let mut acc = 0u64;
+        b.run("noop-ish", || {
+            acc = acc.wrapping_add(1);
+        });
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].median_ns() >= 0.0);
+    }
+}

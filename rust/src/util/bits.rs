@@ -1,0 +1,263 @@
+//! Packed bit rows — the storage/compute substrate for binary index
+//! matrices. Rows are packed into `u64` words so the boolean matrix
+//! product of Eq. (3) becomes word-wide OR/AND (the L3 hot path).
+
+/// A row-major binary matrix packed into `u64` words per row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitMatrix {
+    rows: usize,
+    cols: usize,
+    words_per_row: usize,
+    words: Vec<u64>,
+}
+
+impl BitMatrix {
+    /// All-zeros bit matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        let wpr = cols.div_ceil(64);
+        BitMatrix { rows, cols, words_per_row: wpr, words: vec![0; rows * wpr] }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> bool) -> Self {
+        let mut m = BitMatrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                if f(i, j) {
+                    m.set(i, j, true);
+                }
+            }
+        }
+        m
+    }
+
+    /// Build from an `f32` matrix where nonzero -> 1.
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self::from_fn(rows, cols, |i, j| data[i * cols + j] != 0.0)
+    }
+
+    /// Row count.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Read one bit.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        debug_assert!(i < self.rows && j < self.cols);
+        let w = self.words[i * self.words_per_row + j / 64];
+        (w >> (j % 64)) & 1 == 1
+    }
+
+    /// Write one bit.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: bool) {
+        debug_assert!(i < self.rows && j < self.cols);
+        let idx = i * self.words_per_row + j / 64;
+        let bit = 1u64 << (j % 64);
+        if v {
+            self.words[idx] |= bit;
+        } else {
+            self.words[idx] &= !bit;
+        }
+    }
+
+    /// The packed words of row `i`.
+    #[inline]
+    pub fn row_words(&self, i: usize) -> &[u64] {
+        &self.words[i * self.words_per_row..(i + 1) * self.words_per_row]
+    }
+
+    /// Mutable packed words of row `i`.
+    #[inline]
+    pub fn row_words_mut(&mut self, i: usize) -> &mut [u64] {
+        &mut self.words[i * self.words_per_row..(i + 1) * self.words_per_row]
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> u64 {
+        self.words.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// Fraction of ZERO bits — "sparsity" in the paper's sense
+    /// (S = fraction pruned).
+    pub fn sparsity(&self) -> f64 {
+        let total = (self.rows * self.cols) as f64;
+        if total == 0.0 {
+            return 0.0;
+        }
+        1.0 - self.count_ones() as f64 / total
+    }
+
+    /// Boolean matrix product (Eq. 3): `self (x) other`, where `self`
+    /// is (m x k) and `other` is (k x n). For every row i we OR
+    /// together the packed rows of `other` selected by the set bits of
+    /// row i — O(m * k * n/64) word ops, the decode hot path.
+    pub fn bool_product(&self, other: &BitMatrix) -> BitMatrix {
+        assert_eq!(self.cols, other.rows, "bool_product shape mismatch");
+        let mut out = BitMatrix::zeros(self.rows, other.cols);
+        let wpr = out.words_per_row;
+        for i in 0..self.rows {
+            // Split borrow: output row vs input rows.
+            let (head, tail) = out.words.split_at_mut(i * wpr);
+            let _ = head;
+            let orow = &mut tail[..wpr];
+            // Walk the set bits of row i word-by-word (trailing_zeros)
+            // instead of testing every bit — ~10x at high rank
+            // (EXPERIMENTS.md §Perf).
+            for (wi, &w) in self.row_words(i).iter().enumerate() {
+                let mut bits = w;
+                while bits != 0 {
+                    let l = wi * 64 + bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    if l >= self.cols {
+                        break;
+                    }
+                    let zrow = other.row_words(l);
+                    for (o, &z) in orow.iter_mut().zip(zrow) {
+                        *o |= z;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Count bits set in `self` but clear in `other` (for mismatch
+    /// accounting between I and I_a). Shapes must match.
+    pub fn count_and_not(&self, other: &BitMatrix) -> u64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(&a, &b)| (a & !b).count_ones() as u64)
+            .sum()
+    }
+
+    /// Hamming distance to another bit matrix of the same shape.
+    pub fn hamming(&self, other: &BitMatrix) -> u64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(&a, &b)| (a ^ b).count_ones() as u64)
+            .sum()
+    }
+
+    /// Dense `f32` {0,1} expansion (for feeding PJRT artifacts).
+    pub fn to_f32(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.rows * self.cols);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.push(if self.get(i, j) { 1.0 } else { 0.0 });
+            }
+        }
+        out
+    }
+
+    /// Storage size in bytes when serialised as raw bits (the "Binary"
+    /// row of Tables 1R/3 when applied to the full mask, and the
+    /// factor cost k(m+n)/8 when applied to I_p/I_z).
+    pub fn index_bytes(&self) -> usize {
+        (self.rows * self.cols).div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_bits(rows: usize, cols: usize, density: f64, seed: u64) -> BitMatrix {
+        let mut rng = Rng::new(seed);
+        BitMatrix::from_fn(rows, cols, |_, _| rng.bernoulli(density))
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut m = BitMatrix::zeros(3, 130);
+        m.set(2, 129, true);
+        m.set(0, 0, true);
+        assert!(m.get(2, 129));
+        assert!(m.get(0, 0));
+        assert!(!m.get(1, 64));
+        m.set(2, 129, false);
+        assert!(!m.get(2, 129));
+    }
+
+    #[test]
+    fn count_and_sparsity() {
+        let m = BitMatrix::from_fn(2, 2, |i, j| i == j);
+        assert_eq!(m.count_ones(), 2);
+        assert!((m.sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bool_product_matches_naive() {
+        let a = random_bits(17, 9, 0.3, 1);
+        let b = random_bits(9, 70, 0.3, 2);
+        let fast = a.bool_product(&b);
+        for i in 0..17 {
+            for j in 0..70 {
+                let want = (0..9).any(|l| a.get(i, l) && b.get(l, j));
+                assert_eq!(fast.get(i, j), want, "at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn bool_product_paper_example() {
+        // Eq. (5) -> Eq. (6)
+        let ip = BitMatrix::from_fn(5, 2, |i, j| {
+            [[0, 1], [1, 0], [0, 1], [0, 1], [1, 0]][i][j] == 1
+        });
+        let iz = BitMatrix::from_fn(2, 5, |i, j| {
+            [[1, 0, 1, 1, 0], [0, 1, 1, 0, 1]][i][j] == 1
+        });
+        let ia = ip.bool_product(&iz);
+        let want = [
+            [0, 1, 1, 0, 1],
+            [1, 0, 1, 1, 0],
+            [0, 1, 1, 0, 1],
+            [0, 1, 1, 0, 1],
+            [1, 0, 1, 1, 0],
+        ];
+        for i in 0..5 {
+            for j in 0..5 {
+                assert_eq!(ia.get(i, j), want[i][j] == 1);
+            }
+        }
+    }
+
+    #[test]
+    fn and_not_and_hamming() {
+        let a = BitMatrix::from_fn(1, 4, |_, j| j < 2); // 1100
+        let b = BitMatrix::from_fn(1, 4, |_, j| j % 2 == 0); // 1010
+        assert_eq!(a.count_and_not(&b), 1); // bit 1
+        assert_eq!(b.count_and_not(&a), 1); // bit 2
+        assert_eq!(a.hamming(&b), 2);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let a = random_bits(5, 67, 0.4, 3);
+        let dense = a.to_f32();
+        let back = BitMatrix::from_f32(5, 67, &dense);
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn index_bytes_matches_paper_units() {
+        // 800x500 binary mask = 50 KB (Table 1 right).
+        let m = BitMatrix::zeros(800, 500);
+        assert_eq!(m.index_bytes(), 50_000);
+    }
+}

@@ -1,0 +1,38 @@
+//! Library-wide error type.
+
+/// Errors produced by the lrbi library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Shape mismatch in a tensor operation.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    /// Invalid argument or configuration value.
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+    /// An I/O failure (artifact files, reports, checkpoints).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    /// Failure inside the PJRT runtime layer.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// Coordinator-level failure (worker panic, queue closed, ...).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+    /// Config file parse error.
+    #[error("config error: {0}")]
+    Config(String),
+}
+
+/// Convenience result alias used across the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Construct a shape error from anything displayable.
+    pub fn shape(msg: impl std::fmt::Display) -> Self {
+        Error::Shape(msg.to_string())
+    }
+    /// Construct an invalid-argument error from anything displayable.
+    pub fn invalid(msg: impl std::fmt::Display) -> Self {
+        Error::InvalidArg(msg.to_string())
+    }
+}

@@ -1,0 +1,8 @@
+//! Shared utilities: error types, deterministic RNG, statistics, bit packing.
+
+pub mod bench;
+pub mod bits;
+pub mod error;
+pub mod prop;
+pub mod rng;
+pub mod stats;

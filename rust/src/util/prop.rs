@@ -1,0 +1,71 @@
+//! Minimal property-testing harness (no `proptest` offline).
+//!
+//! `check` runs a property over `n` seeded random cases; on failure it
+//! reports the failing seed so the case can be replayed exactly:
+//!
+//! ```
+//! use lrbi::util::prop::check;
+//! check("addition commutes", 100, |rng| {
+//!     let (a, b) = (rng.next_f32(), rng.next_f32());
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Run `prop` over `cases` independently-seeded RNGs; panic with the
+/// failing seed on the first violated assertion.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case;
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Uniformly pick one element of a slice.
+pub fn choose<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
+    &xs[rng.next_range(xs.len() as u64) as usize]
+}
+
+/// A random dimension in `[lo, hi]`.
+pub fn dim(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.next_range((hi - lo + 1) as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 50, |rng| {
+            let v = rng.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check("always fails", 3, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn dim_in_bounds() {
+        check("dim bounds", 100, |rng| {
+            let d = dim(rng, 2, 9);
+            assert!((2..=9).contains(&d));
+        });
+    }
+}

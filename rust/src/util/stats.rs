@@ -1,0 +1,237 @@
+//! Histograms and summary statistics (used by every figure bench).
+
+/// A fixed-bin histogram over a closed range, mirroring the paper's
+/// weight-value histograms (Figures 3-7).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    /// Samples below `lo` / above `hi`.
+    pub underflow: u64,
+    /// Samples above `hi`.
+    pub overflow: u64,
+    count: u64,
+    sum: f64,
+    sum_sq: f64,
+}
+
+impl Histogram {
+    /// Create a histogram with `nbins` equal bins over `[lo, hi)`.
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0, "bad histogram range");
+        Histogram {
+            lo,
+            hi,
+            bins: vec![0; nbins],
+            underflow: 0,
+            overflow: 0,
+            count: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+        }
+    }
+
+    /// Add one sample.
+    pub fn add(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.sum_sq += v * v;
+        if v < self.lo {
+            self.underflow += 1;
+        } else if v >= self.hi {
+            self.overflow += 1;
+        } else {
+            let nbins = self.bins.len();
+            let idx = ((v - self.lo) / (self.hi - self.lo) * nbins as f64) as usize;
+            self.bins[idx.min(nbins - 1)] += 1;
+        }
+    }
+
+    /// Add every value in a slice.
+    pub fn add_all(&mut self, vs: &[f32]) {
+        for &v in vs {
+            self.add(v as f64);
+        }
+    }
+
+    /// Bin counts.
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    /// Center of bin `i`.
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        self.lo + (i as f64 + 0.5) * w
+    }
+
+    /// Total samples seen (including out-of-range).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sample mean.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let m = self.mean();
+        self.sum_sq / self.count as f64 - m * m
+    }
+
+    /// Count of samples whose |value| falls below `t` (the "near-zero"
+    /// population the paper tracks in Figures 3 and 6).
+    pub fn mass_below_abs(&self, t: f64) -> u64 {
+        let mut total = 0;
+        for (i, &c) in self.bins.iter().enumerate() {
+            if self.bin_center(i).abs() < t {
+                total += c;
+            }
+        }
+        total
+    }
+
+    /// Render as rows of `center count` for the report generator.
+    pub fn to_rows(&self) -> Vec<(f64, u64)> {
+        (0..self.bins.len()).map(|i| (self.bin_center(i), self.bins[i])).collect()
+    }
+
+    /// Compact ASCII sparkline (for terminal reports).
+    pub fn sparkline(&self) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.bins.iter().copied().max().unwrap_or(0).max(1);
+        self.bins
+            .iter()
+            .map(|&c| GLYPHS[(c * 7 / max) as usize])
+            .collect()
+    }
+}
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    /// Fresh accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a sample.
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    /// Sample count.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Mean of samples seen so far.
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Standard deviation.
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Percentile of a sample set (nearest-rank; `q` in [0,1]).
+pub fn percentile(xs: &mut [f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((xs.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
+    xs[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_bins_and_range() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        assert!(h.bins().iter().all(|&c| c == 1));
+        h.add(-1.0);
+        h.add(11.0);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.count(), 12);
+    }
+
+    #[test]
+    fn histogram_moments() {
+        let mut h = Histogram::new(-10.0, 10.0, 10);
+        for v in [1.0, 2.0, 3.0] {
+            h.add(v);
+        }
+        assert!((h.mean() - 2.0).abs() < 1e-12);
+        assert!((h.variance() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_near_zero_mass() {
+        let mut h = Histogram::new(-1.0, 1.0, 20);
+        h.add_all(&[0.01, -0.02, 0.5, -0.9]);
+        assert_eq!(h.mass_below_abs(0.1), 2);
+    }
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 4.0, 9.0, 16.0, 25.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.add(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut xs = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&mut xs, 0.0), 1.0);
+        assert_eq!(percentile(&mut xs, 0.5), 3.0);
+        assert_eq!(percentile(&mut xs, 1.0), 5.0);
+    }
+
+    #[test]
+    fn sparkline_len() {
+        let mut h = Histogram::new(0.0, 1.0, 16);
+        h.add(0.5);
+        assert_eq!(h.sparkline().chars().count(), 16);
+    }
+}

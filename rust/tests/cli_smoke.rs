@@ -1,0 +1,48 @@
+//! CLI smoke tests: the compiled binary's commands run end to end.
+
+use lrbi::cli;
+
+fn argv(s: &str) -> Vec<String> {
+    s.split_whitespace().map(|t| t.to_string()).collect()
+}
+
+#[test]
+fn info_and_unknown() {
+    assert_eq!(cli::run(argv("info")), 0);
+    assert_eq!(cli::run(argv("definitely-not-a-command")), 2);
+}
+
+#[test]
+fn compress_lenet_quick() {
+    assert_eq!(
+        cli::run(argv("compress --model lenet5 --sparsity 0.9 --rank 4 --threads 4")),
+        0
+    );
+}
+
+#[test]
+fn compress_from_config_file() {
+    let dir = std::env::temp_dir().join("lrbi_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.toml");
+    std::fs::write(
+        &path,
+        "[compress]\nmodel = \"lenet5\"\nsparsity = 0.9\nranks = [4]\n",
+    )
+    .unwrap();
+    assert_eq!(cli::run(argv(&format!("compress --config {}", path.display()))), 0);
+}
+
+#[test]
+fn report_writes_files() {
+    let dir = std::env::temp_dir().join("lrbi_cli_reports");
+    let _ = std::fs::remove_dir_all(&dir);
+    assert_eq!(cli::run(argv(&format!("report --out {}", dir.display()))), 0);
+    assert!(dir.join("table1_right.csv").exists());
+    assert!(dir.join("table4_ratios.csv").exists());
+}
+
+#[test]
+fn serve_synthetic_traffic() {
+    assert_eq!(cli::run(argv("serve --requests 64 --max-batch 16 --max-wait-ms 1")), 0);
+}

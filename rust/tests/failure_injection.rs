@@ -1,0 +1,109 @@
+//! Failure injection: the coordinator and serving stack must degrade
+//! loudly, not silently.
+
+use lrbi::coordinator::pool::{parallel_map, WorkerPool};
+use lrbi::runtime::artifacts::ArtifactSet;
+use lrbi::serve::batcher::BatchPolicy;
+use lrbi::serve::engine::ServingEngine;
+use lrbi::coordinator::metrics::Metrics;
+use lrbi::util::error::Error;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+#[test]
+fn pool_survives_panicking_job() {
+    let pool = WorkerPool::new(2, 8);
+    let done = Arc::new(AtomicU64::new(0));
+    // a panicking job must not take the pool down (the panic unwinds
+    // the worker's job closure; subsequent jobs still run because the
+    // panic is confined to the closure call)
+    let _ = pool.submit(|| {
+        let result = std::panic::catch_unwind(|| panic!("injected"));
+        assert!(result.is_err());
+    });
+    for _ in 0..10 {
+        let d = Arc::clone(&done);
+        pool.submit(move || {
+            d.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+    }
+    drop(pool);
+    assert_eq!(done.load(Ordering::Relaxed), 10);
+}
+
+#[test]
+fn parallel_map_propagates_errors_as_values() {
+    let items: Vec<u32> = (0..20).collect();
+    let results: Vec<Result<u32, String>> = parallel_map(&items, 4, |&x| {
+        if x == 13 {
+            Err("unlucky".to_string())
+        } else {
+            Ok(x)
+        }
+    });
+    assert_eq!(results.iter().filter(|r| r.is_err()).count(), 1);
+    assert!(results[13].is_err());
+}
+
+#[test]
+fn corrupt_manifest_is_rejected() {
+    let dir = std::env::temp_dir().join("lrbi_corrupt_artifacts");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    // manifest referencing files that don't exist
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "train_step inputs=11 in_shapes=1 sha256=x bytes=1\n\
+         predict inputs=9 in_shapes=1 sha256=x bytes=1\n\
+         decode_matmul inputs=4 in_shapes=1 sha256=x bytes=1\n\
+         nmf_step inputs=3 in_shapes=1 sha256=x bytes=1\n",
+    )
+    .unwrap();
+    let err = ArtifactSet::open(&dir).unwrap_err();
+    assert!(err.to_string().contains("not found"), "{err}");
+    // malformed manifest line
+    std::fs::write(dir.join("manifest.txt"), "what even is this\n").unwrap();
+    assert!(ArtifactSet::open(&dir).is_err());
+}
+
+#[test]
+fn engine_factory_failure_answers_all_requests_with_error() {
+    struct Never;
+    impl lrbi::serve::engine::InferenceBackend for Never {
+        fn batch(&self) -> usize {
+            1
+        }
+        fn input_dim(&self) -> usize {
+            1
+        }
+        fn classes(&self) -> usize {
+            1
+        }
+        fn predict(&mut self, _x: &lrbi::tensor::Matrix) -> lrbi::Result<lrbi::tensor::Matrix> {
+            unreachable!()
+        }
+    }
+    let engine = ServingEngine::start_with(
+        || -> lrbi::Result<Never> { Err(Error::Runtime("backend exploded".into())) },
+        BatchPolicy::default(),
+        Arc::new(Metrics::new()),
+    );
+    let r = engine.infer(vec![1.0]);
+    assert!(r.is_err());
+    assert!(r.unwrap_err().to_string().contains("backend exploded"));
+}
+
+#[test]
+fn wrong_input_count_rejected_by_runtime() {
+    // only runs when artifacts exist (they do under `make test`)
+    if let Ok(set) = ArtifactSet::open("artifacts") {
+        let mut rt = lrbi::runtime::client::Runtime::new(set).unwrap();
+        match rt.execute("predict", &[]) {
+            Ok(_) => panic!("expected an input-count error"),
+            Err(err) => {
+                assert!(err.to_string().contains("expected 9 inputs"), "{err}")
+            }
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! Integration: the PJRT runtime executes the AOT artifacts and agrees
+//! with the native Rust oracles. Requires `make artifacts` (the test
+//! fails with a helpful message otherwise — artifacts are a build
+//! input, same as source).
+
+use lrbi::nmf;
+use lrbi::runtime::artifacts::{ArtifactSet, GEOMETRY, NMF_TILE};
+use lrbi::runtime::client::{literal_matrix, literal_vec, matrix_literal, Runtime};
+use lrbi::serve::engine::{InferenceBackend, MlpParams, NativeBackend};
+use lrbi::tensor::Matrix;
+use lrbi::train::data::SyntheticDigits;
+use lrbi::train::loop_::{PjrtTrainer, TrainConfig};
+use lrbi::util::bits::BitMatrix;
+use lrbi::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    let set = ArtifactSet::open("artifacts").expect("run `make artifacts` first");
+    Runtime::new(set).expect("PJRT CPU client")
+}
+
+fn random_factors(seed: u64, density: f64) -> (Matrix, Matrix, BitMatrix, BitMatrix) {
+    let g = GEOMETRY;
+    let mut rng = Rng::new(seed);
+    let ip_bits = BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(density));
+    let iz_bits = BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(density));
+    let ip = Matrix::from_vec(g.hidden0, g.rank, ip_bits.to_f32()).unwrap();
+    let iz = Matrix::from_vec(g.rank, g.hidden1, iz_bits.to_f32()).unwrap();
+    (ip, iz, ip_bits, iz_bits)
+}
+
+#[test]
+fn decode_matmul_artifact_matches_native() {
+    let mut rt = runtime();
+    let g = GEOMETRY;
+    let mut rng = Rng::new(1);
+    let (ip, iz, ip_bits, iz_bits) = random_factors(2, 0.3);
+    let w = Matrix::gaussian(g.hidden0, g.hidden1, 0.0, 0.1, &mut rng);
+    let x = Matrix::gaussian(g.batch, g.hidden0, 0.0, 1.0, &mut rng);
+    let out = rt
+        .execute(
+            "decode_matmul",
+            &[
+                matrix_literal(&ip).unwrap(),
+                matrix_literal(&iz).unwrap(),
+                matrix_literal(&w).unwrap(),
+                matrix_literal(&x).unwrap(),
+            ],
+        )
+        .unwrap();
+    let got = literal_matrix(&out[0], g.batch, g.hidden1).unwrap();
+    // native oracle: y = x @ (w o mask)
+    let mask = ip_bits.bool_product(&iz_bits);
+    let mut wm = w.clone();
+    for i in 0..wm.rows() {
+        for j in 0..wm.cols() {
+            if !mask.get(i, j) {
+                wm.set(i, j, 0.0);
+            }
+        }
+    }
+    let want = x.matmul(&wm).unwrap();
+    let mut max_rel = 0.0f64;
+    for (a, b) in got.data().iter().zip(want.data()) {
+        let rel = ((a - b).abs() / (b.abs() + 1e-3)) as f64;
+        max_rel = max_rel.max(rel);
+    }
+    // 5e-3: the native oracle compiles with target-cpu=native (FMA
+    // contraction), so its 800-term f32 dot products round differently
+    // from XLA's accumulation order.
+    assert!(max_rel < 5e-3, "decode_matmul mismatch: max rel err {max_rel}");
+}
+
+#[test]
+fn nmf_step_artifact_matches_native_updates() {
+    let mut rt = runtime();
+    let (m, n, k) = NMF_TILE;
+    let mut rng = Rng::new(3);
+    let v = Matrix::gaussian(m, n, 0.0, 1.0, &mut rng).abs();
+    let w = Matrix::gaussian(m, k, 0.5, 0.1, &mut rng).abs();
+    let h = Matrix::gaussian(k, n, 0.5, 0.1, &mut rng).abs();
+    let out = rt
+        .execute(
+            "nmf_step",
+            &[
+                matrix_literal(&v).unwrap(),
+                matrix_literal(&w).unwrap(),
+                matrix_literal(&h).unwrap(),
+            ],
+        )
+        .unwrap();
+    let w2 = literal_matrix(&out[0], m, k).unwrap();
+    let h2 = literal_matrix(&out[1], k, n).unwrap();
+    // native oracle: H then W update
+    let mut h_ref = h.clone();
+    nmf::update_h(&v, &w, &mut h_ref).unwrap();
+    let mut w_ref = w.clone();
+    nmf::update_w(&v, &mut w_ref, &h_ref).unwrap();
+    for (a, b) in h2.data().iter().zip(h_ref.data()) {
+        assert!((a - b).abs() / (b.abs() + 1e-4) < 5e-3, "H mismatch {a} vs {b}");
+    }
+    for (a, b) in w2.data().iter().zip(w_ref.data()) {
+        assert!((a - b).abs() / (b.abs() + 1e-4) < 5e-3, "W mismatch {a} vs {b}");
+    }
+    // and the objective must not increase
+    let before = nmf::objective(&v, &w, &h).unwrap();
+    let after = nmf::objective(&v, &w2, &h2).unwrap();
+    assert!(after <= before * (1.0 + 1e-6), "objective rose {before} -> {after}");
+}
+
+#[test]
+fn predict_artifact_matches_native_backend() {
+    let mut rt = runtime();
+    let g = GEOMETRY;
+    let params = MlpParams::init(4);
+    let (ip, iz, ip_bits, iz_bits) = random_factors(5, 0.25);
+    let mut rng = Rng::new(6);
+    let x = Matrix::gaussian(g.batch, g.input_dim, 0.0, 1.0, &mut rng);
+    let inputs = vec![
+        matrix_literal(&params.w0).unwrap(),
+        xla::Literal::vec1(&params.b0),
+        matrix_literal(&params.w1).unwrap(),
+        xla::Literal::vec1(&params.b1),
+        matrix_literal(&params.w2).unwrap(),
+        xla::Literal::vec1(&params.b2),
+        matrix_literal(&ip).unwrap(),
+        matrix_literal(&iz).unwrap(),
+        matrix_literal(&x).unwrap(),
+    ];
+    let out = rt.execute("predict", &inputs).unwrap();
+    let got = literal_matrix(&out[0], g.batch, g.classes).unwrap();
+    let mut native = NativeBackend::new(params, &ip_bits, &iz_bits).unwrap();
+    let want = native.predict(&x).unwrap();
+    for (a, b) in got.data().iter().zip(want.data()) {
+        assert!((a - b).abs() < 2e-3, "predict mismatch {a} vs {b}");
+    }
+}
+
+#[test]
+fn train_step_artifact_learns() {
+    let rt = runtime();
+    let mut cfg = TrainConfig::default();
+    cfg.batch = GEOMETRY.batch;
+    cfg.lr = 0.1;
+    let mut t = PjrtTrainer::new(rt, cfg).unwrap();
+    let data = SyntheticDigits::default().generate(GEOMETRY.batch * 2);
+    let (x, y) = data.batch(0, GEOMETRY.batch);
+    let first = t.train_step(&x, &y).unwrap();
+    let mut last = first;
+    for _ in 0..25 {
+        last = t.train_step(&x, &y).unwrap();
+    }
+    assert!(
+        last < first * 0.5,
+        "PJRT train_step failed to learn: {first} -> {last}"
+    );
+}
+
+#[test]
+fn train_step_respects_low_rank_mask() {
+    let rt = runtime();
+    let cfg = TrainConfig { batch: GEOMETRY.batch, ..Default::default() };
+    let mut t = PjrtTrainer::new(rt, cfg).unwrap();
+    let data = SyntheticDigits::default().generate(GEOMETRY.batch);
+    let (x, y) = data.batch(0, GEOMETRY.batch);
+    // sparse factors -> mask; pruned entries of w1 must stay EXACTLY fixed
+    let (ip, iz, ip_bits, iz_bits) = random_factors(7, 0.2);
+    t.ip = ip;
+    t.iz = iz;
+    let mask = ip_bits.bool_product(&iz_bits);
+    let before = t.params.w1.clone();
+    for _ in 0..3 {
+        t.train_step(&x, &y).unwrap();
+    }
+    let mut moved_pruned = 0;
+    let mut moved_kept = 0;
+    for i in 0..mask.rows() {
+        for j in 0..mask.cols() {
+            let changed = (t.params.w1.get(i, j) - before.get(i, j)).abs() > 0.0;
+            if mask.get(i, j) {
+                moved_kept += usize::from(changed);
+            } else {
+                moved_pruned += usize::from(changed);
+            }
+        }
+    }
+    assert_eq!(moved_pruned, 0, "pruned weights must not receive gradient");
+    assert!(moved_kept > 0, "kept weights should update");
+}
+
+#[test]
+fn pjrt_and_native_trainers_agree_on_first_loss() {
+    // Same init seed, same batch: the artifact's loss and the native
+    // backprop's loss must agree to float tolerance — a cross-layer
+    // equivalence check of the ENTIRE L1+L2 lowering vs the L3 oracle.
+    use lrbi::train::loop_::NativeTrainer;
+    let cfg = TrainConfig { batch: GEOMETRY.batch, seed: 33, lr: 0.1, ..Default::default() };
+    let data = SyntheticDigits::default().generate(GEOMETRY.batch);
+    let (x, y) = data.batch(0, GEOMETRY.batch);
+
+    let mut native = NativeTrainer::new(cfg.clone());
+    let rt = runtime();
+    let mut pjrt = PjrtTrainer::new(rt, cfg).unwrap();
+    // force identical initial parameters
+    pjrt.params = native.params.clone();
+    let l_native = native.train_step(&x, &y).unwrap();
+    let l_pjrt = pjrt.train_step(&x, &y).unwrap();
+    assert!(
+        (l_native - l_pjrt).abs() < 1e-3,
+        "losses diverge: native {l_native} vs pjrt {l_pjrt}"
+    );
+    // one more step: parameters evolved identically enough
+    let l2_native = native.train_step(&x, &y).unwrap();
+    let l2_pjrt = pjrt.train_step(&x, &y).unwrap();
+    assert!(
+        (l2_native - l2_pjrt).abs() < 5e-3,
+        "step-2 losses diverge: {l2_native} vs {l2_pjrt}"
+    );
+}

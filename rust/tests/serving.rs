@@ -1,0 +1,95 @@
+//! Serving integration: compressed model behind the dynamic batcher,
+//! PJRT backend (artifact path) under concurrent load.
+
+use lrbi::coordinator::metrics::Metrics;
+use lrbi::runtime::artifacts::{ArtifactSet, GEOMETRY};
+use lrbi::runtime::client::Runtime;
+use lrbi::serve::batcher::BatchPolicy;
+use lrbi::serve::engine::{MlpParams, NativeBackend, PjrtBackend, ServingEngine};
+use lrbi::tensor::Matrix;
+use lrbi::util::bits::BitMatrix;
+use lrbi::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn sparse_factors(seed: u64) -> (BitMatrix, BitMatrix) {
+    let g = GEOMETRY;
+    let mut rng = Rng::new(seed);
+    (
+        BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.25)),
+        BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.25)),
+    )
+}
+
+#[test]
+fn native_engine_under_concurrent_load() {
+    let params = MlpParams::init(20);
+    let (ip, iz) = sparse_factors(21);
+    let backend = NativeBackend::new(params, &ip, &iz).unwrap();
+    let metrics = Arc::new(Metrics::new());
+    let engine = ServingEngine::start(
+        backend,
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) },
+        Arc::clone(&metrics),
+    );
+    let client = engine.client();
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let c = client.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(30 + t);
+                for _ in 0..64 {
+                    let x: Vec<f32> =
+                        (0..GEOMETRY.input_dim).map(|_| rng.next_f32()).collect();
+                    let logits = c.call(x).unwrap().unwrap();
+                    assert_eq!(logits.len(), GEOMETRY.classes);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = metrics.snapshot();
+    assert_eq!(snap.requests, 256);
+    assert!(snap.mean_batch_size() > 1.0, "batcher never batched");
+}
+
+#[test]
+fn pjrt_engine_matches_native_logits() {
+    let params = MlpParams::init(22);
+    let (ip_bits, iz_bits) = sparse_factors(23);
+    let g = GEOMETRY;
+    let ip = Matrix::from_vec(g.hidden0, g.rank, ip_bits.to_f32()).unwrap();
+    let iz = Matrix::from_vec(g.rank, g.hidden1, iz_bits.to_f32()).unwrap();
+
+    // PJRT backend built inside the serving thread (it is !Send)
+    let params_for_pjrt = params.clone();
+    let metrics = Arc::new(Metrics::new());
+    let engine = ServingEngine::start_with(
+        move || {
+            let set = ArtifactSet::open("artifacts")?;
+            let rt = Runtime::new(set)?;
+            PjrtBackend::new(rt, &params_for_pjrt, &ip, &iz)
+        },
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(1) },
+        Arc::clone(&metrics),
+    );
+
+    use lrbi::serve::engine::InferenceBackend;
+    let mut native = NativeBackend::new(params, &ip_bits, &iz_bits).unwrap();
+    let mut rng = Rng::new(24);
+    for _ in 0..4 {
+        let x: Vec<f32> = (0..g.input_dim).map(|_| rng.next_f32() - 0.5).collect();
+        let got = engine.infer(x.clone()).unwrap();
+        let mut xm = Matrix::zeros(g.batch, g.input_dim);
+        for (j, &v) in x.iter().enumerate() {
+            xm.set(0, j, v);
+        }
+        let want = native.predict(&xm).unwrap();
+        for (a, b) in got.iter().zip(want.row(0)) {
+            assert!((a - b).abs() < 2e-3, "pjrt {a} vs native {b}");
+        }
+    }
+    assert!(metrics.snapshot().requests >= 4);
+}
