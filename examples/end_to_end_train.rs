@@ -7,7 +7,7 @@
 //!
 //!     make artifacts && cargo run --release --example end_to_end_train
 //!
-//! Results are recorded in EXPERIMENTS.md §End-to-end.
+//! Results land as CSVs under `reports/`.
 
 use lrbi::bmf::algorithm1::Algorithm1Config;
 use lrbi::runtime::artifacts::GEOMETRY;

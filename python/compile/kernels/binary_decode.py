@@ -12,7 +12,7 @@ decoder. These kernels are that decompressor:
                           the matmul *without ever materialising the
                           full mask in HBM*.
 
-TPU mapping (DESIGN.md §Hardware-Adaptation): I_p/I_z live in VMEM
+TPU mapping (docs/ARCHITECTURE.md): I_p/I_z live in VMEM
 (k(m+n) bits — tiny), each grid step decodes one (m x BN) mask tile on
 the MXU and fuses the apply into the weight load of the main matmul.
 ``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
@@ -106,7 +106,7 @@ def decode_matmul(ip, iz, w, x, block_n=None):
 def vmem_estimate_bytes(m, k, n, b, block_n=128, dtype_bytes=4):
     """Static VMEM footprint estimate for one decode_matmul grid step.
 
-    Used by DESIGN.md §Perf and the fig-/perf-benches to reason about
+    Used by docs/ARCHITECTURE.md §Performance-notes and the fig-/perf-benches to reason about
     real-TPU block sizing (interpret mode gives no hardware signal).
     """
     bn = min(block_n, n)

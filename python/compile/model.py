@@ -1,7 +1,7 @@
 """L2 — the JAX model: LeNet-FC classifier with a low-rank-masked FC1.
 
 Architecture (paper §2.2 FC stack, input adapted to the synthetic
-16x16 task — see DESIGN.md §Substitutions):
+16x16 task — see docs/ARCHITECTURE.md §Substitutions):
 
     x (B, 256) -> FC0 (256x800) -> ReLU
                -> FC1 (800x500, masked by I_a = min(I_p I_z, 1)) -> ReLU

@@ -7,7 +7,7 @@ use lrbi::util::rng::Rng;
 /// Synthetic FC1 weights (LeNet-5 800x500) — the workload of every
 /// MNIST-section figure/table. Uses the trained-network magnitude
 /// model (row/col lognormal scales), not plain i.i.d. Gaussian — see
-/// `models::pretrained_like_weights` and EXPERIMENTS.md
+/// `models::pretrained_like_weights` and docs/ARCHITECTURE.md
 /// §Workload-realism.
 pub fn fc1_weights(seed: u64) -> Matrix {
     let mut rng = Rng::new(seed);

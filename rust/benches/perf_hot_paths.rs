@@ -1,5 +1,5 @@
 //! §Perf: micro-benchmarks of every L3 hot path. Run via
-//! `cargo bench --bench perf_hot_paths`; results feed EXPERIMENTS.md.
+//! `cargo bench --bench perf_hot_paths`; results land as CSVs under `reports/`.
 
 mod bench_common;
 

@@ -1,0 +1,106 @@
+//! §Perf: sparse-execution kernels — the masked FC1 matmul executed
+//! directly on each index representation (dense-masked baseline, CSR
+//! gather-accumulate, 5-bit relative streaming, fused low-rank) at the
+//! paper's pruning rates. Reports per-kernel build (decode) time,
+//! per-call spmm time, index size, and agreement with the baseline.
+//!
+//!     cargo run --release --bench perf_kernels
+//!     LRBI_BENCH_QUICK=1 cargo run --release --bench perf_kernels
+
+mod bench_common;
+
+use bench_common::{fc1_weights, quick, report_dir};
+use lrbi::bmf::algorithm1::{algorithm1, Algorithm1Config};
+use lrbi::runtime::artifacts::GEOMETRY;
+use lrbi::serve::kernels::{build_kernel, KernelFormat};
+use lrbi::tensor::Matrix;
+use lrbi::util::bench::write_table_csv;
+use lrbi::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let g = GEOMETRY;
+    let w = fc1_weights(1);
+    let mut rng = Rng::new(2);
+    let x = Matrix::gaussian(g.batch, g.hidden0, 0.0, 1.0, &mut rng);
+    let reps = if quick() { 3 } else { 30 };
+    let rates: &[f64] = if quick() { &[0.9] } else { &[0.8, 0.9, 0.95] };
+
+    let mut rows = Vec::new();
+    for &s in rates {
+        // Real factors from Algorithm 1 (trimmed sweep: the bench
+        // measures kernels, not the factorization).
+        let mut cfg = Algorithm1Config::new(g.rank, s);
+        cfg.sp_grid = vec![0.4, 0.6, 0.8];
+        cfg.nmf.max_iters = 25;
+        let f = algorithm1(&w, &cfg).expect("algorithm1");
+        println!(
+            "\nS={s:.2} (achieved {:.3}), rank {}: {} index bytes",
+            f.achieved_sparsity,
+            f.rank,
+            f.index_bytes()
+        );
+
+        let mut dense_out: Option<Matrix> = None;
+        let mut dense_ms = 0.0f64;
+        for fmt in KernelFormat::ALL {
+            let t0 = Instant::now();
+            let kernel = build_kernel(fmt, &w, &f.ip, &f.iz, None).expect("build");
+            let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+            let _ = kernel.spmm(&x).expect("warmup"); // warm caches
+            let t1 = Instant::now();
+            let mut out = kernel.spmm(&x).expect("spmm");
+            for _ in 1..reps {
+                out = kernel.spmm(&x).expect("spmm");
+            }
+            let spmm_ms = t1.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+            let max_err = match &dense_out {
+                None => {
+                    dense_ms = spmm_ms;
+                    dense_out = Some(out);
+                    0.0
+                }
+                Some(base) => out
+                    .data()
+                    .iter()
+                    .zip(base.data())
+                    .map(|(a, b)| (a - b).abs() as f64)
+                    .fold(0.0, f64::max),
+            };
+            let speedup = dense_ms / spmm_ms;
+            println!(
+                "  {:<8} index {:>8.1} KB  build {:>7.2} ms  spmm {:>7.3} ms  {:>5.2}x vs dense  max err {max_err:.2e}",
+                fmt.name(),
+                kernel.index_bytes() as f64 / 1000.0,
+                build_ms,
+                spmm_ms,
+                speedup,
+            );
+            rows.push(vec![
+                fmt.name().to_string(),
+                format!("{s:.2}"),
+                format!("{:.3}", kernel.index_bytes() as f64 / 1000.0),
+                format!("{build_ms:.3}"),
+                format!("{spmm_ms:.4}"),
+                format!("{speedup:.3}"),
+                format!("{max_err:.3e}"),
+            ]);
+        }
+    }
+    write_table_csv(
+        report_dir().join("perf_kernels.csv").to_str().unwrap(),
+        &[
+            "kernel",
+            "sparsity",
+            "index_kb",
+            "build_ms",
+            "spmm_ms",
+            "speedup_vs_dense",
+            "max_abs_err",
+        ],
+        &rows,
+    )
+    .unwrap();
+}

@@ -1,6 +1,6 @@
 //! Table 1 (left): LeNet-5 accuracy at the 20K/40K/50K/60K checkpoints
 //! vs BMF rank, plus the compression-ratio column. Training runs on
-//! the synthetic digit task (scaled steps — see DESIGN.md
+//! the synthetic digit task (scaled steps — see docs/ARCHITECTURE.md
 //! §Substitutions); the *pattern* to reproduce is: accuracy collapses
 //! right after pruning, retraining recovers it, and higher rank ends
 //! slightly higher.

@@ -1,7 +1,7 @@
 //! Table 2: compression ratio + accuracy proxy for ResNet32 (CIFAR10),
 //! AlexNet FC5/FC6 (ImageNet), LSTM (PTB). Compression ratios are
 //! exact arithmetic on real layer shapes and must match the paper;
-//! the accuracy column is proxied (DESIGN.md §Substitutions) by
+//! the accuracy column is proxied (docs/ARCHITECTURE.md §Substitutions) by
 //! retraining the synthetic classifier at the same (S, rank-budget)
 //! and reporting relative accuracy retention.
 

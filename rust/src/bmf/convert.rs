@@ -10,7 +10,7 @@ use crate::util::bits::BitMatrix;
 
 /// Pre-sorted magnitudes of a factor matrix: O(1) threshold lookup per
 /// sweep point (the sweep evaluates dozens of `(S_p, S_z)` pairs, so
-/// sorting once matters — see EXPERIMENTS.md §Perf).
+/// sorting once matters — see docs/ARCHITECTURE.md §Performance-notes).
 #[derive(Debug, Clone)]
 pub struct SortedMags {
     sorted: Vec<f32>,

@@ -135,6 +135,7 @@ fn print_usage() {
          \x20            --steps N  --retrain N  --rank 16  --sparsity 0.95\n\
          \x20 serve      run the serving engine on synthetic traffic\n\
          \x20            --requests N  --max-batch 64  --max-wait-ms 2\n\
+         \x20            --kernel dense|csr|relative|lowrank\n\
          \x20 report     regenerate fast paper tables (--out reports/)\n\
          \x20 info       this help"
     );
@@ -233,13 +234,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: args.get("max-batch", 64usize)?,
         max_wait: std::time::Duration::from_millis(args.get("max-wait-ms", 2u64)?),
     };
+    let format = crate::serve::kernels::KernelFormat::parse(&args.get_str("kernel", "dense"))?;
     let g = crate::runtime::artifacts::GEOMETRY;
     let params = MlpParams::init(11);
     let mut rng = crate::util::rng::Rng::new(12);
     let ip = BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.25));
     let iz = BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.25));
-    let backend = NativeBackend::new(params, &ip, &iz)?;
     let metrics = std::sync::Arc::new(Metrics::new());
+    let backend = NativeBackend::with_format(params, format, &ip, &iz)?
+        .with_metrics(std::sync::Arc::clone(&metrics));
+    println!("serving with the '{}' sparse kernel", backend.kernel_name());
     let engine = ServingEngine::start(backend, policy, std::sync::Arc::clone(&metrics));
     let client = engine.client();
     let t0 = std::time::Instant::now();
@@ -267,6 +271,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         snap.requests as f64 / dt.as_secs_f64(),
         snap.batches,
         snap.mean_batch_size()
+    );
+    println!(
+        "kernel: {} spmm calls, mean {:.1}us each",
+        snap.kernel_spmms,
+        snap.mean_spmm_us()
     );
     Ok(())
 }

@@ -21,6 +21,14 @@ pub struct Metrics {
     pub cache_hits: AtomicU64,
     /// Decode-cache misses.
     pub cache_misses: AtomicU64,
+    /// Sparse-kernel builds (per-format decode/encode of the index).
+    pub kernel_decodes: AtomicU64,
+    /// Nanoseconds spent building sparse kernels.
+    pub kernel_decode_ns: AtomicU64,
+    /// Sparse-kernel `spmm` invocations (masked-layer matmuls).
+    pub kernel_spmms: AtomicU64,
+    /// Nanoseconds spent inside sparse-kernel `spmm`.
+    pub kernel_spmm_ns: AtomicU64,
 }
 
 /// A point-in-time copy for reporting.
@@ -40,6 +48,14 @@ pub struct MetricsSnapshot {
     pub cache_hits: u64,
     /// Decode-cache misses.
     pub cache_misses: u64,
+    /// Sparse-kernel builds.
+    pub kernel_decodes: u64,
+    /// Nanoseconds building sparse kernels.
+    pub kernel_decode_ns: u64,
+    /// Sparse-kernel `spmm` invocations.
+    pub kernel_spmms: u64,
+    /// Nanoseconds inside sparse-kernel `spmm`.
+    pub kernel_spmm_ns: u64,
 }
 
 impl Metrics {
@@ -69,7 +85,18 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            kernel_decodes: self.kernel_decodes.load(Ordering::Relaxed),
+            kernel_decode_ns: self.kernel_decode_ns.load(Ordering::Relaxed),
+            kernel_spmms: self.kernel_spmms.load(Ordering::Relaxed),
+            kernel_spmm_ns: self.kernel_spmm_ns.load(Ordering::Relaxed),
         }
+    }
+
+    /// Record one sparse-kernel `spmm` with its wall time.
+    pub fn record_spmm(&self, started: Instant) {
+        self.kernel_spmms.fetch_add(1, Ordering::Relaxed);
+        self.kernel_spmm_ns
+            .fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
 }
 
@@ -90,6 +117,24 @@ impl MetricsSnapshot {
             0.0
         } else {
             self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Mean sparse-kernel build (decode/encode) time in milliseconds.
+    pub fn mean_decode_ms(&self) -> f64 {
+        if self.kernel_decodes == 0 {
+            0.0
+        } else {
+            self.kernel_decode_ns as f64 / self.kernel_decodes as f64 / 1e6
+        }
+    }
+
+    /// Mean sparse-kernel `spmm` time in microseconds.
+    pub fn mean_spmm_us(&self) -> f64 {
+        if self.kernel_spmms == 0 {
+            0.0
+        } else {
+            self.kernel_spmm_ns as f64 / self.kernel_spmms as f64 / 1e3
         }
     }
 }
@@ -116,5 +161,18 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.cache_hit_rate(), 0.0);
         assert_eq!(s.mean_batch_size(), 0.0);
+        assert_eq!(s.mean_decode_ms(), 0.0);
+        assert_eq!(s.mean_spmm_us(), 0.0);
+    }
+
+    #[test]
+    fn kernel_counters_average() {
+        let m = Metrics::new();
+        m.kernel_decodes.fetch_add(2, Ordering::Relaxed);
+        m.kernel_decode_ns.fetch_add(4_000_000, Ordering::Relaxed);
+        m.record_spmm(Instant::now());
+        let s = m.snapshot();
+        assert!((s.mean_decode_ms() - 2.0).abs() < 1e-12);
+        assert_eq!(s.kernel_spmms, 1);
     }
 }

@@ -29,7 +29,7 @@ impl BinaryIndex {
     /// Recover the mask. Byte-skipping fast path: at the paper's
     /// sparsity levels most bytes are zero, so scanning bytes and
     /// expanding only set bits is ~10x faster than per-bit reads
-    /// (EXPERIMENTS.md §Perf).
+    /// (docs/ARCHITECTURE.md §Performance-notes).
     pub fn decode(&self) -> BitMatrix {
         let mut mask = BitMatrix::zeros(self.rows, self.cols);
         for (bi, &byte) in self.bytes.iter().enumerate() {

@@ -1,5 +1,31 @@
 //! The proposed low-rank binary index as a storable format: packed
 //! `I_p` and `I_z` (k(m+n) bits) + decode via boolean product.
+//!
+//! # Examples
+//!
+//! Factorize a layer's pruning index with Algorithm 1, serialize it,
+//! and round-trip back to the exact mask:
+//!
+//! ```
+//! use lrbi::bmf::algorithm1::{algorithm1, Algorithm1Config};
+//! use lrbi::formats::lowrank::LowRankIndex;
+//! use lrbi::tensor::Matrix;
+//! use lrbi::util::rng::Rng;
+//!
+//! let mut rng = Rng::new(7);
+//! let w = Matrix::gaussian(32, 24, 0.0, 0.1, &mut rng);
+//! let mut cfg = Algorithm1Config::new(4, 0.8); // rank 4, S = 0.8
+//! cfg.sp_grid = vec![0.4, 0.6];
+//! cfg.nmf.max_iters = 10;
+//! let f = algorithm1(&w, &cfg)?;
+//!
+//! let enc = LowRankIndex::encode(&f);           // pack I_p then I_z
+//! assert_eq!(enc.index_bytes(), (4 * (32 + 24) + 7) / 8);
+//! let (ip, iz) = enc.factors()?;                // unpack
+//! assert_eq!((ip, iz), (f.ip.clone(), f.iz.clone()));
+//! assert_eq!(enc.decode()?, f.mask);            // I_p ⊗ I_z == mask
+//! # Ok::<(), lrbi::Error>(())
+//! ```
 
 use crate::bmf::algorithm1::FactorizedIndex;
 use crate::util::bits::BitMatrix;

@@ -77,6 +77,13 @@ impl Csr5Relative {
         self.nnz
     }
 
+    /// The raw gap stream (values `0..=30` are real gaps, `31` is a
+    /// filler). Exposed so execution kernels can stream the entries
+    /// without re-encoding — see `serve::kernels::RelativeKernel`.
+    pub fn entries(&self) -> &[u8] {
+        &self.entries
+    }
+
     /// Total 5-bit entries including fillers.
     pub fn entry_count(&self) -> usize {
         self.entries.len()

@@ -4,7 +4,10 @@
 //! (Lee, Kwon, Kim, Kapoor, Wei — 2019) as a three-layer
 //! Rust + JAX + Pallas system.
 //!
-//! See `DESIGN.md` at the repository root for the system inventory.
+//! See `README.md` at the repository root for the quickstart and the
+//! paper figure/table → bench map, and `docs/ARCHITECTURE.md` for the
+//! module map and data flow (including the sparse-execution kernel
+//! layer in [`serve::kernels`]).
 
 pub mod bmf;
 pub mod cli;

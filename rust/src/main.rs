@@ -1,6 +1,6 @@
 //! `lrbi` — leader entrypoint for the low-rank binary indexing system.
 //!
-//! See `lrbi info` for usage; DESIGN.md for the architecture.
+//! See `lrbi info` for usage; docs/ARCHITECTURE.md for the architecture.
 
 fn main() {
     let code = lrbi::cli::run(std::env::args().skip(1));

@@ -6,7 +6,7 @@
 //! Gaussians, which matches the paper's own observation (§2.2) that
 //! pre-trained weight histograms are Gaussian. Compression ratios and
 //! index sizes depend only on shapes and are therefore *exact*; see
-//! DESIGN.md §Substitutions for how accuracy columns are proxied.
+//! docs/ARCHITECTURE.md §Substitutions for how accuracy columns are proxied.
 
 pub mod alexnet;
 pub mod lenet;
@@ -125,7 +125,7 @@ mod tests {
 /// variation, and it is what NMF exploits when factorizing the
 /// magnitude matrix (pure i.i.d. Gaussian has almost no exploitable
 /// low-rank structure and understates the paper's effects — see
-/// EXPERIMENTS.md §Workload-realism).
+/// docs/ARCHITECTURE.md §Workload-realism).
 pub fn pretrained_like_weights(
     rows: usize,
     cols: usize,

@@ -2,7 +2,7 @@
 //!
 //! Algorithm 1 step 2: `M_p, M_z = NMF(M, k)` where `M = |W|`. The
 //! paper used the Nimfa library [27]; offline we ship our own
-//! implementation (DESIGN.md §Substitutions). The updates are
+//! implementation (docs/ARCHITECTURE.md §Substitutions). The updates are
 //!
 //! ```text
 //! H ← H ∘ (WᵀV) / (WᵀWH + ε)

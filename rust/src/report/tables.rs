@@ -91,7 +91,7 @@ pub fn table2_ratios(out_dir: &Path) -> Result<String> {
 pub fn table3(out_dir: &Path) -> Result<String> {
     // Sizes are arithmetic except CSR variants, which depend on nnz and
     // gap statistics — those we compute on smaller sampled blocks and
-    // scale (documented in EXPERIMENTS.md; identical statistics since
+    // scale (documented in docs/ARCHITECTURE.md §Workload-realism; identical statistics since
     // masks are i.i.d. at fixed sparsity).
     let s = 0.91;
     let sample = 1024usize;

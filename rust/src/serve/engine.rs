@@ -1,18 +1,21 @@
 //! The inference engine: fixed-batch backends (PJRT artifact or native
-//! fallback) behind a dynamic batcher, with the decoded mask cached so
-//! the binary-matmul decompression runs once per factor update rather
-//! than once per request.
+//! fallback) behind a dynamic batcher. The native backend's masked
+//! layer executes through a pluggable [`SparseKernel`] selected by
+//! index format at startup, so the request path runs directly on the
+//! compressed representation instead of always decoding to dense.
 
 use crate::coordinator::metrics::Metrics;
 use crate::runtime::artifacts::GEOMETRY;
 use crate::runtime::client::{literal_matrix, matrix_literal, Runtime};
 use crate::serve::batcher::{BatchPolicy, BatcherClient, DynamicBatcher};
+use crate::serve::kernels::{build_kernel, DenseMaskedKernel, KernelFormat, SparseKernel};
 use crate::tensor::Matrix;
 use crate::util::bits::BitMatrix;
 use crate::util::error::{Error, Result};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// A fixed-geometry classifier backend.
 ///
@@ -78,53 +81,72 @@ fn add_bias(m: &mut Matrix, b: &[f32]) {
     }
 }
 
-/// Pure-Rust backend: masked forward pass with the decoded mask cached
-/// as a pre-masked FC1 weight (the decode+apply happens once, on
-/// construction or factor update — the serving analogue of the
-/// paper's on-chip decompressor).
+/// Pure-Rust backend: the masked FC1 matmul runs through a
+/// [`SparseKernel`] built once at construction (or factor update) —
+/// the serving analogue of the paper's on-chip decompressor, with the
+/// execution strategy chosen by [`KernelFormat`].
 pub struct NativeBackend {
     params: MlpParams,
-    /// FC1 with the decoded mask applied.
-    w1_masked: Matrix,
+    format: KernelFormat,
+    kernel: Box<dyn SparseKernel>,
     batch: usize,
+    metrics: Option<Arc<Metrics>>,
 }
 
 impl NativeBackend {
-    /// Build from params + binary factors.
+    /// Build from params + binary factors with the dense-masked
+    /// baseline kernel (the pre-kernel-layer behavior).
     pub fn new(params: MlpParams, ip: &BitMatrix, iz: &BitMatrix) -> Result<Self> {
-        let mask = ip.bool_product(iz);
-        Self::with_mask(params, &mask)
+        Self::with_format(params, KernelFormat::DenseMasked, ip, iz)
     }
 
-    /// Build from params + a pre-decoded mask.
+    /// Build from params + binary factors, executing the masked layer
+    /// with the kernel for `format`.
+    pub fn with_format(
+        params: MlpParams,
+        format: KernelFormat,
+        ip: &BitMatrix,
+        iz: &BitMatrix,
+    ) -> Result<Self> {
+        let kernel = build_kernel(format, &params.w1, ip, iz, None)?;
+        Ok(NativeBackend { params, format, kernel, batch: GEOMETRY.batch, metrics: None })
+    }
+
+    /// Build from params + a pre-decoded mask (dense-masked kernel —
+    /// the only format constructible without factors).
     pub fn with_mask(params: MlpParams, mask: &BitMatrix) -> Result<Self> {
-        if mask.rows() != params.w1.rows() || mask.cols() != params.w1.cols() {
-            return Err(Error::shape("mask/FC1 shape mismatch"));
-        }
-        let mut w1_masked = params.w1.clone();
-        for i in 0..mask.rows() {
-            for j in 0..mask.cols() {
-                if !mask.get(i, j) {
-                    w1_masked.set(i, j, 0.0);
-                }
-            }
-        }
-        Ok(NativeBackend { params, w1_masked, batch: GEOMETRY.batch })
+        let kernel = Box::new(DenseMaskedKernel::from_mask(&params.w1, mask)?);
+        Ok(NativeBackend {
+            params,
+            format: KernelFormat::DenseMasked,
+            kernel,
+            batch: GEOMETRY.batch,
+            metrics: None,
+        })
     }
 
-    /// Swap in new factors (e.g. after a re-compression): re-decodes
-    /// the mask once.
+    /// Attach metrics: kernel compute time is recorded per predict,
+    /// and factor updates count as kernel decodes.
+    pub fn with_metrics(mut self, metrics: Arc<Metrics>) -> Self {
+        self.metrics = Some(metrics);
+        self
+    }
+
+    /// Name of the active sparse kernel.
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
+    }
+
+    /// The active sparse kernel (for oracles in tests/benches).
+    pub fn kernel(&self) -> &dyn SparseKernel {
+        self.kernel.as_ref()
+    }
+
+    /// Swap in new factors (e.g. after a re-compression): rebuilds the
+    /// kernel once, keeping the configured format.
     pub fn update_factors(&mut self, ip: &BitMatrix, iz: &BitMatrix) -> Result<()> {
-        let mask = ip.bool_product(iz);
-        let mut w1_masked = self.params.w1.clone();
-        for i in 0..mask.rows() {
-            for j in 0..mask.cols() {
-                if !mask.get(i, j) {
-                    w1_masked.set(i, j, 0.0);
-                }
-            }
-        }
-        self.w1_masked = w1_masked;
+        self.kernel =
+            build_kernel(self.format, &self.params.w1, ip, iz, self.metrics.as_deref())?;
         Ok(())
     }
 }
@@ -143,7 +165,11 @@ impl InferenceBackend for NativeBackend {
         let mut h0 = x.matmul(&self.params.w0)?;
         add_bias(&mut h0, &self.params.b0);
         relu_inplace(&mut h0);
-        let mut h1 = h0.matmul(&self.w1_masked)?;
+        let t0 = Instant::now();
+        let mut h1 = self.kernel.spmm(&h0)?;
+        if let Some(m) = &self.metrics {
+            m.record_spmm(t0);
+        }
         add_bias(&mut h1, &self.params.b1);
         relu_inplace(&mut h1);
         let mut out = h1.matmul(&self.params.w2)?;
@@ -333,15 +359,38 @@ mod tests {
         let mut rng = Rng::new(2);
         let ip = BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.2));
         let iz = BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.2));
+        // Masked entries must not contribute: spmm of a one-hot input
+        // row reads out the (masked) FC1 row directly.
         let be = NativeBackend::new(params.clone(), &ip, &iz).unwrap();
         let mask = ip.bool_product(&iz);
-        for i in 0..20 {
-            for j in 0..20 {
-                if !mask.get(i, j) {
-                    assert_eq!(be.w1_masked.get(i, j), 0.0);
-                } else {
-                    assert_eq!(be.w1_masked.get(i, j), params.w1.get(i, j));
-                }
+        let mut x = Matrix::zeros(1, g.hidden0);
+        x.set(0, 3, 1.0);
+        let row = be.kernel().spmm(&x).unwrap();
+        for j in 0..g.hidden1 {
+            if mask.get(3, j) {
+                assert_eq!(row.get(0, j), params.w1.get(3, j));
+            } else {
+                assert_eq!(row.get(0, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn every_kernel_format_serves_identical_logits() {
+        let params = MlpParams::init(7);
+        let g = GEOMETRY;
+        let mut rng = Rng::new(8);
+        let ip = BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.25));
+        let iz = BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.25));
+        let x = Matrix::gaussian(GEOMETRY.batch, g.input_dim, 0.0, 1.0, &mut rng);
+        let mut baseline = NativeBackend::new(params.clone(), &ip, &iz).unwrap();
+        let want = baseline.predict(&x).unwrap();
+        for fmt in crate::serve::kernels::KernelFormat::ALL {
+            let mut be = NativeBackend::with_format(params.clone(), fmt, &ip, &iz).unwrap();
+            assert_eq!(be.kernel_name(), fmt.name());
+            let got = be.predict(&x).unwrap();
+            for (a, b) in got.data().iter().zip(want.data()) {
+                assert!((a - b).abs() <= 1e-3 * (1.0 + b.abs()), "{}: {a} vs {b}", fmt.name());
             }
         }
     }

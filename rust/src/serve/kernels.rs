@@ -1,0 +1,536 @@
+//! Sparse-execution kernels: the masked-layer matmul executed
+//! *directly on* each index representation.
+//!
+//! The paper's observation is that "computations using sparse matrices
+//! obtained by pruning parameters exhibit vastly different parallelism
+//! depending on the index representation scheme" — so the serving
+//! engine must not erase the distinction by decoding every format to a
+//! dense mask first. Each [`SparseKernel`] implementation computes
+//! `x · (W ⊙ I)` using the traversal its format affords:
+//!
+//! | format          | execution strategy                                  |
+//! |-----------------|-----------------------------------------------------|
+//! | dense-masked    | pre-mask `W` once, dense matmul (baseline)          |
+//! | CSR (16-bit)    | gather-accumulate over `IA`/`JA` + packed values    |
+//! | relative (5-bit)| stream the gap entries, fusing decode with compute  |
+//! | fused low-rank  | expand `I_p ⊗ I_z` one packed row at a time         |
+//!
+//! The fused low-rank kernel never materialises the full `m × n` mask:
+//! it ORs the packed `u64` rows of `I_z` selected by row `i` of `I_p`
+//! into a single `n/64`-word tile, consumes it, and reuses the buffer
+//! for the next row — the in-register analogue of the paper's on-chip
+//! decompressor.
+
+use crate::coordinator::metrics::Metrics;
+use crate::formats::csr::Csr16;
+use crate::formats::relative::{Csr5Relative, MAX_GAP};
+use crate::tensor::Matrix;
+use crate::util::bits::BitMatrix;
+use crate::util::error::{Error, Result};
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+/// A sparse-execution strategy for the masked layer.
+///
+/// `spmm` computes `x · (W ⊙ I)` where `W` (m × n) and the pruning
+/// mask `I` were captured at construction; `x` is `(batch, m)` and the
+/// result is `(batch, n)`. All implementations are numerically
+/// equivalent (same products, possibly reassociated) — see the
+/// cross-format property test in `tests/kernels.rs`.
+pub trait SparseKernel: Send {
+    /// Kernel name as reported in metrics/benches.
+    fn name(&self) -> &'static str;
+    /// `x (batch × m)` → `x · (W ⊙ I)` of shape `(batch × n)`.
+    fn spmm(&self, x: &Matrix) -> Result<Matrix>;
+    /// Bytes of index metadata this kernel executes from.
+    fn index_bytes(&self) -> usize;
+    /// Mask rows `m` (the layer's input width).
+    fn rows(&self) -> usize;
+    /// Mask cols `n` (the layer's output width).
+    fn cols(&self) -> usize;
+}
+
+/// Which [`SparseKernel`] the serving engine runs — selected per
+/// format at startup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelFormat {
+    /// Decode the mask once, pre-mask `W`, dense matmul (baseline).
+    DenseMasked,
+    /// CSR with 16-bit column indices, gather-accumulate.
+    Csr,
+    /// 5-bit relative (gap) stream, decode fused with compute.
+    Relative,
+    /// Fused low-rank: `I_p ⊗ I_z` expanded tile-by-tile from packed
+    /// words, never materialising the dense mask.
+    LowRankFused,
+}
+
+impl KernelFormat {
+    /// Every selectable kernel, baseline first.
+    pub const ALL: [KernelFormat; 4] = [
+        KernelFormat::DenseMasked,
+        KernelFormat::Csr,
+        KernelFormat::Relative,
+        KernelFormat::LowRankFused,
+    ];
+
+    /// Stable CLI/report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelFormat::DenseMasked => "dense",
+            KernelFormat::Csr => "csr",
+            KernelFormat::Relative => "relative",
+            KernelFormat::LowRankFused => "lowrank",
+        }
+    }
+
+    /// Parse a CLI/report name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "dense" | "dense-masked" => Ok(KernelFormat::DenseMasked),
+            "csr" => Ok(KernelFormat::Csr),
+            "relative" | "csr5" => Ok(KernelFormat::Relative),
+            "lowrank" | "low-rank" | "fused" => Ok(KernelFormat::LowRankFused),
+            other => Err(Error::invalid(format!(
+                "unknown kernel format '{other}' (want dense|csr|relative|lowrank)"
+            ))),
+        }
+    }
+}
+
+fn check_factor_shapes(w: &Matrix, ip: &BitMatrix, iz: &BitMatrix) -> Result<()> {
+    if ip.rows() != w.rows() || iz.cols() != w.cols() || ip.cols() != iz.rows() {
+        return Err(Error::shape(format!(
+            "kernel factors: W {}x{}, I_p {}x{}, I_z {}x{}",
+            w.rows(),
+            w.cols(),
+            ip.rows(),
+            ip.cols(),
+            iz.rows(),
+            iz.cols()
+        )));
+    }
+    Ok(())
+}
+
+fn check_mask_shape(w: &Matrix, mask: &BitMatrix) -> Result<()> {
+    if mask.rows() != w.rows() || mask.cols() != w.cols() {
+        return Err(Error::shape(format!(
+            "kernel mask {}x{} vs W {}x{}",
+            mask.rows(),
+            mask.cols(),
+            w.rows(),
+            w.cols()
+        )));
+    }
+    Ok(())
+}
+
+fn check_input(x: &Matrix, m: usize) -> Result<()> {
+    if x.cols() != m {
+        return Err(Error::shape(format!("spmm input {}x{} vs m={m}", x.rows(), x.cols())));
+    }
+    Ok(())
+}
+
+/// Build the kernel for `format` over layer weights `w` and the
+/// factorized index `(I_p, I_z)`. When `metrics` is given, the build
+/// (the per-format decode/encode step) is counted into
+/// `kernel_decodes` / `kernel_decode_ns`.
+pub fn build_kernel(
+    format: KernelFormat,
+    w: &Matrix,
+    ip: &BitMatrix,
+    iz: &BitMatrix,
+    metrics: Option<&Metrics>,
+) -> Result<Box<dyn SparseKernel>> {
+    check_factor_shapes(w, ip, iz)?;
+    let t0 = Instant::now();
+    let kernel: Box<dyn SparseKernel> = match format {
+        KernelFormat::DenseMasked => {
+            Box::new(DenseMaskedKernel::from_mask(w, &ip.bool_product(iz))?)
+        }
+        KernelFormat::Csr => Box::new(CsrKernel::new(w, &ip.bool_product(iz))?),
+        KernelFormat::Relative => Box::new(RelativeKernel::new(w, &ip.bool_product(iz))?),
+        KernelFormat::LowRankFused => Box::new(LowRankFusedKernel::new(w, ip, iz)?),
+    };
+    if let Some(m) = metrics {
+        m.kernel_decodes.fetch_add(1, Ordering::Relaxed);
+        m.kernel_decode_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+    Ok(kernel)
+}
+
+/// Baseline: the mask is decoded to dense once and burned into a
+/// pre-masked copy of `W`; `spmm` is a plain dense matmul. This is
+/// exactly what the engine did before the kernel layer existed, kept
+/// as the reference point every other kernel is measured against.
+pub struct DenseMaskedKernel {
+    w_masked: Matrix,
+    index_bytes: usize,
+}
+
+impl DenseMaskedKernel {
+    /// Build from weights + a pre-decoded mask.
+    pub fn from_mask(w: &Matrix, mask: &BitMatrix) -> Result<Self> {
+        check_mask_shape(w, mask)?;
+        let w_masked = crate::pruning::prune_with_mask(w, mask)?;
+        Ok(DenseMaskedKernel { w_masked, index_bytes: mask.index_bytes() })
+    }
+
+    /// The pre-masked weight (for oracles in tests/benches).
+    pub fn weights(&self) -> &Matrix {
+        &self.w_masked
+    }
+}
+
+impl SparseKernel for DenseMaskedKernel {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+    fn spmm(&self, x: &Matrix) -> Result<Matrix> {
+        x.matmul(&self.w_masked)
+    }
+    fn index_bytes(&self) -> usize {
+        self.index_bytes
+    }
+    fn rows(&self) -> usize {
+        self.w_masked.rows()
+    }
+    fn cols(&self) -> usize {
+        self.w_masked.cols()
+    }
+}
+
+/// CSR gather-accumulate: `JA` column indices walk each weight row's
+/// survivors; the surviving weights are packed contiguously in `vals`
+/// (the gather happens once at build), so `spmm` touches only live
+/// entries — work is O(batch · nnz), not O(batch · m · n).
+pub struct CsrKernel {
+    m: usize,
+    n: usize,
+    ia: Vec<u32>,
+    ja: Vec<u16>,
+    vals: Vec<f32>,
+    index_bytes: usize,
+}
+
+impl CsrKernel {
+    /// Encode the mask as CSR and gather the surviving weights.
+    pub fn new(w: &Matrix, mask: &BitMatrix) -> Result<Self> {
+        check_mask_shape(w, mask)?;
+        let csr = Csr16::encode(mask);
+        let mut vals = Vec::with_capacity(csr.nnz());
+        for i in 0..mask.rows() {
+            let (a, b) = (csr.ia[i] as usize, csr.ia[i + 1] as usize);
+            for &j in &csr.ja[a..b] {
+                vals.push(w.get(i, j as usize));
+            }
+        }
+        let index_bytes = csr.index_bytes();
+        Ok(CsrKernel {
+            m: mask.rows(),
+            n: mask.cols(),
+            ia: csr.ia,
+            ja: csr.ja,
+            vals,
+            index_bytes,
+        })
+    }
+
+    /// Stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+}
+
+impl SparseKernel for CsrKernel {
+    fn name(&self) -> &'static str {
+        "csr"
+    }
+    fn spmm(&self, x: &Matrix) -> Result<Matrix> {
+        check_input(x, self.m)?;
+        let batch = x.rows();
+        let mut out = Matrix::zeros(batch, self.n);
+        for b in 0..batch {
+            let xrow = x.row(b);
+            let orow = &mut out.data_mut()[b * self.n..(b + 1) * self.n];
+            for (i, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let (a, e) = (self.ia[i] as usize, self.ia[i + 1] as usize);
+                for (j, v) in self.ja[a..e].iter().zip(&self.vals[a..e]) {
+                    orow[*j as usize] += xv * v;
+                }
+            }
+        }
+        Ok(out)
+    }
+    fn index_bytes(&self) -> usize {
+        self.index_bytes
+    }
+    fn rows(&self) -> usize {
+        self.m
+    }
+    fn cols(&self) -> usize {
+        self.n
+    }
+}
+
+/// Relative-index streaming: the 5-bit gap stream of
+/// [`Csr5Relative`] is walked entry-by-entry, decode fused with the
+/// accumulate — the mask is never expanded, matching how Deep
+/// Compression's decompressor consumes the stream. Work is inherently
+/// sequential per stream (each position depends on the running cursor),
+/// which is exactly the parallelism limitation the paper's low-rank
+/// format removes.
+pub struct RelativeKernel {
+    m: usize,
+    n: usize,
+    entries: Vec<u8>,
+    /// Surviving weights in stream order (fillers carry no value).
+    vals: Vec<f32>,
+    index_bytes: usize,
+}
+
+impl RelativeKernel {
+    /// Encode the mask as a gap stream and gather surviving weights in
+    /// stream order.
+    pub fn new(w: &Matrix, mask: &BitMatrix) -> Result<Self> {
+        check_mask_shape(w, mask)?;
+        let stream = Csr5Relative::encode(mask);
+        let n = mask.cols();
+        let mut vals = Vec::with_capacity(stream.nnz());
+        let mut pos = 0usize;
+        let mut pending = 0u32;
+        for &e in stream.entries() {
+            if e as u32 == MAX_GAP {
+                pending += MAX_GAP;
+                continue;
+            }
+            pos += (pending + e as u32) as usize;
+            pending = 0;
+            vals.push(w.get(pos / n, pos % n));
+            pos += 1;
+        }
+        let index_bytes = stream.index_bytes();
+        Ok(RelativeKernel {
+            m: mask.rows(),
+            n,
+            entries: stream.entries().to_vec(),
+            vals,
+            index_bytes,
+        })
+    }
+}
+
+impl SparseKernel for RelativeKernel {
+    fn name(&self) -> &'static str {
+        "relative"
+    }
+    fn spmm(&self, x: &Matrix) -> Result<Matrix> {
+        check_input(x, self.m)?;
+        let batch = x.rows();
+        let n = self.n;
+        let mut out = Matrix::zeros(batch, n);
+        // Stream outer, batch inner: the sequential cursor decode runs
+        // once per call, and every decoded (i, j) is applied to all
+        // batch rows while it is hot.
+        let mut pos = 0usize;
+        let mut pending = 0u32;
+        let mut vi = 0usize;
+        for &e in &self.entries {
+            if e as u32 == MAX_GAP {
+                pending += MAX_GAP;
+                continue;
+            }
+            pos += (pending + e as u32) as usize;
+            pending = 0;
+            let (i, j) = (pos / n, pos % n);
+            let v = self.vals[vi];
+            let odata = out.data_mut();
+            for b in 0..batch {
+                odata[b * n + j] += x.get(b, i) * v;
+            }
+            vi += 1;
+            pos += 1;
+        }
+        Ok(out)
+    }
+    fn index_bytes(&self) -> usize {
+        self.index_bytes
+    }
+    fn rows(&self) -> usize {
+        self.m
+    }
+    fn cols(&self) -> usize {
+        self.n
+    }
+}
+
+/// Fused low-rank execution: for each weight row `i`, the mask row is
+/// reconstructed as the word-wise OR of the packed `I_z` rows selected
+/// by the set bits of `I_p` row `i` — one `n/64`-word tile that lives
+/// in a reused buffer — and is consumed immediately by walking its set
+/// bits against row `i` of `W`. The dense `m × n` mask never exists;
+/// peak extra memory is one row tile regardless of layer size, and
+/// every row's expansion is independent (the parallelism the paper
+/// claims for the format).
+pub struct LowRankFusedKernel {
+    w: Matrix,
+    ip: BitMatrix,
+    iz: BitMatrix,
+}
+
+impl LowRankFusedKernel {
+    /// Capture weights + packed factors; no decode happens here.
+    pub fn new(w: &Matrix, ip: &BitMatrix, iz: &BitMatrix) -> Result<Self> {
+        check_factor_shapes(w, ip, iz)?;
+        Ok(LowRankFusedKernel { w: w.clone(), ip: ip.clone(), iz: iz.clone() })
+    }
+
+    /// Rank of the factorization.
+    pub fn rank(&self) -> usize {
+        self.ip.cols()
+    }
+}
+
+impl SparseKernel for LowRankFusedKernel {
+    fn name(&self) -> &'static str {
+        "lowrank"
+    }
+    fn spmm(&self, x: &Matrix) -> Result<Matrix> {
+        let (m, n, k) = (self.w.rows(), self.w.cols(), self.ip.cols());
+        check_input(x, m)?;
+        let batch = x.rows();
+        let mut out = Matrix::zeros(batch, n);
+        let words = n.div_ceil(64);
+        let mut tile = vec![0u64; words];
+        for i in 0..m {
+            // Expand mask row i: OR the I_z rows named by I_p row i.
+            tile.fill(0);
+            let mut any = false;
+            for (wi, &w) in self.ip.row_words(i).iter().enumerate() {
+                let mut bits = w;
+                while bits != 0 {
+                    let l = wi * 64 + bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    if l >= k {
+                        break;
+                    }
+                    for (t, &z) in tile.iter_mut().zip(self.iz.row_words(l)) {
+                        *t |= z;
+                    }
+                    any = true;
+                }
+            }
+            if !any {
+                continue; // fully pruned row
+            }
+            // Consume the tile against W row i for every batch row.
+            let wrow = self.w.row(i);
+            for b in 0..batch {
+                let xv = x.get(b, i);
+                if xv == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data_mut()[b * n..(b + 1) * n];
+                for (wi, &word) in tile.iter().enumerate() {
+                    let mut bits = word;
+                    while bits != 0 {
+                        let j = wi * 64 + bits.trailing_zeros() as usize;
+                        bits &= bits - 1;
+                        orow[j] += xv * wrow[j];
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+    fn index_bytes(&self) -> usize {
+        (self.ip.cols() * (self.ip.rows() + self.iz.cols())).div_ceil(8)
+    }
+    fn rows(&self) -> usize {
+        self.w.rows()
+    }
+    fn cols(&self) -> usize {
+        self.w.cols()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64, m: usize, n: usize, k: usize) -> (Matrix, BitMatrix, BitMatrix) {
+        let mut rng = Rng::new(seed);
+        let w = Matrix::gaussian(m, n, 0.0, 1.0, &mut rng);
+        let ip = BitMatrix::from_fn(m, k, |_, _| rng.bernoulli(0.3));
+        let iz = BitMatrix::from_fn(k, n, |_, _| rng.bernoulli(0.3));
+        (w, ip, iz)
+    }
+
+    fn reference(w: &Matrix, ip: &BitMatrix, iz: &BitMatrix, x: &Matrix) -> Matrix {
+        let wm = crate::pruning::prune_with_mask(w, &ip.bool_product(iz)).unwrap();
+        x.matmul(&wm).unwrap()
+    }
+
+    #[test]
+    fn all_kernels_match_reference() {
+        let (w, ip, iz) = setup(1, 70, 130, 6);
+        let mut rng = Rng::new(9);
+        let x = Matrix::gaussian(4, 70, 0.0, 1.0, &mut rng);
+        let want = reference(&w, &ip, &iz, &x);
+        for fmt in KernelFormat::ALL {
+            let kern = build_kernel(fmt, &w, &ip, &iz, None).unwrap();
+            assert_eq!(kern.name(), fmt.name());
+            assert_eq!((kern.rows(), kern.cols()), (70, 130));
+            let got = kern.spmm(&x).unwrap();
+            for (a, b) in got.data().iter().zip(want.data()) {
+                assert!(
+                    (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                    "{}: {a} vs {b}",
+                    fmt.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lowrank_index_is_factor_bits_not_mask_bits() {
+        let (w, ip, iz) = setup(2, 96, 200, 4);
+        let kern = LowRankFusedKernel::new(&w, &ip, &iz).unwrap();
+        assert_eq!(kern.index_bytes(), (4 * (96 + 200)).div_ceil(8));
+        let dense = DenseMaskedKernel::from_mask(&w, &ip.bool_product(&iz)).unwrap();
+        assert!(kern.index_bytes() < dense.index_bytes());
+    }
+
+    #[test]
+    fn shape_mismatches_rejected() {
+        let (w, ip, iz) = setup(3, 20, 30, 4);
+        let bad_ip = BitMatrix::zeros(21, 4);
+        assert!(build_kernel(KernelFormat::Csr, &w, &bad_ip, &iz, None).is_err());
+        let kern = build_kernel(KernelFormat::LowRankFused, &w, &ip, &iz, None).unwrap();
+        assert!(kern.spmm(&Matrix::zeros(2, 19)).is_err());
+    }
+
+    #[test]
+    fn format_parse_roundtrip() {
+        for fmt in KernelFormat::ALL {
+            assert_eq!(KernelFormat::parse(fmt.name()).unwrap(), fmt);
+        }
+        assert!(KernelFormat::parse("nope").is_err());
+    }
+
+    #[test]
+    fn build_records_decode_metrics() {
+        let (w, ip, iz) = setup(4, 30, 40, 4);
+        let metrics = Metrics::new();
+        build_kernel(KernelFormat::LowRankFused, &w, &ip, &iz, Some(&metrics)).unwrap();
+        build_kernel(KernelFormat::Csr, &w, &ip, &iz, Some(&metrics)).unwrap();
+        assert_eq!(metrics.snapshot().kernel_decodes, 2);
+    }
+}

@@ -1,12 +1,16 @@
 //! Serving engine over compressed models: dynamic batching, decode
-//! cache, masked inference via the PJRT runtime (or a native fallback
-//! so the full pipeline is testable without artifacts).
+//! cache, and sparse-execution kernels that run the masked layer
+//! directly on each index representation (or the PJRT artifact path;
+//! the native kernels keep the full pipeline testable without
+//! artifacts).
 
 pub mod batcher;
 pub mod cache;
 pub mod engine;
+pub mod kernels;
 pub mod variants;
 
 pub use batcher::{BatchPolicy, DynamicBatcher};
 pub use cache::LruCache;
 pub use engine::{InferenceBackend, NativeBackend, ServingEngine};
+pub use kernels::{build_kernel, KernelFormat, SparseKernel};

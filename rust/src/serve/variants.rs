@@ -1,18 +1,21 @@
 //! Multi-variant serving: several compressed *index versions* of the
 //! same model (e.g. different ranks or re-compressions) served from
-//! one engine. The decoded+masked FC1 is materialised at most once per
-//! variant via the LRU decode cache — the serving analogue of the
-//! paper's on-chip decompressor, with `Metrics::cache_{hits,misses}`
-//! making the decode amortisation observable.
+//! one engine. Each variant's [`SparseKernel`] is built at most once
+//! via the LRU decode cache — the serving analogue of the paper's
+//! on-chip decompressor, with `Metrics::cache_{hits,misses}` making
+//! the decode amortisation observable and the `kernel_*` counters
+//! separating decode cost from per-request compute.
 
 use crate::coordinator::metrics::Metrics;
 use crate::serve::cache::LruCache;
 use crate::serve::engine::MlpParams;
+use crate::serve::kernels::{build_kernel, KernelFormat, SparseKernel};
 use crate::tensor::Matrix;
 use crate::util::bits::BitMatrix;
 use crate::util::error::{Error, Result};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// A compressed FC1 index variant.
 #[derive(Debug, Clone)]
@@ -25,25 +28,47 @@ pub struct IndexVariant {
     pub iz: BitMatrix,
 }
 
-/// Serves any registered variant; decodes lazily, caches the masked
-/// FC1 weight per variant.
+/// Serves any registered variant; builds each variant's sparse kernel
+/// lazily and caches it, so the per-format decode runs once per
+/// resident variant rather than once per request.
 pub struct VariantServer {
     params: MlpParams,
+    format: KernelFormat,
     variants: Vec<IndexVariant>,
-    cache: LruCache<u64, Matrix>,
+    cache: LruCache<u64, Box<dyn SparseKernel>>,
     metrics: Arc<Metrics>,
 }
 
 impl VariantServer {
     /// Build with a cache bound (variants beyond this get re-decoded
     /// on demand — bounded memory is the point of the paper's format).
+    /// Uses the dense-masked baseline kernel; see
+    /// [`VariantServer::with_format`] to execute on the compressed
+    /// representation directly.
     pub fn new(
         params: MlpParams,
         variants: Vec<IndexVariant>,
         cache_cap: usize,
         metrics: Arc<Metrics>,
     ) -> Self {
-        VariantServer { params, variants, cache: LruCache::new(cache_cap), metrics }
+        Self::with_format(params, KernelFormat::DenseMasked, variants, cache_cap, metrics)
+    }
+
+    /// Build selecting the sparse-execution kernel for `format`.
+    pub fn with_format(
+        params: MlpParams,
+        format: KernelFormat,
+        variants: Vec<IndexVariant>,
+        cache_cap: usize,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        VariantServer {
+            params,
+            format,
+            variants,
+            cache: LruCache::new(cache_cap),
+            metrics,
+        }
     }
 
     /// Registered variant ids.
@@ -51,47 +76,43 @@ impl VariantServer {
         self.variants.iter().map(|v| v.id).collect()
     }
 
-    fn masked_w1(&mut self, id: u64) -> Result<&Matrix> {
+    /// The kernel format every variant executes with.
+    pub fn format(&self) -> KernelFormat {
+        self.format
+    }
+
+    /// Ensure the variant's kernel is resident, building it on miss.
+    fn ensure_kernel(&mut self, id: u64) -> Result<()> {
         if self.cache.get(&id).is_some() {
             self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
-        } else {
-            self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
-            let v = self
-                .variants
-                .iter()
-                .find(|v| v.id == id)
-                .ok_or_else(|| Error::invalid(format!("unknown variant {id}")))?;
-            // the decompression step: boolean matmul + mask apply
-            let mask = v.ip.bool_product(&v.iz);
-            let mut w1 = self.params.w1.clone();
-            for i in 0..mask.rows() {
-                for j in 0..mask.cols() {
-                    if !mask.get(i, j) {
-                        w1.set(i, j, 0.0);
-                    }
-                }
-            }
-            self.cache.put(id, w1);
+            return Ok(());
         }
-        Ok(self.cache.get(&id).expect("just inserted"))
+        self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+        let v = self
+            .variants
+            .iter()
+            .find(|v| v.id == id)
+            .ok_or_else(|| Error::invalid(format!("unknown variant {id}")))?;
+        // The decompression step: per-format index decode/encode.
+        let kernel = build_kernel(self.format, &self.params.w1, &v.ip, &v.iz, Some(&self.metrics))?;
+        self.cache.put(id, kernel);
+        Ok(())
     }
 
     /// Forward a batch through the chosen variant.
     pub fn predict(&mut self, variant: u64, x: &Matrix) -> Result<Matrix> {
-        let p_w0 = self.params.w0.clone();
-        let p_b0 = self.params.b0.clone();
-        let p_b1 = self.params.b1.clone();
-        let p_w2 = self.params.w2.clone();
-        let p_b2 = self.params.b2.clone();
-        let w1 = self.masked_w1(variant)?;
-        let mut h0 = x.matmul(&p_w0)?;
-        add_bias(&mut h0, &p_b0);
+        self.ensure_kernel(variant)?;
+        let mut h0 = x.matmul(&self.params.w0)?;
+        add_bias(&mut h0, &self.params.b0);
         h0.map_inplace(|v| v.max(0.0));
-        let mut h1 = h0.matmul(w1)?;
-        add_bias(&mut h1, &p_b1);
+        let kernel = self.cache.get(&variant).expect("ensured above");
+        let t0 = Instant::now();
+        let mut h1 = kernel.spmm(&h0)?;
+        self.metrics.record_spmm(t0);
+        add_bias(&mut h1, &self.params.b1);
         h1.map_inplace(|v| v.max(0.0));
-        let mut out = h1.matmul(&p_w2)?;
-        add_bias(&mut out, &p_b2);
+        let mut out = h1.matmul(&self.params.w2)?;
+        add_bias(&mut out, &self.params.b2);
         Ok(out)
     }
 }
@@ -168,6 +189,48 @@ mod tests {
         let a = srv.predict(1, &x).unwrap();
         let b = srv.predict(2, &x).unwrap();
         assert_ne!(a.data(), b.data());
+    }
+
+    #[test]
+    fn kernel_formats_agree_across_variants() {
+        let mut rng = Rng::new(6);
+        let x = Matrix::gaussian(3, GEOMETRY.input_dim, 0.0, 1.0, &mut rng);
+        let params = MlpParams::init(9);
+        let make = |fmt| {
+            VariantServer::with_format(
+                params.clone(),
+                fmt,
+                vec![variant(1, 10)],
+                4,
+                Arc::new(Metrics::new()),
+            )
+        };
+        let want = make(KernelFormat::DenseMasked).predict(1, &x).unwrap();
+        for fmt in KernelFormat::ALL {
+            let mut srv = make(fmt);
+            let got = srv.predict(1, &x).unwrap();
+            for (a, b) in got.data().iter().zip(want.data()) {
+                assert!((a - b).abs() <= 1e-3 * (1.0 + b.abs()), "{}: {a} vs {b}", fmt.name());
+            }
+        }
+    }
+
+    #[test]
+    fn decode_and_compute_counters_recorded() {
+        let metrics = Arc::new(Metrics::new());
+        let mut srv = VariantServer::with_format(
+            MlpParams::init(4),
+            KernelFormat::LowRankFused,
+            vec![variant(1, 10)],
+            2,
+            Arc::clone(&metrics),
+        );
+        let x = Matrix::zeros(1, GEOMETRY.input_dim);
+        srv.predict(1, &x).unwrap();
+        srv.predict(1, &x).unwrap();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.kernel_decodes, 1, "kernel built once");
+        assert_eq!(snap.kernel_spmms, 2, "spmm per request");
     }
 
     #[test]

@@ -41,7 +41,7 @@ impl Matrix {
     }
 
     /// i.i.d. Gaussian entries (the synthetic stand-in for pre-trained
-    /// weights; see DESIGN.md §Substitutions).
+    /// weights; see docs/ARCHITECTURE.md §Substitutions).
     pub fn gaussian(rows: usize, cols: usize, mean: f32, std: f32, rng: &mut Rng) -> Self {
         let mut data = Vec::with_capacity(rows * cols);
         for _ in 0..rows * cols {
@@ -347,7 +347,7 @@ impl Matrix {
 /// Blocked i-k-j matmul kernel: `out[m x n] = a[m x k] * b[k x n]`.
 /// `out` must be zeroed by the caller.
 ///
-/// Perf (EXPERIMENTS.md §Perf): the inner loop is 4-way unrolled over
+/// Perf (docs/ARCHITECTURE.md §Performance-notes): the inner loop is 4-way unrolled over
 /// `k` so each pass touches the output row once per four rank-1
 /// updates instead of once per update — on the single-core testbed
 /// this took the kernel from ~8.0 to ~1.9x that (see the §Perf log).
@@ -355,7 +355,7 @@ fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usi
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
-    const KB: usize = 128; // best measured k-panel (see EXPERIMENTS.md §Perf)
+    const KB: usize = 128; // best measured k-panel (see docs/ARCHITECTURE.md §Performance-notes)
     for kk in (0..k).step_by(KB) {
         let kmax = (kk + KB).min(k);
         for i in 0..m {

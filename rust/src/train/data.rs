@@ -1,4 +1,4 @@
-//! Synthetic MNIST stand-in (DESIGN.md §Substitutions): ten procedural
+//! Synthetic MNIST stand-in (docs/ARCHITECTURE.md §Substitutions): ten procedural
 //! 16×16 glyph classes + Gaussian pixel noise + integer shifts.
 //! Deterministic given a seed; linearly non-trivial (classes overlap
 //! under noise) so pruning-induced accuracy loss is measurable.

@@ -4,7 +4,7 @@
 //! use [`Bench`] to time closures with warmup, adaptive iteration
 //! counts, and median/mean/min reporting, then print the paper
 //! table/figure rows they regenerate. Results are also appended as CSV
-//! under `reports/` so EXPERIMENTS.md can cite them.
+//! under `reports/` so the docs can cite them.
 
 use std::time::{Duration, Instant};
 

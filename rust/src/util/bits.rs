@@ -1,6 +1,24 @@
 //! Packed bit rows — the storage/compute substrate for binary index
 //! matrices. Rows are packed into `u64` words so the boolean matrix
 //! product of Eq. (3) becomes word-wide OR/AND (the L3 hot path).
+//!
+//! # Examples
+//!
+//! Decode a rank-1 factor pair into its mask via the boolean product
+//! (the paper's decompressor), then inspect the packed words directly:
+//!
+//! ```
+//! use lrbi::util::bits::BitMatrix;
+//!
+//! let ip = BitMatrix::from_fn(2, 1, |i, _| i == 0); // column [1, 0]
+//! let iz = BitMatrix::from_fn(1, 3, |_, j| j != 1); // row [1, 0, 1]
+//! let mask = ip.bool_product(&iz);
+//! assert!(mask.get(0, 0) && !mask.get(0, 1) && mask.get(0, 2));
+//! assert_eq!(mask.row_words(0), &[0b101]); // row 0, packed LSB-first
+//! assert_eq!(mask.row_words(1), &[0]);     // row 1 selected nothing
+//! assert_eq!(mask.count_ones(), 2);
+//! assert!((mask.sparsity() - 4.0 / 6.0).abs() < 1e-12);
+//! ```
 
 /// A row-major binary matrix packed into `u64` words per row.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -112,7 +130,7 @@ impl BitMatrix {
             let orow = &mut tail[..wpr];
             // Walk the set bits of row i word-by-word (trailing_zeros)
             // instead of testing every bit — ~10x at high rank
-            // (EXPERIMENTS.md §Perf).
+            // (docs/ARCHITECTURE.md §Performance-notes).
             for (wi, &w) in self.row_words(i).iter().enumerate() {
                 let mut bits = w;
                 while bits != 0 {

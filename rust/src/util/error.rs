@@ -1,26 +1,50 @@
-//! Library-wide error type.
+//! Library-wide error type. Display/Error/From are hand-implemented
+//! so the crate builds with zero external dependencies (the container
+//! has no registry access; see docs/ARCHITECTURE.md §Dependencies).
 
 /// Errors produced by the lrbi library.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Shape mismatch in a tensor operation.
-    #[error("shape mismatch: {0}")]
     Shape(String),
     /// Invalid argument or configuration value.
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
     /// An I/O failure (artifact files, reports, checkpoints).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
     /// Failure inside the PJRT runtime layer.
-    #[error("runtime error: {0}")]
     Runtime(String),
     /// Coordinator-level failure (worker panic, queue closed, ...).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
     /// Config file parse error.
-    #[error("config error: {0}")]
     Config(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Convenience result alias used across the crate.

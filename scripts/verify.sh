@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 verify gate: build + tests (unit, property, integration,
+# doctests) + docs with warnings denied + clippy with warnings denied.
+# Run from anywhere; operates on the rust/ package.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --release"
+cargo build --release
+
+echo "== cargo test -q"
+cargo test -q
+
+echo "== cargo doc --no-deps (warnings are errors)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "== cargo clippy --all-targets -- -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "verify: OK"
