@@ -35,7 +35,7 @@ fn main() -> lrbi::Result<()> {
         (TilePlan::new(2, 2), "2x2"),
         (TilePlan::new(4, 4), "4x4"),
     ] {
-        let k = equal_budget_rank(FC1_ROWS, FC1_COLS, plan, 64);
+        let k = equal_budget_rank(FC1_ROWS, FC1_COLS, plan, 64)?;
         let base = Algorithm1Config::new(k, s);
         let t = compress_tiled(&w, plan, &RankPlan::Uniform(k), &base)?;
         println!(

@@ -22,7 +22,7 @@ fn main() {
     let mut rows = Vec::new();
     let mut costs = Vec::new();
     for (plan, label) in plans {
-        let k = equal_budget_rank(800, 500, plan, 128);
+        let k = equal_budget_rank(800, 500, plan, 128).expect("plan fits FC1");
         let mut base = Algorithm1Config::new(k, s);
         if quick() {
             base.sp_grid = vec![0.3, 0.6];

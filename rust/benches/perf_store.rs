@@ -1,0 +1,122 @@
+//! §Perf: the artifact store — packed `.lrbi` bytes per format
+//! (file, index section, and the format's own `index_bytes()` claim)
+//! and cold-load latency: read + CRC + decode, and decode-to-kernel,
+//! measured separately. The paper's Table-1 byte claims become file
+//! regions here; the load numbers are what a hot-swap deploy pays.
+
+mod bench_common;
+
+use bench_common::{quick, report_dir};
+use lrbi::formats::StoredIndex;
+use lrbi::runtime::artifacts::GEOMETRY;
+use lrbi::serve::engine::MlpParams;
+use lrbi::serve::kernels::build_kernel_from_stored;
+use lrbi::store::{Artifact, ArtifactMeta, Container, SectionKind};
+use lrbi::tiling::{TileFactors, TilePlan, TiledLowRankIndex};
+use lrbi::util::bench::write_table_csv;
+use lrbi::util::bits::BitMatrix;
+use lrbi::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let g = GEOMETRY;
+    let reps = if quick() { 3 } else { 10 };
+    let params = MlpParams::init(1);
+    let mut rng = Rng::new(2);
+    let ip = BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.25));
+    let iz = BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.25));
+
+    let dir = std::env::temp_dir().join(format!("lrbi_perf_store_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // tiled artifact: 2x2 plan, equal rank per tile
+    let plan = TilePlan::new(2, 2);
+    let tiles: Vec<TileFactors> = plan
+        .tiles(g.hidden0, g.hidden1)
+        .unwrap()
+        .iter()
+        .map(|s| TileFactors {
+            rank: g.rank / 2,
+            ip: BitMatrix::from_fn(s.rows(), g.rank / 2, |_, _| rng.bernoulli(0.25)),
+            iz: BitMatrix::from_fn(g.rank / 2, s.cols(), |_, _| rng.bernoulli(0.25)),
+        })
+        .collect();
+    let tiled = StoredIndex::Tiled(
+        TiledLowRankIndex::new(g.hidden0, g.hidden1, plan, tiles).unwrap(),
+    );
+
+    let mut artifacts: Vec<(String, Artifact)> = ["dense", "csr", "relative", "lowrank"]
+        .into_iter()
+        .map(|name| {
+            (
+                name.to_string(),
+                Artifact::pack_factors(params.clone(), name, &ip, &iz, "perf_store").unwrap(),
+            )
+        })
+        .collect();
+    artifacts.push((
+        "tiled".into(),
+        Artifact {
+            params: params.clone(),
+            index: tiled,
+            meta: ArtifactMeta {
+                sparsity: 0.0,
+                cost: 0.0,
+                rank: 0,
+                provenance: "perf_store".into(),
+            },
+        },
+    ));
+
+    println!(
+        "{:<9} {:>9} {:>11} {:>11} {:>10} {:>10}",
+        "format", "file B", "section B", "index B", "load ms", "kernel ms"
+    );
+    let mut rows = Vec::new();
+    for (name, art) in &artifacts {
+        let path = dir.join(format!("{name}.lrbi"));
+        art.write(&path).unwrap();
+        let file_bytes = std::fs::metadata(&path).unwrap().len();
+        let c = Container::read(&path).unwrap();
+        let kind = SectionKind::INDEX_KINDS
+            .into_iter()
+            .find(|k| c.section(*k).is_some())
+            .unwrap();
+        let section_bytes = c.section(kind).unwrap().len();
+        let index_bytes = art.index.index_bytes();
+
+        // cold load: read + CRC + decode into format structs
+        let mut load_ms = 0.0;
+        let mut kernel_ms = 0.0;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let loaded = Artifact::read(&path).unwrap();
+            load_ms += t0.elapsed().as_secs_f64() * 1e3;
+            let t1 = Instant::now();
+            let k = build_kernel_from_stored(&loaded.index, &loaded.params.w1, None).unwrap();
+            kernel_ms += t1.elapsed().as_secs_f64() * 1e3;
+            assert_eq!(k.rows(), g.hidden0);
+        }
+        load_ms /= reps as f64;
+        kernel_ms /= reps as f64;
+        println!(
+            "{name:<9} {file_bytes:>9} {section_bytes:>11} {index_bytes:>11} {load_ms:>10.3} {kernel_ms:>10.3}"
+        );
+        rows.push(vec![
+            name.clone(),
+            file_bytes.to_string(),
+            section_bytes.to_string(),
+            index_bytes.to_string(),
+            format!("{load_ms:.3}"),
+            format!("{kernel_ms:.3}"),
+        ]);
+    }
+    write_table_csv(
+        report_dir().join("perf_store.csv").to_str().unwrap(),
+        &["format", "file_bytes", "index_section_bytes", "index_bytes", "cold_load_ms", "kernel_build_ms"],
+        &rows,
+    )
+    .unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

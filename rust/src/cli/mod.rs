@@ -1,22 +1,27 @@
 //! Hand-rolled CLI (no `clap` offline): subcommands + `--flag value`
 //! parsing, shared by the `lrbi` binary.
 
-use crate::bmf::algorithm1::Algorithm1Config;
+use crate::bmf::algorithm1::{algorithm1, Algorithm1Config};
 use crate::config::CompressConfig;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::sweep::{compress_model, SweepOptions};
+use crate::formats::StoredIndex;
 use crate::models::{alexnet, lenet, lstm, resnet32, ModelSpec};
 use crate::pruning::manip::ManipMethod;
 use crate::report;
 use crate::serve::batcher::BatchPolicy;
 use crate::serve::engine::{MlpParams, NativeBackend, ServingEngine};
-use crate::tiling::TilePlan;
+use crate::serve::variants::VariantServer;
+use crate::store::{Artifact, ArtifactMeta, Container, Registry};
+use crate::tensor::Matrix;
+use crate::tiling::{compress_tiled, RankPlan, TileFactors, TilePlan, TiledLowRankIndex};
 use crate::train::data::SyntheticDigits;
 use crate::train::loop_::{NativeTrainer, TrainConfig, TrainLog};
 use crate::util::bits::BitMatrix;
 use crate::util::error::{Error, Result};
 use std::collections::HashMap;
 use std::path::Path;
+use std::time::Instant;
 
 /// Parsed command line: subcommand + flags.
 #[derive(Debug, Clone, Default)]
@@ -27,8 +32,18 @@ pub struct Args {
     pub flags: HashMap<String, String>,
 }
 
+/// Whether a token should be treated as the *next flag* rather than
+/// the current flag's value. Only a `--` prefix marks a flag, so
+/// single-dash negative numbers (`--offset -1`, `--scale -2.5e3`)
+/// are consumed as values.
+fn is_flag_token(tok: &str) -> bool {
+    tok.starts_with("--")
+}
+
 impl Args {
     /// Parse from an argv-style iterator (without the binary name).
+    /// Flags accept both `--key value` and `--key=value`; a bare
+    /// `--key` stores `"true"`.
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
         let mut args = Args::default();
         let mut iter = argv.into_iter().peekable();
@@ -39,15 +54,24 @@ impl Args {
             args.command = cmd;
         }
         while let Some(tok) = iter.next() {
-            let key = tok
+            let body = tok
                 .strip_prefix("--")
-                .ok_or_else(|| Error::invalid(format!("unexpected token: {tok}")))?
-                .to_string();
+                .ok_or_else(|| Error::invalid(format!("unexpected token: {tok}")))?;
+            if body.is_empty() {
+                return Err(Error::invalid("bare '--' is not a flag"));
+            }
+            if let Some((key, value)) = body.split_once('=') {
+                if key.is_empty() {
+                    return Err(Error::invalid(format!("flag with empty name: {tok}")));
+                }
+                args.flags.insert(key.to_string(), value.to_string());
+                continue;
+            }
             let value = match iter.peek() {
-                Some(v) if !v.starts_with("--") => iter.next().unwrap(),
+                Some(v) if !is_flag_token(v) => iter.next().unwrap(),
                 _ => "true".to_string(),
             };
-            args.flags.insert(key, value);
+            args.flags.insert(body.to_string(), value);
         }
         Ok(args)
     }
@@ -108,6 +132,8 @@ fn dispatch<I: IntoIterator<Item = String>>(argv: I) -> Result<()> {
         "compress" => cmd_compress(&args),
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "pack" => cmd_pack(&args),
+        "inspect" => cmd_inspect(&args),
         "report" => cmd_report(&args),
         "info" | "" => {
             print_usage();
@@ -136,6 +162,15 @@ fn print_usage() {
          \x20 serve      run the serving engine on synthetic traffic\n\
          \x20            --requests N  --max-batch 64  --max-wait-ms 2\n\
          \x20            --kernel dense|csr|relative|lowrank\n\
+         \x20            --artifact model.lrbi       serve a packed artifact\n\
+         \x20            --registry dir [--swap name]  serve registry variants\n\
+         \x20 pack       package a compressed model as a .lrbi artifact\n\
+         \x20            --out model.lrbi | --registry dir [--name v1]\n\
+         \x20            --format dense|csr|relative|lowrank  --tiles 1\n\
+         \x20            --rank 16  --sparsity 0.95  --seed 11\n\
+         \x20            --method random|bmf (bmf runs Algorithm 1)\n\
+         \x20 inspect    print a .lrbi artifact's sections + metadata\n\
+         \x20            --artifact model.lrbi\n\
          \x20 report     regenerate fast paper tables (--out reports/)\n\
          \x20 info       this help"
     );
@@ -229,20 +264,41 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if let Some(dir) = args.flags.get("registry") {
+        return serve_registry(args, dir);
+    }
     let requests: usize = args.get("requests", 512)?;
     let policy = BatchPolicy {
         max_batch: args.get("max-batch", 64usize)?,
         max_wait: std::time::Duration::from_millis(args.get("max-wait-ms", 2u64)?),
     };
-    let format = crate::serve::kernels::KernelFormat::parse(&args.get_str("kernel", "dense"))?;
     let g = crate::runtime::artifacts::GEOMETRY;
-    let params = MlpParams::init(11);
-    let mut rng = crate::util::rng::Rng::new(12);
-    let ip = BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.25));
-    let iz = BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.25));
     let metrics = std::sync::Arc::new(Metrics::new());
-    let backend = NativeBackend::with_format(params, format, &ip, &iz)?
-        .with_metrics(std::sync::Arc::clone(&metrics));
+    let backend = if let Some(path) = args.flags.get("artifact") {
+        if args.flags.contains_key("kernel") {
+            println!("note: --kernel is ignored with --artifact (the stored format executes)");
+        }
+        let t0 = Instant::now();
+        let artifact = Artifact::read(path)?;
+        metrics.record_artifact_load(t0);
+        println!(
+            "loaded {path}: format={} S={:.3} index={}B (cold load {:.2}ms)",
+            artifact.index.format_name(),
+            artifact.meta.sparsity,
+            artifact.index.index_bytes(),
+            metrics.snapshot().mean_artifact_load_ms()
+        );
+        NativeBackend::from_artifact(&artifact)?.with_metrics(std::sync::Arc::clone(&metrics))
+    } else {
+        let format =
+            crate::serve::kernels::KernelFormat::parse(&args.get_str("kernel", "dense"))?;
+        let params = MlpParams::init(11);
+        let mut rng = crate::util::rng::Rng::new(12);
+        let ip = BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.25));
+        let iz = BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.25));
+        NativeBackend::with_format(params, format, &ip, &iz)?
+            .with_metrics(std::sync::Arc::clone(&metrics))
+    };
     println!("serving with the '{}' sparse kernel", backend.kernel_name());
     let engine = ServingEngine::start(backend, policy, std::sync::Arc::clone(&metrics));
     let client = engine.client();
@@ -280,6 +336,213 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Serve every artifact in a registry round-robin through a
+/// [`VariantServer`]; `--swap name` hot-swaps that artifact back in
+/// halfway through, exercising the deploy path under load.
+fn serve_registry(args: &Args, dir: &str) -> Result<()> {
+    let requests: usize = args.get("requests", 512)?;
+    let cache_cap: usize = args.get("cache", 8)?;
+    let reg = Registry::open(dir)?;
+    let metrics = std::sync::Arc::new(Metrics::new());
+    let mut srv = VariantServer::from_registry(&reg, cache_cap, std::sync::Arc::clone(&metrics))?;
+    let ids = srv.variant_ids();
+    println!(
+        "registry {dir}: serving {} variant(s) {:?} (mean cold load {:.2}ms)",
+        ids.len(),
+        reg.names(),
+        metrics.snapshot().mean_artifact_load_ms()
+    );
+    let swap = args.flags.get("swap");
+    let dim = srv.input_dim();
+    let mut rng = crate::util::rng::Rng::new(17);
+    let t0 = Instant::now();
+    for r in 0..requests {
+        if let Some(name) = swap {
+            if r == requests / 2 {
+                let id = srv.hot_swap_from_registry(&reg, name)?;
+                println!("hot-swapped '{name}' (variant {id}) at request {r}");
+            }
+        }
+        let x = Matrix::from_fn(1, dim, |_, _| rng.next_f32());
+        srv.predict(ids[r % ids.len()], &x)?;
+    }
+    let dt = t0.elapsed();
+    let snap = metrics.snapshot();
+    println!(
+        "served {requests} requests in {:.3}s ({:.0} req/s) across {} variants",
+        dt.as_secs_f64(),
+        requests as f64 / dt.as_secs_f64(),
+        ids.len()
+    );
+    println!(
+        "artifacts: {} loads (mean {:.2}ms), {} hot-swaps; decode cache {:.0}% hit, {} kernel builds",
+        snap.artifact_loads,
+        snap.mean_artifact_load_ms(),
+        snap.hot_swaps,
+        snap.cache_hit_rate() * 100.0,
+        snap.kernel_decodes
+    );
+    Ok(())
+}
+
+/// Factor density `d` such that the boolean product of two
+/// `d`-dense factors lands near the target mask sparsity:
+/// `P(bit) = 1 - (1 - d²)^k`, solved for `d`.
+fn factor_density(sparsity: f64, rank: usize) -> f64 {
+    (1.0 - sparsity.powf(1.0 / rank as f64)).sqrt()
+}
+
+/// Random binary factors at [`factor_density`].
+fn random_factors(
+    m: usize,
+    n: usize,
+    rank: usize,
+    sparsity: f64,
+    seed: u64,
+) -> (BitMatrix, BitMatrix) {
+    let d = factor_density(sparsity, rank);
+    let mut rng = crate::util::rng::Rng::new(seed);
+    (
+        BitMatrix::from_fn(m, rank, |_, _| rng.bernoulli(d)),
+        BitMatrix::from_fn(rank, n, |_, _| rng.bernoulli(d)),
+    )
+}
+
+fn cmd_pack(args: &Args) -> Result<()> {
+    let format = args.get_str("format", "lowrank");
+    let rank: usize = args.get("rank", 16)?;
+    let sparsity: f64 = args.get("sparsity", 0.95)?;
+    let tiles: usize = args.get("tiles", 1)?;
+    let seed: u64 = args.get("seed", 11)?;
+    let method = args.get_str("method", "random");
+    if !(0.0..1.0).contains(&sparsity) {
+        return Err(Error::invalid("--sparsity must be in [0, 1)"));
+    }
+    if rank == 0 {
+        return Err(Error::invalid("--rank must be >= 1"));
+    }
+    let params = MlpParams::init(seed);
+    let (m, n) = (params.w1.rows(), params.w1.cols());
+    let provenance = format!(
+        "lrbi pack --method {method} --format {format} --rank {rank} \
+         --sparsity {sparsity} --tiles {tiles} --seed {seed}"
+    );
+    let mut trimmed = Algorithm1Config::new(rank, sparsity);
+    trimmed.sp_grid = vec![0.3, 0.5, 0.7];
+    trimmed.nmf.max_iters = 25;
+    let artifact = match (method.as_str(), tiles) {
+        ("random", 1) => {
+            let (ip, iz) = random_factors(m, n, rank, sparsity, seed + 1);
+            Artifact::pack_factors(params, &format, &ip, &iz, provenance)?
+        }
+        ("random", _) => {
+            let plan = TilePlan::new(tiles, tiles);
+            let mut rng = crate::util::rng::Rng::new(seed + 1);
+            let d = factor_density(sparsity, rank);
+            let factors = plan
+                .tiles(m, n)?
+                .iter()
+                .map(|s| TileFactors {
+                    rank,
+                    ip: BitMatrix::from_fn(s.rows(), rank, |_, _| rng.bernoulli(d)),
+                    iz: BitMatrix::from_fn(rank, s.cols(), |_, _| rng.bernoulli(d)),
+                })
+                .collect();
+            let stored = TiledLowRankIndex::new(m, n, plan, factors)?;
+            let achieved = stored.decode_mask()?.sparsity();
+            Artifact {
+                params,
+                index: StoredIndex::Tiled(stored),
+                meta: ArtifactMeta {
+                    sparsity: achieved,
+                    cost: 0.0,
+                    rank: 0,
+                    provenance,
+                },
+            }
+        }
+        ("bmf", 1) => {
+            let f = algorithm1(&params.w1, &trimmed)?;
+            let mut a = Artifact::pack_factors(params, &format, &f.ip, &f.iz, provenance)?;
+            a.meta.cost = f.cost;
+            a
+        }
+        ("bmf", _) => {
+            let plan = TilePlan::new(tiles, tiles);
+            let t = compress_tiled(&params.w1, plan, &RankPlan::Uniform(rank), &trimmed)?;
+            Artifact::pack_tiled(params, &t, provenance)?
+        }
+        (other, _) => {
+            return Err(Error::invalid(format!(
+                "unknown pack method '{other}' (want random|bmf)"
+            )));
+        }
+    };
+    if tiles > 1 && format != "lowrank" {
+        println!("note: --tiles > 1 always packs the tiled low-rank format");
+    }
+    let bytes = artifact.to_bytes();
+    let index_bytes = artifact.index.index_bytes();
+    let target = if let Some(out) = args.flags.get("out") {
+        std::fs::write(out, &bytes)?;
+        out.clone()
+    } else if let Some(dir) = args.flags.get("registry") {
+        let default_name = format!("{}-k{rank}", artifact.index.format_name());
+        let name = args.get_str("name", &default_name);
+        let mut reg = Registry::open_or_create(dir)?;
+        let path = reg.publish(&name, &artifact)?;
+        path.display().to_string()
+    } else {
+        return Err(Error::invalid("pack needs --out FILE or --registry DIR"));
+    };
+    println!(
+        "packed {}: format={} S={:.3} cost={:.2} index={index_bytes}B file={}B",
+        target,
+        artifact.index.format_name(),
+        artifact.meta.sparsity,
+        artifact.meta.cost,
+        bytes.len()
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args
+        .flags
+        .get("artifact")
+        .ok_or_else(|| Error::invalid("inspect needs --artifact FILE"))?;
+    let container = Container::read(path)?;
+    println!("{path}: .lrbi v{}, {} bytes, {} sections", crate::store::container::VERSION, container.file_bytes(), container.entries().len());
+    for e in container.entries() {
+        println!(
+            "  {:<16} {:>9} B  @{:<8} crc {:#010x}",
+            e.kind().map(|k| k.name()).unwrap_or("unknown"),
+            e.len,
+            e.offset,
+            e.crc
+        );
+    }
+    let a = Artifact::from_container(&container)?;
+    let (m, n) = a.index.shape();
+    println!(
+        "model: {}→{}→{}→{} | masked layer {m}x{n}",
+        a.params.w0.rows(),
+        a.params.w0.cols(),
+        a.params.w1.cols(),
+        a.params.w2.cols()
+    );
+    println!(
+        "index: {} ({} B payload, S={:.3}, cost={:.2}, rank={})",
+        a.index.format_name(),
+        a.index.index_bytes(),
+        a.meta.sparsity,
+        a.meta.cost,
+        a.meta.rank
+    );
+    println!("provenance: {}", a.meta.provenance);
+    Ok(())
+}
+
 fn cmd_report(args: &Args) -> Result<()> {
     let out = args.get_str("out", "reports");
     let files = report::generate_all(Path::new(&out))?;
@@ -308,6 +571,31 @@ mod tests {
     #[test]
     fn parse_rejects_flag_first() {
         assert!(Args::parse(argv("--rank 8")).is_err());
+    }
+
+    #[test]
+    fn parse_key_equals_value_syntax() {
+        let a = Args::parse(argv("compress --model=resnet32 --rank=8 --flag --x=a=b")).unwrap();
+        assert_eq!(a.get_str("model", "?"), "resnet32");
+        assert_eq!(a.get::<usize>("rank", 0).unwrap(), 8);
+        assert_eq!(a.get_str("flag", "false"), "true");
+        // only the first '=' splits
+        assert_eq!(a.get_str("x", "?"), "a=b");
+        assert!(Args::parse(argv("compress --=v")).is_err());
+        assert!(Args::parse(argv("compress --")).is_err());
+    }
+
+    #[test]
+    fn parse_negative_number_values() {
+        let a = Args::parse(argv("serve --offset -1 --scale -2.5 --shift=-3 --verbose")).unwrap();
+        assert_eq!(a.get::<i64>("offset", 0).unwrap(), -1);
+        assert!((a.get::<f64>("scale", 0.0).unwrap() + 2.5).abs() < 1e-12);
+        assert_eq!(a.get::<i64>("shift", 0).unwrap(), -3);
+        // the trailing bare flag still parses as boolean
+        assert_eq!(a.get_str("verbose", "false"), "true");
+        // a negative number can be the last token
+        let b = Args::parse(argv("serve --offset -7")).unwrap();
+        assert_eq!(b.get::<i64>("offset", 0).unwrap(), -7);
     }
 
     #[test]

@@ -29,6 +29,12 @@ pub struct Metrics {
     pub kernel_spmms: AtomicU64,
     /// Nanoseconds spent inside sparse-kernel `spmm`.
     pub kernel_spmm_ns: AtomicU64,
+    /// `.lrbi` artifacts loaded from disk (read + CRC + decode).
+    pub artifact_loads: AtomicU64,
+    /// Nanoseconds spent loading artifacts.
+    pub artifact_load_ns: AtomicU64,
+    /// Variant hot-swaps applied to a running server.
+    pub hot_swaps: AtomicU64,
 }
 
 /// A point-in-time copy for reporting.
@@ -56,6 +62,12 @@ pub struct MetricsSnapshot {
     pub kernel_spmms: u64,
     /// Nanoseconds inside sparse-kernel `spmm`.
     pub kernel_spmm_ns: u64,
+    /// `.lrbi` artifacts loaded from disk.
+    pub artifact_loads: u64,
+    /// Nanoseconds loading artifacts.
+    pub artifact_load_ns: u64,
+    /// Variant hot-swaps applied.
+    pub hot_swaps: u64,
 }
 
 impl Metrics {
@@ -89,7 +101,17 @@ impl Metrics {
             kernel_decode_ns: self.kernel_decode_ns.load(Ordering::Relaxed),
             kernel_spmms: self.kernel_spmms.load(Ordering::Relaxed),
             kernel_spmm_ns: self.kernel_spmm_ns.load(Ordering::Relaxed),
+            artifact_loads: self.artifact_loads.load(Ordering::Relaxed),
+            artifact_load_ns: self.artifact_load_ns.load(Ordering::Relaxed),
+            hot_swaps: self.hot_swaps.load(Ordering::Relaxed),
         }
+    }
+
+    /// Record one artifact load (disk read + decode) with wall time.
+    pub fn record_artifact_load(&self, started: Instant) {
+        self.artifact_loads.fetch_add(1, Ordering::Relaxed);
+        self.artifact_load_ns
+            .fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
 
     /// Record one sparse-kernel `spmm` with its wall time.
@@ -137,6 +159,15 @@ impl MetricsSnapshot {
             self.kernel_spmm_ns as f64 / self.kernel_spmms as f64 / 1e3
         }
     }
+
+    /// Mean artifact cold-load time in milliseconds.
+    pub fn mean_artifact_load_ms(&self) -> f64 {
+        if self.artifact_loads == 0 {
+            0.0
+        } else {
+            self.artifact_load_ns as f64 / self.artifact_loads as f64 / 1e6
+        }
+    }
 }
 
 #[cfg(test)]
@@ -174,5 +205,18 @@ mod tests {
         let s = m.snapshot();
         assert!((s.mean_decode_ms() - 2.0).abs() < 1e-12);
         assert_eq!(s.kernel_spmms, 1);
+    }
+
+    #[test]
+    fn artifact_counters_average() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().mean_artifact_load_ms(), 0.0);
+        m.record_artifact_load(Instant::now());
+        m.artifact_load_ns.store(3_000_000, Ordering::Relaxed);
+        m.hot_swaps.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.artifact_loads, 1);
+        assert_eq!(s.hot_swaps, 2);
+        assert!((s.mean_artifact_load_ms() - 3.0).abs() < 1e-9);
     }
 }

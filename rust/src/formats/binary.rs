@@ -1,6 +1,7 @@
 //! Dense binary (bitmap) index: 1 bit per weight, fully regular.
 
 use crate::util::bits::BitMatrix;
+use crate::util::error::{Error, Result};
 
 /// The dense bitmap format of Figure 1.
 #[derive(Debug, Clone)]
@@ -53,6 +54,34 @@ impl BinaryIndex {
     pub fn index_bytes(&self) -> usize {
         self.bytes.len()
     }
+
+    /// Mask rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Mask cols.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The packed payload (row-major, MSB-first per byte) — what the
+    /// `.lrbi` container stores verbatim.
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Rebuild from a serialized payload (the store read path).
+    pub fn from_bytes(rows: usize, cols: usize, bytes: Vec<u8>) -> Result<Self> {
+        let need = (rows * cols).div_ceil(8);
+        if bytes.len() != need {
+            return Err(Error::store(format!(
+                "binary index payload: {} bytes for {rows}x{cols}, need {need}",
+                bytes.len()
+            )));
+        }
+        Ok(BinaryIndex { rows, cols, bytes })
+    }
 }
 
 #[cfg(test)]
@@ -78,5 +107,15 @@ mod tests {
     fn size_is_mn_over_8() {
         let mask = BitMatrix::zeros(800, 500);
         assert_eq!(BinaryIndex::encode(&mask).index_bytes(), 50_000);
+    }
+
+    #[test]
+    fn from_bytes_roundtrip_and_validation() {
+        let mut rng = Rng::new(7);
+        let mask = BitMatrix::from_fn(13, 29, |_, _| rng.bernoulli(0.4));
+        let enc = BinaryIndex::encode(&mask);
+        let back = BinaryIndex::from_bytes(13, 29, enc.bytes().to_vec()).unwrap();
+        assert_eq!(back.decode(), mask);
+        assert!(BinaryIndex::from_bytes(13, 29, vec![0u8; 3]).is_err());
     }
 }

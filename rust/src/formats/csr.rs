@@ -56,6 +56,34 @@ impl Csr16 {
         self.ja.len()
     }
 
+    /// Mask rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Mask cols.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Rebuild from raw `IA`/`JA` arrays (the store read path),
+    /// validating the invariants `decode` relies on.
+    pub fn from_parts(rows: usize, cols: usize, ia: Vec<u32>, ja: Vec<u16>) -> Result<Self> {
+        if ia.len() != rows + 1 {
+            return Err(Error::store(format!("IA has {} entries for {rows} rows", ia.len())));
+        }
+        if ia[0] != 0 || *ia.last().unwrap() as usize != ja.len() {
+            return Err(Error::store("IA endpoints do not bracket JA"));
+        }
+        if ia.windows(2).any(|w| w[1] < w[0]) {
+            return Err(Error::store("IA not monotonically non-decreasing"));
+        }
+        if ja.iter().any(|&j| j as usize >= cols) {
+            return Err(Error::store("JA column out of range"));
+        }
+        Ok(Csr16 { rows, cols, ia, ja })
+    }
+
     /// Size: 2 B per JA entry + 4 B per IA entry.
     pub fn index_bytes(&self) -> usize {
         self.ja.len() * 2 + self.ia.len() * 4
@@ -104,6 +132,27 @@ mod tests {
         let empty = BitMatrix::zeros(10, 10);
         assert!(Csr16::encode(&dense).index_bytes() > Csr16::encode(&empty).index_bytes());
         assert_eq!(Csr16::encode(&empty).index_bytes(), 11 * 4);
+    }
+
+    #[test]
+    fn from_parts_roundtrip_and_validation() {
+        let mut rng = Rng::new(11);
+        let mask = BitMatrix::from_fn(9, 40, |_, _| rng.bernoulli(0.2));
+        let enc = Csr16::encode(&mask);
+        let back = Csr16::from_parts(9, 40, enc.ia.clone(), enc.ja.clone()).unwrap();
+        assert_eq!(back.decode().unwrap(), mask);
+        // wrong IA length
+        assert!(Csr16::from_parts(8, 40, enc.ia.clone(), enc.ja.clone()).is_err());
+        // IA not ending at nnz
+        let mut bad = enc.ia.clone();
+        *bad.last_mut().unwrap() += 1;
+        assert!(Csr16::from_parts(9, 40, bad, enc.ja.clone()).is_err());
+        // JA out of range
+        let mut badja = enc.ja.clone();
+        if let Some(j) = badja.first_mut() {
+            *j = 40;
+        }
+        assert!(Csr16::from_parts(9, 40, enc.ia.clone(), badja).is_err());
     }
 
     #[test]

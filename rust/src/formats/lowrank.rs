@@ -62,16 +62,30 @@ fn pack_into(bits: &BitMatrix, out: &mut Vec<u8>, cursor: &mut usize) {
 impl LowRankIndex {
     /// Pack a factorized index.
     pub fn encode(f: &FactorizedIndex) -> Self {
-        let (m, k) = (f.ip.rows(), f.ip.cols());
-        let n = f.iz.cols();
+        Self::from_factors(&f.ip, &f.iz).expect("FactorizedIndex factors are shape-consistent")
+    }
+
+    /// Pack a raw factor pair `(I_p, I_z)` — the store pack path for
+    /// factors that did not come from Algorithm 1 (e.g. a served
+    /// variant's in-memory factors).
+    pub fn from_factors(ip: &BitMatrix, iz: &BitMatrix) -> Result<Self> {
+        if ip.cols() != iz.rows() {
+            return Err(Error::shape(format!(
+                "factor ranks disagree: I_p {}x{}, I_z {}x{}",
+                ip.rows(),
+                ip.cols(),
+                iz.rows(),
+                iz.cols()
+            )));
+        }
+        let (m, k) = (ip.rows(), ip.cols());
+        let n = iz.cols();
         let total_bits = k * (m + n);
         let mut payload = vec![0u8; total_bits.div_ceil(8)];
         let mut cursor = 0usize;
-        let mut tmp = std::mem::take(&mut payload);
-        pack_into(&f.ip, &mut tmp, &mut cursor);
-        pack_into(&f.iz, &mut tmp, &mut cursor);
-        payload = tmp;
-        LowRankIndex { m, n, k, payload }
+        pack_into(ip, &mut payload, &mut cursor);
+        pack_into(iz, &mut payload, &mut cursor);
+        Ok(LowRankIndex { m, n, k, payload })
     }
 
     fn bit(&self, idx: usize) -> bool {

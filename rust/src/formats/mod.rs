@@ -14,6 +14,110 @@ pub mod relative;
 pub mod viterbi;
 
 use crate::tensor::Matrix;
+use crate::tiling::TiledLowRankIndex;
+use crate::util::bits::BitMatrix;
+use crate::util::error::{Error, Result};
+
+/// A serialized pruning index in any storable representation — the
+/// union the `.lrbi` artifact container reads and writes. Each variant
+/// wraps the existing format struct unchanged, so a loaded artifact
+/// decodes *straight into* the in-memory representation its execution
+/// kernel consumes (see `serve::kernels::build_kernel_from_stored`) —
+/// no dense-mask detour on the load path.
+#[derive(Debug, Clone)]
+pub enum StoredIndex {
+    /// Dense bitmap, 1 bit/weight.
+    Binary(binary::BinaryIndex),
+    /// CSR with 16-bit column indices.
+    Csr(csr::Csr16),
+    /// 5-bit relative (gap) stream.
+    Relative(relative::Csr5Relative),
+    /// Packed low-rank factor pair `(I_p, I_z)`.
+    LowRank(lowrank::LowRankIndex),
+    /// Tiled low-rank: plan + per-tile factor pairs (per-tile ranks).
+    Tiled(TiledLowRankIndex),
+}
+
+impl StoredIndex {
+    /// Stable name used in CLI flags, artifact metadata, and reports.
+    pub fn format_name(&self) -> &'static str {
+        match self {
+            StoredIndex::Binary(_) => "dense",
+            StoredIndex::Csr(_) => "csr",
+            StoredIndex::Relative(_) => "relative",
+            StoredIndex::LowRank(_) => "lowrank",
+            StoredIndex::Tiled(_) => "tiled",
+        }
+    }
+
+    /// Mask shape `(rows, cols)` this index describes.
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            StoredIndex::Binary(b) => (b.rows(), b.cols()),
+            StoredIndex::Csr(c) => (c.rows(), c.cols()),
+            StoredIndex::Relative(r) => (r.rows(), r.cols()),
+            StoredIndex::LowRank(l) => (l.m, l.n),
+            StoredIndex::Tiled(t) => (t.m, t.n),
+        }
+    }
+
+    /// Index payload size in bytes — the quantity the paper's tables
+    /// compare, and (within fixed per-section header overhead) the
+    /// on-disk section size in a `.lrbi` container.
+    pub fn index_bytes(&self) -> usize {
+        match self {
+            StoredIndex::Binary(b) => b.index_bytes(),
+            StoredIndex::Csr(c) => c.index_bytes(),
+            StoredIndex::Relative(r) => r.index_bytes(),
+            StoredIndex::LowRank(l) => l.index_bytes(),
+            StoredIndex::Tiled(t) => t.index_bytes(),
+        }
+    }
+
+    /// Decode to the dense mask (validation/inspection path; serving
+    /// goes through the per-format kernels instead).
+    pub fn decode_mask(&self) -> Result<BitMatrix> {
+        match self {
+            StoredIndex::Binary(b) => Ok(b.decode()),
+            StoredIndex::Csr(c) => c.decode(),
+            StoredIndex::Relative(r) => Ok(r.decode()),
+            StoredIndex::LowRank(l) => l.decode(),
+            StoredIndex::Tiled(t) => t.decode_mask(),
+        }
+    }
+
+    /// Build the stored form of `format_name` from a factor pair (the
+    /// `lrbi pack` path): mask-storing formats encode `I_p ⊗ I_z`,
+    /// the low-rank format packs the factors themselves. `"tiled"` is
+    /// not constructible from a flat pair — use
+    /// [`StoredIndex::Tiled`] with a [`TiledLowRankIndex`].
+    pub fn from_factors(format_name: &str, ip: &BitMatrix, iz: &BitMatrix) -> Result<Self> {
+        if ip.cols() != iz.rows() {
+            return Err(Error::shape(format!(
+                "factor ranks disagree: I_p {}x{}, I_z {}x{}",
+                ip.rows(),
+                ip.cols(),
+                iz.rows(),
+                iz.cols()
+            )));
+        }
+        match format_name {
+            "dense" | "binary" => {
+                Ok(StoredIndex::Binary(binary::BinaryIndex::encode(&ip.bool_product(iz))))
+            }
+            "csr" => Ok(StoredIndex::Csr(csr::Csr16::encode(&ip.bool_product(iz)))),
+            "relative" | "csr5" => {
+                Ok(StoredIndex::Relative(relative::Csr5Relative::encode(&ip.bool_product(iz))))
+            }
+            "lowrank" | "low-rank" => {
+                Ok(StoredIndex::LowRank(lowrank::LowRankIndex::from_factors(ip, iz)?))
+            }
+            other => Err(Error::invalid(format!(
+                "unknown storable format '{other}' (want dense|csr|relative|lowrank)"
+            ))),
+        }
+    }
+}
 
 /// A row of the format-comparison tables.
 #[derive(Debug, Clone)]
@@ -82,6 +186,24 @@ pub fn format_comparison(
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn stored_index_from_factors_decodes_same_mask() {
+        let mut rng = Rng::new(21);
+        let ip = BitMatrix::from_fn(40, 5, |_, _| rng.bernoulli(0.3));
+        let iz = BitMatrix::from_fn(5, 70, |_, _| rng.bernoulli(0.3));
+        let want = ip.bool_product(&iz);
+        for name in ["dense", "csr", "relative", "lowrank"] {
+            let s = StoredIndex::from_factors(name, &ip, &iz).unwrap();
+            assert_eq!(s.format_name(), name);
+            assert_eq!(s.shape(), (40, 70));
+            assert_eq!(s.decode_mask().unwrap(), want, "{name}");
+            assert!(s.index_bytes() > 0);
+        }
+        assert!(StoredIndex::from_factors("tiled", &ip, &iz).is_err());
+        let bad_iz = BitMatrix::zeros(6, 70);
+        assert!(StoredIndex::from_factors("csr", &ip, &bad_iz).is_err());
+    }
 
     #[test]
     fn table1_right_shape_holds() {

@@ -4,6 +4,7 @@
 //! not correspond to a weight) until the remainder fits.
 
 use crate::util::bits::BitMatrix;
+use crate::util::error::{Error, Result};
 
 /// 5-bit relative-index stream.
 #[derive(Debug, Clone)]
@@ -89,9 +90,86 @@ impl Csr5Relative {
         self.entries.len()
     }
 
+    /// Consume the stream, yielding the raw entry vector without a
+    /// copy (used by the execution kernel when it owns the encode).
+    pub fn into_entries(self) -> Vec<u8> {
+        self.entries
+    }
+
     /// Packed size: ceil(5 * entries / 8) bytes.
     pub fn index_bytes(&self) -> usize {
         (self.entries.len() * 5).div_ceil(8)
+    }
+
+    /// Mask rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Mask cols.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Pack the gap stream 5 bits per entry, LSB-first — the on-disk
+    /// form, exactly `index_bytes()` long.
+    pub fn to_packed_bytes(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.index_bytes()];
+        for (idx, &e) in self.entries.iter().enumerate() {
+            let bit = idx * 5;
+            let v = (e as u16) << (bit % 8);
+            out[bit / 8] |= (v & 0xFF) as u8;
+            if v > 0xFF {
+                out[bit / 8 + 1] |= (v >> 8) as u8;
+            }
+        }
+        out
+    }
+
+    /// Rebuild from the packed on-disk form (the store read path).
+    /// `entry_count` disambiguates trailing pad bits.
+    pub fn from_packed_bytes(
+        rows: usize,
+        cols: usize,
+        entry_count: usize,
+        bytes: &[u8],
+    ) -> Result<Self> {
+        let need = (entry_count * 5).div_ceil(8);
+        if bytes.len() != need {
+            return Err(Error::store(format!(
+                "relative index payload: {} bytes for {entry_count} entries, need {need}",
+                bytes.len()
+            )));
+        }
+        let mut entries = Vec::with_capacity(entry_count);
+        let mut nnz = 0usize;
+        let mut cursor = 0usize; // mask position the stream advances to
+        for idx in 0..entry_count {
+            let bit = idx * 5;
+            let lo = bytes[bit / 8] as u16 >> (bit % 8);
+            let hi = if bit % 8 > 3 && bit / 8 + 1 < bytes.len() {
+                (bytes[bit / 8 + 1] as u16) << (8 - bit % 8)
+            } else {
+                0
+            };
+            let e = ((lo | hi) & 0x1F) as u8;
+            if e as u32 == MAX_GAP {
+                cursor += MAX_GAP as usize;
+            } else {
+                cursor += e as usize + 1;
+                nnz += 1;
+            }
+            entries.push(e);
+        }
+        // Semantic validation: the stream must stay inside the mask.
+        // Without this, a CRC-valid but mis-shaped section would load
+        // cleanly and decode() would silently drop trailing bits.
+        if cursor > rows * cols {
+            return Err(Error::store(format!(
+                "relative stream advances to position {cursor} of a {rows}x{cols} mask"
+            )));
+        }
+        Ok(Csr5Relative { rows, cols, entries, nnz })
     }
 }
 
@@ -140,6 +218,28 @@ mod tests {
             let enc = Csr5Relative::encode(&mask);
             assert_eq!(enc.decode(), mask);
         });
+    }
+
+    #[test]
+    fn packed_bytes_roundtrip() {
+        prop::check("csr5 packed roundtrip", 12, |rng| {
+            let m = prop::dim(rng, 1, 16);
+            let n = prop::dim(rng, 1, 150);
+            let d = rng.next_f64() * 0.4;
+            let mut r2 = Rng::new(rng.next_u64());
+            let mask = BitMatrix::from_fn(m, n, |_, _| r2.bernoulli(d));
+            let enc = Csr5Relative::encode(&mask);
+            let packed = enc.to_packed_bytes();
+            assert_eq!(packed.len(), enc.index_bytes());
+            let back =
+                Csr5Relative::from_packed_bytes(m, n, enc.entry_count(), &packed).unwrap();
+            assert_eq!(back.decode(), mask);
+            assert_eq!(back.nnz(), enc.nnz());
+        });
+        assert!(Csr5Relative::from_packed_bytes(1, 8, 9, &[0u8; 2]).is_err());
+        // semantically invalid: 9 zero-gap entries walk past a 1x8 mask
+        // even though the byte length (ceil(45/8) = 6) is consistent
+        assert!(Csr5Relative::from_packed_bytes(1, 8, 9, &[0u8; 6]).is_err());
     }
 
     #[test]

@@ -20,6 +20,7 @@ pub mod pruning;
 pub mod report;
 pub mod runtime;
 pub mod serve;
+pub mod store;
 pub mod tensor;
 pub mod tiling;
 pub mod train;

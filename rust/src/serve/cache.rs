@@ -59,6 +59,12 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         self.map.is_empty()
     }
 
+    /// Remove one entry (used to invalidate a hot-swapped variant's
+    /// kernel without disturbing the rest of the cache).
+    pub fn remove(&mut self, k: &K) -> Option<V> {
+        self.map.remove(k).map(|(_, v)| v)
+    }
+
     /// Remove everything.
     pub fn clear(&mut self) {
         self.map.clear();
@@ -99,6 +105,17 @@ mod tests {
         assert_eq!(c.len(), 2);
         assert_eq!(c.get(&"a"), Some(&10));
         assert_eq!(c.get(&"b"), Some(&2));
+    }
+
+    #[test]
+    fn remove_evicts_single_key() {
+        let mut c = LruCache::new(3);
+        c.put("a", 1);
+        c.put("b", 2);
+        assert_eq!(c.remove(&"a"), Some(1));
+        assert_eq!(c.remove(&"a"), None);
+        assert_eq!(c.get(&"b"), Some(&2));
+        assert_eq!(c.len(), 1);
     }
 
     #[test]

@@ -8,7 +8,11 @@ use crate::coordinator::metrics::Metrics;
 use crate::runtime::artifacts::GEOMETRY;
 use crate::runtime::client::{literal_matrix, matrix_literal, Runtime};
 use crate::serve::batcher::{BatchPolicy, BatcherClient, DynamicBatcher};
-use crate::serve::kernels::{build_kernel, DenseMaskedKernel, KernelFormat, SparseKernel};
+use crate::formats::StoredIndex;
+use crate::serve::kernels::{
+    build_kernel, build_kernel_from_stored, DenseMaskedKernel, KernelFormat, SparseKernel,
+};
+use crate::store::Artifact;
 use crate::tensor::Matrix;
 use crate::util::bits::BitMatrix;
 use crate::util::error::{Error, Result};
@@ -35,7 +39,11 @@ pub trait InferenceBackend {
 }
 
 /// Model parameters for the LeNet-FC classifier (mirrors model.py).
-#[derive(Debug, Clone)]
+/// `PartialEq` is derived (not hand-rolled field comparison) so that
+/// equality keeps covering every field if the struct grows — the
+/// hot-swap path relies on it to decide whether cached kernels must
+/// be flushed.
+#[derive(Debug, Clone, PartialEq)]
 pub struct MlpParams {
     /// FC0 weight (input_dim × hidden0).
     pub w0: Matrix,
@@ -110,6 +118,30 @@ impl NativeBackend {
     ) -> Result<Self> {
         let kernel = build_kernel(format, &params.w1, ip, iz, None)?;
         Ok(NativeBackend { params, format, kernel, batch: GEOMETRY.batch, metrics: None })
+    }
+
+    /// Build from a loaded `.lrbi` artifact: the stored index decodes
+    /// straight into the kernel for its own representation (CSR,
+    /// relative, low-rank, and tiled never materialize the dense
+    /// mask), and the artifact's dense params become the model —
+    /// Algorithm 1 is not re-run.
+    pub fn from_artifact(artifact: &Artifact) -> Result<Self> {
+        let kernel = build_kernel_from_stored(&artifact.index, &artifact.params.w1, None)?;
+        // The nearest selectable format, used only if factors are
+        // later swapped in via `update_factors`.
+        let format = match &artifact.index {
+            StoredIndex::Binary(_) => KernelFormat::DenseMasked,
+            StoredIndex::Csr(_) => KernelFormat::Csr,
+            StoredIndex::Relative(_) => KernelFormat::Relative,
+            StoredIndex::LowRank(_) | StoredIndex::Tiled(_) => KernelFormat::LowRankFused,
+        };
+        Ok(NativeBackend {
+            params: artifact.params.clone(),
+            format,
+            kernel,
+            batch: GEOMETRY.batch,
+            metrics: None,
+        })
     }
 
     /// Build from params + a pre-decoded mask (dense-masked kernel —
@@ -392,6 +424,34 @@ mod tests {
             for (a, b) in got.data().iter().zip(want.data()) {
                 assert!((a - b).abs() <= 1e-3 * (1.0 + b.abs()), "{}: {a} vs {b}", fmt.name());
             }
+        }
+    }
+
+    #[test]
+    fn artifact_backend_matches_in_memory_backend_bitwise() {
+        let params = MlpParams::init(21);
+        let g = GEOMETRY;
+        let mut rng = Rng::new(22);
+        let ip = BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.25));
+        let iz = BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.25));
+        let x = Matrix::gaussian(2, g.input_dim, 0.0, 1.0, &mut rng);
+        for (fmt, name) in [
+            (KernelFormat::DenseMasked, "dense"),
+            (KernelFormat::Csr, "csr"),
+            (KernelFormat::Relative, "relative"),
+            (KernelFormat::LowRankFused, "lowrank"),
+        ] {
+            let mut mem = NativeBackend::with_format(params.clone(), fmt, &ip, &iz).unwrap();
+            let art =
+                Artifact::pack_factors(params.clone(), name, &ip, &iz, "engine test").unwrap();
+            let mut loaded = NativeBackend::from_artifact(&art).unwrap();
+            assert_eq!(loaded.kernel_name(), mem.kernel_name());
+            // Same kernel construction order ⇒ bit-identical logits.
+            assert_eq!(
+                loaded.predict(&x).unwrap().data(),
+                mem.predict(&x).unwrap().data(),
+                "{name}"
+            );
         }
     }
 

@@ -24,7 +24,9 @@
 use crate::coordinator::metrics::Metrics;
 use crate::formats::csr::Csr16;
 use crate::formats::relative::{Csr5Relative, MAX_GAP};
+use crate::formats::StoredIndex;
 use crate::tensor::Matrix;
+use crate::tiling::TiledLowRankIndex;
 use crate::util::bits::BitMatrix;
 use crate::util::error::{Error, Result};
 use std::sync::atomic::Ordering;
@@ -162,6 +164,36 @@ pub fn build_kernel(
     Ok(kernel)
 }
 
+/// Build the kernel for a *stored* index (the artifact load path).
+/// Each variant goes straight from its serialized representation to
+/// the kernel that executes it — CSR and relative streams feed their
+/// kernels without reconstructing the dense mask, low-rank and tiled
+/// factors stay factors. The dense-bitmap variant's decode *is* its
+/// format semantics (the bitmap is the mask).
+pub fn build_kernel_from_stored(
+    stored: &StoredIndex,
+    w: &Matrix,
+    metrics: Option<&Metrics>,
+) -> Result<Box<dyn SparseKernel>> {
+    let t0 = Instant::now();
+    let kernel: Box<dyn SparseKernel> = match stored {
+        StoredIndex::Binary(b) => Box::new(DenseMaskedKernel::from_mask(w, &b.decode())?),
+        StoredIndex::Csr(c) => Box::new(CsrKernel::from_encoded(w, c)?),
+        StoredIndex::Relative(r) => Box::new(RelativeKernel::from_stream(w, r)?),
+        StoredIndex::LowRank(l) => {
+            let (ip, iz) = l.factors()?;
+            Box::new(LowRankFusedKernel::new(w, &ip, &iz)?)
+        }
+        StoredIndex::Tiled(t) => Box::new(TiledLowRankKernel::new(w, t)?),
+    };
+    if let Some(m) = metrics {
+        m.kernel_decodes.fetch_add(1, Ordering::Relaxed);
+        m.kernel_decode_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+    Ok(kernel)
+}
+
 /// Baseline: the mask is decoded to dense once and burned into a
 /// pre-masked copy of `W`; `spmm` is a plain dense matmul. This is
 /// exactly what the engine did before the kernel layer existed, kept
@@ -217,25 +249,37 @@ pub struct CsrKernel {
 }
 
 impl CsrKernel {
-    /// Encode the mask as CSR and gather the surviving weights.
+    /// Encode the mask as CSR and gather the surviving weights. The
+    /// freshly-encoded `IA`/`JA` arrays are *moved* into the kernel —
+    /// no copy on the factor path.
     pub fn new(w: &Matrix, mask: &BitMatrix) -> Result<Self> {
         check_mask_shape(w, mask)?;
         let csr = Csr16::encode(mask);
-        let mut vals = Vec::with_capacity(csr.nnz());
-        for i in 0..mask.rows() {
-            let (a, b) = (csr.ia[i] as usize, csr.ia[i + 1] as usize);
-            for &j in &csr.ja[a..b] {
-                vals.push(w.get(i, j as usize));
-            }
-        }
-        let index_bytes = csr.index_bytes();
+        let vals = gather_csr_vals(w, &csr)?;
         Ok(CsrKernel {
-            m: mask.rows(),
-            n: mask.cols(),
+            m: csr.rows(),
+            n: csr.cols(),
+            index_bytes: csr.index_bytes(),
             ia: csr.ia,
             ja: csr.ja,
             vals,
-            index_bytes,
+        })
+    }
+
+    /// Build directly from an already-encoded CSR index (the artifact
+    /// load path, where the index is borrowed from the artifact) —
+    /// gathers surviving weights without touching a dense mask. The
+    /// gather order is identical to [`CsrKernel::new`], so the two
+    /// construction paths produce bit-identical `spmm` output.
+    pub fn from_encoded(w: &Matrix, csr: &Csr16) -> Result<Self> {
+        let vals = gather_csr_vals(w, csr)?;
+        Ok(CsrKernel {
+            m: csr.rows(),
+            n: csr.cols(),
+            ia: csr.ia.clone(),
+            ja: csr.ja.clone(),
+            vals,
+            index_bytes: csr.index_bytes(),
         })
     }
 
@@ -279,6 +323,36 @@ impl SparseKernel for CsrKernel {
     }
 }
 
+/// Shape-check a CSR index against `w` and gather the surviving
+/// weights in `IA`/`JA` order (shared by both `CsrKernel`
+/// constructors so their gather order — and thus `spmm` bit pattern —
+/// is identical).
+fn gather_csr_vals(w: &Matrix, csr: &Csr16) -> Result<Vec<f32>> {
+    if csr.rows() != w.rows() || csr.cols() != w.cols() {
+        return Err(Error::shape(format!(
+            "CSR index {}x{} vs W {}x{}",
+            csr.rows(),
+            csr.cols(),
+            w.rows(),
+            w.cols()
+        )));
+    }
+    let mut vals = Vec::with_capacity(csr.nnz());
+    for i in 0..csr.rows() {
+        let (a, b) = (csr.ia[i] as usize, csr.ia[i + 1] as usize);
+        if b < a || b > csr.ja.len() {
+            return Err(Error::store(format!("corrupt CSR IA at row {i}")));
+        }
+        for &j in &csr.ja[a..b] {
+            if (j as usize) >= csr.cols() {
+                return Err(Error::store(format!("CSR JA out of range: {j}")));
+            }
+            vals.push(w.get(i, j as usize));
+        }
+    }
+    Ok(vals)
+}
+
 /// Relative-index streaming: the 5-bit gap stream of
 /// [`Csr5Relative`] is walked entry-by-entry, decode fused with the
 /// accumulate — the mask is never expanded, matching how Deep
@@ -297,33 +371,67 @@ pub struct RelativeKernel {
 
 impl RelativeKernel {
     /// Encode the mask as a gap stream and gather surviving weights in
-    /// stream order.
+    /// stream order. The freshly-encoded entry stream is *moved* into
+    /// the kernel — no copy on the factor path.
     pub fn new(w: &Matrix, mask: &BitMatrix) -> Result<Self> {
         check_mask_shape(w, mask)?;
         let stream = Csr5Relative::encode(mask);
-        let n = mask.cols();
-        let mut vals = Vec::with_capacity(stream.nnz());
-        let mut pos = 0usize;
-        let mut pending = 0u32;
-        for &e in stream.entries() {
-            if e as u32 == MAX_GAP {
-                pending += MAX_GAP;
-                continue;
-            }
-            pos += (pending + e as u32) as usize;
-            pending = 0;
-            vals.push(w.get(pos / n, pos % n));
-            pos += 1;
-        }
-        let index_bytes = stream.index_bytes();
+        let vals = gather_stream_vals(w, &stream)?;
+        let (m, n, index_bytes) = (stream.rows(), stream.cols(), stream.index_bytes());
+        Ok(RelativeKernel { m, n, entries: stream.into_entries(), vals, index_bytes })
+    }
+
+    /// Build directly from an already-encoded gap stream (the artifact
+    /// load path, where the stream is borrowed from the artifact): the
+    /// stream is walked once to gather surviving weights, fusing the
+    /// only decode this kernel ever does with the value gather — the
+    /// mask is never expanded.
+    pub fn from_stream(w: &Matrix, stream: &Csr5Relative) -> Result<Self> {
+        let vals = gather_stream_vals(w, stream)?;
         Ok(RelativeKernel {
-            m: mask.rows(),
-            n,
+            m: stream.rows(),
+            n: stream.cols(),
             entries: stream.entries().to_vec(),
             vals,
-            index_bytes,
+            index_bytes: stream.index_bytes(),
         })
     }
+}
+
+/// Shape-check a gap stream against `w` and gather the surviving
+/// weights in stream order (shared by both `RelativeKernel`
+/// constructors so their gather order is identical).
+fn gather_stream_vals(w: &Matrix, stream: &Csr5Relative) -> Result<Vec<f32>> {
+    if stream.rows() != w.rows() || stream.cols() != w.cols() {
+        return Err(Error::shape(format!(
+            "relative index {}x{} vs W {}x{}",
+            stream.rows(),
+            stream.cols(),
+            w.rows(),
+            w.cols()
+        )));
+    }
+    let n = stream.cols();
+    let total = stream.rows() * n;
+    let mut vals = Vec::with_capacity(stream.nnz());
+    let mut pos = 0usize;
+    let mut pending = 0u32;
+    for &e in stream.entries() {
+        if e as u32 == MAX_GAP {
+            pending += MAX_GAP;
+            continue;
+        }
+        pos += (pending + e as u32) as usize;
+        pending = 0;
+        if pos >= total {
+            return Err(Error::store(format!(
+                "relative stream runs past the {total}-element mask"
+            )));
+        }
+        vals.push(w.get(pos / n, pos % n));
+        pos += 1;
+    }
+    Ok(vals)
 }
 
 impl SparseKernel for RelativeKernel {
@@ -460,6 +568,122 @@ impl SparseKernel for LowRankFusedKernel {
     }
 }
 
+/// Tiled fused low-rank execution — the tiled analogue of
+/// [`LowRankFusedKernel`]. Each tile's mask rows are expanded
+/// independently (OR of that tile's packed `I_z` rows into a
+/// tile-width buffer) and consumed against the tile's column range of
+/// `W`; the full `m × n` mask never exists, and every (tile, row)
+/// expansion is independent — exactly the bounded-buffer, parallel
+/// decode §3.1 claims for tiling.
+pub struct TiledLowRankKernel {
+    w: Matrix,
+    specs: Vec<crate::tiling::TileSpec>,
+    tiles: Vec<crate::tiling::TileFactors>,
+    index_bytes: usize,
+}
+
+impl TiledLowRankKernel {
+    /// Capture weights + per-tile factors; no mask assembly happens.
+    pub fn new(w: &Matrix, index: &TiledLowRankIndex) -> Result<Self> {
+        if index.m != w.rows() || index.n != w.cols() {
+            return Err(Error::shape(format!(
+                "tiled index {}x{} vs W {}x{}",
+                index.m,
+                index.n,
+                w.rows(),
+                w.cols()
+            )));
+        }
+        // One validation pass yields the specs the kernel executes
+        // with; the factors are cloned once, for ownership only.
+        let specs = index.validated_specs()?;
+        Ok(TiledLowRankKernel {
+            w: w.clone(),
+            specs,
+            index_bytes: index.index_bytes(),
+            tiles: index.tiles.clone(),
+        })
+    }
+
+    /// Number of tiles executed.
+    pub fn tile_count(&self) -> usize {
+        self.tiles.len()
+    }
+}
+
+impl SparseKernel for TiledLowRankKernel {
+    fn name(&self) -> &'static str {
+        "tiled"
+    }
+    fn spmm(&self, x: &Matrix) -> Result<Matrix> {
+        let (m, n) = (self.w.rows(), self.w.cols());
+        check_input(x, m)?;
+        let batch = x.rows();
+        let mut out = Matrix::zeros(batch, n);
+        let max_words = self
+            .specs
+            .iter()
+            .map(|s| s.cols().div_ceil(64))
+            .max()
+            .unwrap_or(0);
+        let mut tile = vec![0u64; max_words];
+        for (spec, f) in self.specs.iter().zip(&self.tiles) {
+            let words = spec.cols().div_ceil(64);
+            for li in 0..spec.rows() {
+                let i = spec.r0 + li;
+                // Expand this tile's mask row li into the tile buffer.
+                tile[..words].fill(0);
+                let mut any = false;
+                for (wi, &pw) in f.ip.row_words(li).iter().enumerate() {
+                    let mut bits = pw;
+                    while bits != 0 {
+                        let l = wi * 64 + bits.trailing_zeros() as usize;
+                        bits &= bits - 1;
+                        if l >= f.rank {
+                            break;
+                        }
+                        for (t, &z) in tile[..words].iter_mut().zip(f.iz.row_words(l)) {
+                            *t |= z;
+                        }
+                        any = true;
+                    }
+                }
+                if !any {
+                    continue; // fully pruned tile row
+                }
+                // Consume against W row i, columns [c0, c1).
+                let wrow = self.w.row(i);
+                for b in 0..batch {
+                    let xv = x.get(b, i);
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let orow = &mut out.data_mut()[b * n..(b + 1) * n];
+                    for (wi, &word) in tile[..words].iter().enumerate() {
+                        let mut bits = word;
+                        while bits != 0 {
+                            let lj = wi * 64 + bits.trailing_zeros() as usize;
+                            bits &= bits - 1;
+                            let j = spec.c0 + lj;
+                            orow[j] += xv * wrow[j];
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+    fn index_bytes(&self) -> usize {
+        self.index_bytes
+    }
+    fn rows(&self) -> usize {
+        self.w.rows()
+    }
+    fn cols(&self) -> usize {
+        self.w.cols()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -532,5 +756,68 @@ mod tests {
         build_kernel(KernelFormat::LowRankFused, &w, &ip, &iz, Some(&metrics)).unwrap();
         build_kernel(KernelFormat::Csr, &w, &ip, &iz, Some(&metrics)).unwrap();
         assert_eq!(metrics.snapshot().kernel_decodes, 2);
+    }
+
+    #[test]
+    fn stored_construction_matches_factor_construction_bitwise() {
+        use crate::formats::StoredIndex;
+        let (w, ip, iz) = setup(5, 66, 140, 5);
+        let mut rng = Rng::new(10);
+        let x = Matrix::gaussian(3, 66, 0.0, 1.0, &mut rng);
+        for (fmt, name) in [
+            (KernelFormat::DenseMasked, "dense"),
+            (KernelFormat::Csr, "csr"),
+            (KernelFormat::Relative, "relative"),
+            (KernelFormat::LowRankFused, "lowrank"),
+        ] {
+            let direct = build_kernel(fmt, &w, &ip, &iz, None).unwrap();
+            let stored = StoredIndex::from_factors(name, &ip, &iz).unwrap();
+            let loaded = build_kernel_from_stored(&stored, &w, None).unwrap();
+            assert_eq!(loaded.name(), direct.name());
+            assert_eq!(loaded.index_bytes(), direct.index_bytes(), "{name}");
+            // identical construction order ⇒ bit-identical output
+            assert_eq!(
+                loaded.spmm(&x).unwrap().data(),
+                direct.spmm(&x).unwrap().data(),
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn tiled_kernel_matches_assembled_mask_reference() {
+        use crate::tiling::{TileFactors, TilePlan, TiledLowRankIndex};
+        let mut rng = Rng::new(12);
+        let (m, n) = (50, 135); // 2x3 plan with non-divisible extents
+        let w = Matrix::gaussian(m, n, 0.0, 1.0, &mut rng);
+        let plan = TilePlan::new(2, 3);
+        let specs = plan.tiles(m, n).unwrap();
+        let tiles: Vec<TileFactors> = specs
+            .iter()
+            .map(|s| {
+                let k = 3 + s.id % 2; // mixed per-tile ranks
+                TileFactors {
+                    rank: k,
+                    ip: BitMatrix::from_fn(s.rows(), k, |_, _| rng.bernoulli(0.3)),
+                    iz: BitMatrix::from_fn(k, s.cols(), |_, _| rng.bernoulli(0.3)),
+                }
+            })
+            .collect();
+        let index = TiledLowRankIndex::new(m, n, plan, tiles).unwrap();
+        let kern = TiledLowRankKernel::new(&w, &index).unwrap();
+        assert_eq!(kern.name(), "tiled");
+        assert_eq!(kern.tile_count(), 6);
+        assert_eq!(kern.index_bytes(), index.index_bytes());
+        let x = Matrix::gaussian(4, m, 0.0, 1.0, &mut rng);
+        let got = kern.spmm(&x).unwrap();
+        let wm =
+            crate::pruning::prune_with_mask(&w, &index.decode_mask().unwrap()).unwrap();
+        let want = x.matmul(&wm).unwrap();
+        for (a, b) in got.data().iter().zip(want.data()) {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+        // shape mismatch rejected
+        assert!(TiledLowRankKernel::new(&Matrix::zeros(m, n + 1), &index).is_err());
+        assert!(kern.spmm(&Matrix::zeros(2, m + 1)).is_err());
     }
 }

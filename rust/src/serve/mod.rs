@@ -13,4 +13,4 @@ pub mod variants;
 pub use batcher::{BatchPolicy, DynamicBatcher};
 pub use cache::LruCache;
 pub use engine::{InferenceBackend, NativeBackend, ServingEngine};
-pub use kernels::{build_kernel, KernelFormat, SparseKernel};
+pub use kernels::{build_kernel, build_kernel_from_stored, KernelFormat, SparseKernel};

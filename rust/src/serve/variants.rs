@@ -5,11 +5,20 @@
 //! on-chip decompressor, with `Metrics::cache_{hits,misses}` making
 //! the decode amortisation observable and the `kernel_*` counters
 //! separating decode cost from per-request compute.
+//!
+//! Variants come from two places: in-memory factor pairs
+//! ([`IndexVariant`], the pre-store behavior) or `.lrbi` artifacts in
+//! a [`Registry`] ([`VariantServer::from_registry`]), which can also
+//! be **hot-swapped** into a running server
+//! ([`VariantServer::hot_swap`]) — the production deploy path: pack a
+//! new compression, publish it, swap it in without restarting.
 
 use crate::coordinator::metrics::Metrics;
+use crate::formats::StoredIndex;
 use crate::serve::cache::LruCache;
 use crate::serve::engine::MlpParams;
-use crate::serve::kernels::{build_kernel, KernelFormat, SparseKernel};
+use crate::serve::kernels::{build_kernel, build_kernel_from_stored, KernelFormat, SparseKernel};
+use crate::store::{Artifact, Registry};
 use crate::tensor::Matrix;
 use crate::util::bits::BitMatrix;
 use crate::util::error::{Error, Result};
@@ -28,15 +37,31 @@ pub struct IndexVariant {
     pub iz: BitMatrix,
 }
 
+/// How a registered variant's index is held.
+enum VariantIndex {
+    /// In-memory factor pair; executes with the server-wide format.
+    Factors { ip: BitMatrix, iz: BitMatrix },
+    /// A stored index (loaded from an artifact); executes with the
+    /// kernel for its own representation.
+    Stored(StoredIndex),
+}
+
+struct Variant {
+    id: u64,
+    name: Option<String>,
+    index: VariantIndex,
+}
+
 /// Serves any registered variant; builds each variant's sparse kernel
 /// lazily and caches it, so the per-format decode runs once per
 /// resident variant rather than once per request.
 pub struct VariantServer {
     params: MlpParams,
     format: KernelFormat,
-    variants: Vec<IndexVariant>,
+    variants: Vec<Variant>,
     cache: LruCache<u64, Box<dyn SparseKernel>>,
     metrics: Arc<Metrics>,
+    next_id: u64,
 }
 
 impl VariantServer {
@@ -54,7 +79,9 @@ impl VariantServer {
         Self::with_format(params, KernelFormat::DenseMasked, variants, cache_cap, metrics)
     }
 
-    /// Build selecting the sparse-execution kernel for `format`.
+    /// Build selecting the sparse-execution kernel for `format`
+    /// (applies to factor variants; artifact variants execute in
+    /// their stored representation).
     pub fn with_format(
         params: MlpParams,
         format: KernelFormat,
@@ -62,13 +89,157 @@ impl VariantServer {
         cache_cap: usize,
         metrics: Arc<Metrics>,
     ) -> Self {
+        let next_id = variants.iter().map(|v| v.id + 1).max().unwrap_or(1);
         VariantServer {
             params,
             format,
-            variants,
+            variants: variants
+                .into_iter()
+                .map(|v| Variant {
+                    id: v.id,
+                    name: None,
+                    index: VariantIndex::Factors { ip: v.ip, iz: v.iz },
+                })
+                .collect(),
             cache: LruCache::new(cache_cap),
             metrics,
+            next_id,
         }
+    }
+
+    /// Build a server over every artifact in a registry. The first
+    /// entry supplies the dense params; the remaining artifacts must
+    /// carry identical params (a registry holds index variants of
+    /// *one* model — deploy a different model by [`Self::hot_swap`]).
+    /// Each load is timed into `Metrics::artifact_loads`.
+    pub fn from_registry(
+        registry: &Registry,
+        cache_cap: usize,
+        metrics: Arc<Metrics>,
+    ) -> Result<Self> {
+        if registry.is_empty() {
+            return Err(Error::store(format!(
+                "registry {} is empty — publish artifacts with `lrbi pack --registry`",
+                registry.dir().display()
+            )));
+        }
+        let mut server: Option<VariantServer> = None;
+        for entry in registry.entries() {
+            let t0 = Instant::now();
+            let artifact = registry.load(&entry.name)?;
+            metrics.record_artifact_load(t0);
+            match &mut server {
+                None => {
+                    let mut s = VariantServer::with_format(
+                        artifact.params.clone(),
+                        KernelFormat::DenseMasked,
+                        Vec::new(),
+                        cache_cap,
+                        Arc::clone(&metrics),
+                    );
+                    s.install(&entry.name, artifact.index)?;
+                    server = Some(s);
+                }
+                Some(s) => {
+                    if s.params != artifact.params {
+                        return Err(Error::store(format!(
+                            "artifact '{}' carries different dense params than the \
+                             registry's first entry; a registry serves index variants \
+                             of one model",
+                            entry.name
+                        )));
+                    }
+                    s.install(&entry.name, artifact.index)?;
+                }
+            }
+        }
+        Ok(server.expect("registry non-empty"))
+    }
+
+    /// Register (or replace) a named stored-index variant. Returns its
+    /// id. Does not touch params — see [`Self::hot_swap`] for full
+    /// artifact deployment.
+    fn install(&mut self, name: &str, index: StoredIndex) -> Result<u64> {
+        let (m, n) = index.shape();
+        if m != self.params.w1.rows() || n != self.params.w1.cols() {
+            return Err(Error::store(format!(
+                "artifact '{name}' index {m}x{n} vs masked layer {}x{}",
+                self.params.w1.rows(),
+                self.params.w1.cols()
+            )));
+        }
+        if let Some(v) = self.variants.iter_mut().find(|v| v.name.as_deref() == Some(name)) {
+            v.index = VariantIndex::Stored(index);
+            let id = v.id;
+            self.cache.remove(&id);
+            return Ok(id);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.variants.push(Variant {
+            id,
+            name: Some(name.to_string()),
+            index: VariantIndex::Stored(index),
+        });
+        Ok(id)
+    }
+
+    /// Every registered variant's index shape (factor or stored).
+    fn variant_shape(v: &Variant) -> (usize, usize) {
+        match &v.index {
+            VariantIndex::Factors { ip, iz } => (ip.rows(), iz.cols()),
+            VariantIndex::Stored(s) => s.shape(),
+        }
+    }
+
+    /// Hot-swap an artifact into the running server under `name`:
+    /// replaces (or registers) that variant's index, and if the
+    /// artifact's dense params differ from the server's, adopts them
+    /// and invalidates *every* cached kernel (the weights changed
+    /// under all variants). Rejected — with the server untouched — if
+    /// the new masked-layer shape is incompatible with the incoming
+    /// index or with any already-registered variant. Counted in
+    /// `Metrics::hot_swaps`.
+    pub fn hot_swap(&mut self, name: &str, artifact: &Artifact) -> Result<u64> {
+        let (w1r, w1c) = (artifact.params.w1.rows(), artifact.params.w1.cols());
+        let (m, n) = artifact.index.shape();
+        if m != w1r || n != w1c {
+            return Err(Error::store(format!(
+                "artifact '{name}' index {m}x{n} vs its masked layer {w1r}x{w1c}"
+            )));
+        }
+        if self.params != artifact.params {
+            // Adopting new params affects every variant — refuse the
+            // swap outright if any *other* variant would be orphaned
+            // by the new masked-layer shape.
+            for v in &self.variants {
+                if v.name.as_deref() == Some(name) {
+                    continue; // being replaced
+                }
+                let (vm, vn) = Self::variant_shape(v);
+                if vm != w1r || vn != w1c {
+                    return Err(Error::store(format!(
+                        "hot swap of '{name}' would change the masked layer to \
+                         {w1r}x{w1c}, orphaning variant {} ({vm}x{vn})",
+                        v.id
+                    )));
+                }
+            }
+            self.params = artifact.params.clone();
+            self.cache.clear();
+        }
+        let id = self.install(name, artifact.index.clone())?;
+        self.metrics.hot_swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(id)
+    }
+
+    /// Load `name` from the registry (timed into
+    /// `Metrics::artifact_loads`) and [`Self::hot_swap`] it.
+    pub fn hot_swap_from_registry(&mut self, registry: &Registry, name: &str) -> Result<u64> {
+        let t0 = Instant::now();
+        let artifact = registry.load(name)?;
+        self.metrics.record_artifact_load(t0);
+        self.hot_swap(name, &artifact)
     }
 
     /// Registered variant ids.
@@ -76,9 +247,27 @@ impl VariantServer {
         self.variants.iter().map(|v| v.id).collect()
     }
 
-    /// The kernel format every variant executes with.
+    /// Id of a named (artifact-backed) variant.
+    pub fn id_of(&self, name: &str) -> Option<u64> {
+        self.variants
+            .iter()
+            .find(|v| v.name.as_deref() == Some(name))
+            .map(|v| v.id)
+    }
+
+    /// The kernel format factor variants execute with.
     pub fn format(&self) -> KernelFormat {
         self.format
+    }
+
+    /// Input feature dimension (drives request generation).
+    pub fn input_dim(&self) -> usize {
+        self.params.w0.rows()
+    }
+
+    /// Output classes.
+    pub fn classes(&self) -> usize {
+        self.params.w2.cols()
     }
 
     /// Ensure the variant's kernel is resident, building it on miss.
@@ -94,7 +283,14 @@ impl VariantServer {
             .find(|v| v.id == id)
             .ok_or_else(|| Error::invalid(format!("unknown variant {id}")))?;
         // The decompression step: per-format index decode/encode.
-        let kernel = build_kernel(self.format, &self.params.w1, &v.ip, &v.iz, Some(&self.metrics))?;
+        let kernel = match &v.index {
+            VariantIndex::Factors { ip, iz } => {
+                build_kernel(self.format, &self.params.w1, ip, iz, Some(&self.metrics))?
+            }
+            VariantIndex::Stored(stored) => {
+                build_kernel_from_stored(stored, &self.params.w1, Some(&self.metrics))?
+            }
+        };
         self.cache.put(id, kernel);
         Ok(())
     }
@@ -239,5 +435,110 @@ mod tests {
             VariantServer::new(MlpParams::init(5), vec![], 2, Arc::new(Metrics::new()));
         let x = Matrix::zeros(1, GEOMETRY.input_dim);
         assert!(srv.predict(9, &x).is_err());
+    }
+
+    fn small_params(seed: u64) -> MlpParams {
+        let mut rng = Rng::new(seed);
+        MlpParams {
+            w0: Matrix::gaussian(6, 20, 0.0, 0.5, &mut rng),
+            b0: vec![0.1; 20],
+            w1: Matrix::gaussian(20, 30, 0.0, 0.5, &mut rng),
+            b1: vec![0.2; 30],
+            w2: Matrix::gaussian(30, 4, 0.0, 0.5, &mut rng),
+            b2: vec![0.0; 4],
+        }
+    }
+
+    fn small_artifact(params: &MlpParams, format: &str, seed: u64) -> crate::store::Artifact {
+        let mut rng = Rng::new(seed);
+        let ip = BitMatrix::from_fn(20, 4, |_, _| rng.bernoulli(0.3));
+        let iz = BitMatrix::from_fn(4, 30, |_, _| rng.bernoulli(0.3));
+        crate::store::Artifact::pack_factors(params.clone(), format, &ip, &iz, "variants test")
+            .unwrap()
+    }
+
+    #[test]
+    fn registry_serving_and_hot_swap() {
+        let dir = std::env::temp_dir()
+            .join(format!("lrbi_variants_reg_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let params = small_params(40);
+        let mut reg = crate::store::Registry::create(&dir).unwrap();
+        reg.publish("v1", &small_artifact(&params, "lowrank", 41)).unwrap();
+        reg.publish("v2", &small_artifact(&params, "csr", 42)).unwrap();
+
+        let metrics = Arc::new(Metrics::new());
+        let mut srv =
+            VariantServer::from_registry(&reg, 4, Arc::clone(&metrics)).unwrap();
+        assert_eq!(srv.variant_ids().len(), 2);
+        let (id1, id2) = (srv.id_of("v1").unwrap(), srv.id_of("v2").unwrap());
+        let mut rng = Rng::new(43);
+        let x = Matrix::gaussian(2, 6, 0.0, 1.0, &mut rng);
+        let a = srv.predict(id1, &x).unwrap();
+        let b = srv.predict(id2, &x).unwrap();
+        assert_ne!(a.data(), b.data(), "different indexes, different logits");
+        assert_eq!(metrics.snapshot().artifact_loads, 2);
+
+        // hot-swap v1 to a re-compression: logits change, swap counted,
+        // v2 untouched (its kernel stays cached).
+        reg.publish("v1", &small_artifact(&params, "relative", 99)).unwrap();
+        let swapped_id = srv.hot_swap_from_registry(&reg, "v1").unwrap();
+        assert_eq!(swapped_id, id1, "hot swap keeps the variant id");
+        let a2 = srv.predict(id1, &x).unwrap();
+        assert_ne!(a2.data(), a.data(), "swapped index must change logits");
+        assert_eq!(srv.predict(id2, &x).unwrap().data(), b.data());
+        let snap = metrics.snapshot();
+        assert_eq!(snap.hot_swaps, 1);
+        assert_eq!(snap.artifact_loads, 3);
+
+        // swapping in different dense params adopts them and
+        // invalidates every cached kernel.
+        let other = small_params(77);
+        let misses_before = metrics.snapshot().cache_misses;
+        srv.hot_swap("v1", &small_artifact(&other, "lowrank", 41)).unwrap();
+        let b2 = srv.predict(id2, &x).unwrap();
+        assert_ne!(b2.data(), b.data(), "new params must change v2's logits");
+        assert!(metrics.snapshot().cache_misses > misses_before);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hot_swap_rejecting_shape_change_leaves_server_intact() {
+        let params = small_params(50);
+        let metrics = Arc::new(Metrics::new());
+        let mut srv = VariantServer::new(params.clone(), vec![], 4, Arc::clone(&metrics));
+        srv.hot_swap("a", &small_artifact(&params, "lowrank", 51)).unwrap();
+        srv.hot_swap("b", &small_artifact(&params, "csr", 52)).unwrap();
+        let mut rng = Rng::new(53);
+        let x = Matrix::gaussian(1, 6, 0.0, 1.0, &mut rng);
+        let before = srv.predict(srv.id_of("b").unwrap(), &x).unwrap();
+
+        // an artifact whose masked layer is a different shape (20x31)
+        let mut other = small_params(54);
+        other.w1 = Matrix::gaussian(20, 31, 0.0, 0.5, &mut Rng::new(55));
+        other.b1 = vec![0.0; 31];
+        other.w2 = Matrix::gaussian(31, 4, 0.0, 0.5, &mut Rng::new(56));
+        let ip = BitMatrix::from_fn(20, 4, |_, _| true);
+        let iz = BitMatrix::from_fn(4, 31, |_, _| true);
+        let art =
+            crate::store::Artifact::pack_factors(other, "lowrank", &ip, &iz, "t").unwrap();
+        let err = srv.hot_swap("a", &art).unwrap_err();
+        assert!(err.to_string().contains("orphaning"), "{err}");
+        // server untouched: old variants still serve identically
+        assert_eq!(srv.predict(srv.id_of("b").unwrap(), &x).unwrap().data(), before.data());
+        assert_eq!(metrics.snapshot().hot_swaps, 2, "failed swap not counted");
+    }
+
+    #[test]
+    fn registry_with_mismatched_params_rejected() {
+        let dir = std::env::temp_dir()
+            .join(format!("lrbi_variants_mismatch_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut reg = crate::store::Registry::create(&dir).unwrap();
+        reg.publish("a", &small_artifact(&small_params(1), "lowrank", 2)).unwrap();
+        reg.publish("b", &small_artifact(&small_params(2), "lowrank", 3)).unwrap();
+        let err = VariantServer::from_registry(&reg, 4, Arc::new(Metrics::new())).unwrap_err();
+        assert!(err.to_string().contains("dense params"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,536 @@
+//! A packaged compressed model: dense params + one serialized pruning
+//! index + metadata, materialized as a `.lrbi` container.
+//!
+//! Packing turns an in-memory compression result into the deployable
+//! byte footprint the paper's tables talk about; loading decodes the
+//! index section *straight into* the matching `formats::StoredIndex`
+//! variant, so `serve::kernels::build_kernel_from_stored` can execute
+//! it without ever materializing the dense mask. The index section's
+//! payload is the format's `index_bytes()` plus a fixed few-word shape
+//! header — the claim "this format costs N bytes" becomes a measurable
+//! file region (`lrbi inspect` prints both).
+
+use crate::formats::binary::BinaryIndex;
+use crate::formats::csr::Csr16;
+use crate::formats::lowrank::LowRankIndex;
+use crate::formats::relative::Csr5Relative;
+use crate::formats::StoredIndex;
+use crate::serve::engine::MlpParams;
+use crate::store::container::{Container, ContainerWriter, Rd, SectionKind, Wr};
+use crate::tensor::Matrix;
+use crate::tiling::{TileFactors, TilePlan, TiledIndex, TiledLowRankIndex};
+use crate::util::bits::BitMatrix;
+use crate::util::error::{Error, Result};
+use std::path::Path;
+
+/// Artifact metadata (the `meta` section).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    /// Achieved mask sparsity (fraction pruned).
+    pub sparsity: f64,
+    /// Algorithm-1 Cost at pack time (0 when unknown, e.g. random or
+    /// externally supplied factors).
+    pub cost: f64,
+    /// Factorization rank (0 for mask-storing formats and tiled
+    /// indexes, whose per-tile ranks live in the index section).
+    pub rank: u32,
+    /// Free-form provenance: who/what produced this artifact.
+    pub provenance: String,
+}
+
+/// A deployable compressed model: params + index + metadata.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    /// Dense model parameters.
+    pub params: MlpParams,
+    /// The compressed pruning index, in its storable representation.
+    pub index: StoredIndex,
+    /// Metadata.
+    pub meta: ArtifactMeta,
+}
+
+impl Artifact {
+    /// Package params + a factor pair as `format_name` (the
+    /// `lrbi pack` path). Sparsity is measured from the decoded mask;
+    /// cost is unknown (0) unless the caller sets it afterwards.
+    pub fn pack_factors(
+        params: MlpParams,
+        format_name: &str,
+        ip: &BitMatrix,
+        iz: &BitMatrix,
+        provenance: impl Into<String>,
+    ) -> Result<Self> {
+        if ip.rows() != params.w1.rows() || iz.cols() != params.w1.cols() {
+            return Err(Error::shape(format!(
+                "factors {}x{}·{}x{} vs masked layer {}x{}",
+                ip.rows(),
+                ip.cols(),
+                iz.rows(),
+                iz.cols(),
+                params.w1.rows(),
+                params.w1.cols()
+            )));
+        }
+        let index = StoredIndex::from_factors(format_name, ip, iz)?;
+        let sparsity = index.decode_mask()?.sparsity();
+        // rank is recorded only when the artifact actually stores
+        // factors; mask-storing formats carry 0 (see ArtifactMeta and
+        // docs/ARTIFACT_FORMAT.md).
+        let rank = match &index {
+            StoredIndex::LowRank(_) => ip.cols() as u32,
+            _ => 0,
+        };
+        Ok(Artifact {
+            params,
+            index,
+            meta: ArtifactMeta {
+                sparsity,
+                cost: 0.0,
+                rank,
+                provenance: provenance.into(),
+            },
+        })
+    }
+
+    /// Package params + a tiled compression result.
+    pub fn pack_tiled(
+        params: MlpParams,
+        tiled: &TiledIndex,
+        provenance: impl Into<String>,
+    ) -> Result<Self> {
+        let stored = TiledLowRankIndex::from_tiled(tiled);
+        if stored.m != params.w1.rows() || stored.n != params.w1.cols() {
+            return Err(Error::shape(format!(
+                "tiled index {}x{} vs masked layer {}x{}",
+                stored.m,
+                stored.n,
+                params.w1.rows(),
+                params.w1.cols()
+            )));
+        }
+        Ok(Artifact {
+            params,
+            index: StoredIndex::Tiled(stored),
+            meta: ArtifactMeta {
+                sparsity: tiled.sparsity(),
+                cost: tiled.cost(),
+                rank: 0,
+                provenance: provenance.into(),
+            },
+        })
+    }
+
+    /// Serialize to container bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ContainerWriter::new();
+        w.add(SectionKind::Params, encode_params(&self.params));
+        w.add(SectionKind::Meta, encode_meta(&self.meta, self.index.format_name()));
+        let (kind, payload) = encode_index(&self.index);
+        w.add(kind, payload);
+        w.to_bytes()
+    }
+
+    /// Write a `.lrbi` file.
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(&path, self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Parse container bytes into an artifact.
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<Self> {
+        Self::from_container(&Container::from_bytes(bytes)?)
+    }
+
+    /// Read a `.lrbi` file (single read, CRC-validated, then sliced).
+    pub fn read(path: impl AsRef<Path>) -> Result<Self> {
+        Self::from_container(&Container::read(path)?)
+    }
+
+    /// Decode a validated container.
+    pub fn from_container(c: &Container) -> Result<Self> {
+        // "Exactly one of each" is checked over the raw table so
+        // duplicates of the *same* kind (which `section()` would
+        // silently shadow) are rejected too.
+        for kind in [SectionKind::Params, SectionKind::Meta] {
+            let count = c.entries().iter().filter(|e| e.kind_code == kind.code()).count();
+            if count != 1 {
+                return Err(Error::store(format!(
+                    "container holds {count} '{}' sections (want exactly 1)",
+                    kind.name()
+                )));
+            }
+        }
+        let index_entries = c
+            .entries()
+            .iter()
+            .filter(|e| SectionKind::INDEX_KINDS.iter().any(|k| e.kind_code == k.code()))
+            .count();
+        if index_entries != 1 {
+            return Err(Error::store(format!(
+                "container holds {index_entries} index sections (want exactly 1)"
+            )));
+        }
+        let params = decode_params(c.require(SectionKind::Params)?)?;
+        let (meta, declared_format) = decode_meta(c.require(SectionKind::Meta)?)?;
+        let mut index = None;
+        for kind in SectionKind::INDEX_KINDS {
+            if let Some(payload) = c.section(kind) {
+                index = Some(decode_index(kind, payload)?);
+                break;
+            }
+        }
+        let index =
+            index.ok_or_else(|| Error::store("container holds no index section"))?;
+        if index.format_name() != declared_format {
+            return Err(Error::store(format!(
+                "meta declares format '{declared_format}' but the index section is '{}'",
+                index.format_name()
+            )));
+        }
+        let (m, n) = index.shape();
+        if m != params.w1.rows() || n != params.w1.cols() {
+            return Err(Error::store(format!(
+                "index {m}x{n} does not match masked layer {}x{}",
+                params.w1.rows(),
+                params.w1.cols()
+            )));
+        }
+        Ok(Artifact { params, index, meta })
+    }
+}
+
+fn encode_matrix(w: &mut Wr, m: &Matrix) {
+    w.u32(m.rows() as u32);
+    w.u32(m.cols() as u32);
+    w.f32s(m.data());
+}
+
+fn decode_matrix(r: &mut Rd) -> Result<Matrix> {
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    if rows.checked_mul(cols).is_none() || rows * cols > (1 << 30) {
+        return Err(Error::store(format!("implausible matrix dims {rows}x{cols}")));
+    }
+    Matrix::from_vec(rows, cols, r.f32s(rows * cols)?)
+}
+
+fn encode_params(p: &MlpParams) -> Vec<u8> {
+    let mut w = Wr::new();
+    for (mat, bias) in [(&p.w0, &p.b0), (&p.w1, &p.b1), (&p.w2, &p.b2)] {
+        encode_matrix(&mut w, mat);
+        w.u32(bias.len() as u32);
+        w.f32s(bias);
+    }
+    w.into_bytes()
+}
+
+fn decode_params(payload: &[u8]) -> Result<MlpParams> {
+    let mut r = Rd::new(payload);
+    let mut layer = || -> Result<(Matrix, Vec<f32>)> {
+        let m = decode_matrix(&mut r)?;
+        let blen = r.u32()? as usize;
+        if blen != m.cols() {
+            return Err(Error::store(format!(
+                "bias of {blen} entries for a {}-column layer",
+                m.cols()
+            )));
+        }
+        let b = r.f32s(blen)?;
+        Ok((m, b))
+    };
+    let (w0, b0) = layer()?;
+    let (w1, b1) = layer()?;
+    let (w2, b2) = layer()?;
+    r.finish()?;
+    if w0.cols() != w1.rows() || w1.cols() != w2.rows() {
+        return Err(Error::store(format!(
+            "layer shapes do not chain: {}x{} → {}x{} → {}x{}",
+            w0.rows(),
+            w0.cols(),
+            w1.rows(),
+            w1.cols(),
+            w2.rows(),
+            w2.cols()
+        )));
+    }
+    Ok(MlpParams { w0, b0, w1, b1, w2, b2 })
+}
+
+fn encode_meta(meta: &ArtifactMeta, format_name: &str) -> Vec<u8> {
+    let mut w = Wr::new();
+    w.string(format_name);
+    w.f64(meta.sparsity);
+    w.f64(meta.cost);
+    w.u32(meta.rank);
+    w.string(&meta.provenance);
+    w.into_bytes()
+}
+
+fn decode_meta(payload: &[u8]) -> Result<(ArtifactMeta, String)> {
+    let mut r = Rd::new(payload);
+    let format = r.string()?;
+    let meta = ArtifactMeta {
+        sparsity: r.f64()?,
+        cost: r.f64()?,
+        rank: r.u32()?,
+        provenance: r.string()?,
+    };
+    r.finish()?;
+    Ok((meta, format))
+}
+
+fn encode_index(index: &StoredIndex) -> (SectionKind, Vec<u8>) {
+    let mut w = Wr::new();
+    match index {
+        StoredIndex::Binary(b) => {
+            w.u32(b.rows() as u32);
+            w.u32(b.cols() as u32);
+            w.raw(b.bytes());
+            (SectionKind::IndexBinary, w.into_bytes())
+        }
+        StoredIndex::Csr(c) => {
+            w.u32(c.rows() as u32);
+            w.u32(c.cols() as u32);
+            w.u32(c.nnz() as u32);
+            w.u32s(&c.ia);
+            w.u16s(&c.ja);
+            (SectionKind::IndexCsr, w.into_bytes())
+        }
+        StoredIndex::Relative(rel) => {
+            w.u32(rel.rows() as u32);
+            w.u32(rel.cols() as u32);
+            w.u32(rel.entry_count() as u32);
+            w.raw(&rel.to_packed_bytes());
+            (SectionKind::IndexRelative, w.into_bytes())
+        }
+        StoredIndex::LowRank(l) => {
+            w.u32(l.m as u32);
+            w.u32(l.n as u32);
+            w.u32(l.k as u32);
+            w.raw(&l.payload);
+            (SectionKind::IndexLowRank, w.into_bytes())
+        }
+        StoredIndex::Tiled(t) => {
+            w.u32(t.m as u32);
+            w.u32(t.n as u32);
+            w.u32(t.plan.tiles_r as u32);
+            w.u32(t.plan.tiles_c as u32);
+            for f in &t.tiles {
+                w.u32(f.rank as u32);
+                // Reuse the low-rank bit packing per tile: I_p then
+                // I_z, row-major, LSB-first.
+                let packed = LowRankIndex::from_factors(&f.ip, &f.iz)
+                    .expect("validated tile factors");
+                w.raw(&packed.payload);
+            }
+            (SectionKind::IndexTiled, w.into_bytes())
+        }
+    }
+}
+
+/// Reject dimension pairs whose product could overflow or implies an
+/// absurd allocation (a CRC-valid but hostile file).
+fn check_dims(rows: usize, cols: usize) -> Result<()> {
+    match rows.checked_mul(cols) {
+        Some(total) if total <= (1 << 30) => Ok(()),
+        _ => Err(Error::store(format!("implausible index dims {rows}x{cols}"))),
+    }
+}
+
+fn decode_index(kind: SectionKind, payload: &[u8]) -> Result<StoredIndex> {
+    let mut r = Rd::new(payload);
+    let index = match kind {
+        SectionKind::IndexBinary => {
+            let rows = r.u32()? as usize;
+            let cols = r.u32()? as usize;
+            check_dims(rows, cols)?;
+            let need = (rows * cols).div_ceil(8);
+            let bytes = r.bytes(need)?.to_vec();
+            StoredIndex::Binary(BinaryIndex::from_bytes(rows, cols, bytes)?)
+        }
+        SectionKind::IndexCsr => {
+            let rows = r.u32()? as usize;
+            let cols = r.u32()? as usize;
+            check_dims(rows, cols)?;
+            let nnz = r.u32()? as usize;
+            let ia = r.u32s(rows + 1)?;
+            let ja = r.u16s(nnz)?;
+            StoredIndex::Csr(Csr16::from_parts(rows, cols, ia, ja)?)
+        }
+        SectionKind::IndexRelative => {
+            let rows = r.u32()? as usize;
+            let cols = r.u32()? as usize;
+            check_dims(rows, cols)?;
+            let entries = r.u32()? as usize;
+            let bytes = r.bytes((entries * 5).div_ceil(8))?;
+            StoredIndex::Relative(Csr5Relative::from_packed_bytes(rows, cols, entries, bytes)?)
+        }
+        SectionKind::IndexLowRank => {
+            let m = r.u32()? as usize;
+            let n = r.u32()? as usize;
+            let k = r.u32()? as usize;
+            check_dims(m + n, k)?;
+            let payload = r.bytes((k * (m + n)).div_ceil(8))?.to_vec();
+            let idx = LowRankIndex { m, n, k, payload };
+            idx.factors()?; // validate now, not at kernel-build time
+            StoredIndex::LowRank(idx)
+        }
+        SectionKind::IndexTiled => {
+            let m = r.u32()? as usize;
+            let n = r.u32()? as usize;
+            check_dims(m, n)?;
+            let plan = TilePlan::new(r.u32()? as usize, r.u32()? as usize);
+            let specs = plan.tiles(m, n)?;
+            let mut tiles = Vec::with_capacity(specs.len());
+            for spec in &specs {
+                let k = r.u32()? as usize;
+                let bits = k * (spec.rows() + spec.cols());
+                let packed = LowRankIndex {
+                    m: spec.rows(),
+                    n: spec.cols(),
+                    k,
+                    payload: r.bytes(bits.div_ceil(8))?.to_vec(),
+                };
+                let (ip, iz) = packed.factors()?;
+                tiles.push(TileFactors { rank: k, ip, iz });
+            }
+            StoredIndex::Tiled(TiledLowRankIndex::new(m, n, plan, tiles)?)
+        }
+        SectionKind::Params | SectionKind::Meta => {
+            return Err(Error::store("not an index section"));
+        }
+    };
+    r.finish()?;
+    Ok(index)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn factors(seed: u64, m: usize, k: usize, n: usize) -> (BitMatrix, BitMatrix) {
+        let mut rng = Rng::new(seed);
+        (
+            BitMatrix::from_fn(m, k, |_, _| rng.bernoulli(0.3)),
+            BitMatrix::from_fn(k, n, |_, _| rng.bernoulli(0.3)),
+        )
+    }
+
+    fn small_params(seed: u64) -> MlpParams {
+        // A miniature geometry keeps artifact unit tests fast; the
+        // integration suite exercises the real GEOMETRY.
+        let mut rng = Rng::new(seed);
+        MlpParams {
+            w0: Matrix::gaussian(6, 20, 0.0, 0.5, &mut rng),
+            b0: vec![0.1; 20],
+            w1: Matrix::gaussian(20, 30, 0.0, 0.5, &mut rng),
+            b1: vec![0.2; 30],
+            w2: Matrix::gaussian(30, 4, 0.0, 0.5, &mut rng),
+            b2: vec![0.0; 4],
+        }
+    }
+
+    #[test]
+    fn roundtrip_every_format() {
+        let params = small_params(1);
+        let (ip, iz) = factors(2, 20, 3, 30);
+        for name in ["dense", "csr", "relative", "lowrank"] {
+            let art = Artifact::pack_factors(params.clone(), name, &ip, &iz, "test").unwrap();
+            let bytes = art.to_bytes();
+            let back = Artifact::from_bytes(bytes).unwrap();
+            assert_eq!(back.index.format_name(), name);
+            assert_eq!(
+                back.index.decode_mask().unwrap(),
+                art.index.decode_mask().unwrap(),
+                "{name}"
+            );
+            assert_eq!(back.params.w1, params.w1);
+            assert_eq!(back.meta, art.meta);
+            assert_eq!(back.index.index_bytes(), art.index.index_bytes());
+        }
+    }
+
+    #[test]
+    fn index_section_size_is_index_bytes_plus_shape_header() {
+        let params = small_params(3);
+        let (ip, iz) = factors(4, 20, 4, 30);
+        for name in ["dense", "csr", "relative", "lowrank"] {
+            let art = Artifact::pack_factors(params.clone(), name, &ip, &iz, "t").unwrap();
+            let c = Container::from_bytes(art.to_bytes()).unwrap();
+            let kind = SectionKind::INDEX_KINDS
+                .into_iter()
+                .find(|k| c.section(*k).is_some())
+                .unwrap();
+            let section_len = c.section(kind).unwrap().len();
+            let overhead = section_len - art.index.index_bytes();
+            assert!(overhead <= 12, "{name}: overhead {overhead}B");
+        }
+    }
+
+    #[test]
+    fn params_and_shape_mismatches_rejected() {
+        let params = small_params(5);
+        let (ip, iz) = factors(6, 21, 3, 30); // 21 != w1.rows()
+        assert!(Artifact::pack_factors(params.clone(), "csr", &ip, &iz, "t").is_err());
+
+        // index/params disagreement on disk is caught at read
+        let (ip, iz) = factors(7, 20, 3, 30);
+        let art = Artifact::pack_factors(params, "lowrank", &ip, &iz, "t").unwrap();
+        let mut other = art.clone();
+        other.params = small_params(8);
+        other.params.w1 = Matrix::zeros(20, 31);
+        other.params.w2 = Matrix::zeros(31, 4);
+        let err = Artifact::from_bytes(other.to_bytes()).unwrap_err();
+        assert!(matches!(err, Error::Store(_)), "{err}");
+    }
+
+    #[test]
+    fn duplicate_sections_rejected_even_same_kind() {
+        let params = small_params(11);
+        let (ip, iz) = factors(12, 20, 3, 30);
+        let art = Artifact::pack_factors(params, "csr", &ip, &iz, "t").unwrap();
+        let (kind, payload) = encode_index(&art.index);
+        // two index sections of the SAME kind
+        let mut w = ContainerWriter::new();
+        w.add(SectionKind::Params, encode_params(&art.params));
+        w.add(SectionKind::Meta, encode_meta(&art.meta, "csr"));
+        w.add(kind, payload.clone());
+        w.add(kind, payload.clone());
+        let err = Artifact::from_bytes(w.to_bytes()).unwrap_err();
+        assert!(err.to_string().contains("index sections"), "{err}");
+        // duplicate meta
+        let mut w = ContainerWriter::new();
+        w.add(SectionKind::Params, encode_params(&art.params));
+        w.add(SectionKind::Meta, encode_meta(&art.meta, "csr"));
+        w.add(SectionKind::Meta, encode_meta(&art.meta, "csr"));
+        w.add(kind, payload);
+        let err = Artifact::from_bytes(w.to_bytes()).unwrap_err();
+        assert!(err.to_string().contains("'meta' sections"), "{err}");
+    }
+
+    #[test]
+    fn rank_recorded_only_for_factor_storing_formats() {
+        let params = small_params(13);
+        let (ip, iz) = factors(14, 20, 5, 30);
+        for (name, want) in [("dense", 0), ("csr", 0), ("relative", 0), ("lowrank", 5)] {
+            let art = Artifact::pack_factors(params.clone(), name, &ip, &iz, "t").unwrap();
+            assert_eq!(art.meta.rank, want, "{name}");
+        }
+    }
+
+    #[test]
+    fn meta_format_must_match_index_section() {
+        let params = small_params(9);
+        let (ip, iz) = factors(10, 20, 3, 30);
+        let art = Artifact::pack_factors(params, "csr", &ip, &iz, "t").unwrap();
+        // Hand-assemble a container whose meta declares a different format.
+        let mut w = ContainerWriter::new();
+        w.add(SectionKind::Params, encode_params(&art.params));
+        w.add(SectionKind::Meta, encode_meta(&art.meta, "lowrank"));
+        let (kind, payload) = encode_index(&art.index);
+        w.add(kind, payload);
+        let err = Artifact::from_bytes(w.to_bytes()).unwrap_err();
+        assert!(err.to_string().contains("declares format"), "{err}");
+    }
+}

@@ -1,0 +1,505 @@
+//! The `.lrbi` binary container: magic + version header, a section
+//! table, and CRC-32-checked section payloads.
+//!
+//! Byte-level layout (all integers little-endian; full spec in
+//! `docs/ARTIFACT_FORMAT.md`):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "LRBI"
+//! 4       2     format version (currently 1)
+//! 6       2     section count
+//! 8       8     reserved (zero)
+//! 16      24·N  section table: kind u32, offset u64, len u64, crc u32
+//! ...           section payloads, in table order
+//! ```
+//!
+//! The reader pulls the whole file into one buffer with a single read,
+//! validates every section's CRC up front, and hands out *slices* of
+//! that buffer — section decoding never re-reads the file or copies
+//! through intermediate buffers, which is what makes artifact loads a
+//! milliseconds-scale operation (`perf_store` measures it).
+
+use crate::util::crc::crc32;
+use crate::util::error::{Error, Result};
+use std::path::Path;
+
+/// Container magic bytes.
+pub const MAGIC: [u8; 4] = *b"LRBI";
+/// Current container format version.
+pub const VERSION: u16 = 1;
+/// Fixed header length in bytes.
+pub const HEADER_LEN: usize = 16;
+/// Section-table entry length in bytes.
+pub const ENTRY_LEN: usize = 24;
+
+/// Known section kinds. Codes are stable wire values; unknown codes
+/// are tolerated on read (skipped) so older readers survive newer
+/// writers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SectionKind {
+    /// Dense model parameters (`MlpParams`).
+    Params,
+    /// Artifact metadata (format, sparsity, cost, rank, provenance).
+    Meta,
+    /// Dense bitmap index payload.
+    IndexBinary,
+    /// 16-bit CSR index payload.
+    IndexCsr,
+    /// 5-bit relative (gap) index payload.
+    IndexRelative,
+    /// Packed low-rank factor payload.
+    IndexLowRank,
+    /// Tiled low-rank payload (plan + per-tile factors).
+    IndexTiled,
+}
+
+impl SectionKind {
+    /// Every index-section kind, in wire-code order.
+    pub const INDEX_KINDS: [SectionKind; 5] = [
+        SectionKind::IndexBinary,
+        SectionKind::IndexCsr,
+        SectionKind::IndexRelative,
+        SectionKind::IndexLowRank,
+        SectionKind::IndexTiled,
+    ];
+
+    /// Stable wire code.
+    pub fn code(self) -> u32 {
+        match self {
+            SectionKind::Params => 1,
+            SectionKind::Meta => 2,
+            SectionKind::IndexBinary => 16,
+            SectionKind::IndexCsr => 17,
+            SectionKind::IndexRelative => 18,
+            SectionKind::IndexLowRank => 19,
+            SectionKind::IndexTiled => 20,
+        }
+    }
+
+    /// Parse a wire code.
+    pub fn from_code(code: u32) -> Option<Self> {
+        match code {
+            1 => Some(SectionKind::Params),
+            2 => Some(SectionKind::Meta),
+            16 => Some(SectionKind::IndexBinary),
+            17 => Some(SectionKind::IndexCsr),
+            18 => Some(SectionKind::IndexRelative),
+            19 => Some(SectionKind::IndexLowRank),
+            20 => Some(SectionKind::IndexTiled),
+            _ => None,
+        }
+    }
+
+    /// Human-readable name (`lrbi inspect`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SectionKind::Params => "params",
+            SectionKind::Meta => "meta",
+            SectionKind::IndexBinary => "index/binary",
+            SectionKind::IndexCsr => "index/csr",
+            SectionKind::IndexRelative => "index/relative",
+            SectionKind::IndexLowRank => "index/lowrank",
+            SectionKind::IndexTiled => "index/tiled",
+        }
+    }
+}
+
+/// One parsed section-table entry.
+#[derive(Debug, Clone, Copy)]
+pub struct SectionEntry {
+    /// Raw wire code (may be unknown to this reader).
+    pub kind_code: u32,
+    /// Payload offset from the start of the file.
+    pub offset: u64,
+    /// Payload length in bytes.
+    pub len: u64,
+    /// CRC-32 of the payload.
+    pub crc: u32,
+}
+
+impl SectionEntry {
+    /// The kind, when this reader knows the code.
+    pub fn kind(&self) -> Option<SectionKind> {
+        SectionKind::from_code(self.kind_code)
+    }
+}
+
+/// Builds a container file section by section.
+#[derive(Debug, Default)]
+pub struct ContainerWriter {
+    sections: Vec<(u32, Vec<u8>)>,
+}
+
+impl ContainerWriter {
+    /// Empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a section (order is preserved on disk).
+    pub fn add(&mut self, kind: SectionKind, payload: Vec<u8>) {
+        self.sections.push((kind.code(), payload));
+    }
+
+    /// Serialize header + table + payloads.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let table_len = self.sections.len() * ENTRY_LEN;
+        let mut offset = (HEADER_LEN + table_len) as u64;
+        let total: usize =
+            HEADER_LEN + table_len + self.sections.iter().map(|(_, p)| p.len()).sum::<usize>();
+        let mut out = Vec::with_capacity(total);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.sections.len() as u16).to_le_bytes());
+        out.extend_from_slice(&0u64.to_le_bytes());
+        for (code, payload) in &self.sections {
+            out.extend_from_slice(&code.to_le_bytes());
+            out.extend_from_slice(&offset.to_le_bytes());
+            out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            out.extend_from_slice(&crc32(payload).to_le_bytes());
+            offset += payload.len() as u64;
+        }
+        for (_, payload) in &self.sections {
+            out.extend_from_slice(payload);
+        }
+        out
+    }
+
+    /// Write the container to a file.
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_bytes())?;
+        Ok(())
+    }
+}
+
+/// A validated, loaded container: one buffer + the parsed table.
+#[derive(Debug)]
+pub struct Container {
+    buf: Vec<u8>,
+    entries: Vec<SectionEntry>,
+}
+
+impl Container {
+    /// Parse and validate a serialized container: magic, version,
+    /// table bounds, and every section's CRC. All failures are typed
+    /// [`Error::Store`] values — corrupt input never panics.
+    pub fn from_bytes(buf: Vec<u8>) -> Result<Self> {
+        if buf.len() < HEADER_LEN {
+            return Err(Error::store(format!(
+                "truncated container: {} bytes, header needs {HEADER_LEN}",
+                buf.len()
+            )));
+        }
+        if buf[0..4] != MAGIC {
+            return Err(Error::store(format!(
+                "bad magic {:02x?} (want \"LRBI\")",
+                &buf[0..4]
+            )));
+        }
+        let version = u16::from_le_bytes([buf[4], buf[5]]);
+        if version != VERSION {
+            return Err(Error::store(format!(
+                "unsupported container version {version} (this reader speaks {VERSION})"
+            )));
+        }
+        if buf[8..16] != [0u8; 8] {
+            return Err(Error::store("reserved header bytes must be zero in v1"));
+        }
+        let count = u16::from_le_bytes([buf[6], buf[7]]) as usize;
+        let table_end = HEADER_LEN + count * ENTRY_LEN;
+        if buf.len() < table_end {
+            return Err(Error::store(format!(
+                "truncated container: {} bytes, section table needs {table_end}",
+                buf.len()
+            )));
+        }
+        let mut entries = Vec::with_capacity(count);
+        for i in 0..count {
+            let at = HEADER_LEN + i * ENTRY_LEN;
+            let e = SectionEntry {
+                kind_code: u32::from_le_bytes(buf[at..at + 4].try_into().unwrap()),
+                offset: u64::from_le_bytes(buf[at + 4..at + 12].try_into().unwrap()),
+                len: u64::from_le_bytes(buf[at + 12..at + 20].try_into().unwrap()),
+                crc: u32::from_le_bytes(buf[at + 20..at + 24].try_into().unwrap()),
+            };
+            let end = e.offset.checked_add(e.len).ok_or_else(|| {
+                Error::store(format!("section {i}: offset+len overflows"))
+            })?;
+            if (e.offset as usize) < table_end || end as usize > buf.len() {
+                return Err(Error::store(format!(
+                    "section {i} [{}, {end}) outside file of {} bytes",
+                    e.offset,
+                    buf.len()
+                )));
+            }
+            let payload = &buf[e.offset as usize..end as usize];
+            let actual = crc32(payload);
+            if actual != e.crc {
+                return Err(Error::store(format!(
+                    "section {i} ({}) crc mismatch: stored {:#010x}, computed {actual:#010x}",
+                    e.kind().map(|k| k.name()).unwrap_or("unknown"),
+                    e.crc
+                )));
+            }
+            entries.push(e);
+        }
+        Ok(Container { buf, entries })
+    }
+
+    /// Read and validate a container file (single read syscall).
+    pub fn read(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let buf = std::fs::read(path).map_err(|e| {
+            Error::store(format!("cannot read artifact {}: {e}", path.display()))
+        })?;
+        Self::from_bytes(buf)
+    }
+
+    /// Parsed section table, in file order.
+    pub fn entries(&self) -> &[SectionEntry] {
+        &self.entries
+    }
+
+    /// Total container size in bytes.
+    pub fn file_bytes(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Borrow the payload of the first section of `kind`, if present.
+    /// The slice points into the load buffer — no copy.
+    pub fn section(&self, kind: SectionKind) -> Option<&[u8]> {
+        self.entries
+            .iter()
+            .find(|e| e.kind_code == kind.code())
+            .map(|e| &self.buf[e.offset as usize..(e.offset + e.len) as usize])
+    }
+
+    /// Like [`Container::section`] but a typed error when missing.
+    pub fn require(&self, kind: SectionKind) -> Result<&[u8]> {
+        self.section(kind)
+            .ok_or_else(|| Error::store(format!("missing required section '{}'", kind.name())))
+    }
+}
+
+/// Little-endian payload reader used by section decoders. Every
+/// accessor bounds-checks and returns [`Error::Store`] on underrun.
+#[derive(Debug)]
+pub(crate) struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Rd { buf, pos: 0 }
+    }
+
+    pub(crate) fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::store(format!(
+                "section payload underrun: want {n} bytes at {}, have {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    /// A `u32`-length-prefixed UTF-8 string.
+    pub(crate) fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let s = self.bytes(len)?;
+        String::from_utf8(s.to_vec())
+            .map_err(|_| Error::store("section string is not valid UTF-8"))
+    }
+
+    /// `count` little-endian `f32`s.
+    pub(crate) fn f32s(&mut self, count: usize) -> Result<Vec<f32>> {
+        let raw = self.bytes(count * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// `count` little-endian `u32`s.
+    pub(crate) fn u32s(&mut self, count: usize) -> Result<Vec<u32>> {
+        let raw = self.bytes(count * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// `count` little-endian `u16`s.
+    pub(crate) fn u16s(&mut self, count: usize) -> Result<Vec<u16>> {
+        let raw = self.bytes(count * 2)?;
+        Ok(raw
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Error unless the payload was consumed exactly.
+    pub(crate) fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::store(format!(
+                "section payload has {} trailing bytes",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Little-endian payload writer used by section encoders.
+#[derive(Debug, Default)]
+pub(crate) struct Wr {
+    buf: Vec<u8>,
+}
+
+impl Wr {
+    pub(crate) fn new() -> Self {
+        Self::default()
+    }
+
+    pub(crate) fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub(crate) fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub(crate) fn string(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub(crate) fn f32s(&mut self, vs: &[f32]) {
+        self.buf.reserve(vs.len() * 4);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub(crate) fn u32s(&mut self, vs: &[u32]) {
+        self.buf.reserve(vs.len() * 4);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub(crate) fn u16s(&mut self, vs: &[u16]) {
+        self.buf.reserve(vs.len() * 2);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub(crate) fn raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    pub(crate) fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<u8> {
+        let mut w = ContainerWriter::new();
+        w.add(SectionKind::Params, vec![1, 2, 3, 4, 5]);
+        w.add(SectionKind::Meta, vec![9; 32]);
+        w.add(SectionKind::IndexLowRank, vec![0xAB; 7]);
+        w.to_bytes()
+    }
+
+    #[test]
+    fn roundtrip_sections() {
+        let c = Container::from_bytes(sample()).unwrap();
+        assert_eq!(c.entries().len(), 3);
+        assert_eq!(c.section(SectionKind::Params).unwrap(), &[1, 2, 3, 4, 5]);
+        assert_eq!(c.section(SectionKind::Meta).unwrap().len(), 32);
+        assert_eq!(c.section(SectionKind::IndexLowRank).unwrap(), &[0xAB; 7]);
+        assert!(c.section(SectionKind::IndexCsr).is_none());
+        assert!(c.require(SectionKind::IndexCsr).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = sample();
+        bytes[0] = b'X';
+        let err = Container::from_bytes(bytes).unwrap_err();
+        assert!(matches!(err, Error::Store(_)), "{err}");
+        assert!(err.to_string().contains("magic"));
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let mut bytes = sample();
+        bytes[4] = 0xFF;
+        let err = Container::from_bytes(bytes).unwrap_err();
+        assert!(err.to_string().contains("version"));
+    }
+
+    #[test]
+    fn truncation_rejected_at_every_length() {
+        let bytes = sample();
+        for cut in 0..bytes.len() {
+            let err = Container::from_bytes(bytes[..cut].to_vec()).unwrap_err();
+            assert!(matches!(err, Error::Store(_)), "cut at {cut}: {err}");
+        }
+        assert!(Container::from_bytes(bytes).is_ok());
+    }
+
+    #[test]
+    fn payload_corruption_caught_by_crc() {
+        let bytes = sample();
+        let start = HEADER_LEN + 3 * ENTRY_LEN;
+        for i in start..bytes.len() {
+            let mut b = bytes.clone();
+            b[i] ^= 0x40;
+            let err = Container::from_bytes(b).unwrap_err();
+            assert!(err.to_string().contains("crc"), "flip at {i}: {err}");
+        }
+    }
+
+    #[test]
+    fn rd_wr_roundtrip_and_underrun() {
+        let mut w = Wr::new();
+        w.u32(7);
+        w.f64(-1.5);
+        w.string("hello");
+        w.f32s(&[1.0, 2.5]);
+        w.u32s(&[3, 4]);
+        w.u16s(&[5, 6]);
+        w.raw(&[0xFF]);
+        let bytes = w.into_bytes();
+        let mut r = Rd::new(&bytes);
+        assert_eq!(r.u32().unwrap(), 7);
+        assert_eq!(r.f64().unwrap(), -1.5);
+        assert_eq!(r.string().unwrap(), "hello");
+        assert_eq!(r.f32s(2).unwrap(), vec![1.0, 2.5]);
+        assert_eq!(r.u32s(2).unwrap(), vec![3, 4]);
+        assert_eq!(r.u16s(2).unwrap(), vec![5, 6]);
+        assert!(r.finish().is_err()); // 1 trailing byte
+        assert_eq!(r.bytes(1).unwrap(), &[0xFF]);
+        r.finish().unwrap();
+        assert!(r.u32().is_err()); // underrun is an error, not a panic
+    }
+}

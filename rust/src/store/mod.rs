@@ -1,0 +1,30 @@
+//! The `.lrbi` artifact store: a versioned binary container for
+//! compressed models plus an on-disk model registry.
+//!
+//! The paper's claim is about the *stored* footprint of a pruning
+//! index; this subsystem is where that footprint becomes real bytes.
+//! An [`Artifact`] packages dense params (`MlpParams`), one
+//! serialized index in any storable format (bitmap, 16-bit CSR, 5-bit
+//! relative, low-rank factors, or tiled low-rank with per-tile
+//! ranks), and provenance metadata into a CRC-checked container
+//! ([`container`]); a [`Registry`] names artifacts in a directory so
+//! a serving process can list, load, and hot-swap them
+//! (`VariantServer::from_registry` / `hot_swap`).
+//!
+//! Load path: one file read → CRC validation → section slices decoded
+//! straight into the `formats::StoredIndex` structs →
+//! `serve::kernels::build_kernel_from_stored`. The dense mask is
+//! never materialized for the CSR, relative, low-rank, or tiled
+//! variants, and Algorithm 1 never re-runs: packaging happens once at
+//! `lrbi pack` time, loading is milliseconds (`perf_store` measures
+//! both artifact bytes and cold-load latency).
+//!
+//! See `docs/ARTIFACT_FORMAT.md` for the byte-level layout.
+
+pub mod artifact;
+pub mod container;
+pub mod registry;
+
+pub use artifact::{Artifact, ArtifactMeta};
+pub use container::{Container, ContainerWriter, SectionEntry, SectionKind};
+pub use registry::{Registry, RegistryEntry};

@@ -1,0 +1,280 @@
+//! On-disk model registry: a directory of `.lrbi` artifacts plus a
+//! plain-text manifest, the unit `lrbi serve --registry` and
+//! `VariantServer::from_registry` operate on.
+//!
+//! Manifest (`manifest.txt`): one artifact per line,
+//! `name<space>file<space>format`, in publish order. Re-publishing a
+//! name replaces its entry (and file), which is what a hot-swap
+//! deployment does: write the new artifact, then ask the running
+//! server to reload the name.
+
+use crate::store::artifact::Artifact;
+use crate::util::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+const MANIFEST: &str = "manifest.txt";
+
+/// One manifest entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RegistryEntry {
+    /// Artifact name (registry-unique).
+    pub name: String,
+    /// File name inside the registry directory.
+    pub file: String,
+    /// Index format recorded at publish time.
+    pub format: String,
+}
+
+/// A directory of artifacts + manifest.
+#[derive(Debug)]
+pub struct Registry {
+    dir: PathBuf,
+    entries: Vec<RegistryEntry>,
+}
+
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 64
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
+}
+
+impl Registry {
+    /// Create an empty registry (directory + empty manifest). Errors
+    /// if a manifest already exists there.
+    pub fn create(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        let manifest = dir.join(MANIFEST);
+        if manifest.exists() {
+            return Err(Error::store(format!(
+                "registry already exists at {}",
+                dir.display()
+            )));
+        }
+        std::fs::write(&manifest, "")?;
+        Ok(Registry { dir, entries: Vec::new() })
+    }
+
+    /// Open an existing registry.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join(MANIFEST);
+        let text = std::fs::read_to_string(&manifest).map_err(|e| {
+            Error::store(format!(
+                "no registry manifest at {} — create one with `lrbi pack --registry` ({e})",
+                manifest.display()
+            ))
+        })?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut tok = line.split_whitespace();
+            match (tok.next(), tok.next(), tok.next()) {
+                (Some(name), Some(file), Some(format)) => {
+                    if !valid_name(name) {
+                        return Err(Error::store(format!(
+                            "manifest line {}: invalid artifact name '{name}'",
+                            lineno + 1
+                        )));
+                    }
+                    // publish() only ever writes `<name>.lrbi`, so any
+                    // other file value is corruption — and accepting it
+                    // would let a hand-edited manifest point outside
+                    // the registry directory.
+                    if file != format!("{name}.lrbi") {
+                        return Err(Error::store(format!(
+                            "manifest line {}: file '{file}' must be '{name}.lrbi'",
+                            lineno + 1
+                        )));
+                    }
+                    entries.push(RegistryEntry {
+                        name: name.to_string(),
+                        file: file.to_string(),
+                        format: format.to_string(),
+                    });
+                }
+                _ => {
+                    return Err(Error::store(format!(
+                        "malformed manifest line {}: '{line}'",
+                        lineno + 1
+                    )));
+                }
+            }
+        }
+        Ok(Registry { dir, entries })
+    }
+
+    /// Open if a manifest exists, otherwise create.
+    pub fn open_or_create(dir: impl AsRef<Path>) -> Result<Self> {
+        if dir.as_ref().join(MANIFEST).exists() {
+            Self::open(dir)
+        } else {
+            Self::create(dir)
+        }
+    }
+
+    /// Registry directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Manifest entries in publish order.
+    pub fn entries(&self) -> &[RegistryEntry] {
+        &self.entries
+    }
+
+    /// Artifact names in publish order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// Number of published artifacts.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is published.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Full path of a published artifact.
+    pub fn path_of(&self, name: &str) -> Option<PathBuf> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .map(|e| self.dir.join(&e.file))
+    }
+
+    /// Write `artifact` as `<name>.lrbi` and record it in the
+    /// manifest; re-publishing a name replaces both. Returns the
+    /// artifact path.
+    pub fn publish(&mut self, name: &str, artifact: &Artifact) -> Result<PathBuf> {
+        if !valid_name(name) {
+            return Err(Error::store(format!(
+                "invalid artifact name '{name}' (want [A-Za-z0-9._-]{{1,64}})"
+            )));
+        }
+        let file = format!("{name}.lrbi");
+        let path = self.dir.join(&file);
+        artifact.write(&path)?;
+        let entry = RegistryEntry {
+            name: name.to_string(),
+            file,
+            format: artifact.index.format_name().to_string(),
+        };
+        match self.entries.iter_mut().find(|e| e.name == name) {
+            Some(e) => *e = entry,
+            None => self.entries.push(entry),
+        }
+        self.write_manifest()?;
+        Ok(path)
+    }
+
+    /// Load a published artifact by name.
+    pub fn load(&self, name: &str) -> Result<Artifact> {
+        let path = self.path_of(name).ok_or_else(|| {
+            Error::store(format!(
+                "artifact '{name}' not in registry {} (have: {})",
+                self.dir.display(),
+                self.names().join(", ")
+            ))
+        })?;
+        Artifact::read(path)
+    }
+
+    fn write_manifest(&self) -> Result<()> {
+        let mut text = String::new();
+        for e in &self.entries {
+            text.push_str(&format!("{} {} {}\n", e.name, e.file, e.format));
+        }
+        std::fs::write(self.dir.join(MANIFEST), text)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine::MlpParams;
+    use crate::util::bits::BitMatrix;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("lrbi_registry_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn artifact(seed: u64, format: &str) -> Artifact {
+        let params = MlpParams::init(seed);
+        let (m, n) = (params.w1.rows(), params.w1.cols());
+        let mut rng = Rng::new(seed + 100);
+        let ip = BitMatrix::from_fn(m, 4, |_, _| rng.bernoulli(0.3));
+        let iz = BitMatrix::from_fn(4, n, |_, _| rng.bernoulli(0.3));
+        Artifact::pack_factors(params, format, &ip, &iz, "registry test").unwrap()
+    }
+
+    #[test]
+    fn publish_open_load_roundtrip() {
+        let dir = tmp("roundtrip");
+        let mut reg = Registry::create(&dir).unwrap();
+        reg.publish("v1", &artifact(1, "lowrank")).unwrap();
+        reg.publish("v2", &artifact(2, "csr")).unwrap();
+        assert_eq!(reg.names(), vec!["v1", "v2"]);
+
+        let reopened = Registry::open(&dir).unwrap();
+        assert_eq!(reopened.entries(), reg.entries());
+        let a = reopened.load("v2").unwrap();
+        assert_eq!(a.index.format_name(), "csr");
+        assert!(reopened.load("nope").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn republish_replaces_entry() {
+        let dir = tmp("republish");
+        let mut reg = Registry::create(&dir).unwrap();
+        reg.publish("v1", &artifact(1, "lowrank")).unwrap();
+        reg.publish("v1", &artifact(3, "relative")).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.entries()[0].format, "relative");
+        assert_eq!(
+            Registry::open(&dir).unwrap().load("v1").unwrap().index.format_name(),
+            "relative"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bad_names_and_missing_manifest_rejected() {
+        let dir = tmp("badnames");
+        let mut reg = Registry::create(&dir).unwrap();
+        let too_long = "z".repeat(65);
+        for bad in ["", "a b", "../evil", "x/y", too_long.as_str()] {
+            assert!(reg.publish(bad, &artifact(1, "lowrank")).is_err(), "{bad:?}");
+        }
+        assert!(Registry::open(dir.join("nowhere")).is_err());
+        assert!(Registry::create(&dir).is_err(), "double create must fail");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_manifest_is_typed_error() {
+        let dir = tmp("malformed");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "just-a-name\n").unwrap();
+        let err = Registry::open(&dir).unwrap_err();
+        assert!(matches!(err, Error::Store(_)), "{err}");
+        // a file field pointing outside the registry dir is rejected
+        std::fs::write(dir.join("manifest.txt"), "v1 ../../outside.lrbi lowrank\n").unwrap();
+        let err = Registry::open(&dir).unwrap_err();
+        assert!(err.to_string().contains("must be 'v1.lrbi'"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -131,6 +131,132 @@ impl TiledIndex {
     }
 }
 
+/// One tile's binary factor pair in the storable tiled index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TileFactors {
+    /// Tile rank `kᵢ`.
+    pub rank: usize,
+    /// Left factor (tile_rows × kᵢ).
+    pub ip: BitMatrix,
+    /// Right factor (kᵢ × tile_cols).
+    pub iz: BitMatrix,
+}
+
+/// The storable form of a tiled low-rank index: parent dims, the
+/// [`TilePlan`], and each tile's factor pair in tile-id order. This is
+/// what the `.lrbi` artifact container serializes for tiled
+/// compressions (per-tile ranks included), and what the tiled
+/// execution kernel consumes without ever assembling the dense mask.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TiledLowRankIndex {
+    /// Parent matrix rows.
+    pub m: usize,
+    /// Parent matrix cols.
+    pub n: usize,
+    /// Tiling plan (tile extents are derived via [`TilePlan::tiles`]).
+    pub plan: TilePlan,
+    /// Per-tile factors, tile-id order.
+    pub tiles: Vec<TileFactors>,
+}
+
+impl TiledLowRankIndex {
+    /// Build from parts, validating every tile's factor shapes against
+    /// the plan's tile extents.
+    pub fn new(m: usize, n: usize, plan: TilePlan, tiles: Vec<TileFactors>) -> Result<Self> {
+        let idx = TiledLowRankIndex { m, n, plan, tiles };
+        idx.validated_specs()?;
+        Ok(idx)
+    }
+
+    /// Tile extents in tile-id order, with every tile's factor shapes
+    /// checked against them — the single validation pass shared by
+    /// [`TiledLowRankIndex::new`] and the tiled execution kernel.
+    pub fn validated_specs(&self) -> Result<Vec<TileSpec>> {
+        let specs = self.plan.tiles(self.m, self.n)?;
+        if specs.len() != self.tiles.len() {
+            return Err(Error::invalid(format!(
+                "{} tile factor sets for a {}-tile plan",
+                self.tiles.len(),
+                specs.len()
+            )));
+        }
+        for (spec, t) in specs.iter().zip(&self.tiles) {
+            if t.ip.rows() != spec.rows()
+                || t.ip.cols() != t.rank
+                || t.iz.rows() != t.rank
+                || t.iz.cols() != spec.cols()
+            {
+                return Err(Error::shape(format!(
+                    "tile {}: factors {}x{} / {}x{} vs extent {}x{} rank {}",
+                    spec.id,
+                    t.ip.rows(),
+                    t.ip.cols(),
+                    t.iz.rows(),
+                    t.iz.cols(),
+                    spec.rows(),
+                    spec.cols(),
+                    t.rank
+                )));
+            }
+        }
+        Ok(specs)
+    }
+
+    /// Capture the factors of a [`TiledIndex`] produced by
+    /// [`compress_tiled`].
+    pub fn from_tiled(t: &TiledIndex) -> Self {
+        TiledLowRankIndex {
+            m: t.mask.rows(),
+            n: t.mask.cols(),
+            plan: t.plan,
+            tiles: t
+                .tiles
+                .iter()
+                .map(|(_, f)| TileFactors {
+                    rank: f.rank,
+                    ip: f.ip.clone(),
+                    iz: f.iz.clone(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Tile extents in tile-id order.
+    pub fn specs(&self) -> Result<Vec<TileSpec>> {
+        self.plan.tiles(self.m, self.n)
+    }
+
+    /// Assemble the full mask from per-tile boolean products (the
+    /// decompressor path; execution kernels avoid this).
+    pub fn decode_mask(&self) -> Result<BitMatrix> {
+        let mut mask = BitMatrix::zeros(self.m, self.n);
+        for (spec, t) in self.specs()?.iter().zip(&self.tiles) {
+            let sub = t.ip.bool_product(&t.iz);
+            for i in 0..spec.rows() {
+                for j in 0..spec.cols() {
+                    if sub.get(i, j) {
+                        mask.set(spec.r0 + i, spec.c0 + j, true);
+                    }
+                }
+            }
+        }
+        Ok(mask)
+    }
+
+    /// Total index bits: Σ kᵢ (mᵢ + nᵢ) over actual tile extents.
+    pub fn index_bits(&self) -> usize {
+        self.tiles
+            .iter()
+            .map(|t| t.rank * (t.ip.rows() + t.iz.cols()))
+            .sum()
+    }
+
+    /// Total index bytes.
+    pub fn index_bytes(&self) -> usize {
+        self.index_bits().div_ceil(8)
+    }
+}
+
 /// Rank assignment for a tiling: same rank everywhere, or per-tile.
 #[derive(Debug, Clone)]
 pub enum RankPlan {
@@ -153,17 +279,21 @@ impl RankPlan {
 /// budget as a single-tile factorization at `rank_single` — the
 /// "equal compression ratio" comparison of Figures 4 and 6.
 ///
-/// Single: `k₁ (m + n)` bits. Tiled (uniform tiles): each tile is
-/// `(m/tr) × (n/tc)`, so total = `k_t · tr·tc · (m/tr + n/tc)`.
+/// Single: `k₁ (m + n)` bits. Tiled: `k_t · Σᵢ (mᵢ + nᵢ)` bits over
+/// the actual [`TileSpec`] extents. Summing real extents matters for
+/// non-divisible dims — e.g. a 3×4 plan over 10×9 has edge tiles
+/// absorbing remainders, and the old `count · (m/tr + n/tc)` formula
+/// under-counted their bits, inflating the returned rank.
 pub fn equal_budget_rank(
     m: usize,
     n: usize,
     plan: TilePlan,
     rank_single: usize,
-) -> usize {
+) -> Result<usize> {
     let single_bits = rank_single * (m + n);
-    let per_rank_bits = plan.count() * (m / plan.tiles_r + n / plan.tiles_c);
-    (single_bits as f64 / per_rank_bits as f64).round().max(1.0) as usize
+    let per_rank_bits: usize =
+        plan.tiles(m, n)?.iter().map(|t| t.rows() + t.cols()).sum();
+    Ok((single_bits as f64 / per_rank_bits as f64).round().max(1.0) as usize)
 }
 
 /// Factorize a weight matrix tile-by-tile with Algorithm 1 applied
@@ -252,9 +382,25 @@ mod tests {
     #[test]
     fn equal_budget_rank_matches_paper_fig6() {
         // FC1 800x500: (1x1, k=128) == (2x2, k=64) == (4x4, k=32).
-        assert_eq!(equal_budget_rank(800, 500, TilePlan::new(1, 1), 128), 128);
-        assert_eq!(equal_budget_rank(800, 500, TilePlan::new(2, 2), 128), 64);
-        assert_eq!(equal_budget_rank(800, 500, TilePlan::new(4, 4), 128), 32);
+        assert_eq!(equal_budget_rank(800, 500, TilePlan::new(1, 1), 128).unwrap(), 128);
+        assert_eq!(equal_budget_rank(800, 500, TilePlan::new(2, 2), 128).unwrap(), 64);
+        assert_eq!(equal_budget_rank(800, 500, TilePlan::new(4, 4), 128).unwrap(), 32);
+    }
+
+    #[test]
+    fn equal_budget_rank_uses_actual_tile_extents() {
+        // 10x9 with a 3x4 plan: edge tiles absorb remainders, so
+        // Σ(mᵢ+nᵢ) = 4·Σrows + 3·Σcols = 4·10 + 3·9 = 67 bits/rank,
+        // not count·(m/tr + n/tc) = 12·(3+2) = 60. A single-tile
+        // budget of k=67 must therefore map to exactly rank 19·... :
+        // 67·(10+9)/67 = 19 per rank → k_t = round(k·19/67).
+        let plan = TilePlan::new(3, 4);
+        assert_eq!(equal_budget_rank(10, 9, plan, 67).unwrap(), 19);
+        // The biased formula would have given round(67·19/60) = 21.
+        assert_ne!(equal_budget_rank(10, 9, plan, 67).unwrap(), 21);
+        // Invalid plans surface as errors instead of nonsense ranks.
+        assert!(equal_budget_rank(5, 5, TilePlan::new(0, 1), 4).is_err());
+        assert!(equal_budget_rank(5, 5, TilePlan::new(6, 1), 4).is_err());
     }
 
     #[test]
@@ -291,6 +437,26 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn stored_tiled_index_roundtrips_mask_and_bits() {
+        let w = w(25, 22, 5);
+        let plan = TilePlan::new(2, 3); // 25 and 22 don't divide: edge tiles differ
+        let ranks = RankPlan::PerTile(vec![2, 3, 2, 4, 2, 3]);
+        let res = compress_tiled(&w, plan, &ranks, &fast_cfg(0.8)).unwrap();
+        let stored = TiledLowRankIndex::from_tiled(&res);
+        assert_eq!(stored.decode_mask().unwrap(), res.mask);
+        assert_eq!(stored.index_bits(), res.index_bits());
+        // per-tile ranks preserved
+        let ks: Vec<usize> = stored.tiles.iter().map(|t| t.rank).collect();
+        assert_eq!(ks, vec![2, 3, 2, 4, 2, 3]);
+        // shape validation: swapping two differently-shaped tiles fails
+        let mut bad = stored.tiles.clone();
+        bad.swap(0, 5);
+        assert!(TiledLowRankIndex::new(25, 22, plan, bad).is_err());
+        // count validation
+        assert!(TiledLowRankIndex::new(25, 22, plan, stored.tiles[..3].to_vec()).is_err());
     }
 
     #[test]

@@ -1,0 +1,63 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the
+//! section checksum of the `.lrbi` artifact container. Table-driven,
+//! no external crates; the table is built once lazily.
+//!
+//! # Examples
+//!
+//! ```
+//! use lrbi::util::crc::crc32;
+//!
+//! // the standard check value for the ASCII digits "123456789"
+//! assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+//! assert_eq!(crc32(b""), 0);
+//! ```
+
+use std::sync::OnceLock;
+
+fn table() -> &'static [u32; 256] {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 == 1 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// CRC-32 of a byte slice (init 0xFFFF_FFFF, final xor 0xFFFF_FFFF).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let t = table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = t[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn sensitive_to_any_flip() {
+        let base = crc32(b"lrbi artifact");
+        let mut data = b"lrbi artifact".to_vec();
+        for i in 0..data.len() {
+            data[i] ^= 0x01;
+            assert_ne!(crc32(&data), base, "flip at byte {i} undetected");
+            data[i] ^= 0x01;
+        }
+    }
+}

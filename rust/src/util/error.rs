@@ -17,6 +17,9 @@ pub enum Error {
     Coordinator(String),
     /// Config file parse error.
     Config(String),
+    /// Artifact-store failure: malformed `.lrbi` container, CRC
+    /// mismatch, bad magic/version, registry manifest errors.
+    Store(String),
 }
 
 impl std::fmt::Display for Error {
@@ -28,6 +31,7 @@ impl std::fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Store(m) => write!(f, "store error: {m}"),
         }
     }
 }
@@ -58,5 +62,9 @@ impl Error {
     /// Construct an invalid-argument error from anything displayable.
     pub fn invalid(msg: impl std::fmt::Display) -> Self {
         Error::InvalidArg(msg.to_string())
+    }
+    /// Construct an artifact-store error from anything displayable.
+    pub fn store(msg: impl std::fmt::Display) -> Self {
+        Error::Store(msg.to_string())
     }
 }

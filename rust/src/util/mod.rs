@@ -2,6 +2,7 @@
 
 pub mod bench;
 pub mod bits;
+pub mod crc;
 pub mod error;
 pub mod prop;
 pub mod rng;

@@ -46,3 +46,59 @@ fn report_writes_files() {
 fn serve_synthetic_traffic() {
     assert_eq!(cli::run(argv("serve --requests 64 --max-batch 16 --max-wait-ms 1")), 0);
 }
+
+#[test]
+fn pack_inspect_serve_artifact_roundtrip() {
+    let dir = std::env::temp_dir().join(format!("lrbi_cli_pack_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let file = dir.join("model.lrbi");
+    let file = file.display();
+    assert_eq!(
+        cli::run(argv(&format!(
+            "pack --out {file} --format=lowrank --rank 8 --sparsity 0.9"
+        ))),
+        0
+    );
+    assert_eq!(cli::run(argv(&format!("inspect --artifact {file}"))), 0);
+    assert_eq!(
+        cli::run(argv(&format!("serve --artifact {file} --requests 32 --max-batch 16"))),
+        0
+    );
+    // pack without a destination is an error
+    assert_eq!(cli::run(argv("pack --format lowrank")), 2);
+    // inspecting garbage is a typed error, not a panic
+    let bad = dir.join("bad.lrbi");
+    std::fs::write(&bad, b"not an artifact").unwrap();
+    assert_eq!(cli::run(argv(&format!("inspect --artifact {}", bad.display()))), 2);
+    let _ = std::fs::remove_dir_all(std::env::temp_dir().join(format!(
+        "lrbi_cli_pack_{}",
+        std::process::id()
+    )));
+}
+
+#[test]
+fn pack_registry_and_serve_with_hot_swap() {
+    let dir = std::env::temp_dir().join(format!("lrbi_cli_reg_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let reg = dir.display();
+    assert_eq!(
+        cli::run(argv(&format!("pack --registry {reg} --name v1 --format csr --rank 8"))),
+        0
+    );
+    assert_eq!(
+        cli::run(argv(&format!(
+            "pack --registry {reg} --name v2 --format relative --rank 8 --tiles 1"
+        ))),
+        0
+    );
+    assert_eq!(
+        cli::run(argv(&format!("pack --registry {reg} --name tiled4 --tiles 2 --rank 8"))),
+        0
+    );
+    assert_eq!(
+        cli::run(argv(&format!("serve --registry {reg} --requests 24 --swap v1"))),
+        0
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,278 @@
+//! Integration tests for the `.lrbi` artifact store: pack → write →
+//! load → serve round-trips must be *bit-identical* to serving the
+//! in-memory compression, for every kernel format and a tiled plan;
+//! corrupt files must surface typed errors, never panics.
+
+use lrbi::formats::StoredIndex;
+use lrbi::runtime::artifacts::GEOMETRY;
+use lrbi::serve::engine::{MlpParams, NativeBackend};
+use lrbi::serve::kernels::{build_kernel_from_stored, KernelFormat};
+use lrbi::store::{Artifact, Container, Registry, SectionKind};
+use lrbi::tensor::Matrix;
+use lrbi::tiling::{TileFactors, TilePlan, TiledLowRankIndex};
+use lrbi::util::bits::BitMatrix;
+use lrbi::util::error::Error;
+use lrbi::util::prop;
+use lrbi::util::rng::Rng;
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lrbi_store_it_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn geometry_factors(seed: u64) -> (BitMatrix, BitMatrix) {
+    let g = GEOMETRY;
+    let mut rng = Rng::new(seed);
+    (
+        BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.25)),
+        BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.25)),
+    )
+}
+
+/// The PR's acceptance criterion: `pack` → `serve --artifact` logits
+/// must be bit-identical to serving the in-memory compression, for
+/// all four kernel formats; and the on-disk index section must cost
+/// `index_bytes()` plus only a fixed shape header.
+#[test]
+fn packed_artifact_serves_bit_identical_logits_all_formats() {
+    let dir = tmp("formats");
+    let params = MlpParams::init(51);
+    let (ip, iz) = geometry_factors(52);
+    let mut rng = Rng::new(53);
+    let x = Matrix::gaussian(4, GEOMETRY.input_dim, 0.0, 1.0, &mut rng);
+    for (fmt, name) in [
+        (KernelFormat::DenseMasked, "dense"),
+        (KernelFormat::Csr, "csr"),
+        (KernelFormat::Relative, "relative"),
+        (KernelFormat::LowRankFused, "lowrank"),
+    ] {
+        // in-memory serving path
+        let mut mem = NativeBackend::with_format(params.clone(), fmt, &ip, &iz).unwrap();
+        let want = mem.predict(&x).unwrap();
+
+        // pack → file → load → serve
+        let art = Artifact::pack_factors(params.clone(), name, &ip, &iz, "it").unwrap();
+        let path = dir.join(format!("{name}.lrbi"));
+        art.write(&path).unwrap();
+        let loaded = Artifact::read(&path).unwrap();
+        let mut srv = NativeBackend::from_artifact(&loaded).unwrap();
+        let got = srv.predict(&x).unwrap();
+        assert_eq!(got.data(), want.data(), "{name}: logits must be bit-identical");
+
+        // on-disk index section ≈ index_bytes (within the shape header)
+        let c = Container::read(&path).unwrap();
+        let kind = SectionKind::INDEX_KINDS
+            .into_iter()
+            .find(|k| c.section(*k).is_some())
+            .unwrap();
+        let section_len = c.section(kind).unwrap().len();
+        let overhead = section_len - loaded.index.index_bytes();
+        assert!(overhead <= 12, "{name}: section overhead {overhead}B > header");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Same criterion for a tiled plan with mixed per-tile ranks.
+#[test]
+fn packed_tiled_artifact_serves_bit_identical_logits() {
+    let dir = tmp("tiled");
+    let params = MlpParams::init(61);
+    let (m, n) = (params.w1.rows(), params.w1.cols());
+    let plan = TilePlan::new(2, 3);
+    let mut rng = Rng::new(62);
+    let tiles: Vec<TileFactors> = plan
+        .tiles(m, n)
+        .unwrap()
+        .iter()
+        .map(|s| {
+            let k = 4 + s.id % 3; // per-tile ranks 4..6
+            TileFactors {
+                rank: k,
+                ip: BitMatrix::from_fn(s.rows(), k, |_, _| rng.bernoulli(0.2)),
+                iz: BitMatrix::from_fn(k, s.cols(), |_, _| rng.bernoulli(0.2)),
+            }
+        })
+        .collect();
+    let stored = TiledLowRankIndex::new(m, n, plan, tiles).unwrap();
+    let index = StoredIndex::Tiled(stored);
+
+    let x = Matrix::gaussian(3, GEOMETRY.input_dim, 0.0, 1.0, &mut rng);
+    // in-memory: kernel built straight from the in-memory stored index
+    let art = Artifact {
+        params: params.clone(),
+        index,
+        meta: lrbi::store::ArtifactMeta {
+            sparsity: 0.0,
+            cost: 0.0,
+            rank: 0,
+            provenance: "it tiled".into(),
+        },
+    };
+    let mut mem = NativeBackend::from_artifact(&art).unwrap();
+    let want = mem.predict(&x).unwrap();
+
+    let path = dir.join("tiled.lrbi");
+    art.write(&path).unwrap();
+    let loaded = Artifact::read(&path).unwrap();
+    assert_eq!(loaded.index.format_name(), "tiled");
+    let mut srv = NativeBackend::from_artifact(&loaded).unwrap();
+    assert_eq!(srv.predict(&x).unwrap().data(), want.data(), "tiled logits");
+
+    // the loaded index is structurally identical, and its kernel
+    // executes without assembling the dense mask
+    let kern = build_kernel_from_stored(&loaded.index, &params.w1, None).unwrap();
+    assert_eq!(kern.name(), "tiled");
+    assert_eq!(kern.index_bytes(), art.index.index_bytes());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Property: random factor pairs round-trip through pack/load with an
+/// identical decoded mask in every storable format.
+#[test]
+fn property_pack_load_mask_roundtrip() {
+    prop::check("store roundtrip", 8, |rng| {
+        let m = prop::dim(rng, 2, 40);
+        let n = prop::dim(rng, 2, 60);
+        let k = prop::dim(rng, 1, 6);
+        let d = 0.1 + rng.next_f64() * 0.4;
+        let mut r2 = Rng::new(rng.next_u64());
+        let ip = BitMatrix::from_fn(m, k, |_, _| r2.bernoulli(d));
+        let iz = BitMatrix::from_fn(k, n, |_, _| r2.bernoulli(d));
+        for name in ["dense", "csr", "relative", "lowrank"] {
+            let stored = StoredIndex::from_factors(name, &ip, &iz).unwrap();
+            let want = stored.decode_mask().unwrap();
+            // serialize the index through a full container round-trip
+            let params = tiny_params(m, n, &mut r2);
+            let art = Artifact {
+                params,
+                index: stored,
+                meta: lrbi::store::ArtifactMeta {
+                    sparsity: want.sparsity(),
+                    cost: 0.0,
+                    rank: k as u32,
+                    provenance: "prop".into(),
+                },
+            };
+            let back = Artifact::from_bytes(art.to_bytes()).unwrap();
+            assert_eq!(back.index.decode_mask().unwrap(), want, "{name}");
+            assert_eq!(back.index.index_bytes(), art.index.index_bytes(), "{name}");
+        }
+    });
+}
+
+fn tiny_params(m: usize, n: usize, rng: &mut Rng) -> MlpParams {
+    MlpParams {
+        w0: Matrix::gaussian(3, m, 0.0, 0.5, rng),
+        b0: vec![0.0; m],
+        w1: Matrix::gaussian(m, n, 0.0, 0.5, rng),
+        b1: vec![0.0; n],
+        w2: Matrix::gaussian(n, 2, 0.0, 0.5, rng),
+        b2: vec![0.0; 2],
+    }
+}
+
+fn sample_artifact_bytes() -> Vec<u8> {
+    let mut rng = Rng::new(71);
+    let params = tiny_params(24, 36, &mut rng);
+    let ip = BitMatrix::from_fn(24, 4, |_, _| rng.bernoulli(0.3));
+    let iz = BitMatrix::from_fn(4, 36, |_, _| rng.bernoulli(0.3));
+    Artifact::pack_factors(params, "lowrank", &ip, &iz, "corruption")
+        .unwrap()
+        .to_bytes()
+}
+
+/// Corruption must always produce a typed `Error::Store` — truncated
+/// files, flipped payload bytes, bad magic, unsupported versions —
+/// and must never panic.
+#[test]
+fn corruption_yields_typed_errors_never_panics() {
+    let bytes = sample_artifact_bytes();
+    assert!(Artifact::from_bytes(bytes.clone()).is_ok());
+
+    // truncation at every prefix length
+    for cut in (0..bytes.len()).step_by(7) {
+        match Artifact::from_bytes(bytes[..cut].to_vec()) {
+            Err(Error::Store(_)) => {}
+            other => panic!("cut at {cut}: expected Error::Store, got {other:?}"),
+        }
+    }
+
+    // single-byte flips anywhere in the file
+    for i in (0..bytes.len()).step_by(3) {
+        let mut b = bytes.clone();
+        b[i] ^= 0x10;
+        match Artifact::from_bytes(b) {
+            // flips in header/table/payload are all caught...
+            Err(Error::Store(_)) => {}
+            // ...except a flip that only changes provenance text etc.
+            // is impossible: every payload byte is CRC-covered, and
+            // table/header bytes fail structural validation. A flip
+            // that produced Ok would be a checksum hole.
+            other => panic!("flip at {i}: expected Error::Store, got {other:?}"),
+        }
+    }
+
+    // bad magic
+    let mut b = bytes.clone();
+    b[0..4].copy_from_slice(b"NOPE");
+    let err = Artifact::from_bytes(b).unwrap_err();
+    assert!(err.to_string().contains("magic"), "{err}");
+
+    // unsupported version
+    let mut b = bytes.clone();
+    b[4] = 0x7F;
+    let err = Artifact::from_bytes(b).unwrap_err();
+    assert!(err.to_string().contains("version"), "{err}");
+
+    // flipped CRC field in the section table (entry 0 crc at offset 16+20)
+    let mut b = bytes.clone();
+    b[36] ^= 0xFF;
+    let err = Artifact::from_bytes(b).unwrap_err();
+    assert!(err.to_string().contains("crc"), "{err}");
+}
+
+/// End-to-end registry flow: publish from one process-lifetime,
+/// reopen, serve, hot-swap.
+#[test]
+fn registry_end_to_end() {
+    let dir = tmp("registry_e2e");
+    let params = MlpParams::init(81);
+    let (ip, iz) = geometry_factors(82);
+    let (ip2, iz2) = geometry_factors(83);
+    {
+        let mut reg = Registry::create(&dir).unwrap();
+        reg.publish(
+            "lowrank-a",
+            &Artifact::pack_factors(params.clone(), "lowrank", &ip, &iz, "e2e").unwrap(),
+        )
+        .unwrap();
+        reg.publish(
+            "csr-b",
+            &Artifact::pack_factors(params.clone(), "csr", &ip2, &iz2, "e2e").unwrap(),
+        )
+        .unwrap();
+    }
+    let reg = Registry::open(&dir).unwrap();
+    assert_eq!(reg.names(), vec!["lowrank-a", "csr-b"]);
+    let metrics = std::sync::Arc::new(lrbi::coordinator::metrics::Metrics::new());
+    let mut srv =
+        lrbi::serve::variants::VariantServer::from_registry(&reg, 4, metrics.clone()).unwrap();
+    let mut rng = Rng::new(84);
+    let x = Matrix::gaussian(1, GEOMETRY.input_dim, 0.0, 1.0, &mut rng);
+    let a = srv.predict(srv.id_of("lowrank-a").unwrap(), &x).unwrap();
+    let b = srv.predict(srv.id_of("csr-b").unwrap(), &x).unwrap();
+    assert_ne!(a.data(), b.data());
+
+    // loading "csr-b" by artifact path must serve bit-identically
+    let direct = Artifact::read(reg.path_of("csr-b").unwrap()).unwrap();
+    let mut be = NativeBackend::from_artifact(&direct).unwrap();
+    assert_eq!(be.predict(&x).unwrap().data(), b.data());
+
+    let snap = metrics.snapshot();
+    assert_eq!(snap.artifact_loads, 2);
+    assert_eq!(snap.hot_swaps, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
