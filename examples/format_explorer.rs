@@ -31,7 +31,7 @@ fn main() -> lrbi::Result<()> {
         BitMatrix::from_fn(5, 5, |i, j| data[i * 5 + j].abs() >= 0.7)
     };
     print_mask("I (Eq. 2)", &mask);
-    let csr = Csr16::encode(&mask);
+    let csr = Csr16::encode(&mask)?;
     println!("CSR: IA={:?} JA={:?}", csr.ia, csr.ja);
 
     let mut cfg = Algorithm1Config::new(2, mask.sparsity());
@@ -53,7 +53,7 @@ fn main() -> lrbi::Result<()> {
     let (mask, stats) = magnitude_mask(&w, s);
     println!("64x80 @ S={:.2} (threshold {:.3}):", stats.sparsity, stats.threshold);
     let bin = BinaryIndex::encode(&mask);
-    let c16 = Csr16::encode(&mask);
+    let c16 = Csr16::encode(&mask)?;
     let c5 = Csr5Relative::encode(&mask);
     let vit = viterbi::compress(&w, s)?;
     let f = algorithm1(&w, &Algorithm1Config::new(4, s))?;

@@ -31,7 +31,7 @@ fn main() -> lrbi::Result<()> {
 
     // Compare against binary / CSR16 / CSR5 / Viterbi (Table 1 right).
     println!("\nTable 1 (right) — FC1 index size by format:");
-    for row in format_comparison(&w, 0.95, f.index_bits(), "k=16") {
+    for row in format_comparison(&w, 0.95, f.index_bits(), "k=16")? {
         println!("  {:<12} {:>8.1} KB  {}", row.name, row.kb(), row.comment);
     }
     Ok(())

@@ -12,7 +12,7 @@ mod bench_common;
 use bench_common::{fc1_weights, quick, report_dir};
 use lrbi::bmf::algorithm1::{algorithm1, Algorithm1Config};
 use lrbi::runtime::artifacts::GEOMETRY;
-use lrbi::serve::kernels::{build_kernel, KernelFormat};
+use lrbi::serve::kernels::{build_kernel, KernelFormat, SparseKernel};
 use lrbi::tensor::Matrix;
 use lrbi::util::bench::write_table_csv;
 use lrbi::util::rng::Rng;

@@ -1,0 +1,169 @@
+//! §Perf: parallel execution-plan scaling — `spmm` wall time across
+//! threads × kernel formats × sparsity on the FC1-shaped layer. This
+//! is the repo's first machine-readable perf trajectory point: besides
+//! the human-readable table and `reports/perf_spmm_scaling.csv`, it
+//! writes `BENCH_spmm.json` at the repository root (schema
+//! `lrbi-bench-spmm-v1`, documented in README.md) so future changes
+//! have numbers to regress against.
+//!
+//!     cargo run --release --bench perf_spmm_scaling
+//!     LRBI_BENCH_QUICK=1 cargo run --release --bench perf_spmm_scaling
+
+mod bench_common;
+
+use bench_common::{fc1_weights, quick, report_dir};
+use lrbi::coordinator::pool::ExecCtx;
+use lrbi::formats::StoredIndex;
+use lrbi::runtime::artifacts::GEOMETRY;
+use lrbi::serve::kernels::{
+    build_kernel_exec, build_kernel_from_stored_exec, KernelFormat, SparseKernel,
+};
+use lrbi::tensor::Matrix;
+use lrbi::tiling::{TileFactors, TilePlan, TiledLowRankIndex};
+use lrbi::util::bench::{write_table_csv, Bench};
+use lrbi::util::bits::BitMatrix;
+use lrbi::util::rng::Rng;
+
+/// Factor density giving a boolean product of two `d`-dense rank-`k`
+/// factors a mask sparsity near `s`: solves `s = (1 - d²)^k`.
+fn factor_density(sparsity: f64, rank: usize) -> f64 {
+    (1.0 - sparsity.powf(1.0 / rank as f64)).sqrt()
+}
+
+struct Cell {
+    kernel: &'static str,
+    sparsity: f64,
+    threads: usize,
+    shards: usize,
+    index_bytes: usize,
+    spmm_ns: f64,
+}
+
+fn main() {
+    let g = GEOMETRY;
+    let w = fc1_weights(1);
+    let (m, n, rank) = (g.hidden0, g.hidden1, g.rank);
+    let mut rng = Rng::new(2);
+    let x = Matrix::gaussian(g.batch, m, 0.0, 1.0, &mut rng);
+    let thread_sweep: &[usize] = if quick() { &[1, 4] } else { &[1, 2, 4, 8] };
+    let rates: &[f64] = if quick() { &[0.9] } else { &[0.8, 0.9, 0.95] };
+
+    let mut cells: Vec<Cell> = Vec::new();
+    for &s in rates {
+        // Synthetic factors at the target sparsity: the bench measures
+        // plan execution, not Algorithm 1.
+        let d = factor_density(s, rank);
+        let mut fr = Rng::new(3);
+        let ip = BitMatrix::from_fn(m, rank, |_, _| fr.bernoulli(d));
+        let iz = BitMatrix::from_fn(rank, n, |_, _| fr.bernoulli(d));
+        // A 4×4 tiled variant of the same budget for the fifth kernel.
+        let plan = TilePlan::new(4, 4);
+        let tiles: Vec<TileFactors> = plan
+            .tiles(m, n)
+            .expect("tile plan")
+            .iter()
+            .map(|spec| {
+                let k = rank / 4;
+                TileFactors {
+                    rank: k,
+                    ip: BitMatrix::from_fn(spec.rows(), k, |_, _| {
+                        fr.bernoulli(factor_density(s, k))
+                    }),
+                    iz: BitMatrix::from_fn(k, spec.cols(), |_, _| {
+                        fr.bernoulli(factor_density(s, k))
+                    }),
+                }
+            })
+            .collect();
+        let tiled = StoredIndex::Tiled(
+            TiledLowRankIndex::new(m, n, plan, tiles).expect("tiled index"),
+        );
+
+        for &threads in thread_sweep {
+            let ctx = ExecCtx::new(threads, None);
+            println!("\nS={s:.2}, threads={threads}:");
+            let mut bench = Bench::new();
+            let mut kernels: Vec<Box<dyn SparseKernel>> = KernelFormat::ALL
+                .iter()
+                .map(|&fmt| build_kernel_exec(fmt, &w, &ip, &iz, &ctx, None).expect("build"))
+                .collect();
+            kernels.push(
+                build_kernel_from_stored_exec(&tiled, &w, &ctx, None).expect("tiled build"),
+            );
+            for kern in &kernels {
+                let _ = kern.spmm(&x).expect("warmup");
+                let label = format!("{}/S{s:.2}/t{threads}", kern.name());
+                let ns = bench.run(&label, || {
+                    let _ = std::hint::black_box(kern.spmm(&x).expect("spmm"));
+                });
+                cells.push(Cell {
+                    kernel: kern.name(),
+                    sparsity: s,
+                    threads,
+                    shards: kern.plan_shards(),
+                    index_bytes: kern.index_bytes(),
+                    spmm_ns: ns,
+                });
+            }
+        }
+    }
+
+    // speedup vs the same kernel/sparsity at threads = 1
+    let t1_ns = |kernel: &str, s: f64| {
+        cells
+            .iter()
+            .find(|c| c.kernel == kernel && c.sparsity == s && c.threads == 1)
+            .map(|c| c.spmm_ns)
+            .unwrap_or(f64::NAN)
+    };
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.kernel.to_string(),
+                format!("{:.2}", c.sparsity),
+                c.threads.to_string(),
+                c.shards.to_string(),
+                format!("{:.1}", c.spmm_ns),
+                format!("{:.3}", t1_ns(c.kernel, c.sparsity) / c.spmm_ns),
+                c.index_bytes.to_string(),
+            ]
+        })
+        .collect();
+    write_table_csv(
+        report_dir().join("perf_spmm_scaling.csv").to_str().unwrap(),
+        &["kernel", "sparsity", "threads", "shards", "spmm_ns", "speedup_vs_t1", "index_bytes"],
+        &rows,
+    )
+    .unwrap();
+
+    // Machine-readable trajectory point at the repository root.
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"schema\": \"lrbi-bench-spmm-v1\",\n");
+    json.push_str("  \"bench\": \"perf_spmm_scaling\",\n");
+    json.push_str(&format!(
+        "  \"geometry\": {{\"m\": {m}, \"n\": {n}, \"batch\": {}, \"rank\": {rank}}},\n",
+        g.batch
+    ));
+    json.push_str(&format!("  \"quick\": {},\n", quick()));
+    json.push_str("  \"results\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"sparsity\": {:.2}, \"threads\": {}, \"shards\": {}, \
+             \"spmm_ns\": {:.1}, \"speedup_vs_t1\": {:.4}, \"index_bytes\": {}}}{}\n",
+            c.kernel,
+            c.sparsity,
+            c.threads,
+            c.shards,
+            c.spmm_ns,
+            t1_ns(c.kernel, c.sparsity) / c.spmm_ns,
+            c.index_bytes,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_spmm.json");
+    std::fs::write(out, &json).expect("write BENCH_spmm.json");
+    println!("\nwrote {out} ({} cells)", cells.len());
+}

@@ -18,7 +18,7 @@ fn main() {
     let w = fc1_weights(1);
     let s = 0.95;
     let f = algorithm1(&w, &Algorithm1Config::new(16, s)).expect("algorithm1");
-    let rows_data = format_comparison(&w, s, f.index_bits(), "k=16");
+    let rows_data = format_comparison(&w, s, f.index_bits(), "k=16").expect("format comparison");
     let rows: Vec<Vec<String>> = rows_data
         .iter()
         .map(|r| vec![r.name.clone(), format!("{:.1}KB", r.kb()), r.comment.clone()])
@@ -40,7 +40,7 @@ fn main() {
     println!("\ndecode throughput (full 800x500 mask):");
     let (mask, _) = magnitude_mask(&w, s);
     let bin = BinaryIndex::encode(&mask);
-    let c16 = Csr16::encode(&mask);
+    let c16 = Csr16::encode(&mask).expect("16-bit CSR encode");
     let c5 = Csr5Relative::encode(&mask);
     let lr = LowRankIndex::encode(&f);
     let mut bench = Bench::new();

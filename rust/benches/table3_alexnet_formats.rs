@@ -23,7 +23,7 @@ fn layer_sizes(rows: usize, cols: usize, s: f64, seed: u64) -> (f64, f64, f64, f
     let w = Matrix::gaussian(sr, sc, 0.0, 0.02, &mut rng);
     let (mask, _) = magnitude_mask(&w, s);
     let bin = (rows * cols) as f64 / 8.0;
-    let c16 = Csr16::encode(&mask).index_bytes() as f64 * scale;
+    let c16 = Csr16::encode(&mask).expect("16-bit CSR encode").index_bytes() as f64 * scale;
     let c5 = Csr5Relative::encode(&mask).index_bytes() as f64 * scale;
     let vit = viterbi::index_bytes(rows, cols) as f64;
     (bin, c16, c5, vit)

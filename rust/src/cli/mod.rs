@@ -11,6 +11,7 @@ use crate::pruning::manip::ManipMethod;
 use crate::report;
 use crate::serve::batcher::BatchPolicy;
 use crate::serve::engine::{MlpParams, NativeBackend, ServingEngine};
+use crate::serve::kernels::SparseKernel;
 use crate::serve::variants::VariantServer;
 use crate::store::{Artifact, ArtifactMeta, Container, Registry};
 use crate::tensor::Matrix;
@@ -162,6 +163,7 @@ fn print_usage() {
          \x20 serve      run the serving engine on synthetic traffic\n\
          \x20            --requests N  --max-batch 64  --max-wait-ms 2\n\
          \x20            --kernel dense|csr|relative|lowrank\n\
+         \x20            --threads N   spmm plan workers (default 0 = all cores)\n\
          \x20            --artifact model.lrbi       serve a packed artifact\n\
          \x20            --registry dir [--swap name]  serve registry variants\n\
          \x20 pack       package a compressed model as a .lrbi artifact\n\
@@ -263,6 +265,26 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve `--threads` (default 0 = every available core, matching
+/// the auto-threaded dense matmul the serving path had before the
+/// plan layer; plans are bit-deterministic at any count) into the
+/// shared execution context the serving kernels' plans run on.
+fn exec_ctx_from_args(
+    args: &Args,
+    metrics: &std::sync::Arc<Metrics>,
+) -> Result<std::sync::Arc<crate::coordinator::pool::ExecCtx>> {
+    let threads: usize = args.get("threads", 0)?;
+    let threads = if threads == 0 {
+        crate::tensor::matrix::available_threads()
+    } else {
+        threads
+    };
+    Ok(crate::coordinator::pool::ExecCtx::new(
+        threads,
+        Some(std::sync::Arc::clone(metrics)),
+    ))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(dir) = args.flags.get("registry") {
         return serve_registry(args, dir);
@@ -274,6 +296,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let g = crate::runtime::artifacts::GEOMETRY;
     let metrics = std::sync::Arc::new(Metrics::new());
+    let ctx = exec_ctx_from_args(args, &metrics)?;
+    let threads = ctx.threads();
     let backend = if let Some(path) = args.flags.get("artifact") {
         if args.flags.contains_key("kernel") {
             println!("note: --kernel is ignored with --artifact (the stored format executes)");
@@ -288,7 +312,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             artifact.index.index_bytes(),
             metrics.snapshot().mean_artifact_load_ms()
         );
-        NativeBackend::from_artifact(&artifact)?.with_metrics(std::sync::Arc::clone(&metrics))
+        NativeBackend::from_artifact_exec(&artifact, ctx)?
+            .with_metrics(std::sync::Arc::clone(&metrics))
     } else {
         let format =
             crate::serve::kernels::KernelFormat::parse(&args.get_str("kernel", "dense"))?;
@@ -296,10 +321,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let mut rng = crate::util::rng::Rng::new(12);
         let ip = BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.25));
         let iz = BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.25));
-        NativeBackend::with_format(params, format, &ip, &iz)?
+        NativeBackend::with_format_exec(params, format, &ip, &iz, ctx)?
             .with_metrics(std::sync::Arc::clone(&metrics))
     };
-    println!("serving with the '{}' sparse kernel", backend.kernel_name());
+    println!(
+        "serving with the '{}' sparse kernel ({} plan shards across {threads} thread(s))",
+        backend.kernel_name(),
+        backend.kernel().plan_shards()
+    );
     let engine = ServingEngine::start(backend, policy, std::sync::Arc::clone(&metrics));
     let client = engine.client();
     let t0 = std::time::Instant::now();
@@ -329,9 +358,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         snap.mean_batch_size()
     );
     println!(
-        "kernel: {} spmm calls, mean {:.1}us each",
+        "kernel: {} spmm calls, mean {:.1}us each; {} plan shards executed",
         snap.kernel_spmms,
-        snap.mean_spmm_us()
+        snap.mean_spmm_us(),
+        snap.spmm_shards
+    );
+    println!(
+        "batcher: {} flushes, mean {:.1} req/flush",
+        snap.batch_flush_count,
+        snap.mean_flush_size()
     );
     Ok(())
 }
@@ -344,10 +379,14 @@ fn serve_registry(args: &Args, dir: &str) -> Result<()> {
     let cache_cap: usize = args.get("cache", 8)?;
     let reg = Registry::open(dir)?;
     let metrics = std::sync::Arc::new(Metrics::new());
+    let ctx = exec_ctx_from_args(args, &metrics)?;
+    let threads = ctx.threads();
     let mut srv = VariantServer::from_registry(&reg, cache_cap, std::sync::Arc::clone(&metrics))?;
+    srv.set_exec(ctx);
     let ids = srv.variant_ids();
     println!(
-        "registry {dir}: serving {} variant(s) {:?} (mean cold load {:.2}ms)",
+        "registry {dir}: serving {} variant(s) {:?} across {threads} thread(s) \
+         (mean cold load {:.2}ms)",
         ids.len(),
         reg.names(),
         metrics.snapshot().mean_artifact_load_ms()
@@ -382,6 +421,7 @@ fn serve_registry(args: &Args, dir: &str) -> Result<()> {
         snap.cache_hit_rate() * 100.0,
         snap.kernel_decodes
     );
+    println!("plans: {} shards executed across {threads} thread(s)", snap.spmm_shards);
     Ok(())
 }
 

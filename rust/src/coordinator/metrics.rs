@@ -4,6 +4,12 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+/// Kernel names in `spmm_kernel_ns` slot order. Slot `i` of
+/// [`Metrics::spmm_kernel_ns`] (and of the snapshot's array)
+/// accumulates nanoseconds spent inside `spmm` of the kernel named
+/// `SPMM_KERNEL_NAMES[i]` — pinned by a test in `serve::kernels`.
+pub const SPMM_KERNEL_NAMES: [&str; 5] = ["dense", "csr", "relative", "lowrank", "tiled"];
+
 /// Shared coordinator metrics.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -35,6 +41,18 @@ pub struct Metrics {
     pub artifact_load_ns: AtomicU64,
     /// Variant hot-swaps applied to a running server.
     pub hot_swaps: AtomicU64,
+    /// Execution-plan shards run across all plan-based `spmm` calls
+    /// (`ExecCtx::record_plan_spmm`).
+    pub spmm_shards: AtomicU64,
+    /// Nanoseconds inside plan-based `spmm`, split per kernel — slot
+    /// order is [`SPMM_KERNEL_NAMES`].
+    pub spmm_kernel_ns: [AtomicU64; 5],
+    /// Dynamic-batcher flushes (batches handed to the executor).
+    pub batch_flush_count: AtomicU64,
+    /// Total requests across all flushed batches; together with
+    /// `batch_flush_count` this makes the batch-size distribution's
+    /// mean observable in `serve` reports.
+    pub batch_size_sum: AtomicU64,
 }
 
 /// A point-in-time copy for reporting.
@@ -68,6 +86,14 @@ pub struct MetricsSnapshot {
     pub artifact_load_ns: u64,
     /// Variant hot-swaps applied.
     pub hot_swaps: u64,
+    /// Execution-plan shards run.
+    pub spmm_shards: u64,
+    /// Per-kernel plan-spmm nanoseconds ([`SPMM_KERNEL_NAMES`] order).
+    pub spmm_kernel_ns: [u64; 5],
+    /// Dynamic-batcher flushes.
+    pub batch_flush_count: u64,
+    /// Requests summed over flushed batches.
+    pub batch_size_sum: u64,
 }
 
 impl Metrics {
@@ -104,7 +130,23 @@ impl Metrics {
             artifact_loads: self.artifact_loads.load(Ordering::Relaxed),
             artifact_load_ns: self.artifact_load_ns.load(Ordering::Relaxed),
             hot_swaps: self.hot_swaps.load(Ordering::Relaxed),
+            spmm_shards: self.spmm_shards.load(Ordering::Relaxed),
+            spmm_kernel_ns: [
+                self.spmm_kernel_ns[0].load(Ordering::Relaxed),
+                self.spmm_kernel_ns[1].load(Ordering::Relaxed),
+                self.spmm_kernel_ns[2].load(Ordering::Relaxed),
+                self.spmm_kernel_ns[3].load(Ordering::Relaxed),
+                self.spmm_kernel_ns[4].load(Ordering::Relaxed),
+            ],
+            batch_flush_count: self.batch_flush_count.load(Ordering::Relaxed),
+            batch_size_sum: self.batch_size_sum.load(Ordering::Relaxed),
         }
+    }
+
+    /// Record one dynamic-batcher flush of `size` requests.
+    pub fn record_batch_flush(&self, size: usize) {
+        self.batch_flush_count.fetch_add(1, Ordering::Relaxed);
+        self.batch_size_sum.fetch_add(size as u64, Ordering::Relaxed);
     }
 
     /// Record one artifact load (disk read + decode) with wall time.
@@ -160,6 +202,17 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Mean requests per *flushed* batch — the dynamic batcher's
+    /// efficiency as measured at the flush point (unlike
+    /// [`Self::mean_batch_size`], which uses the engine-side counts).
+    pub fn mean_flush_size(&self) -> f64 {
+        if self.batch_flush_count == 0 {
+            0.0
+        } else {
+            self.batch_size_sum as f64 / self.batch_flush_count as f64
+        }
+    }
+
     /// Mean artifact cold-load time in milliseconds.
     pub fn mean_artifact_load_ms(&self) -> f64 {
         if self.artifact_loads == 0 {
@@ -205,6 +258,29 @@ mod tests {
         let s = m.snapshot();
         assert!((s.mean_decode_ms() - 2.0).abs() < 1e-12);
         assert_eq!(s.kernel_spmms, 1);
+    }
+
+    #[test]
+    fn batch_flush_distribution_recorded() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().mean_flush_size(), 0.0);
+        m.record_batch_flush(4);
+        m.record_batch_flush(8);
+        let s = m.snapshot();
+        assert_eq!(s.batch_flush_count, 2);
+        assert_eq!(s.batch_size_sum, 12);
+        assert!((s.mean_flush_size() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spmm_plan_counters_snapshot() {
+        let m = Metrics::new();
+        m.spmm_shards.fetch_add(5, Ordering::Relaxed);
+        m.spmm_kernel_ns[2].fetch_add(1234, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.spmm_shards, 5);
+        assert_eq!(s.spmm_kernel_ns, [0, 0, 1234, 0, 0]);
+        assert_eq!(SPMM_KERNEL_NAMES[2], "relative");
     }
 
     #[test]

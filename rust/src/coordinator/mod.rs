@@ -13,5 +13,5 @@ pub mod sweep;
 
 pub use jobs::{CompressionJob, JobResult};
 pub use metrics::Metrics;
-pub use pool::{parallel_map, WorkerPool};
+pub use pool::{parallel_map, ExecCtx, WorkerPool};
 pub use sweep::{compress_model, ModelCompressionReport, SweepOptions};

@@ -1,11 +1,15 @@
 //! Worker pool + data-parallel map (the substrate tokio would have
 //! provided). Bounded injection queue gives backpressure: submitters
-//! block when workers fall behind.
+//! block when workers fall behind. [`ExecCtx`] packages a thread
+//! budget plus a pool into the shared execution context the sparse
+//! kernels' `SpmmPlan`s run their shards on.
 
+use crate::coordinator::metrics::Metrics;
 use crate::util::error::{Error, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -36,7 +40,14 @@ impl WorkerPool {
                         match job {
                             Ok(job) => {
                                 queued.fetch_sub(1, Ordering::Relaxed);
-                                job();
+                                // A panicking job must not kill the
+                                // worker: the pool would silently lose
+                                // capacity. Jobs that need the panic
+                                // reported (e.g. run_indexed shards)
+                                // catch and forward it themselves.
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
                             }
                             Err(_) => break, // channel closed: shut down
                         }
@@ -69,6 +80,75 @@ impl WorkerPool {
     pub fn workers(&self) -> usize {
         self.workers.len()
     }
+
+    /// Execute `f(0)`, `f(1)`, …, `f(n-1)` on the pool, blocking until
+    /// every shard has finished. Panics inside `f` are caught on the
+    /// worker (which survives) and surfaced as
+    /// [`Error::Coordinator`] — *after* every other shard completed,
+    /// so borrowed data is never left aliased by a still-running job.
+    /// The naive wiring (submit + wait on per-job results) would hang
+    /// forever on a panicking job's never-sent result; the
+    /// catch-unwind + send-always protocol here is what makes a
+    /// poisoned shard fail the call instead of deadlocking it.
+    ///
+    /// Must not be called from inside a pool job (the nested wait
+    /// could starve the queue).
+    pub fn run_indexed(&self, n: usize, f: &(dyn Fn(usize) + Sync)) -> Result<()> {
+        let (tx, rx) = mpsc::channel::<std::thread::Result<()>>();
+        // SAFETY: every submitted job sends exactly one result (the
+        // catch_unwind guarantees the send runs even when `f` panics),
+        // and we receive all of them below before returning — so no
+        // job can outlive this call's borrow of `f`.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let mut submitted = 0usize;
+        let mut first_err: Option<Error> = None;
+        for i in 0..n {
+            let tx = tx.clone();
+            let res = self.submit(move || {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f_static(i)));
+                let _ = tx.send(r);
+            });
+            match res {
+                Ok(()) => submitted += 1,
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
+            }
+        }
+        drop(tx);
+        for _ in 0..submitted {
+            match rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(payload)) => {
+                    if first_err.is_none() {
+                        let msg = payload
+                            .downcast_ref::<String>()
+                            .cloned()
+                            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                            .unwrap_or_else(|| "<non-string panic>".into());
+                        first_err =
+                            Some(Error::Coordinator(format!("parallel shard panicked: {msg}")));
+                    }
+                }
+                // Unreachable while jobs hold sender clones; treat a
+                // closed channel as a missing result.
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err =
+                            Some(Error::Coordinator("parallel shard result lost".into()));
+                    }
+                    break;
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
 }
 
 impl Drop for WorkerPool {
@@ -76,6 +156,77 @@ impl Drop for WorkerPool {
         drop(self.tx.take()); // close channel; workers drain then exit
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+    }
+}
+
+/// Shared execution context for the sparse kernels' `SpmmPlan`s: a
+/// thread budget plus the [`WorkerPool`] that executes plan shards,
+/// with optional [`Metrics`] so every plan execution lands in
+/// `spmm_shards` / per-kernel nanosecond counters.
+///
+/// One `ExecCtx` is shared (via `Arc`) by every kernel a backend or
+/// variant server builds, so all of them draw from one pool instead
+/// of spawning per-call threads. `threads == 1` (the
+/// [`ExecCtx::single`] default, and the default of every pre-existing
+/// constructor) carries no pool and executes shards inline — plan
+/// *structure* never depends on the context, only on the index, which
+/// is what makes output bit-identical across thread counts.
+pub struct ExecCtx {
+    threads: usize,
+    pool: Option<WorkerPool>,
+    metrics: Option<Arc<Metrics>>,
+}
+
+impl ExecCtx {
+    /// Single-threaded context (no pool): shards run inline, in order.
+    pub fn single() -> Arc<ExecCtx> {
+        Arc::new(ExecCtx { threads: 1, pool: None, metrics: None })
+    }
+
+    /// Context with `threads` workers (clamped to ≥ 1; 1 means no
+    /// pool). `metrics`, when given, receives `spmm_shards` and
+    /// per-kernel spmm nanoseconds from every plan execution.
+    pub fn new(threads: usize, metrics: Option<Arc<Metrics>>) -> Arc<ExecCtx> {
+        let threads = threads.max(1);
+        let pool = (threads > 1).then(|| WorkerPool::new(threads, threads * 4));
+        Arc::new(ExecCtx { threads, pool, metrics })
+    }
+
+    /// Configured worker count (1 = inline execution).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f` over shard indices `0..shards`: inline when
+    /// single-threaded (or when there is nothing to fan out), on the
+    /// pool otherwise. Shard panics on the pool surface as
+    /// [`Error::Coordinator`]; inline panics propagate normally.
+    pub fn run(&self, shards: usize, f: impl Fn(usize) + Sync) -> Result<()> {
+        match &self.pool {
+            Some(pool) if shards > 1 => pool.run_indexed(shards, &f),
+            _ => {
+                for s in 0..shards {
+                    f(s);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Record one plan-based spmm execution: `shards` into
+    /// `Metrics::spmm_shards`, elapsed time into the per-kernel slot
+    /// (see `Metrics::spmm_kernel_ns` for the slot ↔ kernel map).
+    /// No-op without attached metrics.
+    pub fn record_plan_spmm(&self, slot: usize, shards: u64, started: Instant) {
+        if let Some(m) = &self.metrics {
+            m.spmm_shards.fetch_add(shards, std::sync::atomic::Ordering::Relaxed);
+            if let Some(c) = m.spmm_kernel_ns.get(slot) {
+                c.fetch_add(
+                    started.elapsed().as_nanos() as u64,
+                    std::sync::atomic::Ordering::Relaxed,
+                );
+            }
         }
     }
 }
@@ -186,5 +337,72 @@ mod tests {
     fn parallel_map_more_threads_than_items() {
         let items = vec![1u32, 2, 3];
         assert_eq!(parallel_map(&items, 64, |&x| x), items);
+    }
+
+    #[test]
+    fn run_indexed_executes_all_shards() {
+        let pool = WorkerPool::new(4, 16);
+        let hits: Vec<AtomicU64> = (0..37).map(|_| AtomicU64::new(0)).collect();
+        pool.run_indexed(37, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn poisoned_shard_fails_the_call_instead_of_deadlocking() {
+        let pool = WorkerPool::new(2, 8);
+        let done = Arc::new(AtomicU64::new(0));
+        let d = Arc::clone(&done);
+        let err = pool
+            .run_indexed(8, &move |i| {
+                if i == 3 {
+                    panic!("shard {i} is poisoned");
+                }
+                d.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+        assert_eq!(done.load(Ordering::Relaxed), 7, "other shards still ran");
+        // the pool survives: workers caught the unwind and keep serving
+        let ok = Arc::new(AtomicU64::new(0));
+        let o = Arc::clone(&ok);
+        pool.run_indexed(4, &move |_| {
+            o.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert_eq!(ok.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn exec_ctx_runs_inline_and_pooled() {
+        for ctx in [ExecCtx::single(), ExecCtx::new(3, None)] {
+            let hits: Vec<AtomicU64> = (0..11).map(|_| AtomicU64::new(0)).collect();
+            ctx.run(11, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+        assert_eq!(ExecCtx::single().threads(), 1);
+        assert_eq!(ExecCtx::new(0, None).threads(), 1, "clamped to >= 1");
+        assert_eq!(ExecCtx::new(4, None).threads(), 4);
+    }
+
+    #[test]
+    fn exec_ctx_records_plan_metrics() {
+        let metrics = Arc::new(Metrics::new());
+        let ctx = ExecCtx::new(2, Some(Arc::clone(&metrics)));
+        let t0 = Instant::now();
+        ctx.run(6, |_| {}).unwrap();
+        ctx.record_plan_spmm(1, 6, t0);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.spmm_shards, 6);
+        assert!(snap.spmm_kernel_ns[1] > 0);
+        assert_eq!(snap.spmm_kernel_ns[0], 0);
+        // out-of-range slot is ignored, shards still counted
+        ctx.record_plan_spmm(99, 1, Instant::now());
+        assert_eq!(metrics.snapshot().spmm_shards, 7);
     }
 }

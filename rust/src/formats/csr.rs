@@ -16,9 +16,31 @@ pub struct Csr16 {
 }
 
 impl Csr16 {
-    /// Encode a mask (panics if cols > u16::MAX, which no paper layer hits).
-    pub fn encode(mask: &BitMatrix) -> Self {
-        assert!(mask.cols() <= u16::MAX as usize + 1, "cols too large for 16-bit CSR");
+    /// Bounds a mask must satisfy to be representable: column indices
+    /// fit `JA`'s `u16` (cols ≤ 65536) and the non-zero count fits
+    /// `IA`'s `u32`. Split out from [`Csr16::encode`] so the `nnz`
+    /// bound — which would silently *wrap* `IA` into a corrupt but
+    /// plausible-looking index — is unit-testable without allocating
+    /// a four-billion-bit mask.
+    pub fn encode_bounds(cols: usize, nnz: u64) -> Result<()> {
+        if cols > u16::MAX as usize + 1 {
+            return Err(Error::invalid(format!(
+                "mask cols {cols} exceed the 16-bit CSR column range ({})",
+                u16::MAX as usize + 1
+            )));
+        }
+        if nnz > u32::MAX as u64 {
+            return Err(Error::invalid(format!(
+                "mask nnz {nnz} overflows the 32-bit CSR row pointers"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Encode a mask; rejects masks outside [`Csr16::encode_bounds`]
+    /// with a typed error instead of wrapping the indices.
+    pub fn encode(mask: &BitMatrix) -> Result<Self> {
+        Self::encode_bounds(mask.cols(), mask.count_ones())?;
         let mut ia = Vec::with_capacity(mask.rows() + 1);
         let mut ja = Vec::new();
         ia.push(0u32);
@@ -30,7 +52,7 @@ impl Csr16 {
             }
             ia.push(ja.len() as u32);
         }
-        Csr16 { rows: mask.rows(), cols: mask.cols(), ia, ja }
+        Ok(Csr16 { rows: mask.rows(), cols: mask.cols(), ia, ja })
     }
 
     /// Recover the mask.
@@ -107,7 +129,7 @@ mod tests {
             [1, 1, 0, 0],
         ];
         let mask = BitMatrix::from_fn(4, 4, |i, j| rows[i][j] == 1);
-        let csr = Csr16::encode(&mask);
+        let csr = Csr16::encode(&mask).unwrap();
         assert_eq!(csr.ia, vec![0, 2, 2, 5, 7]);
         assert_eq!(csr.ja, vec![0, 3, 0, 1, 3, 0, 1]);
     }
@@ -120,7 +142,7 @@ mod tests {
             let d = rng.next_f64();
             let mut r2 = Rng::new(rng.next_u64());
             let mask = BitMatrix::from_fn(m, n, |_, _| r2.bernoulli(d));
-            let enc = Csr16::encode(&mask);
+            let enc = Csr16::encode(&mask).unwrap();
             assert_eq!(enc.decode().unwrap(), mask);
             assert_eq!(enc.nnz() as u64, mask.count_ones());
         });
@@ -130,15 +152,18 @@ mod tests {
     fn size_tracks_nnz() {
         let dense = BitMatrix::from_fn(10, 10, |_, _| true);
         let empty = BitMatrix::zeros(10, 10);
-        assert!(Csr16::encode(&dense).index_bytes() > Csr16::encode(&empty).index_bytes());
-        assert_eq!(Csr16::encode(&empty).index_bytes(), 11 * 4);
+        assert!(
+            Csr16::encode(&dense).unwrap().index_bytes()
+                > Csr16::encode(&empty).unwrap().index_bytes()
+        );
+        assert_eq!(Csr16::encode(&empty).unwrap().index_bytes(), 11 * 4);
     }
 
     #[test]
     fn from_parts_roundtrip_and_validation() {
         let mut rng = Rng::new(11);
         let mask = BitMatrix::from_fn(9, 40, |_, _| rng.bernoulli(0.2));
-        let enc = Csr16::encode(&mask);
+        let enc = Csr16::encode(&mask).unwrap();
         let back = Csr16::from_parts(9, 40, enc.ia.clone(), enc.ja.clone()).unwrap();
         assert_eq!(back.decode().unwrap(), mask);
         // wrong IA length
@@ -156,9 +181,32 @@ mod tests {
     }
 
     #[test]
+    fn encode_bounds_reject_wide_and_overfull_masks() {
+        // within bounds: exactly at both limits
+        assert!(Csr16::encode_bounds(u16::MAX as usize + 1, u32::MAX as u64).is_ok());
+        // cols one past the 16-bit column range
+        let err = Csr16::encode_bounds(u16::MAX as usize + 2, 0).unwrap_err();
+        assert!(err.to_string().contains("column range"), "{err}");
+        assert!(matches!(err, Error::InvalidArg(_)), "typed invalid, not a panic");
+        // nnz one past what IA's u32 row pointers can address
+        let err = Csr16::encode_bounds(100, u32::MAX as u64 + 1).unwrap_err();
+        assert!(err.to_string().contains("row pointers"), "{err}");
+        assert!(matches!(err, Error::InvalidArg(_)));
+    }
+
+    #[test]
+    fn encode_rejects_too_many_columns_end_to_end() {
+        // 1 x 65537 is cheap to allocate (packed bits) but must be
+        // refused: its last column index does not fit a u16.
+        let wide = BitMatrix::zeros(1, u16::MAX as usize + 2);
+        let err = Csr16::encode(&wide).unwrap_err();
+        assert!(matches!(err, Error::InvalidArg(_)), "{err}");
+    }
+
+    #[test]
     fn corrupt_ja_detected() {
         let mask = BitMatrix::from_fn(2, 4, |i, j| i == 0 && j < 2);
-        let mut enc = Csr16::encode(&mask);
+        let mut enc = Csr16::encode(&mask).unwrap();
         enc.ja[0] = 99; // out of range
         assert!(enc.decode().is_err());
     }

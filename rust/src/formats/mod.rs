@@ -105,7 +105,7 @@ impl StoredIndex {
             "dense" | "binary" => {
                 Ok(StoredIndex::Binary(binary::BinaryIndex::encode(&ip.bool_product(iz))))
             }
-            "csr" => Ok(StoredIndex::Csr(csr::Csr16::encode(&ip.bool_product(iz)))),
+            "csr" => Ok(StoredIndex::Csr(csr::Csr16::encode(&ip.bool_product(iz))?)),
             "relative" | "csr5" => {
                 Ok(StoredIndex::Relative(relative::Csr5Relative::encode(&ip.bool_product(iz))))
             }
@@ -141,19 +141,20 @@ impl FormatRow {
 /// Compare all index formats on a mask derived from `w` at sparsity
 /// `s`; `lowrank_bits` is the proposed format's index budget in bits
 /// (k(m+n), possibly tiled). Produces the rows of Table 1 (right) /
-/// Table 3.
+/// Table 3. Errors if the mask exceeds 16-bit CSR's encodable bounds
+/// (see [`csr::Csr16::encode_bounds`]).
 pub fn format_comparison(
     w: &Matrix,
     s: f64,
     lowrank_bits: usize,
     lowrank_comment: &str,
-) -> Vec<FormatRow> {
+) -> Result<Vec<FormatRow>> {
     let (mask, _) = crate::pruning::magnitude_mask(w, s);
     let bin = binary::BinaryIndex::encode(&mask);
-    let c16 = csr::Csr16::encode(&mask);
+    let c16 = csr::Csr16::encode(&mask)?;
     let c5 = relative::Csr5Relative::encode(&mask);
     let vit_bytes = viterbi::index_bytes(mask.rows(), mask.cols());
-    vec![
+    Ok(vec![
         FormatRow {
             name: "Binary".into(),
             bytes: bin.index_bytes(),
@@ -179,7 +180,7 @@ pub fn format_comparison(
             bytes: lowrank_bits.div_ceil(8),
             comment: lowrank_comment.into(),
         },
-    ]
+    ])
 }
 
 #[cfg(test)]
@@ -210,7 +211,7 @@ mod tests {
         // FC1 800x500 at S=0.95, proposed k=16.
         let mut rng = Rng::new(1);
         let w = Matrix::gaussian(800, 500, 0.0, 0.1, &mut rng);
-        let rows = format_comparison(&w, 0.95, 16 * (800 + 500), "k=16");
+        let rows = format_comparison(&w, 0.95, 16 * (800 + 500), "k=16").unwrap();
         let get = |n: &str| rows.iter().find(|r| r.name == n).unwrap().kb();
         // paper: Binary 50.0, CSR16 45.8, CSR5 14.3, Viterbi 10.0, ours 2.6
         assert_eq!(get("Binary"), 50.0);

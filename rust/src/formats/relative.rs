@@ -247,7 +247,7 @@ mod tests {
         let mut rng = Rng::new(5);
         let mask = BitMatrix::from_fn(200, 200, |_, _| rng.bernoulli(0.05));
         let c5 = Csr5Relative::encode(&mask);
-        let c16 = crate::formats::csr::Csr16::encode(&mask);
+        let c16 = crate::formats::csr::Csr16::encode(&mask).unwrap();
         assert!(c5.index_bytes() < c16.index_bytes() / 2);
         assert!(c5.entry_count() >= c5.nnz());
     }

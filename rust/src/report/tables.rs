@@ -18,7 +18,7 @@ use std::path::Path;
 pub fn table1_right(out_dir: &Path) -> Result<String> {
     let mut rng = Rng::new(1);
     let w = Matrix::gaussian(800, 500, 0.0, 0.05, &mut rng);
-    let rows_data = format_comparison(&w, 0.95, 16 * (800 + 500), "k=16");
+    let rows_data = format_comparison(&w, 0.95, 16 * (800 + 500), "k=16")?;
     let rows: Vec<Vec<String>> = rows_data
         .iter()
         .map(|r| vec![r.name.clone(), format!("{:.1}KB", r.kb()), r.comment.clone()])
@@ -97,10 +97,10 @@ pub fn table3(out_dir: &Path) -> Result<String> {
     let sample = 1024usize;
     let mut rng = Rng::new(2);
     let w5 = Matrix::gaussian(sample, sample, 0.0, 0.02, &mut rng);
-    let rows5 = format_comparison(&w5, s, 0, "");
+    let rows5 = format_comparison(&w5, s, 0, "")?;
     let scale5 = (FC5_ROWS * FC5_COLS) as f64 / (sample * sample) as f64;
     let w6 = Matrix::gaussian(sample, sample, 0.0, 0.02, &mut rng);
-    let rows6 = format_comparison(&w6, s, 0, "");
+    let rows6 = format_comparison(&w6, s, 0, "")?;
     let scale6 = (FC6_ROWS * FC6_COLS) as f64 / (sample * sample) as f64;
 
     let (p5, _) = fc5_tiling();

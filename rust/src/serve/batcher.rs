@@ -1,8 +1,13 @@
 //! Dynamic request batcher (vLLM-router-style): accumulate requests up
 //! to `max_batch` or until `max_wait` elapses, then flush as one
-//! execution. Callers block on a per-request response channel.
+//! execution. Callers block on a per-request response channel. With
+//! metrics attached, every flush records into
+//! `Metrics::{batch_flush_count, batch_size_sum}` so the batch-size
+//! distribution the policy actually achieves is observable.
 
+use crate::coordinator::metrics::Metrics;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Batch formation policy.
@@ -34,6 +39,7 @@ pub struct DynamicBatcher<T, R> {
     rx: mpsc::Receiver<Request<T, R>>,
     policy: BatchPolicy,
     pending: Vec<Request<T, R>>,
+    metrics: Option<Arc<Metrics>>,
 }
 
 /// Client handle for submitting requests.
@@ -63,7 +69,16 @@ impl<T, R> DynamicBatcher<T, R> {
     /// queue (backpressure for over-offered load).
     pub fn new(policy: BatchPolicy, queue_cap: usize) -> (Self, BatcherClient<T, R>) {
         let (tx, rx) = mpsc::sync_channel(queue_cap);
-        (DynamicBatcher { rx, policy, pending: Vec::new() }, BatcherClient { tx })
+        (
+            DynamicBatcher { rx, policy, pending: Vec::new(), metrics: None },
+            BatcherClient { tx },
+        )
+    }
+
+    /// Attach metrics: every flushed batch records its size into
+    /// `batch_flush_count` / `batch_size_sum`.
+    pub fn attach_metrics(&mut self, metrics: Arc<Metrics>) {
+        self.metrics = Some(metrics);
     }
 
     /// Block until a batch is ready (or the channel closed and the
@@ -87,6 +102,9 @@ impl<T, R> DynamicBatcher<T, R> {
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
+        }
+        if let Some(m) = &self.metrics {
+            m.record_batch_flush(self.pending.len());
         }
         Some(std::mem::take(&mut self.pending))
     }
@@ -150,5 +168,37 @@ mod tests {
         let (mut b, client) = DynamicBatcher::<u32, u32>::new(BatchPolicy::default(), 4);
         drop(client);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn flushes_record_batch_size_distribution() {
+        let (mut b, client) = DynamicBatcher::<u32, u32>::new(
+            BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(50) },
+            16,
+        );
+        let metrics = Arc::new(Metrics::new());
+        b.attach_metrics(Arc::clone(&metrics));
+        let exec = thread::spawn(move || {
+            while let Some(batch) = b.next_batch() {
+                for r in batch {
+                    let _ = r.reply.send(r.input);
+                }
+            }
+        });
+        let callers: Vec<_> = (0..6)
+            .map(|i| {
+                let c = client.clone();
+                thread::spawn(move || c.call(i).unwrap())
+            })
+            .collect();
+        for h in callers {
+            h.join().unwrap();
+        }
+        drop(client);
+        exec.join().unwrap();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.batch_size_sum, 6, "every request counted once");
+        assert!(snap.batch_flush_count >= 3, "max_batch 2 forces >= 3 flushes");
+        assert!(snap.mean_flush_size() <= 2.0);
     }
 }

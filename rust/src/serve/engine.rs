@@ -5,12 +5,14 @@
 //! compressed representation instead of always decoding to dense.
 
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::ExecCtx;
 use crate::runtime::artifacts::GEOMETRY;
 use crate::runtime::client::{literal_matrix, matrix_literal, Runtime};
 use crate::serve::batcher::{BatchPolicy, BatcherClient, DynamicBatcher};
 use crate::formats::StoredIndex;
 use crate::serve::kernels::{
-    build_kernel, build_kernel_from_stored, DenseMaskedKernel, KernelFormat, SparseKernel,
+    build_kernel_exec, build_kernel_from_stored_exec, DenseMaskedKernel, KernelFormat,
+    SparseKernel,
 };
 use crate::store::Artifact;
 use crate::tensor::Matrix;
@@ -99,6 +101,9 @@ pub struct NativeBackend {
     kernel: Box<dyn SparseKernel>,
     batch: usize,
     metrics: Option<Arc<Metrics>>,
+    /// Execution context the kernel's plan shards run on; shared with
+    /// any kernel rebuilt by `update_factors`.
+    ctx: Arc<ExecCtx>,
 }
 
 impl NativeBackend {
@@ -109,15 +114,37 @@ impl NativeBackend {
     }
 
     /// Build from params + binary factors, executing the masked layer
-    /// with the kernel for `format`.
+    /// with the kernel for `format` (single-threaded plans; see
+    /// [`NativeBackend::with_format_exec`] for the parallel path).
     pub fn with_format(
         params: MlpParams,
         format: KernelFormat,
         ip: &BitMatrix,
         iz: &BitMatrix,
     ) -> Result<Self> {
-        let kernel = build_kernel(format, &params.w1, ip, iz, None)?;
-        Ok(NativeBackend { params, format, kernel, batch: GEOMETRY.batch, metrics: None })
+        Self::with_format_exec(params, format, ip, iz, ExecCtx::single())
+    }
+
+    /// [`NativeBackend::with_format`] with an explicit execution
+    /// context: the masked layer's plan shards run across `ctx`'s
+    /// worker pool (`lrbi serve --threads N`). Output is
+    /// bit-identical to the single-threaded build.
+    pub fn with_format_exec(
+        params: MlpParams,
+        format: KernelFormat,
+        ip: &BitMatrix,
+        iz: &BitMatrix,
+        ctx: Arc<ExecCtx>,
+    ) -> Result<Self> {
+        let kernel = build_kernel_exec(format, &params.w1, ip, iz, &ctx, None)?;
+        Ok(NativeBackend {
+            params,
+            format,
+            kernel,
+            batch: GEOMETRY.batch,
+            metrics: None,
+            ctx,
+        })
     }
 
     /// Build from a loaded `.lrbi` artifact: the stored index decodes
@@ -126,7 +153,14 @@ impl NativeBackend {
     /// mask), and the artifact's dense params become the model —
     /// Algorithm 1 is not re-run.
     pub fn from_artifact(artifact: &Artifact) -> Result<Self> {
-        let kernel = build_kernel_from_stored(&artifact.index, &artifact.params.w1, None)?;
+        Self::from_artifact_exec(artifact, ExecCtx::single())
+    }
+
+    /// [`NativeBackend::from_artifact`] with an explicit execution
+    /// context for the kernel's plan shards.
+    pub fn from_artifact_exec(artifact: &Artifact, ctx: Arc<ExecCtx>) -> Result<Self> {
+        let kernel =
+            build_kernel_from_stored_exec(&artifact.index, &artifact.params.w1, &ctx, None)?;
         // The nearest selectable format, used only if factors are
         // later swapped in via `update_factors`.
         let format = match &artifact.index {
@@ -141,6 +175,7 @@ impl NativeBackend {
             kernel,
             batch: GEOMETRY.batch,
             metrics: None,
+            ctx,
         })
     }
 
@@ -154,6 +189,7 @@ impl NativeBackend {
             kernel,
             batch: GEOMETRY.batch,
             metrics: None,
+            ctx: ExecCtx::single(),
         })
     }
 
@@ -175,10 +211,17 @@ impl NativeBackend {
     }
 
     /// Swap in new factors (e.g. after a re-compression): rebuilds the
-    /// kernel once, keeping the configured format.
+    /// kernel once, keeping the configured format and execution
+    /// context.
     pub fn update_factors(&mut self, ip: &BitMatrix, iz: &BitMatrix) -> Result<()> {
-        self.kernel =
-            build_kernel(self.format, &self.params.w1, ip, iz, self.metrics.as_deref())?;
+        self.kernel = build_kernel_exec(
+            self.format,
+            &self.params.w1,
+            ip,
+            iz,
+            &self.ctx,
+            self.metrics.as_deref(),
+        )?;
         Ok(())
     }
 }
@@ -288,6 +331,7 @@ impl ServingEngine {
     ) -> Self {
         let (mut batcher, client) =
             DynamicBatcher::<Vec<f32>, Result<Vec<f32>>>::new(policy, 1024);
+        batcher.attach_metrics(Arc::clone(&metrics));
         let m = Arc::clone(&metrics);
         let handle = std::thread::Builder::new()
             .name("lrbi-serving".into())
@@ -484,6 +528,33 @@ mod tests {
         let snap = metrics.snapshot();
         assert_eq!(snap.requests, 16);
         assert!(snap.batches >= 2, "expected batching, got {} batches", snap.batches);
+        // the batcher-side distribution counters agree with the
+        // engine-side totals
+        assert_eq!(snap.batch_size_sum, 16);
+        assert_eq!(snap.batch_flush_count, snap.batches);
+        assert!(snap.mean_flush_size() > 1.0, "batching should coalesce requests");
+    }
+
+    #[test]
+    fn exec_backend_serves_identical_logits_to_single_threaded() {
+        let params = MlpParams::init(33);
+        let g = GEOMETRY;
+        let mut rng = Rng::new(34);
+        let ip = BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.25));
+        let iz = BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.25));
+        let x = Matrix::gaussian(2, g.input_dim, 0.0, 1.0, &mut rng);
+        for fmt in KernelFormat::ALL {
+            let mut single = NativeBackend::with_format(params.clone(), fmt, &ip, &iz).unwrap();
+            let ctx = crate::coordinator::pool::ExecCtx::new(4, None);
+            let mut pooled =
+                NativeBackend::with_format_exec(params.clone(), fmt, &ip, &iz, ctx).unwrap();
+            assert_eq!(
+                pooled.predict(&x).unwrap().data(),
+                single.predict(&x).unwrap().data(),
+                "{}",
+                fmt.name()
+            );
+        }
     }
 
     #[test]

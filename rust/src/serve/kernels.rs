@@ -20,17 +20,42 @@
 //! into a single `n/64`-word tile, consumes it, and reuses the buffer
 //! for the next row — the in-register analogue of the paper's on-chip
 //! decompressor.
+//!
+//! Every kernel compiles an **execution plan** at build time (see
+//! `serve::plan`): a one-time analysis of its index that
+//! partitions the work into conflict-free, cache-sized shards, which
+//! `spmm` then runs across the shared
+//! [`ExecCtx`](crate::coordinator::pool::ExecCtx). Shard partitions
+//! depend only on the index — never on the thread count — and every
+//! reduction keeps a fixed shard→merge order, so parallel output is
+//! bit-identical to `threads = 1` (pinned by `tests/kernels.rs`).
 
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::ExecCtx;
 use crate::formats::csr::Csr16;
 use crate::formats::relative::{Csr5Relative, MAX_GAP};
 use crate::formats::StoredIndex;
+use crate::serve::plan::{
+    lock_tile_scratch, shard_ranges, tile_col_shards, CscPlan, OutCell, RelShard, RelativePlan,
+    RowShards, TileColShard, MAX_SHARDS, REDUCE_COLS_FACTOR, SHARD_COLS, SHARD_NNZ,
+};
+use crate::tensor::matrix::matmul_bt_cols;
 use crate::tensor::Matrix;
 use crate::tiling::TiledLowRankIndex;
 use crate::util::bits::BitMatrix;
 use crate::util::error::{Error, Result};
 use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::Instant;
+
+/// Metrics slots per kernel: indexes into `Metrics::spmm_kernel_ns`,
+/// matching `coordinator::metrics::SPMM_KERNEL_NAMES` (pinned by a
+/// test below).
+const SLOT_DENSE: usize = 0;
+const SLOT_CSR: usize = 1;
+const SLOT_RELATIVE: usize = 2;
+const SLOT_LOWRANK: usize = 3;
+const SLOT_TILED: usize = 4;
 
 /// A sparse-execution strategy for the masked layer.
 ///
@@ -50,6 +75,11 @@ pub trait SparseKernel: Send {
     fn rows(&self) -> usize;
     /// Mask cols `n` (the layer's output width).
     fn cols(&self) -> usize;
+    /// Conflict-free shards this kernel's execution plan partitions
+    /// `spmm` into (1 = effectively sequential).
+    fn plan_shards(&self) -> usize {
+        1
+    }
 }
 
 /// Which [`SparseKernel`] the serving engine runs — selected per
@@ -136,7 +166,8 @@ fn check_input(x: &Matrix, m: usize) -> Result<()> {
 }
 
 /// Build the kernel for `format` over layer weights `w` and the
-/// factorized index `(I_p, I_z)`. When `metrics` is given, the build
+/// factorized index `(I_p, I_z)`, executing single-threaded (the
+/// [`ExecCtx::single`] context). When `metrics` is given, the build
 /// (the per-format decode/encode step) is counted into
 /// `kernel_decodes` / `kernel_decode_ns`.
 pub fn build_kernel(
@@ -146,15 +177,37 @@ pub fn build_kernel(
     iz: &BitMatrix,
     metrics: Option<&Metrics>,
 ) -> Result<Box<dyn SparseKernel>> {
+    build_kernel_exec(format, w, ip, iz, &ExecCtx::single(), metrics)
+}
+
+/// [`build_kernel`] with an explicit execution context: the kernel's
+/// plan shards run across `ctx`'s worker pool. The plan itself is
+/// identical for every context (shard partitions depend only on the
+/// index), so the same factors + weights produce bit-identical `spmm`
+/// output at any thread count.
+pub fn build_kernel_exec(
+    format: KernelFormat,
+    w: &Matrix,
+    ip: &BitMatrix,
+    iz: &BitMatrix,
+    ctx: &Arc<ExecCtx>,
+    metrics: Option<&Metrics>,
+) -> Result<Box<dyn SparseKernel>> {
     check_factor_shapes(w, ip, iz)?;
     let t0 = Instant::now();
     let kernel: Box<dyn SparseKernel> = match format {
-        KernelFormat::DenseMasked => {
-            Box::new(DenseMaskedKernel::from_mask(w, &ip.bool_product(iz))?)
+        KernelFormat::DenseMasked => Box::new(
+            DenseMaskedKernel::from_mask(w, &ip.bool_product(iz))?.with_exec(Arc::clone(ctx)),
+        ),
+        KernelFormat::Csr => {
+            Box::new(CsrKernel::new(w, &ip.bool_product(iz))?.with_exec(Arc::clone(ctx)))
         }
-        KernelFormat::Csr => Box::new(CsrKernel::new(w, &ip.bool_product(iz))?),
-        KernelFormat::Relative => Box::new(RelativeKernel::new(w, &ip.bool_product(iz))?),
-        KernelFormat::LowRankFused => Box::new(LowRankFusedKernel::new(w, ip, iz)?),
+        KernelFormat::Relative => {
+            Box::new(RelativeKernel::new(w, &ip.bool_product(iz))?.with_exec(Arc::clone(ctx)))
+        }
+        KernelFormat::LowRankFused => {
+            Box::new(LowRankFusedKernel::new(w, ip, iz)?.with_exec(Arc::clone(ctx)))
+        }
     };
     if let Some(m) = metrics {
         m.kernel_decodes.fetch_add(1, Ordering::Relaxed);
@@ -175,16 +228,31 @@ pub fn build_kernel_from_stored(
     w: &Matrix,
     metrics: Option<&Metrics>,
 ) -> Result<Box<dyn SparseKernel>> {
+    build_kernel_from_stored_exec(stored, w, &ExecCtx::single(), metrics)
+}
+
+/// [`build_kernel_from_stored`] with an explicit execution context
+/// (see [`build_kernel_exec`] for the determinism contract).
+pub fn build_kernel_from_stored_exec(
+    stored: &StoredIndex,
+    w: &Matrix,
+    ctx: &Arc<ExecCtx>,
+    metrics: Option<&Metrics>,
+) -> Result<Box<dyn SparseKernel>> {
     let t0 = Instant::now();
     let kernel: Box<dyn SparseKernel> = match stored {
-        StoredIndex::Binary(b) => Box::new(DenseMaskedKernel::from_mask(w, &b.decode())?),
-        StoredIndex::Csr(c) => Box::new(CsrKernel::from_encoded(w, c)?),
-        StoredIndex::Relative(r) => Box::new(RelativeKernel::from_stream(w, r)?),
+        StoredIndex::Binary(b) => {
+            Box::new(DenseMaskedKernel::from_mask(w, &b.decode())?.with_exec(Arc::clone(ctx)))
+        }
+        StoredIndex::Csr(c) => Box::new(CsrKernel::from_encoded(w, c)?.with_exec(Arc::clone(ctx))),
+        StoredIndex::Relative(r) => {
+            Box::new(RelativeKernel::from_stream(w, r)?.with_exec(Arc::clone(ctx)))
+        }
         StoredIndex::LowRank(l) => {
             let (ip, iz) = l.factors()?;
-            Box::new(LowRankFusedKernel::new(w, &ip, &iz)?)
+            Box::new(LowRankFusedKernel::new(w, &ip, &iz)?.with_exec(Arc::clone(ctx)))
         }
-        StoredIndex::Tiled(t) => Box::new(TiledLowRankKernel::new(w, t)?),
+        StoredIndex::Tiled(t) => Box::new(TiledLowRankKernel::new(w, t)?.with_exec(Arc::clone(ctx))),
     };
     if let Some(m) = metrics {
         m.kernel_decodes.fetch_add(1, Ordering::Relaxed);
@@ -195,12 +263,23 @@ pub fn build_kernel_from_stored(
 }
 
 /// Baseline: the mask is decoded to dense once and burned into a
-/// pre-masked copy of `W`; `spmm` is a plain dense matmul. This is
-/// exactly what the engine did before the kernel layer existed, kept
-/// as the reference point every other kernel is measured against.
+/// pre-masked copy of `W`, which the plan also stores transposed so
+/// `spmm` runs the register-blocked, B-transposed micro-kernel
+/// (`tensor::matrix::matmul_bt_cols`) over output-column shards — an
+/// honest dense baseline that scales with the same `ExecCtx` the
+/// sparse kernels use. Each output element is a single dot product
+/// computed entirely by one shard, so sharding never changes a bit.
 pub struct DenseMaskedKernel {
-    w_masked: Matrix,
+    m: usize,
+    n: usize,
+    /// The pre-masked weight, stored transposed (`n × m`): contiguous
+    /// columns for the output-stationary micro-kernel — the only copy
+    /// the kernel keeps.
+    wt: Matrix,
+    /// Output-column shard ranges (~[`SHARD_COLS`] columns each).
+    shards: Vec<(usize, usize)>,
     index_bytes: usize,
+    ctx: Arc<ExecCtx>,
 }
 
 impl DenseMaskedKernel {
@@ -208,12 +287,28 @@ impl DenseMaskedKernel {
     pub fn from_mask(w: &Matrix, mask: &BitMatrix) -> Result<Self> {
         check_mask_shape(w, mask)?;
         let w_masked = crate::pruning::prune_with_mask(w, mask)?;
-        Ok(DenseMaskedKernel { w_masked, index_bytes: mask.index_bytes() })
+        let wt = w_masked.transpose();
+        let shards = shard_ranges(w_masked.cols(), SHARD_COLS);
+        Ok(DenseMaskedKernel {
+            m: w_masked.rows(),
+            n: w_masked.cols(),
+            wt,
+            shards,
+            index_bytes: mask.index_bytes(),
+            ctx: ExecCtx::single(),
+        })
     }
 
-    /// The pre-masked weight (for oracles in tests/benches).
-    pub fn weights(&self) -> &Matrix {
-        &self.w_masked
+    /// Attach the execution context the plan shards run on.
+    pub fn with_exec(mut self, ctx: Arc<ExecCtx>) -> Self {
+        self.ctx = ctx;
+        self
+    }
+
+    /// The pre-masked weight, transposed (`n × m`) — the layout the
+    /// micro-kernel executes from (for oracles in tests/benches).
+    pub fn weights_t(&self) -> &Matrix {
+        &self.wt
     }
 }
 
@@ -222,94 +317,18 @@ impl SparseKernel for DenseMaskedKernel {
         "dense"
     }
     fn spmm(&self, x: &Matrix) -> Result<Matrix> {
-        x.matmul(&self.w_masked)
-    }
-    fn index_bytes(&self) -> usize {
-        self.index_bytes
-    }
-    fn rows(&self) -> usize {
-        self.w_masked.rows()
-    }
-    fn cols(&self) -> usize {
-        self.w_masked.cols()
-    }
-}
-
-/// CSR gather-accumulate: `JA` column indices walk each weight row's
-/// survivors; the surviving weights are packed contiguously in `vals`
-/// (the gather happens once at build), so `spmm` touches only live
-/// entries — work is O(batch · nnz), not O(batch · m · n).
-pub struct CsrKernel {
-    m: usize,
-    n: usize,
-    ia: Vec<u32>,
-    ja: Vec<u16>,
-    vals: Vec<f32>,
-    index_bytes: usize,
-}
-
-impl CsrKernel {
-    /// Encode the mask as CSR and gather the surviving weights. The
-    /// freshly-encoded `IA`/`JA` arrays are *moved* into the kernel —
-    /// no copy on the factor path.
-    pub fn new(w: &Matrix, mask: &BitMatrix) -> Result<Self> {
-        check_mask_shape(w, mask)?;
-        let csr = Csr16::encode(mask);
-        let vals = gather_csr_vals(w, &csr)?;
-        Ok(CsrKernel {
-            m: csr.rows(),
-            n: csr.cols(),
-            index_bytes: csr.index_bytes(),
-            ia: csr.ia,
-            ja: csr.ja,
-            vals,
-        })
-    }
-
-    /// Build directly from an already-encoded CSR index (the artifact
-    /// load path, where the index is borrowed from the artifact) —
-    /// gathers surviving weights without touching a dense mask. The
-    /// gather order is identical to [`CsrKernel::new`], so the two
-    /// construction paths produce bit-identical `spmm` output.
-    pub fn from_encoded(w: &Matrix, csr: &Csr16) -> Result<Self> {
-        let vals = gather_csr_vals(w, csr)?;
-        Ok(CsrKernel {
-            m: csr.rows(),
-            n: csr.cols(),
-            ia: csr.ia.clone(),
-            ja: csr.ja.clone(),
-            vals,
-            index_bytes: csr.index_bytes(),
-        })
-    }
-
-    /// Stored non-zeros.
-    pub fn nnz(&self) -> usize {
-        self.vals.len()
-    }
-}
-
-impl SparseKernel for CsrKernel {
-    fn name(&self) -> &'static str {
-        "csr"
-    }
-    fn spmm(&self, x: &Matrix) -> Result<Matrix> {
-        check_input(x, self.m)?;
+        let (m, n) = (self.m, self.n);
+        check_input(x, m)?;
         let batch = x.rows();
-        let mut out = Matrix::zeros(batch, self.n);
-        for b in 0..batch {
-            let xrow = x.row(b);
-            let orow = &mut out.data_mut()[b * self.n..(b + 1) * self.n];
-            for (i, &xv) in xrow.iter().enumerate() {
-                if xv == 0.0 {
-                    continue;
-                }
-                let (a, e) = (self.ia[i] as usize, self.ia[i + 1] as usize);
-                for (j, v) in self.ja[a..e].iter().zip(&self.vals[a..e]) {
-                    orow[*j as usize] += xv * v;
-                }
-            }
-        }
+        let mut out = Matrix::zeros(batch, n);
+        let t0 = Instant::now();
+        let cell = OutCell::new(out.data_mut());
+        let (xd, wt) = (x.data(), self.wt.data());
+        self.ctx.run(self.shards.len(), |s| {
+            // SAFETY: shards own disjoint output-column ranges.
+            unsafe { matmul_bt_cols(xd, wt, cell.at(0), batch, m, n, self.shards[s]) };
+        })?;
+        self.ctx.record_plan_spmm(SLOT_DENSE, self.shards.len() as u64, t0);
         Ok(out)
     }
     fn index_bytes(&self) -> usize {
@@ -320,6 +339,86 @@ impl SparseKernel for CsrKernel {
     }
     fn cols(&self) -> usize {
         self.n
+    }
+    fn plan_shards(&self) -> usize {
+        self.shards.len().max(1)
+    }
+}
+
+/// CSR executed output-stationary: at build, the freshly-gathered
+/// `IA`/`JA`/values are transposed once to CSC (the plan), so shards
+/// own disjoint output-column ranges and threads never contend on an
+/// output row — each output element is one register-accumulated dot
+/// product over its column's survivors. Work stays O(batch · nnz).
+pub struct CsrKernel {
+    m: usize,
+    n: usize,
+    plan: CscPlan,
+    index_bytes: usize,
+    ctx: Arc<ExecCtx>,
+}
+
+impl CsrKernel {
+    /// Encode the mask as CSR, gather the surviving weights, and
+    /// compile the CSC execution plan.
+    pub fn new(w: &Matrix, mask: &BitMatrix) -> Result<Self> {
+        check_mask_shape(w, mask)?;
+        let csr = Csr16::encode(mask)?;
+        Self::from_encoded(w, &csr)
+    }
+
+    /// Build directly from an already-encoded CSR index (the artifact
+    /// load path, where the index is borrowed from the artifact) —
+    /// gathers surviving weights without touching a dense mask. The
+    /// gather and transpose order is identical to [`CsrKernel::new`],
+    /// so the two construction paths produce bit-identical `spmm`
+    /// output.
+    pub fn from_encoded(w: &Matrix, csr: &Csr16) -> Result<Self> {
+        let vals = gather_csr_vals(w, csr)?;
+        Ok(CsrKernel {
+            m: csr.rows(),
+            n: csr.cols(),
+            plan: CscPlan::build(csr.rows(), csr.cols(), &csr.ia, &csr.ja, &vals),
+            index_bytes: csr.index_bytes(),
+            ctx: ExecCtx::single(),
+        })
+    }
+
+    /// Attach the execution context the plan shards run on.
+    pub fn with_exec(mut self, ctx: Arc<ExecCtx>) -> Self {
+        self.ctx = ctx;
+        self
+    }
+
+    /// Stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.plan.nnz()
+    }
+}
+
+impl SparseKernel for CsrKernel {
+    fn name(&self) -> &'static str {
+        "csr"
+    }
+    fn spmm(&self, x: &Matrix) -> Result<Matrix> {
+        check_input(x, self.m)?;
+        let mut out = Matrix::zeros(x.rows(), self.n);
+        let t0 = Instant::now();
+        self.plan.execute(x, &mut out, &self.ctx)?;
+        self.ctx.record_plan_spmm(SLOT_CSR, self.plan.shard_count() as u64, t0);
+        Ok(out)
+    }
+    fn index_bytes(&self) -> usize {
+        self.index_bytes
+    }
+    fn rows(&self) -> usize {
+        self.m
+    }
+    fn cols(&self) -> usize {
+        self.n
+    }
+    fn plan_shards(&self) -> usize {
+        self.plan.shard_count().max(1)
     }
 }
 
@@ -356,52 +455,84 @@ fn gather_csr_vals(w: &Matrix, csr: &Csr16) -> Result<Vec<f32>> {
 /// Relative-index streaming: the 5-bit gap stream of
 /// [`Csr5Relative`] is walked entry-by-entry, decode fused with the
 /// accumulate — the mask is never expanded, matching how Deep
-/// Compression's decompressor consumes the stream. Work is inherently
-/// sequential per stream (each position depends on the running cursor),
-/// which is exactly the parallelism limitation the paper's low-rank
-/// format removes.
+/// Compression's decompressor consumes the stream. The stream is
+/// sequential *per cursor* (each position depends on the running
+/// cursor — the paper's §1 parallelism complaint), but the gather
+/// walk at build time records **skip pointers** (stream offset +
+/// value index + running cursor, `plan::RelShard`) at cache-sized
+/// intervals, and with them the stream decodes shard-parallel:
+/// per-shard partials merge in fixed shard order, so output stays
+/// bit-identical to the sequential walk at any thread count. That a
+/// one-pass index of `3 · usize` per ~2048 entries converts
+/// Deep Compression's sequential-decode format into a parallel one is
+/// itself a measurable observation — see the `perf_spmm_scaling`
+/// bench.
 pub struct RelativeKernel {
     m: usize,
     n: usize,
     entries: Vec<u8>,
     /// Surviving weights in stream order (fillers carry no value).
     vals: Vec<f32>,
+    plan: RelativePlan,
     index_bytes: usize,
+    ctx: Arc<ExecCtx>,
 }
 
 impl RelativeKernel {
-    /// Encode the mask as a gap stream and gather surviving weights in
-    /// stream order. The freshly-encoded entry stream is *moved* into
-    /// the kernel — no copy on the factor path.
+    /// Encode the mask as a gap stream, gather surviving weights in
+    /// stream order, and record the skip pointers — one fused walk.
+    /// The freshly-encoded entry stream is *moved* into the kernel —
+    /// no copy on the factor path.
     pub fn new(w: &Matrix, mask: &BitMatrix) -> Result<Self> {
         check_mask_shape(w, mask)?;
         let stream = Csr5Relative::encode(mask);
-        let vals = gather_stream_vals(w, &stream)?;
+        let (vals, plan) = gather_stream_vals(w, &stream)?;
         let (m, n, index_bytes) = (stream.rows(), stream.cols(), stream.index_bytes());
-        Ok(RelativeKernel { m, n, entries: stream.into_entries(), vals, index_bytes })
+        Ok(RelativeKernel {
+            m,
+            n,
+            entries: stream.into_entries(),
+            vals,
+            plan,
+            index_bytes,
+            ctx: ExecCtx::single(),
+        })
     }
 
     /// Build directly from an already-encoded gap stream (the artifact
     /// load path, where the stream is borrowed from the artifact): the
-    /// stream is walked once to gather surviving weights, fusing the
-    /// only decode this kernel ever does with the value gather — the
-    /// mask is never expanded.
+    /// stream is walked once to gather surviving weights and record
+    /// skip pointers, fusing the only decode this kernel ever does
+    /// with the value gather — the mask is never expanded.
     pub fn from_stream(w: &Matrix, stream: &Csr5Relative) -> Result<Self> {
-        let vals = gather_stream_vals(w, stream)?;
+        let (vals, plan) = gather_stream_vals(w, stream)?;
         Ok(RelativeKernel {
             m: stream.rows(),
             n: stream.cols(),
             entries: stream.entries().to_vec(),
             vals,
+            plan,
             index_bytes: stream.index_bytes(),
+            ctx: ExecCtx::single(),
         })
+    }
+
+    /// Attach the execution context the plan shards run on.
+    pub fn with_exec(mut self, ctx: Arc<ExecCtx>) -> Self {
+        self.ctx = ctx;
+        self
     }
 }
 
-/// Shape-check a gap stream against `w` and gather the surviving
-/// weights in stream order (shared by both `RelativeKernel`
-/// constructors so their gather order is identical).
-fn gather_stream_vals(w: &Matrix, stream: &Csr5Relative) -> Result<Vec<f32>> {
+/// Shape-check a gap stream against `w`, gather the surviving weights
+/// in stream order, and record the skip-pointer plan — one walk,
+/// shared by both `RelativeKernel` constructors so gather order *and*
+/// shard partition are identical on both construction paths. A shard
+/// closes after ~[`SHARD_NNZ`] surviving weights (at least
+/// `nnz / MAX_SHARDS`, keeping the count capped); its successor
+/// starts at the entry right after the closing non-zero, so any
+/// filler run stays with the non-zero it precedes.
+fn gather_stream_vals(w: &Matrix, stream: &Csr5Relative) -> Result<(Vec<f32>, RelativePlan)> {
     if stream.rows() != w.rows() || stream.cols() != w.cols() {
         return Err(Error::shape(format!(
             "relative index {}x{} vs W {}x{}",
@@ -413,25 +544,48 @@ fn gather_stream_vals(w: &Matrix, stream: &Csr5Relative) -> Result<Vec<f32>> {
     }
     let n = stream.cols();
     let total = stream.rows() * n;
+    let entries = stream.entries();
+    // Shard size: cache-sized, capped in count, and at least
+    // REDUCE_COLS_FACTOR·n non-zeros so the ordered partial merge
+    // (2·batch·n streamed ops per shard) stays a small fraction of
+    // the shard's own work.
+    let per = stream
+        .nnz()
+        .div_ceil(MAX_SHARDS)
+        .max(SHARD_NNZ)
+        .max(REDUCE_COLS_FACTOR * n);
     let mut vals = Vec::with_capacity(stream.nnz());
+    let mut shards = Vec::new();
+    let (mut e0, mut v0, mut pos0) = (0usize, 0usize, 0usize);
+    let mut run_start = 0usize; // first entry after the last non-zero
     let mut pos = 0usize;
     let mut pending = 0u32;
-    for &e in stream.entries() {
+    for (idx, &e) in entries.iter().enumerate() {
         if e as u32 == MAX_GAP {
             pending += MAX_GAP;
             continue;
         }
-        pos += (pending + e as u32) as usize;
+        let p = pos + (pending + e as u32) as usize;
         pending = 0;
-        if pos >= total {
+        if p >= total {
             return Err(Error::store(format!(
                 "relative stream runs past the {total}-element mask"
             )));
         }
-        vals.push(w.get(pos / n, pos % n));
-        pos += 1;
+        if !vals.is_empty() && vals.len() % per == 0 {
+            shards.push(RelShard { e0, e1: run_start, v0, pos0 });
+            e0 = run_start;
+            v0 = vals.len();
+            pos0 = pos;
+        }
+        vals.push(w.get(p / n, p % n));
+        pos = p + 1;
+        run_start = idx + 1;
     }
-    Ok(vals)
+    if e0 < entries.len() {
+        shards.push(RelShard { e0, e1: entries.len(), v0, pos0 });
+    }
+    Ok((vals, RelativePlan { shards }))
 }
 
 impl SparseKernel for RelativeKernel {
@@ -440,31 +594,12 @@ impl SparseKernel for RelativeKernel {
     }
     fn spmm(&self, x: &Matrix) -> Result<Matrix> {
         check_input(x, self.m)?;
-        let batch = x.rows();
-        let n = self.n;
-        let mut out = Matrix::zeros(batch, n);
-        // Stream outer, batch inner: the sequential cursor decode runs
-        // once per call, and every decoded (i, j) is applied to all
-        // batch rows while it is hot.
-        let mut pos = 0usize;
-        let mut pending = 0u32;
-        let mut vi = 0usize;
-        for &e in &self.entries {
-            if e as u32 == MAX_GAP {
-                pending += MAX_GAP;
-                continue;
-            }
-            pos += (pending + e as u32) as usize;
-            pending = 0;
-            let (i, j) = (pos / n, pos % n);
-            let v = self.vals[vi];
-            let odata = out.data_mut();
-            for b in 0..batch {
-                odata[b * n + j] += x.get(b, i) * v;
-            }
-            vi += 1;
-            pos += 1;
-        }
+        let mut out = Matrix::zeros(x.rows(), self.n);
+        let t0 = Instant::now();
+        // Stream outer, batch inner within each shard: every decoded
+        // (i, j) is applied to all batch rows while it is hot.
+        self.plan.execute(&self.entries, &self.vals, self.n, x, &mut out, &self.ctx)?;
+        self.ctx.record_plan_spmm(SLOT_RELATIVE, self.plan.shard_count() as u64, t0);
         Ok(out)
     }
     fn index_bytes(&self) -> usize {
@@ -475,6 +610,9 @@ impl SparseKernel for RelativeKernel {
     }
     fn cols(&self) -> usize {
         self.n
+    }
+    fn plan_shards(&self) -> usize {
+        self.plan.shard_count().max(1)
     }
 }
 
@@ -490,13 +628,53 @@ pub struct LowRankFusedKernel {
     w: Matrix,
     ip: BitMatrix,
     iz: BitMatrix,
+    /// Row-range reduction shards with persistent per-shard scratch
+    /// tiles — every row's expansion is independent (the parallelism
+    /// the paper claims for the format), so rows shard freely and
+    /// per-shard partials merge in fixed shard order.
+    row_shards: RowShards,
+    ctx: Arc<ExecCtx>,
 }
 
 impl LowRankFusedKernel {
-    /// Capture weights + packed factors; no decode happens here.
+    /// Capture weights + packed factors and partition the mask rows
+    /// into the plan's shards; no decode happens here.
     pub fn new(w: &Matrix, ip: &BitMatrix, iz: &BitMatrix) -> Result<Self> {
         check_factor_shapes(w, ip, iz)?;
-        Ok(LowRankFusedKernel { w: w.clone(), ip: ip.clone(), iz: iz.clone() })
+        let (m, n, k) = (w.rows(), w.cols(), ip.cols());
+        // Estimate the expanded mask's non-zeros from the factor
+        // densities (independence approximation) and size row shards
+        // so each carries ≥ REDUCE_COLS_FACTOR·n of them — keeping the
+        // ordered partial merge a small fraction of shard work. The
+        // estimate depends only on the index, so the partition stays
+        // identical across construction paths and thread counts.
+        let density = if k == 0 || m == 0 || n == 0 {
+            0.0
+        } else {
+            let dp = ip.count_ones() as f64 / (m * k) as f64;
+            let dz = iz.count_ones() as f64 / (k * n) as f64;
+            1.0 - (1.0 - dp * dz).powi(k as i32)
+        };
+        let est_nnz = ((m * n) as f64 * density) as usize;
+        let target_rows = if est_nnz == 0 {
+            m.max(1) // effectively empty mask: one shard, no merge
+        } else {
+            (REDUCE_COLS_FACTOR * n * m).div_ceil(est_nnz)
+        };
+        let row_shards = RowShards::new(m, n.div_ceil(64), target_rows);
+        Ok(LowRankFusedKernel {
+            w: w.clone(),
+            ip: ip.clone(),
+            iz: iz.clone(),
+            row_shards,
+            ctx: ExecCtx::single(),
+        })
+    }
+
+    /// Attach the execution context the plan shards run on.
+    pub fn with_exec(mut self, ctx: Arc<ExecCtx>) -> Self {
+        self.ctx = ctx;
+        self
     }
 
     /// Rank of the factorization.
@@ -514,47 +692,50 @@ impl SparseKernel for LowRankFusedKernel {
         check_input(x, m)?;
         let batch = x.rows();
         let mut out = Matrix::zeros(batch, n);
-        let words = n.div_ceil(64);
-        let mut tile = vec![0u64; words];
-        for i in 0..m {
-            // Expand mask row i: OR the I_z rows named by I_p row i.
-            tile.fill(0);
-            let mut any = false;
-            for (wi, &w) in self.ip.row_words(i).iter().enumerate() {
-                let mut bits = w;
-                while bits != 0 {
-                    let l = wi * 64 + bits.trailing_zeros() as usize;
-                    bits &= bits - 1;
-                    if l >= k {
-                        break;
-                    }
-                    for (t, &z) in tile.iter_mut().zip(self.iz.row_words(l)) {
-                        *t |= z;
-                    }
-                    any = true;
-                }
-            }
-            if !any {
-                continue; // fully pruned row
-            }
-            // Consume the tile against W row i for every batch row.
-            let wrow = self.w.row(i);
-            for b in 0..batch {
-                let xv = x.get(b, i);
-                if xv == 0.0 {
-                    continue;
-                }
-                let orow = &mut out.data_mut()[b * n..(b + 1) * n];
-                for (wi, &word) in tile.iter().enumerate() {
-                    let mut bits = word;
+        let t0 = Instant::now();
+        self.row_shards.execute(batch, n, &mut out, &self.ctx, |(r0, r1), tile, part| {
+            for i in r0..r1 {
+                // Expand mask row i: OR the I_z rows named by I_p row i.
+                tile.fill(0);
+                let mut any = false;
+                for (wi, &w) in self.ip.row_words(i).iter().enumerate() {
+                    let mut bits = w;
                     while bits != 0 {
-                        let j = wi * 64 + bits.trailing_zeros() as usize;
+                        let l = wi * 64 + bits.trailing_zeros() as usize;
                         bits &= bits - 1;
-                        orow[j] += xv * wrow[j];
+                        if l >= k {
+                            break;
+                        }
+                        for (t, &z) in tile.iter_mut().zip(self.iz.row_words(l)) {
+                            *t |= z;
+                        }
+                        any = true;
+                    }
+                }
+                if !any {
+                    continue; // fully pruned row
+                }
+                // Consume the tile against W row i for every batch row.
+                let wrow = self.w.row(i);
+                for b in 0..batch {
+                    let xv = x.get(b, i);
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let orow = &mut part[b * n..(b + 1) * n];
+                    for (wi, &word) in tile.iter().enumerate() {
+                        let mut bits = word;
+                        while bits != 0 {
+                            let j = wi * 64 + bits.trailing_zeros() as usize;
+                            bits &= bits - 1;
+                            orow[j] += xv * wrow[j];
+                        }
                     }
                 }
             }
-        }
+        })?;
+        self.ctx
+            .record_plan_spmm(SLOT_LOWRANK, self.row_shards.shard_count() as u64, t0);
         Ok(out)
     }
     fn index_bytes(&self) -> usize {
@@ -565,6 +746,9 @@ impl SparseKernel for LowRankFusedKernel {
     }
     fn cols(&self) -> usize {
         self.w.cols()
+    }
+    fn plan_shards(&self) -> usize {
+        self.row_shards.shard_count().max(1)
     }
 }
 
@@ -579,11 +763,19 @@ pub struct TiledLowRankKernel {
     w: Matrix,
     specs: Vec<crate::tiling::TileSpec>,
     tiles: Vec<crate::tiling::TileFactors>,
+    /// Tile-column shards: every tile's contribution lands only in
+    /// its own column range, so tiles sharing a column range form one
+    /// shard (executed in tile-row order) and shards own disjoint
+    /// output columns — conflict-free, no merge step, and the same
+    /// accumulation order as sequential tile-id execution.
+    col_shards: Vec<TileColShard>,
     index_bytes: usize,
+    ctx: Arc<ExecCtx>,
 }
 
 impl TiledLowRankKernel {
-    /// Capture weights + per-tile factors; no mask assembly happens.
+    /// Capture weights + per-tile factors and group tiles into
+    /// tile-column shards; no mask assembly happens.
     pub fn new(w: &Matrix, index: &TiledLowRankIndex) -> Result<Self> {
         if index.m != w.rows() || index.n != w.cols() {
             return Err(Error::shape(format!(
@@ -597,12 +789,21 @@ impl TiledLowRankKernel {
         // One validation pass yields the specs the kernel executes
         // with; the factors are cloned once, for ownership only.
         let specs = index.validated_specs()?;
+        let col_shards = tile_col_shards(&specs);
         Ok(TiledLowRankKernel {
             w: w.clone(),
+            col_shards,
             specs,
             index_bytes: index.index_bytes(),
             tiles: index.tiles.clone(),
+            ctx: ExecCtx::single(),
         })
+    }
+
+    /// Attach the execution context the plan shards run on.
+    pub fn with_exec(mut self, ctx: Arc<ExecCtx>) -> Self {
+        self.ctx = ctx;
+        self
     }
 
     /// Number of tiles executed.
@@ -620,57 +821,61 @@ impl SparseKernel for TiledLowRankKernel {
         check_input(x, m)?;
         let batch = x.rows();
         let mut out = Matrix::zeros(batch, n);
-        let max_words = self
-            .specs
-            .iter()
-            .map(|s| s.cols().div_ceil(64))
-            .max()
-            .unwrap_or(0);
-        let mut tile = vec![0u64; max_words];
-        for (spec, f) in self.specs.iter().zip(&self.tiles) {
-            let words = spec.cols().div_ceil(64);
-            for li in 0..spec.rows() {
-                let i = spec.r0 + li;
-                // Expand this tile's mask row li into the tile buffer.
-                tile[..words].fill(0);
-                let mut any = false;
-                for (wi, &pw) in f.ip.row_words(li).iter().enumerate() {
-                    let mut bits = pw;
-                    while bits != 0 {
-                        let l = wi * 64 + bits.trailing_zeros() as usize;
-                        bits &= bits - 1;
-                        if l >= f.rank {
-                            break;
-                        }
-                        for (t, &z) in tile[..words].iter_mut().zip(f.iz.row_words(l)) {
-                            *t |= z;
-                        }
-                        any = true;
-                    }
-                }
-                if !any {
-                    continue; // fully pruned tile row
-                }
-                // Consume against W row i, columns [c0, c1).
-                let wrow = self.w.row(i);
-                for b in 0..batch {
-                    let xv = x.get(b, i);
-                    if xv == 0.0 {
-                        continue;
-                    }
-                    let orow = &mut out.data_mut()[b * n..(b + 1) * n];
-                    for (wi, &word) in tile[..words].iter().enumerate() {
-                        let mut bits = word;
+        let t0 = Instant::now();
+        let cell = OutCell::new(out.data_mut());
+        self.ctx.run(self.col_shards.len(), |s| {
+            let shard = &self.col_shards[s];
+            let mut scratch = lock_tile_scratch(shard);
+            let tile = scratch.as_mut_slice();
+            for &ti in &shard.tiles {
+                let (spec, f) = (&self.specs[ti], &self.tiles[ti]);
+                let words = spec.cols().div_ceil(64);
+                for li in 0..spec.rows() {
+                    let i = spec.r0 + li;
+                    // Expand this tile's mask row li into the buffer.
+                    tile[..words].fill(0);
+                    let mut any = false;
+                    for (wi, &pw) in f.ip.row_words(li).iter().enumerate() {
+                        let mut bits = pw;
                         while bits != 0 {
-                            let lj = wi * 64 + bits.trailing_zeros() as usize;
+                            let l = wi * 64 + bits.trailing_zeros() as usize;
                             bits &= bits - 1;
-                            let j = spec.c0 + lj;
-                            orow[j] += xv * wrow[j];
+                            if l >= f.rank {
+                                break;
+                            }
+                            for (t, &z) in tile[..words].iter_mut().zip(f.iz.row_words(l)) {
+                                *t |= z;
+                            }
+                            any = true;
+                        }
+                    }
+                    if !any {
+                        continue; // fully pruned tile row
+                    }
+                    // Consume against W row i, columns [c0, c1).
+                    let wrow = self.w.row(i);
+                    for b in 0..batch {
+                        let xv = x.get(b, i);
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        for (wi, &word) in tile[..words].iter().enumerate() {
+                            let mut bits = word;
+                            while bits != 0 {
+                                let lj = wi * 64 + bits.trailing_zeros() as usize;
+                                bits &= bits - 1;
+                                let j = spec.c0 + lj;
+                                // SAFETY: this shard exclusively owns
+                                // output columns [spec.c0, spec.c1).
+                                unsafe { cell.add(b * n + j, xv * wrow[j]) };
+                            }
                         }
                     }
                 }
             }
-        }
+        })?;
+        self.ctx
+            .record_plan_spmm(SLOT_TILED, self.col_shards.len() as u64, t0);
         Ok(out)
     }
     fn index_bytes(&self) -> usize {
@@ -681,6 +886,9 @@ impl SparseKernel for TiledLowRankKernel {
     }
     fn cols(&self) -> usize {
         self.w.cols()
+    }
+    fn plan_shards(&self) -> usize {
+        self.col_shards.len().max(1)
     }
 }
 
@@ -780,6 +988,79 @@ mod tests {
                 loaded.spmm(&x).unwrap().data(),
                 direct.spmm(&x).unwrap().data(),
                 "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn metrics_slots_match_kernel_names() {
+        use crate::coordinator::metrics::SPMM_KERNEL_NAMES;
+        assert_eq!(SPMM_KERNEL_NAMES[SLOT_DENSE], "dense");
+        assert_eq!(SPMM_KERNEL_NAMES[SLOT_CSR], "csr");
+        assert_eq!(SPMM_KERNEL_NAMES[SLOT_RELATIVE], "relative");
+        assert_eq!(SPMM_KERNEL_NAMES[SLOT_LOWRANK], "lowrank");
+        assert_eq!(SPMM_KERNEL_NAMES[SLOT_TILED], "tiled");
+    }
+
+    #[test]
+    fn plans_shard_large_layers_and_record_metrics() {
+        // Large enough that every format's plan splits into > 1 shard.
+        let (w, ip, iz) = setup(8, 300, 260, 6);
+        let mut rng = Rng::new(11);
+        let x = Matrix::gaussian(2, 300, 0.0, 1.0, &mut rng);
+        let metrics = Arc::new(Metrics::new());
+        let ctx = ExecCtx::new(4, Some(Arc::clone(&metrics)));
+        for fmt in KernelFormat::ALL {
+            let kern = build_kernel_exec(fmt, &w, &ip, &iz, &ctx, None).unwrap();
+            assert!(
+                kern.plan_shards() > 1,
+                "{} plan should shard a 300x260 layer, got {}",
+                fmt.name(),
+                kern.plan_shards()
+            );
+            kern.spmm(&x).unwrap();
+        }
+        let snap = metrics.snapshot();
+        assert!(snap.spmm_shards > 4, "shards recorded: {}", snap.spmm_shards);
+        for (slot, ns) in snap.spmm_kernel_ns.iter().enumerate().take(4) {
+            assert!(*ns > 0, "slot {slot} got no time");
+        }
+    }
+
+    #[test]
+    fn spmm_with_empty_batch_returns_empty_matrix() {
+        // Regression: the multi-shard merge path must tolerate batch 0
+        // (merge_partials would otherwise hit chunks_exact(0)).
+        let (w, ip, iz) = setup(9, 310, 270, 6); // large enough to shard
+        let x = Matrix::zeros(0, 310);
+        for fmt in KernelFormat::ALL {
+            let kern = build_kernel(fmt, &w, &ip, &iz, None).unwrap();
+            assert!(kern.plan_shards() > 1, "{}", fmt.name());
+            let out = kern.spmm(&x).unwrap();
+            assert_eq!((out.rows(), out.cols()), (0, 270), "{}", fmt.name());
+        }
+    }
+
+    #[test]
+    fn exec_ctx_kernels_match_single_threaded_bitwise() {
+        let (w, ip, iz) = setup(6, 150, 170, 5);
+        let mut rng = Rng::new(12);
+        let x = Matrix::gaussian(3, 150, 0.0, 1.0, &mut rng);
+        let ctx = ExecCtx::new(3, None);
+        for fmt in KernelFormat::ALL {
+            let single = build_kernel(fmt, &w, &ip, &iz, None).unwrap();
+            let pooled = build_kernel_exec(fmt, &w, &ip, &iz, &ctx, None).unwrap();
+            assert_eq!(
+                single.plan_shards(),
+                pooled.plan_shards(),
+                "{}: plan must not depend on the context",
+                fmt.name()
+            );
+            assert_eq!(
+                pooled.spmm(&x).unwrap().data(),
+                single.spmm(&x).unwrap().data(),
+                "{}",
+                fmt.name()
             );
         }
     }

@@ -2,15 +2,21 @@
 //! cache, and sparse-execution kernels that run the masked layer
 //! directly on each index representation (or the PJRT artifact path;
 //! the native kernels keep the full pipeline testable without
-//! artifacts).
+//! artifacts). Each kernel compiles a shard-parallel execution plan
+//! (`plan`) run on the coordinator's shared
+//! [`ExecCtx`](crate::coordinator::pool::ExecCtx).
 
 pub mod batcher;
 pub mod cache;
 pub mod engine;
 pub mod kernels;
+pub(crate) mod plan;
 pub mod variants;
 
 pub use batcher::{BatchPolicy, DynamicBatcher};
 pub use cache::LruCache;
 pub use engine::{InferenceBackend, NativeBackend, ServingEngine};
-pub use kernels::{build_kernel, build_kernel_from_stored, KernelFormat, SparseKernel};
+pub use kernels::{
+    build_kernel, build_kernel_exec, build_kernel_from_stored, build_kernel_from_stored_exec,
+    KernelFormat, SparseKernel,
+};

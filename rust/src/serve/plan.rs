@@ -1,0 +1,488 @@
+//! `SpmmPlan` infrastructure: build-time analysis that partitions each
+//! kernel's index into conflict-free, cache-sized shards, executed
+//! across the shared [`ExecCtx`] (the coordinator's worker pool).
+//!
+//! Two shard disciplines cover all kernels:
+//!
+//! - **Output-disjoint shards** own exclusive output-column ranges and
+//!   write the shared output directly ([`CscPlan`] for CSR, the dense
+//!   kernel's column blocks, the tiled kernel's tile-column shards
+//!   from [`tile_col_shards`]). No merge step exists, so there is
+//!   nothing to reorder.
+//! - **Reduction shards** split the reduction axis (mask rows for the
+//!   fused low-rank kernel via [`RowShards`], stream segments for the
+//!   relative kernel via [`RelativePlan`]); each shard accumulates
+//!   into a private partial buffer and partials merge in **fixed shard
+//!   order**.
+//!
+//! Determinism contract (pinned by
+//! `tests/kernels.rs::parallel_spmm_bit_identical_across_thread_counts`):
+//! the shard partition depends only on the index — never on the thread
+//! count — and every floating-point accumulation order is fixed by the
+//! plan, so `spmm` output is bit-identical for any `threads`.
+
+use crate::coordinator::pool::ExecCtx;
+use crate::formats::relative::MAX_GAP;
+use crate::tensor::Matrix;
+use crate::util::error::Result;
+use std::sync::Mutex;
+
+/// Cap on reduction shards per plan: bounds partial-buffer memory at
+/// `MAX_SHARDS · batch · n` floats regardless of layer size.
+pub(crate) const MAX_SHARDS: usize = 32;
+/// Target non-zeros per CSR-column / relative-stream shard — a few
+/// L1-sized index+value blocks of work per shard.
+pub(crate) const SHARD_NNZ: usize = 2048;
+/// Target mask rows per low-rank row shard.
+pub(crate) const SHARD_ROWS: usize = 32;
+/// Target output columns per dense shard (micro-kernel panel width).
+pub(crate) const SHARD_COLS: usize = 64;
+/// Floor on a *reduction* shard's non-zeros as a multiple of the
+/// output width `n`: every partial costs `2·batch·n` streamed ops
+/// (zero-init + ordered merge), so requiring ≥ `REDUCE_COLS_FACTOR·n`
+/// non-zeros per shard bounds that overhead at `2/REDUCE_COLS_FACTOR`
+/// of the shard's own scattered MACs — the desk-check argument that
+/// single-threaded plan execution stays within a few percent of the
+/// old direct scalar loops (output-disjoint plans have no merge and
+/// pay nothing).
+pub(crate) const REDUCE_COLS_FACTOR: usize = 8;
+
+/// Raw shared pointer into an output buffer that shards write
+/// disjointly — the plan layer's analogue of `pool::SliceCell`.
+pub(crate) struct OutCell(*mut f32);
+// SAFETY: shards address provably disjoint index sets (disjoint
+// columns, or disjoint partial-buffer ranges), so concurrent writes
+// never alias; the cell never outlives the borrowed buffer.
+unsafe impl Send for OutCell {}
+unsafe impl Sync for OutCell {}
+
+impl OutCell {
+    /// Wrap a buffer for disjoint shard writes.
+    pub(crate) fn new(s: &mut [f32]) -> Self {
+        OutCell(s.as_mut_ptr())
+    }
+
+    /// Pointer to element `off`.
+    ///
+    /// # Safety
+    /// `off` must be in bounds and the addressed elements must not be
+    /// concurrently accessed by any other shard.
+    pub(crate) unsafe fn at(&self, off: usize) -> *mut f32 {
+        unsafe { self.0.add(off) }
+    }
+
+    /// `*self[off] += v`.
+    ///
+    /// # Safety
+    /// Same contract as [`OutCell::at`].
+    pub(crate) unsafe fn add(&self, off: usize, v: f32) {
+        unsafe { *self.0.add(off) += v };
+    }
+}
+
+/// Split `0..total` into contiguous ranges of ~`target` items, capped
+/// at [`MAX_SHARDS`]. Deterministic in `(total, target)` only.
+pub(crate) fn shard_ranges(total: usize, target: usize) -> Vec<(usize, usize)> {
+    if total == 0 {
+        return Vec::new();
+    }
+    let count = total.div_ceil(target.max(1)).clamp(1, MAX_SHARDS);
+    let per = total.div_ceil(count);
+    (0..count)
+        .map(|s| (s * per, ((s + 1) * per).min(total)))
+        .filter(|(a, b)| a < b)
+        .collect()
+}
+
+/// Merge `partials` (one `len`-sized buffer per shard, concatenated)
+/// into `out` in ascending shard order — the fixed merge order that
+/// keeps reduction-sharded output independent of thread count.
+pub(crate) fn merge_partials(out: &mut [f32], partials: &[f32]) {
+    if out.is_empty() {
+        return; // batch 0: nothing to merge (chunks_exact(0) would panic)
+    }
+    for part in partials.chunks_exact(out.len()) {
+        for (o, p) in out.iter_mut().zip(part) {
+            *o += *p;
+        }
+    }
+}
+
+/// Output-stationary CSC execution plan for the CSR kernel: `IA`/`JA`
+/// and the gathered values are transposed to CSC once at build, so
+/// each shard owns a disjoint output-column range and every output
+/// element is a register-accumulated dot product over that column's
+/// entries (rows ascending) — threads never contend on an output row,
+/// and the accumulation order per element is fixed by the plan.
+pub(crate) struct CscPlan {
+    m: usize,
+    n: usize,
+    /// Column pointers, len `n + 1`.
+    cp: Vec<u32>,
+    /// Row index per entry, ascending within each column.
+    ri: Vec<u32>,
+    /// Value per entry, CSC order.
+    vals: Vec<f32>,
+    /// Output-column ranges with ~[`SHARD_NNZ`] entries each.
+    shards: Vec<(usize, usize)>,
+}
+
+impl CscPlan {
+    /// Transpose a CSR index (+ gathered values in `IA`/`JA` order)
+    /// to the column-major plan. The counting transpose is stable, so
+    /// rows appear in ascending order within each column no matter
+    /// which construction path supplied the CSR arrays.
+    pub(crate) fn build(m: usize, n: usize, ia: &[u32], ja: &[u16], vals: &[f32]) -> Self {
+        let nnz = vals.len();
+        let mut cp = vec![0u32; n + 1];
+        for &j in ja {
+            cp[j as usize + 1] += 1;
+        }
+        for j in 0..n {
+            cp[j + 1] += cp[j];
+        }
+        let mut cursor: Vec<u32> = cp[..n].to_vec();
+        let mut ri = vec![0u32; nnz];
+        let mut cv = vec![0f32; nnz];
+        for i in 0..m {
+            for p in ia[i] as usize..ia[i + 1] as usize {
+                let j = ja[p] as usize;
+                let dst = cursor[j] as usize;
+                cursor[j] += 1;
+                ri[dst] = i as u32;
+                cv[dst] = vals[p];
+            }
+        }
+        let shards = Self::col_shards(&cp, n, nnz);
+        CscPlan { m, n, cp, ri, vals: cv, shards }
+    }
+
+    /// Greedy column ranges accumulating ~`SHARD_NNZ` entries each
+    /// (at least `nnz / MAX_SHARDS`, so the shard count stays capped).
+    fn col_shards(cp: &[u32], n: usize, nnz: usize) -> Vec<(usize, usize)> {
+        if nnz == 0 || n == 0 {
+            return Vec::new();
+        }
+        let per = nnz.div_ceil(MAX_SHARDS).max(SHARD_NNZ);
+        let mut shards = Vec::new();
+        let mut c0 = 0usize;
+        let mut acc = 0usize;
+        for j in 0..n {
+            acc += (cp[j + 1] - cp[j]) as usize;
+            if acc >= per {
+                shards.push((c0, j + 1));
+                c0 = j + 1;
+                acc = 0;
+            }
+        }
+        if c0 < n {
+            shards.push((c0, n));
+        }
+        shards
+    }
+
+    /// Shards in the plan.
+    pub(crate) fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Stored non-zeros.
+    pub(crate) fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Run the plan: `out += x · (sparse)` with `out` pre-zeroed.
+    pub(crate) fn execute(&self, x: &Matrix, out: &mut Matrix, ctx: &ExecCtx) -> Result<()> {
+        let batch = x.rows();
+        let (m, n) = (self.m, self.n);
+        let xd = x.data();
+        let cell = OutCell::new(out.data_mut());
+        ctx.run(self.shards.len(), |s| {
+            let (c0, c1) = self.shards[s];
+            for b in 0..batch {
+                let xrow = &xd[b * m..(b + 1) * m];
+                for j in c0..c1 {
+                    let (a, e) = (self.cp[j] as usize, self.cp[j + 1] as usize);
+                    if a == e {
+                        continue;
+                    }
+                    let mut acc = 0f32;
+                    for (r, v) in self.ri[a..e].iter().zip(&self.vals[a..e]) {
+                        acc += xrow[*r as usize] * v;
+                    }
+                    // SAFETY: shard `s` exclusively owns columns
+                    // [c0, c1) of every output row.
+                    unsafe { cell.add(b * n + j, acc) };
+                }
+            }
+        })
+    }
+}
+
+/// One relative-stream shard: a skip pointer into the gap stream —
+/// entry range `[e0, e1)`, the index `v0` of its first surviving
+/// weight, and the running flat-position cursor `pos0` (the position
+/// one past the previous shard's last non-zero). Recorded during the
+/// gather walk, these let the nominally sequential 5-bit stream resume
+/// decoding from any shard boundary — the observation that makes
+/// Deep-Compression-style relative indexing row-parallel after all.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct RelShard {
+    /// First stream entry of the shard.
+    pub e0: usize,
+    /// One past the last stream entry of the shard.
+    pub e1: usize,
+    /// Index into the gathered values at `e0`.
+    pub v0: usize,
+    /// Flat mask position the cursor resumes from.
+    pub pos0: usize,
+}
+
+/// Skip-pointer plan over a [`Csr5Relative`](crate::formats::relative)
+/// gap stream. Shards split the reduction (the stream), so execution
+/// accumulates into per-shard partials merged in shard order.
+pub(crate) struct RelativePlan {
+    pub(crate) shards: Vec<RelShard>,
+}
+
+impl RelativePlan {
+    /// Shards in the plan.
+    pub(crate) fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Run the plan: decode each shard's stream segment from its skip
+    /// pointer, fused with the accumulate, into a private partial;
+    /// merge partials in fixed shard order. With a single shard the
+    /// partial *is* the output buffer (merging one partial into zeros
+    /// is the identity, so this is bit-identical, just cheaper).
+    pub(crate) fn execute(
+        &self,
+        entries: &[u8],
+        vals: &[f32],
+        n: usize,
+        x: &Matrix,
+        out: &mut Matrix,
+        ctx: &ExecCtx,
+    ) -> Result<()> {
+        let batch = x.rows();
+        if self.shards.len() <= 1 {
+            if let Some(sh) = self.shards.first() {
+                decode_rel_shard(sh, entries, vals, n, x, out.data_mut());
+            }
+            return Ok(());
+        }
+        let bn = batch * n;
+        let mut partials = vec![0f32; self.shards.len() * bn];
+        let cell = OutCell::new(&mut partials);
+        ctx.run(self.shards.len(), |s| {
+            // SAFETY: shard `s` exclusively owns partial range
+            // [s*bn, (s+1)*bn).
+            let part = unsafe { std::slice::from_raw_parts_mut(cell.at(s * bn), bn) };
+            decode_rel_shard(&self.shards[s], entries, vals, n, x, part);
+        })?;
+        merge_partials(out.data_mut(), &partials);
+        Ok(())
+    }
+}
+
+/// Decode one stream segment from its skip pointer, accumulating
+/// `x[b][i] * v` into `out[b*n + j]` for every non-zero `(i, j)` it
+/// places — the same fused decode-compute loop the kernel always ran,
+/// now restartable mid-stream.
+fn decode_rel_shard(
+    sh: &RelShard,
+    entries: &[u8],
+    vals: &[f32],
+    n: usize,
+    x: &Matrix,
+    out: &mut [f32],
+) {
+    let batch = x.rows();
+    let mut pos = sh.pos0;
+    let mut pending = 0u32;
+    let mut vi = sh.v0;
+    for &e in &entries[sh.e0..sh.e1] {
+        if e as u32 == MAX_GAP {
+            pending += MAX_GAP;
+            continue;
+        }
+        pos += (pending + e as u32) as usize;
+        pending = 0;
+        let (i, j) = (pos / n, pos % n);
+        let v = vals[vi];
+        for b in 0..batch {
+            out[b * n + j] += x.get(b, i) * v;
+        }
+        vi += 1;
+        pos += 1;
+    }
+}
+
+/// Row-range reduction shards for the fused low-rank kernel, each with
+/// a persistent scratch tile (`n/64` packed words) so per-call
+/// execution never allocates the expansion buffer — the in-register
+/// decompressor's working set lives in the plan.
+pub(crate) struct RowShards {
+    shards: Vec<(usize, usize)>,
+    scratch: Vec<Mutex<Vec<u64>>>,
+}
+
+impl RowShards {
+    /// Partition `m` mask rows into shards of ≥ `target_rows` rows
+    /// (the caller sizes the target so each shard carries enough
+    /// non-zeros to amortize its merge — see [`REDUCE_COLS_FACTOR`]),
+    /// each owning a zeroed `words`-long scratch tile.
+    pub(crate) fn new(m: usize, words: usize, target_rows: usize) -> Self {
+        let shards = shard_ranges(m, target_rows.max(SHARD_ROWS));
+        let scratch = shards.iter().map(|_| Mutex::new(vec![0u64; words])).collect();
+        RowShards { shards, scratch }
+    }
+
+    /// Shards in the plan.
+    pub(crate) fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Run `body(rows, scratch, partial)` per shard and merge partials
+    /// in fixed shard order (single shard: straight into `out`).
+    pub(crate) fn execute(
+        &self,
+        batch: usize,
+        n: usize,
+        out: &mut Matrix,
+        ctx: &ExecCtx,
+        body: impl Fn((usize, usize), &mut [u64], &mut [f32]) + Sync,
+    ) -> Result<()> {
+        let k = self.shards.len();
+        if k == 0 {
+            return Ok(());
+        }
+        if k == 1 {
+            let mut scratch = lock_scratch(&self.scratch[0]);
+            body(self.shards[0], scratch.as_mut_slice(), out.data_mut());
+            return Ok(());
+        }
+        let bn = batch * n;
+        let mut partials = vec![0f32; k * bn];
+        let cell = OutCell::new(&mut partials);
+        ctx.run(k, |s| {
+            // SAFETY: shard `s` exclusively owns partial range
+            // [s*bn, (s+1)*bn); its scratch Mutex is locked by exactly
+            // one shard.
+            let part = unsafe { std::slice::from_raw_parts_mut(cell.at(s * bn), bn) };
+            let mut scratch = lock_scratch(&self.scratch[s]);
+            body(self.shards[s], scratch.as_mut_slice(), part);
+        })?;
+        merge_partials(out.data_mut(), &partials);
+        Ok(())
+    }
+}
+
+/// Lock a shard's scratch tile, ignoring poison: the tile is
+/// re-zeroed before every use, so content after a panicked shard is
+/// irrelevant, and refusing the lock would wedge the kernel forever.
+fn lock_scratch(m: &Mutex<Vec<u64>>) -> std::sync::MutexGuard<'_, Vec<u64>> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// One tile-column shard of the tiled low-rank plan: the tiles (in
+/// ascending tile-row order) that share an output-column range, plus a
+/// persistent scratch tile sized for the widest of them. Because a
+/// tile's contributions land only in its own column range, tile-column
+/// shards own disjoint output columns — conflict-free with no merge
+/// step, and the within-column accumulation order (tile-rows
+/// ascending) matches sequential tile-id execution exactly.
+pub(crate) struct TileColShard {
+    /// Output-column range `[c0, c1)` this shard exclusively owns.
+    pub cols: (usize, usize),
+    /// Tile ids in ascending tile-row order.
+    pub tiles: Vec<usize>,
+    /// Persistent expansion buffer (widest member tile's words).
+    pub scratch: Mutex<Vec<u64>>,
+}
+
+/// Group tile specs into tile-column shards (specs are in row-major
+/// tile-id order, so ids within a group stay in tile-row order).
+pub(crate) fn tile_col_shards(specs: &[crate::tiling::TileSpec]) -> Vec<TileColShard> {
+    let mut shards: Vec<(usize, usize, Vec<usize>, usize)> = Vec::new();
+    for (idx, spec) in specs.iter().enumerate() {
+        let words = spec.cols().div_ceil(64);
+        match shards.iter().position(|(c0, c1, _, _)| (*c0, *c1) == (spec.c0, spec.c1)) {
+            Some(at) => {
+                shards[at].2.push(idx);
+                shards[at].3 = shards[at].3.max(words);
+            }
+            None => shards.push((spec.c0, spec.c1, vec![idx], words)),
+        }
+    }
+    shards
+        .into_iter()
+        .map(|(c0, c1, tiles, words)| TileColShard {
+            cols: (c0, c1),
+            tiles,
+            scratch: Mutex::new(vec![0u64; words]),
+        })
+        .collect()
+}
+
+/// Lock a tile-column shard's scratch (poison-tolerant, like
+/// [`RowShards`]' scratch).
+pub(crate) fn lock_tile_scratch(sh: &TileColShard) -> std::sync::MutexGuard<'_, Vec<u64>> {
+    lock_scratch(&sh.scratch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_partition_exactly() {
+        for (total, target) in [(0usize, 4usize), (1, 4), (7, 3), (100, 9), (5000, 7)] {
+            let shards = shard_ranges(total, target);
+            assert!(shards.len() <= MAX_SHARDS);
+            let mut expect = 0usize;
+            for &(a, b) in &shards {
+                assert_eq!(a, expect);
+                assert!(b > a);
+                expect = b;
+            }
+            assert_eq!(expect, total, "ranges must tile 0..{total}");
+        }
+    }
+
+    #[test]
+    fn merge_partials_is_ordered_sum() {
+        let mut out = vec![1.0f32, 2.0];
+        merge_partials(&mut out, &[10.0, 20.0, 100.0, 200.0]);
+        assert_eq!(out, vec![111.0, 222.0]);
+    }
+
+    #[test]
+    fn csc_plan_transposes_and_shards() {
+        // 3x4, entries: (0,1)=a (0,3)=b (2,0)=c (2,1)=d
+        let ia = vec![0u32, 2, 2, 4];
+        let ja = vec![1u16, 3, 0, 1];
+        let vals = vec![1.0f32, 2.0, 3.0, 4.0];
+        let plan = CscPlan::build(3, 4, &ia, &ja, &vals);
+        assert_eq!(plan.cp, vec![0, 1, 3, 3, 4]);
+        assert_eq!(plan.ri, vec![2, 0, 2, 0]);
+        assert_eq!(plan.vals, vec![3.0, 1.0, 4.0, 2.0]);
+        assert_eq!(plan.shard_count(), 1, "4 nnz is one cache shard");
+        // empty index → no shards, execute is a no-op
+        let empty = CscPlan::build(2, 3, &[0, 0, 0], &[], &[]);
+        assert_eq!(empty.shard_count(), 0);
+    }
+
+    #[test]
+    fn tile_col_shards_group_by_column_range() {
+        use crate::tiling::TilePlan;
+        let specs = TilePlan::new(3, 2).tiles(9, 10).unwrap();
+        let shards = tile_col_shards(&specs);
+        assert_eq!(shards.len(), 2, "one shard per tile column");
+        assert_eq!(shards[0].tiles, vec![0, 2, 4], "tile-row order");
+        assert_eq!(shards[1].tiles, vec![1, 3, 5]);
+        assert_eq!(shards[0].cols, (0, 5));
+        assert_eq!(shards[1].cols, (5, 10));
+    }
+}

@@ -14,10 +14,13 @@
 //! new compression, publish it, swap it in without restarting.
 
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::ExecCtx;
 use crate::formats::StoredIndex;
 use crate::serve::cache::LruCache;
 use crate::serve::engine::MlpParams;
-use crate::serve::kernels::{build_kernel, build_kernel_from_stored, KernelFormat, SparseKernel};
+use crate::serve::kernels::{
+    build_kernel_exec, build_kernel_from_stored_exec, KernelFormat, SparseKernel,
+};
 use crate::store::{Artifact, Registry};
 use crate::tensor::Matrix;
 use crate::util::bits::BitMatrix;
@@ -62,6 +65,8 @@ pub struct VariantServer {
     cache: LruCache<u64, Box<dyn SparseKernel>>,
     metrics: Arc<Metrics>,
     next_id: u64,
+    /// Execution context every variant's kernel plan runs on.
+    ctx: Arc<ExecCtx>,
 }
 
 impl VariantServer {
@@ -104,7 +109,17 @@ impl VariantServer {
             cache: LruCache::new(cache_cap),
             metrics,
             next_id,
+            ctx: ExecCtx::single(),
         }
+    }
+
+    /// Set the execution context kernels are built against (`lrbi
+    /// serve --registry … --threads N`). Flushes the kernel cache so
+    /// already-built kernels are rebuilt on the new context; output is
+    /// bit-identical either way (plans don't depend on the context).
+    pub fn set_exec(&mut self, ctx: Arc<ExecCtx>) {
+        self.ctx = ctx;
+        self.cache.clear();
     }
 
     /// Build a server over every artifact in a registry. The first
@@ -284,12 +299,20 @@ impl VariantServer {
             .ok_or_else(|| Error::invalid(format!("unknown variant {id}")))?;
         // The decompression step: per-format index decode/encode.
         let kernel = match &v.index {
-            VariantIndex::Factors { ip, iz } => {
-                build_kernel(self.format, &self.params.w1, ip, iz, Some(&self.metrics))?
-            }
-            VariantIndex::Stored(stored) => {
-                build_kernel_from_stored(stored, &self.params.w1, Some(&self.metrics))?
-            }
+            VariantIndex::Factors { ip, iz } => build_kernel_exec(
+                self.format,
+                &self.params.w1,
+                ip,
+                iz,
+                &self.ctx,
+                Some(&self.metrics),
+            )?,
+            VariantIndex::Stored(stored) => build_kernel_from_stored_exec(
+                stored,
+                &self.params.w1,
+                &self.ctx,
+                Some(&self.metrics),
+            )?,
         };
         self.cache.put(id, kernel);
         Ok(())
@@ -409,6 +432,30 @@ mod tests {
                 assert!((a - b).abs() <= 1e-3 * (1.0 + b.abs()), "{}: {a} vs {b}", fmt.name());
             }
         }
+    }
+
+    #[test]
+    fn set_exec_rebuilds_kernels_with_identical_logits() {
+        let metrics = Arc::new(Metrics::new());
+        let mut srv = VariantServer::with_format(
+            MlpParams::init(12),
+            KernelFormat::Csr,
+            vec![variant(1, 10)],
+            4,
+            Arc::clone(&metrics),
+        );
+        let mut rng = Rng::new(13);
+        let x = Matrix::gaussian(2, GEOMETRY.input_dim, 0.0, 1.0, &mut rng);
+        let single = srv.predict(1, &x).unwrap();
+        srv.set_exec(crate::coordinator::pool::ExecCtx::new(4, Some(Arc::clone(&metrics))));
+        let pooled = srv.predict(1, &x).unwrap();
+        assert_eq!(pooled.data(), single.data(), "bit-identical across contexts");
+        assert_eq!(
+            metrics.snapshot().kernel_decodes,
+            2,
+            "set_exec flushes the cache, forcing one rebuild"
+        );
+        assert!(metrics.snapshot().spmm_shards > 0, "plan execution recorded");
     }
 
     #[test]

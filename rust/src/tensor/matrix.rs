@@ -252,6 +252,30 @@ impl Matrix {
         Ok(out)
     }
 
+    /// Matrix multiply against a **pre-transposed** right operand:
+    /// `self (m × k) · btᵀ` where `bt` is `(n × k)` — i.e. `bt` holds
+    /// `B`'s columns as contiguous rows. Runs the register-blocked,
+    /// output-stationary micro-kernel (`matmul_bt_cols`): each
+    /// output element is one dot product over contiguous memory on
+    /// both sides, accumulated in registers in ascending-`k` order —
+    /// no read-modify-write of output rows, and the result for any
+    /// element is independent of how columns are sharded (the
+    /// property the dense kernel's parallel plan relies on).
+    pub fn matmul_bt(&self, bt: &Matrix) -> Result<Matrix> {
+        if self.cols != bt.cols {
+            return Err(Error::shape(format!(
+                "matmul_bt: {}x{} * ({}x{})^T",
+                self.rows, self.cols, bt.rows, bt.cols
+            )));
+        }
+        let (m, k, n) = (self.rows, self.cols, bt.rows);
+        let mut out = Matrix::zeros(m, n);
+        // SAFETY: `out` is exclusively owned and sized m*n; the full
+        // column range is written by this single call.
+        unsafe { matmul_bt_cols(&self.data, &bt.data, out.data.as_mut_ptr(), m, k, n, (0, n)) };
+        Ok(out)
+    }
+
     /// Frobenius norm.
     pub fn frobenius(&self) -> f64 {
         self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
@@ -393,6 +417,73 @@ fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usi
     }
 }
 
+/// Register-blocked, B-transposed micro-kernel over one output-column
+/// block: for every row `b` of `a (bm × k)` and every `j ∈ [c0, c1)`,
+/// writes `out[b*n + j] = dot(a[b], bt[j])` where `bt` is `(n × k)`
+/// (B pre-transposed, so both dot operands are contiguous). Columns
+/// are processed four at a time with four register accumulators
+/// sharing each pass over the `a` row; each accumulator runs in plain
+/// ascending-`k` order, so the value of any output element never
+/// depends on which shard computed it.
+///
+/// # Safety
+///
+/// `out` must be valid for `bm * n` floats, and no other thread may
+/// concurrently access columns `[c0, c1)` of it. Disjoint column
+/// blocks may be filled concurrently (the dense plan's sharding).
+pub(crate) unsafe fn matmul_bt_cols(
+    a: &[f32],
+    bt: &[f32],
+    out: *mut f32,
+    bm: usize,
+    k: usize,
+    n: usize,
+    cols: (usize, usize),
+) {
+    let (c0, c1) = cols;
+    debug_assert!(c1 <= n && a.len() == bm * k && bt.len() == n * k);
+    let mut j = c0;
+    while j + 4 <= c1 {
+        let b0 = &bt[j * k..(j + 1) * k];
+        let b1 = &bt[(j + 1) * k..(j + 2) * k];
+        let b2 = &bt[(j + 2) * k..(j + 3) * k];
+        let b3 = &bt[(j + 3) * k..(j + 4) * k];
+        for b in 0..bm {
+            let ar = &a[b * k..(b + 1) * k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+            for (((( &av, &v0), &v1), &v2), &v3) in
+                ar.iter().zip(b0).zip(b1).zip(b2).zip(b3)
+            {
+                s0 += av * v0;
+                s1 += av * v1;
+                s2 += av * v2;
+                s3 += av * v3;
+            }
+            let base = b * n + j;
+            // SAFETY: caller guarantees exclusive access to these columns.
+            unsafe {
+                *out.add(base) = s0;
+                *out.add(base + 1) = s1;
+                *out.add(base + 2) = s2;
+                *out.add(base + 3) = s3;
+            }
+        }
+        j += 4;
+    }
+    for j in j..c1 {
+        let brow = &bt[j * k..(j + 1) * k];
+        for b in 0..bm {
+            let ar = &a[b * k..(b + 1) * k];
+            let mut s = 0f32;
+            for (&av, &bv) in ar.iter().zip(brow) {
+                s += av * bv;
+            }
+            // SAFETY: caller guarantees exclusive access to this column.
+            unsafe { *out.add(b * n + j) = s };
+        }
+    }
+}
+
 /// Number of worker threads to use for data-parallel kernels.
 pub fn available_threads() -> usize {
     std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
@@ -444,6 +535,39 @@ mod tests {
         for (x, y) in st.data().iter().zip(mt.data()) {
             assert!((x - y).abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn matmul_bt_matches_matmul() {
+        let mut rng = Rng::new(9);
+        // odd n exercises the 4-column remainder path
+        let a = Matrix::gaussian(13, 37, 0.0, 1.0, &mut rng);
+        let b = Matrix::gaussian(37, 27, 0.0, 1.0, &mut rng);
+        let want = a.matmul_st(&b).unwrap();
+        let got = a.matmul_bt(&b.transpose()).unwrap();
+        assert_eq!((got.rows(), got.cols()), (13, 27));
+        for (x, y) in got.data().iter().zip(want.data()) {
+            assert!((x - y).abs() <= 1e-4 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+        // shape mismatch rejected (bt must share the k axis)
+        assert!(a.matmul_bt(&Matrix::zeros(27, 36)).is_err());
+    }
+
+    #[test]
+    fn matmul_bt_column_blocks_are_independent() {
+        // computing disjoint column blocks separately must reproduce
+        // the full-range result exactly — the dense plan's contract.
+        let mut rng = Rng::new(10);
+        let a = Matrix::gaussian(5, 19, 0.0, 1.0, &mut rng);
+        let bt = Matrix::gaussian(23, 19, 0.0, 1.0, &mut rng);
+        let full = a.matmul_bt(&bt).unwrap();
+        let mut blocked = Matrix::zeros(5, 23);
+        for (c0, c1) in [(0usize, 7usize), (7, 16), (16, 23)] {
+            unsafe {
+                matmul_bt_cols(a.data(), bt.data(), blocked.data.as_mut_ptr(), 5, 19, 23, (c0, c1))
+            };
+        }
+        assert_eq!(blocked.data(), full.data(), "bit-identical across shardings");
     }
 
     #[test]

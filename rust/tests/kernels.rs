@@ -3,10 +3,22 @@
 //! same serving logits) for the same mask and weights, within f32
 //! tolerance — the contract that lets the engine pick its execution
 //! strategy by format at startup.
+//!
+//! Parallel determinism: each kernel's execution plan must produce
+//! **bit-identical** output at every thread count (fixed shard
+//! partition + fixed shard→merge order) — pinned here for all four
+//! factor formats plus the tiled kernel. `LRBI_THREADS` (used by the
+//! CI smoke matrix and `scripts/verify.sh`) selects the pooled thread
+//! count for `threads_env_smoke`.
 
+use lrbi::coordinator::pool::ExecCtx;
+use lrbi::formats::StoredIndex;
 use lrbi::serve::engine::{InferenceBackend, MlpParams, NativeBackend};
-use lrbi::serve::kernels::{build_kernel, KernelFormat};
+use lrbi::serve::kernels::{
+    build_kernel, build_kernel_exec, build_kernel_from_stored_exec, KernelFormat, SparseKernel,
+};
 use lrbi::tensor::Matrix;
+use lrbi::tiling::{TileFactors, TilePlan, TiledLowRankIndex};
 use lrbi::util::bits::BitMatrix;
 use lrbi::util::prop;
 use lrbi::util::rng::Rng;
@@ -73,6 +85,107 @@ fn kernels_agree_on_degenerate_masks() {
                 assert!(close(*a, *b), "{}: {a} vs {b}", fmt.name());
             }
         }
+    }
+}
+
+/// A random tiled low-rank index over an `m × n` layer (2×3 plan,
+/// mixed per-tile ranks) — the fifth kernel of the determinism sweep.
+fn random_tiled(m: usize, n: usize, rng: &mut Rng) -> TiledLowRankIndex {
+    let plan = TilePlan::new(2.min(m), 3.min(n));
+    let specs = plan.tiles(m, n).unwrap();
+    let tiles: Vec<TileFactors> = specs
+        .iter()
+        .map(|s| {
+            let k = 2 + s.id % 3;
+            TileFactors {
+                rank: k,
+                ip: BitMatrix::from_fn(s.rows(), k, |_, _| rng.bernoulli(0.3)),
+                iz: BitMatrix::from_fn(k, s.cols(), |_, _| rng.bernoulli(0.3)),
+            }
+        })
+        .collect();
+    TiledLowRankIndex::new(m, n, plan, tiles).unwrap()
+}
+
+#[test]
+fn parallel_spmm_bit_identical_across_thread_counts() {
+    prop::check("spmm thread determinism", 6, |rng| {
+        let m = prop::dim(rng, 20, 220);
+        let n = prop::dim(rng, 12, 180);
+        let k = prop::dim(rng, 1, 8);
+        let batch = prop::dim(rng, 1, 5);
+        let dp = 0.1 + rng.next_f64() * 0.4;
+        let dz = 0.1 + rng.next_f64() * 0.4;
+        let mut r2 = Rng::new(rng.next_u64());
+        let ip = BitMatrix::from_fn(m, k, |_, _| r2.bernoulli(dp));
+        let iz = BitMatrix::from_fn(k, n, |_, _| r2.bernoulli(dz));
+        let w = Matrix::gaussian(m, n, 0.0, 1.0, &mut r2);
+        let x = Matrix::gaussian(batch, m, 0.0, 1.0, &mut r2);
+        // all four factor formats
+        for fmt in KernelFormat::ALL {
+            let base = build_kernel(fmt, &w, &ip, &iz, None)
+                .unwrap()
+                .spmm(&x)
+                .unwrap();
+            for threads in [2usize, 8] {
+                let ctx = ExecCtx::new(threads, None);
+                let kern = build_kernel_exec(fmt, &w, &ip, &iz, &ctx, None).unwrap();
+                assert_eq!(
+                    kern.spmm(&x).unwrap().data(),
+                    base.data(),
+                    "{} at m={m} n={n} k={k} threads={threads}",
+                    fmt.name()
+                );
+            }
+        }
+        // the tiled kernel (only constructible from a stored index)
+        let stored = StoredIndex::Tiled(random_tiled(m, n, &mut r2));
+        let base = build_kernel_from_stored_exec(&stored, &w, &ExecCtx::single(), None)
+            .unwrap()
+            .spmm(&x)
+            .unwrap();
+        for threads in [2usize, 8] {
+            let ctx = ExecCtx::new(threads, None);
+            let kern = build_kernel_from_stored_exec(&stored, &w, &ctx, None).unwrap();
+            assert_eq!(
+                kern.spmm(&x).unwrap().data(),
+                base.data(),
+                "tiled at m={m} n={n} threads={threads}"
+            );
+        }
+    });
+}
+
+#[test]
+fn threads_env_smoke() {
+    // CI smoke matrix: LRBI_THREADS ∈ {1, 4} (see
+    // .github/workflows/verify.yml); defaults to 2 when unset.
+    let threads: usize = std::env::var("LRBI_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let mut rng = Rng::new(77);
+    let (m, n, k) = (310, 270, 6);
+    let ip = BitMatrix::from_fn(m, k, |_, _| rng.bernoulli(0.3));
+    let iz = BitMatrix::from_fn(k, n, |_, _| rng.bernoulli(0.3));
+    let w = Matrix::gaussian(m, n, 0.0, 1.0, &mut rng);
+    let x = Matrix::gaussian(3, m, 0.0, 1.0, &mut rng);
+    let ctx = ExecCtx::new(threads, None);
+    for fmt in KernelFormat::ALL {
+        let single = build_kernel(fmt, &w, &ip, &iz, None).unwrap();
+        let pooled = build_kernel_exec(fmt, &w, &ip, &iz, &ctx, None).unwrap();
+        assert!(
+            pooled.plan_shards() > 1,
+            "{}: a {m}x{n} layer must shard (got {})",
+            fmt.name(),
+            pooled.plan_shards()
+        );
+        assert_eq!(
+            pooled.spmm(&x).unwrap().data(),
+            single.spmm(&x).unwrap().data(),
+            "{} with LRBI_THREADS={threads}",
+            fmt.name()
+        );
     }
 }
 

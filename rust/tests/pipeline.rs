@@ -144,7 +144,7 @@ fn model_sweep_to_format_table_consistency() {
     // the mask must round-trip through every exact format
     let bin = BinaryIndex::encode(&fc1.mask);
     assert_eq!(bin.decode(), fc1.mask);
-    let c16 = Csr16::encode(&fc1.mask);
+    let c16 = Csr16::encode(&fc1.mask).unwrap();
     assert_eq!(c16.decode().unwrap(), fc1.mask);
     let c5 = Csr5Relative::encode(&fc1.mask);
     assert_eq!(c5.decode(), fc1.mask);

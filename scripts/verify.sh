@@ -11,6 +11,11 @@ cargo build --release
 echo "== cargo test -q"
 cargo test -q
 
+echo "== spmm determinism suite (thread matrix: 1 and 4)"
+for t in 1 4; do
+  LRBI_THREADS="$t" cargo test -q --test kernels
+done
+
 echo "== cargo doc --no-deps (warnings are errors)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
