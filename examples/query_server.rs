@@ -1,0 +1,74 @@
+//! Query a running `lrbi serve --listen` frontend over TCP: send one
+//! random row batch, print the logits, then fetch the server's
+//! `STATS` counters. The client side of the README's end-to-end
+//! tutorial (wire spec: docs/PROTOCOL.md).
+//!
+//!     # terminal A
+//!     cargo run --release -- pack --out model.lrbi --format lowrank --rank 16
+//!     cargo run --release -- serve --listen 127.0.0.1:4000 --artifact model.lrbi
+//!     # terminal B
+//!     cargo run --release --example query_server -- 127.0.0.1:4000
+//!
+//! The address may also come from `LRBI_SERVE_ADDR`; the optional
+//! second argument is the model key (default: the server's default
+//! model).
+
+use lrbi::runtime::artifacts::GEOMETRY;
+use lrbi::serve::protocol::RowBatch;
+use lrbi::serve::server::NetClient;
+use lrbi::util::rng::Rng;
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let addr = args
+        .next()
+        .or_else(|| std::env::var("LRBI_SERVE_ADDR").ok())
+        .unwrap_or_else(|| "127.0.0.1:4000".to_string());
+    let key = args.next().unwrap_or_default();
+
+    let mut client = match NetClient::connect(&addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("cannot connect to {addr}: {e}");
+            eprintln!("start a server first: lrbi serve --listen {addr} --artifact model.lrbi");
+            std::process::exit(2);
+        }
+    };
+    println!("connected to {addr}");
+
+    // One 3-row batch of synthetic inputs at the artifact geometry.
+    let mut rng = Rng::new(7);
+    let rows: Vec<Vec<f32>> = (0..3)
+        .map(|_| (0..GEOMETRY.input_dim).map(|_| rng.next_f32()).collect())
+        .collect();
+    let batch = RowBatch::from_rows(&rows).expect("batch");
+    match client.infer(&key, batch) {
+        Ok(logits) => {
+            println!("logits ({}x{}):", logits.rows(), logits.cols());
+            for i in 0..logits.rows() {
+                let row = logits.row(i);
+                let argmax = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap_or(0);
+                println!("  row {i}: argmax class {argmax}, logit {:.4}", row[argmax]);
+            }
+        }
+        Err(e) => {
+            eprintln!("inference failed: {e}");
+            std::process::exit(2);
+        }
+    }
+
+    match client.stats() {
+        Ok(stats) => {
+            println!("\nserver counters (STATS frame):");
+            for (name, value) in stats.iter().filter(|(_, v)| *v > 0) {
+                println!("  {name:<24} {value}");
+            }
+        }
+        Err(e) => eprintln!("stats failed: {e}"),
+    }
+}

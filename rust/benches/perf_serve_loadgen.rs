@@ -1,0 +1,291 @@
+//! §Perf: network serving frontend — end-to-end request latency and
+//! throughput through the `lrbi serve --listen` TCP stack (acceptor →
+//! wire protocol → dynamic batcher → sparse-kernel SpMM plan → demux).
+//!
+//! For every (kernel format × client count × batch window) cell the
+//! bench starts an in-process server on `127.0.0.1:0`, drives it with
+//! concurrent TCP load-generator clients, and reports p50/p95/p99
+//! per-request latency plus throughput. Besides the human-readable
+//! table and `reports/perf_serve_loadgen.csv`, it writes
+//! `BENCH_serve.json` at the repository root (schema
+//! `lrbi-bench-serve-v1`, documented in README.md and
+//! docs/SERVING.md) so serving-path changes have end-to-end numbers
+//! to regress against.
+//!
+//!     cargo run --release --bench perf_serve_loadgen
+//!     LRBI_BENCH_QUICK=1 cargo run --release --bench perf_serve_loadgen
+//!
+//! Set `LRBI_SERVE_ADDR=host:port` to aim the load generator at an
+//! already-running `lrbi serve --listen` frontend instead (the cell's
+//! kernel is then reported as "remote").
+
+mod bench_common;
+
+use bench_common::{quick, report_dir};
+use lrbi::coordinator::metrics::Metrics;
+use lrbi::runtime::artifacts::GEOMETRY;
+use lrbi::serve::batcher::BatchPolicy;
+use lrbi::serve::engine::{MlpParams, NativeBackend};
+use lrbi::serve::kernels::KernelFormat;
+use lrbi::serve::protocol::RowBatch;
+use lrbi::serve::server::{ModelHub, NetClient, ServeOptions, Server};
+use lrbi::util::bench::{print_table, write_table_csv};
+use lrbi::util::bits::BitMatrix;
+use lrbi::util::rng::Rng;
+use lrbi::util::stats::percentile;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+struct Cell {
+    kernel: String,
+    clients: usize,
+    window_ms: u64,
+    requests: usize,
+    rps: f64,
+    p50_us: f64,
+    p95_us: f64,
+    p99_us: f64,
+    mean_flush: f64,
+    rejected_overload: u64,
+}
+
+/// Drive `clients` concurrent TCP clients, `per_client` single-row
+/// requests each; returns every request's wall latency in ns.
+fn run_load(
+    addr: std::net::SocketAddr,
+    clients: usize,
+    per_client: usize,
+    input_dim: usize,
+) -> Vec<f64> {
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut client = NetClient::connect(addr).expect("connect");
+                let mut rng = Rng::new(0xBE5C + c as u64);
+                let mut lat = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let row: Vec<f32> = (0..input_dim).map(|_| rng.next_f32()).collect();
+                    let batch = RowBatch::from_rows(&[row]).expect("batch");
+                    let t0 = Instant::now();
+                    let logits = client.infer("", batch).expect("infer");
+                    lat.push(t0.elapsed().as_nanos() as f64);
+                    assert_eq!(logits.rows(), 1);
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut all = Vec::with_capacity(clients * per_client);
+    for w in workers {
+        all.extend(w.join().expect("load client"));
+    }
+    all
+}
+
+fn percentiles_us(lat_ns: &mut [f64]) -> (f64, f64, f64) {
+    (
+        percentile(lat_ns, 0.50) / 1e3,
+        percentile(lat_ns, 0.95) / 1e3,
+        percentile(lat_ns, 0.99) / 1e3,
+    )
+}
+
+fn main() {
+    let g = GEOMETRY;
+    let total_requests: usize = if quick() { 128 } else { 512 };
+    let client_sweep: &[usize] = if quick() { &[4] } else { &[2, 8, 32] };
+    let mut cells: Vec<Cell> = Vec::new();
+
+    if let Ok(addr) = std::env::var("LRBI_SERVE_ADDR") {
+        // Remote mode: sweep client counts against a live server.
+        // Resolve via ToSocketAddrs so hostnames work, not just IPs.
+        use std::net::ToSocketAddrs;
+        let addr: std::net::SocketAddr = addr
+            .to_socket_addrs()
+            .expect("LRBI_SERVE_ADDR host:port")
+            .next()
+            .expect("LRBI_SERVE_ADDR resolves to no address");
+        for &clients in client_sweep {
+            let per_client = (total_requests / clients).max(1);
+            let t0 = Instant::now();
+            let mut lat = run_load(addr, clients, per_client, g.input_dim);
+            let wall = t0.elapsed().as_secs_f64();
+            let (p50, p95, p99) = percentiles_us(&mut lat);
+            println!(
+                "remote {addr}: {clients} clients -> {:.0} req/s, p50 {:.0}us p99 {:.0}us",
+                lat.len() as f64 / wall,
+                p50,
+                p99
+            );
+            cells.push(Cell {
+                kernel: "remote".into(),
+                clients,
+                window_ms: 0,
+                requests: lat.len(),
+                rps: lat.len() as f64 / wall,
+                p50_us: p50,
+                p95_us: p95,
+                p99_us: p99,
+                mean_flush: 0.0,
+                rejected_overload: 0,
+            });
+        }
+    } else {
+        // In-process sweep: kernel format × client count × batch window.
+        let params = MlpParams::init(11);
+        let mut frng = Rng::new(12);
+        let ip = BitMatrix::from_fn(g.hidden0, g.rank, |_, _| frng.bernoulli(0.25));
+        let iz = BitMatrix::from_fn(g.rank, g.hidden1, |_, _| frng.bernoulli(0.25));
+        let window_sweep: &[u64] = if quick() { &[1] } else { &[1, 4] };
+        for fmt in KernelFormat::ALL {
+            for &window_ms in window_sweep {
+                for &clients in client_sweep {
+                    let metrics = Arc::new(Metrics::new());
+                    let backend =
+                        NativeBackend::with_format(params.clone(), fmt, &ip, &iz)
+                            .expect("backend")
+                            .with_metrics(Arc::clone(&metrics));
+                    let policy = BatchPolicy {
+                        max_batch: 64,
+                        max_wait: Duration::from_millis(window_ms),
+                    };
+                    let opts = ServeOptions {
+                        max_conns: clients + 4,
+                        max_queue: 1024,
+                        policy,
+                    };
+                    let hub = ModelHub::from_backend(
+                        "default",
+                        backend,
+                        policy,
+                        opts.max_queue,
+                        Arc::clone(&metrics),
+                    );
+                    let server =
+                        Server::bind("127.0.0.1:0", Arc::new(hub), &opts).expect("bind");
+                    let addr = server.local_addr();
+                    let handle = server.handle();
+                    let runner = std::thread::spawn(move || server.run());
+
+                    // warm the accept + kernel paths outside the timed
+                    // run, then snapshot so the cell reports deltas —
+                    // warm-up flushes must not skew mean_flush.
+                    run_load(addr, 1, 4, g.input_dim);
+                    let warm = metrics.snapshot();
+
+                    let per_client = (total_requests / clients).max(1);
+                    let t0 = Instant::now();
+                    let mut lat = run_load(addr, clients, per_client, g.input_dim);
+                    let wall = t0.elapsed().as_secs_f64();
+                    handle.shutdown();
+                    runner.join().expect("server thread").expect("server run");
+
+                    let (p50, p95, p99) = percentiles_us(&mut lat);
+                    let snap = metrics.snapshot();
+                    let flushes = snap.batch_flush_count - warm.batch_flush_count;
+                    let mean_flush = if flushes == 0 {
+                        0.0
+                    } else {
+                        (snap.batch_size_sum - warm.batch_size_sum) as f64 / flushes as f64
+                    };
+                    let rejected_overload =
+                        snap.net_rejected_overload - warm.net_rejected_overload;
+                    println!(
+                        "{}/w{window_ms}ms/c{clients}: {:.0} req/s, p50 {:.0}us \
+                         p95 {:.0}us p99 {:.0}us (mean flush {mean_flush:.1})",
+                        fmt.name(),
+                        lat.len() as f64 / wall,
+                        p50,
+                        p95,
+                        p99,
+                    );
+                    cells.push(Cell {
+                        kernel: fmt.name().to_string(),
+                        clients,
+                        window_ms,
+                        requests: lat.len(),
+                        rps: lat.len() as f64 / wall,
+                        p50_us: p50,
+                        p95_us: p95,
+                        p99_us: p99,
+                        mean_flush,
+                        rejected_overload,
+                    });
+                }
+            }
+        }
+    }
+
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.kernel.clone(),
+                c.clients.to_string(),
+                c.window_ms.to_string(),
+                c.requests.to_string(),
+                format!("{:.1}", c.rps),
+                format!("{:.1}", c.p50_us),
+                format!("{:.1}", c.p95_us),
+                format!("{:.1}", c.p99_us),
+                format!("{:.2}", c.mean_flush),
+                c.rejected_overload.to_string(),
+            ]
+        })
+        .collect();
+    let header = [
+        "kernel",
+        "clients",
+        "batch_window_ms",
+        "requests",
+        "throughput_rps",
+        "p50_us",
+        "p95_us",
+        "p99_us",
+        "mean_flush",
+        "rejected_overload",
+    ];
+    print_table("serve loadgen: latency/throughput by kernel × clients × window", &header, &rows);
+    write_table_csv(
+        report_dir().join("perf_serve_loadgen.csv").to_str().unwrap(),
+        &header,
+        &rows,
+    )
+    .unwrap();
+
+    // Machine-readable trajectory point at the repository root.
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"schema\": \"lrbi-bench-serve-v1\",\n");
+    json.push_str("  \"bench\": \"perf_serve_loadgen\",\n");
+    json.push_str(&format!(
+        "  \"geometry\": {{\"input_dim\": {}, \"hidden0\": {}, \"hidden1\": {}, \
+         \"classes\": {}, \"rank\": {}}},\n",
+        g.input_dim, g.hidden0, g.hidden1, g.classes, g.rank
+    ));
+    json.push_str(&format!("  \"quick\": {},\n", quick()));
+    json.push_str("  \"results\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"clients\": {}, \"batch_window_ms\": {}, \
+             \"requests\": {}, \"throughput_rps\": {:.1}, \"p50_us\": {:.1}, \
+             \"p95_us\": {:.1}, \"p99_us\": {:.1}, \"mean_flush\": {:.2}, \
+             \"rejected_overload\": {}}}{}\n",
+            c.kernel,
+            c.clients,
+            c.window_ms,
+            c.requests,
+            c.rps,
+            c.p50_us,
+            c.p95_us,
+            c.p99_us,
+            c.mean_flush,
+            c.rejected_overload,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    std::fs::write(out, &json).expect("write BENCH_serve.json");
+    println!("\nwrote {out} ({} cells)", cells.len());
+}

@@ -160,12 +160,16 @@ fn print_usage() {
          \x20            --manip 1|2|3  --threads N  --config file.toml\n\
          \x20 train      pre-train, prune (BMF), retrain on the synthetic task\n\
          \x20            --steps N  --retrain N  --rank 16  --sparsity 0.95\n\
-         \x20 serve      run the serving engine on synthetic traffic\n\
+         \x20 serve      run the serving engine on synthetic traffic,\n\
+         \x20            or expose it over TCP with --listen\n\
          \x20            --requests N  --max-batch 64  --max-wait-ms 2\n\
          \x20            --kernel dense|csr|relative|lowrank\n\
          \x20            --threads N   spmm plan workers (default 0 = all cores)\n\
          \x20            --artifact model.lrbi       serve a packed artifact\n\
          \x20            --registry dir [--swap name]  serve registry variants\n\
+         \x20            --listen HOST:PORT   speak the wire protocol\n\
+         \x20            --max-conns 64  --max-queue 256   admission control\n\
+         \x20            (ops guide: docs/SERVING.md, wire spec: docs/PROTOCOL.md)\n\
          \x20 pack       package a compressed model as a .lrbi artifact\n\
          \x20            --out model.lrbi | --registry dir [--name v1]\n\
          \x20            --format dense|csr|relative|lowrank  --tiles 1\n\
@@ -285,7 +289,28 @@ fn exec_ctx_from_args(
     ))
 }
 
+/// The synthetic `--kernel` serving model (no artifact/registry):
+/// fixed seeds so `serve --requests` and `serve --listen` expose the
+/// same model for the same flags.
+fn synthetic_backend(
+    args: &Args,
+    ctx: std::sync::Arc<crate::coordinator::pool::ExecCtx>,
+    metrics: &std::sync::Arc<Metrics>,
+) -> Result<NativeBackend> {
+    let format = crate::serve::kernels::KernelFormat::parse(&args.get_str("kernel", "dense"))?;
+    let g = crate::runtime::artifacts::GEOMETRY;
+    let params = MlpParams::init(11);
+    let mut rng = crate::util::rng::Rng::new(12);
+    let ip = BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.25));
+    let iz = BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.25));
+    Ok(NativeBackend::with_format_exec(params, format, &ip, &iz, ctx)?
+        .with_metrics(std::sync::Arc::clone(metrics)))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
+    if let Some(addr) = args.flags.get("listen") {
+        return serve_listen(args, addr);
+    }
     if let Some(dir) = args.flags.get("registry") {
         return serve_registry(args, dir);
     }
@@ -315,14 +340,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         NativeBackend::from_artifact_exec(&artifact, ctx)?
             .with_metrics(std::sync::Arc::clone(&metrics))
     } else {
-        let format =
-            crate::serve::kernels::KernelFormat::parse(&args.get_str("kernel", "dense"))?;
-        let params = MlpParams::init(11);
-        let mut rng = crate::util::rng::Rng::new(12);
-        let ip = BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.25));
-        let iz = BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.25));
-        NativeBackend::with_format_exec(params, format, &ip, &iz, ctx)?
-            .with_metrics(std::sync::Arc::clone(&metrics))
+        synthetic_backend(args, ctx, &metrics)?
     };
     println!(
         "serving with the '{}' sparse kernel ({} plan shards across {threads} thread(s))",
@@ -367,6 +385,84 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "batcher: {} flushes, mean {:.1} req/flush",
         snap.batch_flush_count,
         snap.mean_flush_size()
+    );
+    Ok(())
+}
+
+/// `lrbi serve --listen HOST:PORT`: expose the serving engine over
+/// TCP via the `serve::server` frontend. Model source is `--registry`
+/// (every artifact, hot-swappable via `SWAP` frames), `--artifact`
+/// (one packed model), or the synthetic `--kernel` backend. Runs
+/// until a client sends a `SHUTDOWN` frame (or the process is
+/// killed); see docs/SERVING.md for operations and docs/PROTOCOL.md
+/// for the wire format.
+fn serve_listen(args: &Args, addr: &str) -> Result<()> {
+    use crate::serve::server::{ModelHub, ServeOptions, Server};
+    let metrics = std::sync::Arc::new(Metrics::new());
+    let ctx = exec_ctx_from_args(args, &metrics)?;
+    let threads = ctx.threads();
+    let opts = ServeOptions {
+        max_conns: args.get("max-conns", 64usize)?,
+        max_queue: args.get("max-queue", 256usize)?,
+        policy: BatchPolicy {
+            max_batch: args.get("max-batch", 64usize)?,
+            max_wait: std::time::Duration::from_millis(args.get("max-wait-ms", 2u64)?),
+        },
+    };
+    let hub = if let Some(dir) = args.flags.get("registry") {
+        ModelHub::from_registry(
+            dir,
+            opts.policy,
+            opts.max_queue,
+            std::sync::Arc::clone(&metrics),
+            ctx,
+        )?
+    } else if let Some(path) = args.flags.get("artifact") {
+        let t0 = Instant::now();
+        let artifact = Artifact::read(path)?;
+        metrics.record_artifact_load(t0);
+        ModelHub::from_artifact(
+            "default",
+            &artifact,
+            opts.policy,
+            opts.max_queue,
+            std::sync::Arc::clone(&metrics),
+            ctx,
+        )?
+    } else {
+        let backend = synthetic_backend(args, ctx, &metrics)?;
+        ModelHub::from_backend(
+            "default",
+            backend,
+            opts.policy,
+            opts.max_queue,
+            std::sync::Arc::clone(&metrics),
+        )
+    };
+    let keys = hub.keys();
+    let default_key = hub.default_key().to_string();
+    let server = Server::bind(addr, std::sync::Arc::new(hub), &opts)?;
+    println!(
+        "listening on {} — {} model(s) {:?}, default '{default_key}', {} thread(s), \
+         max-conns {}, max-queue {}",
+        server.local_addr(),
+        keys.len(),
+        keys,
+        threads,
+        opts.max_conns,
+        opts.max_queue
+    );
+    println!("send a SHUTDOWN frame to stop (see docs/PROTOCOL.md)");
+    server.run()?;
+    let snap = metrics.snapshot();
+    println!(
+        "served {} wire requests over {} connections ({} rejected at accept, \
+         {} overloaded, {} protocol errors)",
+        snap.net_requests,
+        snap.net_conns_accepted,
+        snap.net_conns_rejected,
+        snap.net_rejected_overload,
+        snap.net_protocol_errors
     );
     Ok(())
 }

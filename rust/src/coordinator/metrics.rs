@@ -10,6 +10,18 @@ use std::time::Instant;
 /// `SPMM_KERNEL_NAMES[i]` — pinned by a test in `serve::kernels`.
 pub const SPMM_KERNEL_NAMES: [&str; 5] = ["dense", "csr", "relative", "lowrank", "tiled"];
 
+/// Counter names the per-kernel `spmm_kernel_ns` slots serialize
+/// under in [`MetricsSnapshot::named_counters`] (same slot order as
+/// [`SPMM_KERNEL_NAMES`]); the `STATS` wire frame and
+/// `docs/SERVING.md` use these names verbatim.
+pub const SPMM_NS_COUNTER_NAMES: [&str; 5] = [
+    "spmm_ns_dense",
+    "spmm_ns_csr",
+    "spmm_ns_relative",
+    "spmm_ns_lowrank",
+    "spmm_ns_tiled",
+];
+
 /// Shared coordinator metrics.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -53,6 +65,17 @@ pub struct Metrics {
     /// `batch_flush_count` this makes the batch-size distribution's
     /// mean observable in `serve` reports.
     pub batch_size_sum: AtomicU64,
+    /// TCP connections accepted by the network frontend.
+    pub net_conns_accepted: AtomicU64,
+    /// TCP connections rejected at accept time (`--max-conns`).
+    pub net_conns_rejected: AtomicU64,
+    /// Inference (`INFER`) requests received over the wire.
+    pub net_requests: AtomicU64,
+    /// Wire requests rejected with an `overloaded` error frame
+    /// (bounded request queue full — admission control).
+    pub net_rejected_overload: AtomicU64,
+    /// Malformed/unexpected frames answered with a typed error frame.
+    pub net_protocol_errors: AtomicU64,
 }
 
 /// A point-in-time copy for reporting.
@@ -94,6 +117,16 @@ pub struct MetricsSnapshot {
     pub batch_flush_count: u64,
     /// Requests summed over flushed batches.
     pub batch_size_sum: u64,
+    /// TCP connections accepted.
+    pub net_conns_accepted: u64,
+    /// TCP connections rejected at accept (`--max-conns`).
+    pub net_conns_rejected: u64,
+    /// Wire inference requests received.
+    pub net_requests: u64,
+    /// Wire requests rejected as overloaded (admission control).
+    pub net_rejected_overload: u64,
+    /// Malformed/unexpected frames answered with an error frame.
+    pub net_protocol_errors: u64,
 }
 
 impl Metrics {
@@ -140,6 +173,11 @@ impl Metrics {
             ],
             batch_flush_count: self.batch_flush_count.load(Ordering::Relaxed),
             batch_size_sum: self.batch_size_sum.load(Ordering::Relaxed),
+            net_conns_accepted: self.net_conns_accepted.load(Ordering::Relaxed),
+            net_conns_rejected: self.net_conns_rejected.load(Ordering::Relaxed),
+            net_requests: self.net_requests.load(Ordering::Relaxed),
+            net_rejected_overload: self.net_rejected_overload.load(Ordering::Relaxed),
+            net_protocol_errors: self.net_protocol_errors.load(Ordering::Relaxed),
         }
     }
 
@@ -213,6 +251,42 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Every counter as a stable `(name, value)` list — the `STATS`
+    /// wire frame's payload, in the exact order documented in
+    /// `docs/SERVING.md`: the scalar counters in struct order, then
+    /// the per-kernel `spmm` nanoseconds under
+    /// [`SPMM_NS_COUNTER_NAMES`].
+    pub fn named_counters(&self) -> Vec<(&'static str, u64)> {
+        let mut out = vec![
+            ("jobs_done", self.jobs_done),
+            ("jobs_failed", self.jobs_failed),
+            ("busy_ns", self.busy_ns),
+            ("requests", self.requests),
+            ("batches", self.batches),
+            ("cache_hits", self.cache_hits),
+            ("cache_misses", self.cache_misses),
+            ("kernel_decodes", self.kernel_decodes),
+            ("kernel_decode_ns", self.kernel_decode_ns),
+            ("kernel_spmms", self.kernel_spmms),
+            ("kernel_spmm_ns", self.kernel_spmm_ns),
+            ("artifact_loads", self.artifact_loads),
+            ("artifact_load_ns", self.artifact_load_ns),
+            ("hot_swaps", self.hot_swaps),
+            ("spmm_shards", self.spmm_shards),
+            ("batch_flush_count", self.batch_flush_count),
+            ("batch_size_sum", self.batch_size_sum),
+            ("net_conns_accepted", self.net_conns_accepted),
+            ("net_conns_rejected", self.net_conns_rejected),
+            ("net_requests", self.net_requests),
+            ("net_rejected_overload", self.net_rejected_overload),
+            ("net_protocol_errors", self.net_protocol_errors),
+        ];
+        for (i, name) in SPMM_NS_COUNTER_NAMES.into_iter().enumerate() {
+            out.push((name, self.spmm_kernel_ns[i]));
+        }
+        out
+    }
+
     /// Mean artifact cold-load time in milliseconds.
     pub fn mean_artifact_load_ms(&self) -> f64 {
         if self.artifact_loads == 0 {
@@ -281,6 +355,25 @@ mod tests {
         assert_eq!(s.spmm_shards, 5);
         assert_eq!(s.spmm_kernel_ns, [0, 0, 1234, 0, 0]);
         assert_eq!(SPMM_KERNEL_NAMES[2], "relative");
+    }
+
+    #[test]
+    fn named_counters_cover_every_field_with_unique_names() {
+        let m = Metrics::new();
+        m.net_requests.fetch_add(7, Ordering::Relaxed);
+        m.spmm_kernel_ns[4].fetch_add(99, Ordering::Relaxed);
+        let s = m.snapshot();
+        let named = s.named_counters();
+        // scalar fields + one entry per spmm kernel slot
+        assert_eq!(named.len(), 22 + SPMM_NS_COUNTER_NAMES.len());
+        let mut names: Vec<&str> = named.iter().map(|(n, _)| *n).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), named.len(), "counter names must be unique");
+        let get = |k: &str| named.iter().find(|(n, _)| *n == k).unwrap().1;
+        assert_eq!(get("net_requests"), 7);
+        assert_eq!(get("spmm_ns_tiled"), 99);
+        assert_eq!(get("net_rejected_overload"), 0);
     }
 
     #[test]

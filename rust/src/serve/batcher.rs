@@ -54,13 +54,39 @@ impl<T, R> Clone for BatcherClient<T, R> {
     }
 }
 
+/// Why a non-blocking submit ([`BatcherClient::try_submit`]) was
+/// refused — the admission-control signal the network frontend turns
+/// into an explicit overload rejection frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded submit queue is full (over-offered load).
+    Overloaded,
+    /// The batcher has shut down.
+    Closed,
+}
+
 impl<T, R> BatcherClient<T, R> {
     /// Submit a request and block for the reply. Returns None if the
-    /// batcher shut down.
+    /// batcher shut down. Blocks while the submit queue is full —
+    /// see [`BatcherClient::try_submit`] for the non-blocking,
+    /// overload-rejecting path.
     pub fn call(&self, input: T) -> Option<R> {
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
         self.tx.send(Request { input, reply: reply_tx }).ok()?;
         reply_rx.recv().ok()
+    }
+
+    /// Submit without blocking: on success returns the reply channel
+    /// (recv it for the result); a full queue is refused with
+    /// [`SubmitError::Overloaded`] instead of stalling the caller —
+    /// bounded queues must reject, not silently queue-build.
+    pub fn try_submit(&self, input: T) -> std::result::Result<mpsc::Receiver<R>, SubmitError> {
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        match self.tx.try_send(Request { input, reply: reply_tx }) {
+            Ok(()) => Ok(reply_rx),
+            Err(mpsc::TrySendError::Full(_)) => Err(SubmitError::Overloaded),
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
     }
 }
 
@@ -161,6 +187,31 @@ mod tests {
         drop(client);
         // answer was never sent -> caller gets None
         assert_eq!(caller.join().unwrap(), None);
+    }
+
+    #[test]
+    fn try_submit_rejects_when_queue_full_and_when_closed() {
+        // No executor drains the queue, so the bounded channel fills.
+        let (b, client) = DynamicBatcher::<u32, u32>::new(BatchPolicy::default(), 2);
+        assert!(client.try_submit(1).is_ok());
+        assert!(client.try_submit(2).is_ok());
+        assert_eq!(client.try_submit(3).unwrap_err(), SubmitError::Overloaded);
+        drop(b);
+        assert_eq!(client.try_submit(4).unwrap_err(), SubmitError::Closed);
+    }
+
+    #[test]
+    fn try_submit_reply_arrives_on_receiver() {
+        let (mut b, client) = DynamicBatcher::<u32, u32>::new(
+            BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+            4,
+        );
+        let rx = client.try_submit(21).unwrap();
+        let batch = b.next_batch().unwrap();
+        for r in batch {
+            let _ = r.reply.send(r.input * 2);
+        }
+        assert_eq!(rx.recv().unwrap(), 42);
     }
 
     #[test]

@@ -312,13 +312,32 @@ pub struct ServingEngine {
 }
 
 impl ServingEngine {
+    /// Submit-queue bound used by [`ServingEngine::start`] /
+    /// [`ServingEngine::start_with`]; the network frontend passes an
+    /// explicit `--max-queue` via [`ServingEngine::start_bounded`].
+    pub const DEFAULT_QUEUE_CAP: usize = 1024;
+
     /// Start the executor thread over an already-built `Send` backend.
     pub fn start(
         backend: impl InferenceBackend + Send + 'static,
         policy: BatchPolicy,
         metrics: Arc<Metrics>,
     ) -> Self {
-        Self::start_with(move || Ok(backend), policy, metrics)
+        Self::start_bounded(backend, policy, Self::DEFAULT_QUEUE_CAP, metrics)
+    }
+
+    /// [`ServingEngine::start`] with an explicit submit-queue bound:
+    /// the admission-control knob. Blocking callers
+    /// ([`ServingEngine::infer`]) stall when the queue is full;
+    /// non-blocking submitters (`BatcherClient::try_submit`, used by
+    /// the TCP frontend) are refused with an overload signal instead.
+    pub fn start_bounded(
+        backend: impl InferenceBackend + Send + 'static,
+        policy: BatchPolicy,
+        queue_cap: usize,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        Self::start_with_bounded(move || Ok(backend), policy, queue_cap, metrics)
     }
 
     /// Start the executor thread, constructing the backend inside it.
@@ -329,8 +348,19 @@ impl ServingEngine {
         policy: BatchPolicy,
         metrics: Arc<Metrics>,
     ) -> Self {
+        Self::start_with_bounded(factory, policy, Self::DEFAULT_QUEUE_CAP, metrics)
+    }
+
+    /// [`ServingEngine::start_with`] with an explicit submit-queue
+    /// bound (see [`ServingEngine::start_bounded`]).
+    pub fn start_with_bounded<B: InferenceBackend + 'static>(
+        factory: impl FnOnce() -> Result<B> + Send + 'static,
+        policy: BatchPolicy,
+        queue_cap: usize,
+        metrics: Arc<Metrics>,
+    ) -> Self {
         let (mut batcher, client) =
-            DynamicBatcher::<Vec<f32>, Result<Vec<f32>>>::new(policy, 1024);
+            DynamicBatcher::<Vec<f32>, Result<Vec<f32>>>::new(policy, queue_cap.max(1));
         batcher.attach_metrics(Arc::clone(&metrics));
         let m = Arc::clone(&metrics);
         let handle = std::thread::Builder::new()

@@ -1,22 +1,38 @@
-//! Serving engine over compressed models: dynamic batching, decode
-//! cache, and sparse-execution kernels that run the masked layer
-//! directly on each index representation (or the PJRT artifact path;
-//! the native kernels keep the full pipeline testable without
-//! artifacts). Each kernel compiles a shard-parallel execution plan
-//! (`plan`) run on the coordinator's shared
-//! [`ExecCtx`](crate::coordinator::pool::ExecCtx).
+//! Serving engine over compressed models — from the socket down to
+//! the sparse kernel:
+//!
+//! - [`server`] / [`protocol`]: the TCP network frontend (`lrbi serve
+//!   --listen`) and its versioned, length-prefixed wire format with
+//!   typed error frames, admission control, `STATS`, hot-swap, and
+//!   graceful shutdown (specs: `docs/PROTOCOL.md`, ops guide:
+//!   `docs/SERVING.md`).
+//! - [`batcher`]: dynamic request batching — concurrent clients' rows
+//!   coalesce into shared executions behind a bounded submit queue
+//!   that *rejects* (never silently stalls) when full.
+//! - [`engine`] / [`variants`]: fixed-batch inference backends and
+//!   multi-variant serving with the LRU decode [`cache`].
+//! - [`kernels`]: sparse-execution kernels that run the masked layer
+//!   directly on each index representation (or the PJRT artifact
+//!   path; the native kernels keep the full pipeline testable without
+//!   artifacts). Each kernel compiles a shard-parallel execution plan
+//!   (`plan`) run on the coordinator's shared
+//!   [`ExecCtx`](crate::coordinator::pool::ExecCtx).
 
 pub mod batcher;
 pub mod cache;
 pub mod engine;
 pub mod kernels;
 pub(crate) mod plan;
+pub mod protocol;
+pub mod server;
 pub mod variants;
 
-pub use batcher::{BatchPolicy, DynamicBatcher};
+pub use batcher::{BatchPolicy, DynamicBatcher, SubmitError};
 pub use cache::LruCache;
 pub use engine::{InferenceBackend, NativeBackend, ServingEngine};
 pub use kernels::{
     build_kernel, build_kernel_exec, build_kernel_from_stored, build_kernel_from_stored_exec,
     KernelFormat, SparseKernel,
 };
+pub use protocol::{ErrorCode, Frame, RowBatch, WireError, MAX_FRAME, PROTOCOL_VERSION};
+pub use server::{ModelHub, ModelSlot, NetClient, ServeOptions, Server, ServerHandle};

@@ -1,0 +1,642 @@
+//! The `lrbi` wire protocol: a small, versioned, length-prefixed
+//! binary framing for network inference (`lrbi serve --listen`).
+//!
+//! Every message is one **frame**:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     payload length (u32 LE) — bytes after this field
+//! 4       1     protocol version (currently 1)
+//! 5       1     frame type
+//! 6       ...   body (frame-type specific)
+//! ```
+//!
+//! Clients send [`Frame::Infer`] (model key + an f32 row batch) and
+//! receive [`Frame::Logits`] or a typed [`Frame::Error`] carrying an
+//! [`ErrorCode`] — overload is an *explicit rejection frame*
+//! ([`ErrorCode::Overloaded`]), never a silent stall. `STATS`, `SWAP`
+//! and `SHUTDOWN` frames expose the server's metrics snapshot,
+//! registry hot-swap, and graceful shutdown over the same socket.
+//!
+//! Decoding is strict: unknown frame types, version mismatches,
+//! truncated or trailing bytes, and oversized length prefixes all
+//! surface as typed [`WireError`]s (the server answers them with an
+//! error frame; they never panic). The normative byte-level spec —
+//! including a worked hex example — lives in `docs/PROTOCOL.md`; this
+//! module is its reference implementation, and `tests/server.rs` pins
+//! round-trip and corruption behavior.
+
+use crate::util::error::Error;
+use std::io::{Read, Write};
+
+/// Protocol version carried in every frame (byte 4 on the wire).
+pub const PROTOCOL_VERSION: u8 = 1;
+
+/// Upper bound on a frame's payload length. A length prefix above
+/// this is rejected with [`ErrorCode::TooLarge`] *before* the payload
+/// is read, so a malicious or corrupt prefix cannot trigger a 4 GiB
+/// allocation.
+pub const MAX_FRAME: u32 = 1 << 24; // 16 MiB
+
+// Frame type bytes (wire values; pinned by tests).
+const FT_INFER: u8 = 0x01;
+const FT_LOGITS: u8 = 0x02;
+const FT_ERROR: u8 = 0x03;
+const FT_STATS_REQ: u8 = 0x04;
+const FT_STATS: u8 = 0x05;
+const FT_SWAP: u8 = 0x06;
+const FT_OK: u8 = 0x07;
+const FT_SHUTDOWN: u8 = 0x08;
+
+/// Typed error codes carried by [`Frame::Error`] (wire values are
+/// stable; see `docs/PROTOCOL.md`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Frame version byte differs from [`PROTOCOL_VERSION`].
+    BadVersion = 1,
+    /// Malformed frame: unknown type, truncated or trailing body,
+    /// bad UTF-8, or a shape/length field that contradicts the body.
+    BadFrame = 2,
+    /// Length prefix exceeds [`MAX_FRAME`]; the connection is closed
+    /// after this error because the stream can no longer be re-synced.
+    TooLarge = 3,
+    /// The request's model key names no registered model.
+    UnknownModel = 4,
+    /// Row width does not match the model's input dimension.
+    BadShape = 5,
+    /// Admission control rejected the request: the bounded request
+    /// queue is full or the server is at `--max-conns`.
+    Overloaded = 6,
+    /// The backend failed while executing the request.
+    Internal = 7,
+    /// The server is shutting down and no longer admits requests.
+    ShuttingDown = 8,
+}
+
+impl ErrorCode {
+    /// Every code, in wire order.
+    pub const ALL: [ErrorCode; 8] = [
+        ErrorCode::BadVersion,
+        ErrorCode::BadFrame,
+        ErrorCode::TooLarge,
+        ErrorCode::UnknownModel,
+        ErrorCode::BadShape,
+        ErrorCode::Overloaded,
+        ErrorCode::Internal,
+        ErrorCode::ShuttingDown,
+    ];
+
+    /// Decode a wire byte.
+    pub fn from_u8(b: u8) -> Option<ErrorCode> {
+        ErrorCode::ALL.into_iter().find(|c| *c as u8 == b)
+    }
+
+    /// Stable lowercase name (used in error messages and docs).
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::BadVersion => "bad-version",
+            ErrorCode::BadFrame => "bad-frame",
+            ErrorCode::TooLarge => "too-large",
+            ErrorCode::UnknownModel => "unknown-model",
+            ErrorCode::BadShape => "bad-shape",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Internal => "internal",
+            ErrorCode::ShuttingDown => "shutting-down",
+        }
+    }
+}
+
+/// A typed protocol failure: what the server answers with an error
+/// frame, and what strict decoding returns on malformed input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    /// Machine-readable code (also the error frame's code byte).
+    pub code: ErrorCode,
+    /// Human-readable context.
+    pub message: String,
+}
+
+impl WireError {
+    /// Build from a code + displayable context.
+    pub fn new(code: ErrorCode, message: impl std::fmt::Display) -> Self {
+        WireError { code, message: message.to_string() }
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.name(), self.message)
+    }
+}
+
+impl From<WireError> for Error {
+    fn from(e: WireError) -> Self {
+        Error::Protocol(e.to_string())
+    }
+}
+
+/// Why [`read_frame`] failed: transport I/O vs protocol violation.
+/// I/O failures end the connection; wire errors are answered with a
+/// typed error frame (and, for [`ErrorCode::TooLarge`], also end the
+/// connection, since the stream cannot be re-synced).
+#[derive(Debug)]
+pub enum ReadError {
+    /// Transport failure (socket reset, read error).
+    Io(std::io::Error),
+    /// Protocol violation with its typed code.
+    Wire(WireError),
+}
+
+/// A dense batch of `rows × cols` f32 values, row-major — the payload
+/// of [`Frame::Infer`] (model inputs) and [`Frame::Logits`] (outputs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowBatch {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl RowBatch {
+    /// Build from shape + row-major data; rejects mismatched lengths
+    /// and batches too large for one frame.
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> crate::util::error::Result<Self> {
+        if rows.checked_mul(cols) != Some(data.len()) {
+            return Err(Error::Protocol(format!(
+                "row batch {rows}x{cols} vs {} values",
+                data.len()
+            )));
+        }
+        // body = 8 bytes of shape + 4 per value, plus header and — for
+        // Infer — a u16-length key; budget the worst-case key (64 KiB)
+        // so a client-validated batch always encodes under MAX_FRAME.
+        if 16 + 4 * data.len() as u64 + (u16::MAX as u64 + 2) > MAX_FRAME as u64 {
+            return Err(Error::Protocol(format!(
+                "row batch {rows}x{cols} does not fit one frame (max {MAX_FRAME} bytes)"
+            )));
+        }
+        Ok(RowBatch { rows, cols, data })
+    }
+
+    /// Build from a slice of equal-length rows.
+    pub fn from_rows(rows: &[Vec<f32>]) -> crate::util::error::Result<Self> {
+        let cols = rows.first().map(|r| r.len()).unwrap_or(0);
+        if rows.iter().any(|r| r.len() != cols) {
+            return Err(Error::Protocol("ragged row batch".into()));
+        }
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            data.extend_from_slice(r);
+        }
+        RowBatch::new(rows.len(), cols, data)
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Row width.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// All values, row-major.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+/// One protocol message. `Infer`, `StatsRequest`, `Swap` and
+/// `Shutdown` flow client → server; `Logits`, `Error`, `Stats` and
+/// `Ok` flow server → client.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Run a row batch through the model named `key` (empty key =
+    /// server default model).
+    Infer {
+        /// Model key (registry name; empty selects the default).
+        key: String,
+        /// Input rows, each `input_dim` wide.
+        batch: RowBatch,
+    },
+    /// Per-row logits answering an `Infer`.
+    Logits(RowBatch),
+    /// Typed failure answering any request.
+    Error {
+        /// Machine-readable code.
+        code: ErrorCode,
+        /// Human-readable context.
+        message: String,
+    },
+    /// Ask for the server's metrics snapshot.
+    StatsRequest,
+    /// Named counters answering a `StatsRequest`
+    /// (`MetricsSnapshot::named_counters` order).
+    Stats(Vec<(String, u64)>),
+    /// Hot-swap the registry artifact named `key` into the running
+    /// server (in-flight batches finish on the old kernel).
+    Swap {
+        /// Registry artifact name.
+        key: String,
+    },
+    /// Success acknowledgement for `Swap` / `Shutdown`.
+    Ok {
+        /// Human-readable detail.
+        message: String,
+    },
+    /// Ask the server to shut down gracefully (stop accepting, finish
+    /// in-flight requests, exit).
+    Shutdown,
+}
+
+impl Frame {
+    /// Convenience error-frame constructor.
+    pub fn error(code: ErrorCode, message: impl std::fmt::Display) -> Frame {
+        Frame::Error { code, message: message.to_string() }
+    }
+
+    /// The frame's wire type byte.
+    pub fn type_byte(&self) -> u8 {
+        match self {
+            Frame::Infer { .. } => FT_INFER,
+            Frame::Logits(_) => FT_LOGITS,
+            Frame::Error { .. } => FT_ERROR,
+            Frame::StatsRequest => FT_STATS_REQ,
+            Frame::Stats(_) => FT_STATS,
+            Frame::Swap { .. } => FT_SWAP,
+            Frame::Ok { .. } => FT_OK,
+            Frame::Shutdown => FT_SHUTDOWN,
+        }
+    }
+
+    /// Stable frame-type name (logs and docs).
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Frame::Infer { .. } => "INFER",
+            Frame::Logits(_) => "LOGITS",
+            Frame::Error { .. } => "ERROR",
+            Frame::StatsRequest => "STATS_REQ",
+            Frame::Stats(_) => "STATS",
+            Frame::Swap { .. } => "SWAP",
+            Frame::Ok { .. } => "OK",
+            Frame::Shutdown => "SHUTDOWN",
+        }
+    }
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Longest prefix of `s` that fits `max` bytes without splitting a
+/// UTF-8 code point — every length-prefixed string field truncates
+/// through this so `encode` can never emit a frame its own decoder
+/// rejects as invalid UTF-8.
+fn utf8_prefix(s: &str, max: usize) -> &[u8] {
+    if s.len() <= max {
+        return s.as_bytes();
+    }
+    let mut end = max;
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    &s.as_bytes()[..end]
+}
+
+fn put_short_str(out: &mut Vec<u8>, s: &str) {
+    // u16-length strings; oversized input is truncated at a char
+    // boundary (keys and messages are short in practice).
+    let bytes = utf8_prefix(s, u16::MAX as usize);
+    put_u16(out, bytes.len() as u16);
+    out.extend_from_slice(bytes);
+}
+
+fn put_batch(out: &mut Vec<u8>, b: &RowBatch) {
+    put_u32(out, b.rows as u32);
+    put_u32(out, b.cols as u32);
+    for v in &b.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encode a frame to its full wire bytes (length prefix included).
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(64);
+    payload.push(PROTOCOL_VERSION);
+    payload.push(frame.type_byte());
+    match frame {
+        Frame::Infer { key, batch } => {
+            put_short_str(&mut payload, key);
+            put_batch(&mut payload, batch);
+        }
+        Frame::Logits(batch) => put_batch(&mut payload, batch),
+        Frame::Error { code, message } => {
+            payload.push(*code as u8);
+            put_short_str(&mut payload, message);
+        }
+        Frame::StatsRequest | Frame::Shutdown => {}
+        Frame::Stats(entries) => {
+            let count = entries.len().min(u16::MAX as usize);
+            put_u16(&mut payload, count as u16);
+            for (name, value) in entries.iter().take(count) {
+                let bytes = utf8_prefix(name, u8::MAX as usize);
+                payload.push(bytes.len() as u8);
+                payload.extend_from_slice(bytes);
+                payload.extend_from_slice(&value.to_le_bytes());
+            }
+        }
+        Frame::Swap { key } => put_short_str(&mut payload, key),
+        Frame::Ok { message } => put_short_str(&mut payload, message),
+    }
+    let mut wire = Vec::with_capacity(4 + payload.len());
+    wire.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    wire.extend_from_slice(&payload);
+    wire
+}
+
+/// Strict byte cursor over a frame payload.
+struct Cur<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], WireError> {
+        if self.off + n > self.b.len() {
+            return Err(WireError::new(
+                ErrorCode::BadFrame,
+                format!("truncated frame: {what} needs {n} bytes"),
+            ));
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, WireError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16, WireError> {
+        let s = self.take(2, what)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, WireError> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, WireError> {
+        let s = self.take(8, what)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(s);
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn short_str(&mut self, what: &str) -> Result<String, WireError> {
+        let len = self.u16(what)? as usize;
+        let bytes = self.take(len, what)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::new(ErrorCode::BadFrame, format!("{what}: invalid UTF-8")))
+    }
+
+    fn batch(&mut self) -> Result<RowBatch, WireError> {
+        let rows = self.u32("batch rows")? as usize;
+        let cols = self.u32("batch cols")? as usize;
+        let bytes_len = rows
+            .checked_mul(cols)
+            .and_then(|v| v.checked_mul(4))
+            .ok_or_else(|| WireError::new(ErrorCode::BadFrame, "batch shape overflows"))?;
+        let bytes = self.take(bytes_len, "batch values")?;
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(RowBatch { rows, cols, data })
+    }
+
+    fn done(self, what: &str) -> Result<(), WireError> {
+        if self.off != self.b.len() {
+            return Err(WireError::new(
+                ErrorCode::BadFrame,
+                format!("{what}: {} trailing bytes", self.b.len() - self.off),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Decode one frame payload (the bytes *after* the length prefix).
+/// Strict: version must match, the type byte must be known, and the
+/// body must be exactly consumed.
+pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
+    let mut cur = Cur { b: payload, off: 0 };
+    let version = cur.u8("version")?;
+    if version != PROTOCOL_VERSION {
+        return Err(WireError::new(
+            ErrorCode::BadVersion,
+            format!("got version {version}, this server speaks {PROTOCOL_VERSION}"),
+        ));
+    }
+    let ftype = cur.u8("frame type")?;
+    let frame = match ftype {
+        FT_INFER => {
+            let key = cur.short_str("model key")?;
+            let batch = cur.batch()?;
+            Frame::Infer { key, batch }
+        }
+        FT_LOGITS => Frame::Logits(cur.batch()?),
+        FT_ERROR => {
+            let code_byte = cur.u8("error code")?;
+            let code = ErrorCode::from_u8(code_byte).ok_or_else(|| {
+                WireError::new(ErrorCode::BadFrame, format!("unknown error code {code_byte}"))
+            })?;
+            let message = cur.short_str("error message")?;
+            Frame::Error { code, message }
+        }
+        FT_STATS_REQ => Frame::StatsRequest,
+        FT_STATS => {
+            let count = cur.u16("stats count")? as usize;
+            let mut entries = Vec::with_capacity(count.min(1024));
+            for _ in 0..count {
+                let len = cur.u8("stats name length")? as usize;
+                let name = String::from_utf8(cur.take(len, "stats name")?.to_vec())
+                    .map_err(|_| {
+                        WireError::new(ErrorCode::BadFrame, "stats name: invalid UTF-8")
+                    })?;
+                let value = cur.u64("stats value")?;
+                entries.push((name, value));
+            }
+            Frame::Stats(entries)
+        }
+        FT_SWAP => Frame::Swap { key: cur.short_str("swap key")? },
+        FT_OK => Frame::Ok { message: cur.short_str("ok message")? },
+        FT_SHUTDOWN => Frame::Shutdown,
+        other => {
+            return Err(WireError::new(
+                ErrorCode::BadFrame,
+                format!("unknown frame type {other:#04x}"),
+            ));
+        }
+    };
+    cur.done(frame.type_name())?;
+    Ok(frame)
+}
+
+/// Write one frame to a stream.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> std::io::Result<()> {
+    w.write_all(&encode(frame))?;
+    w.flush()
+}
+
+/// Read one frame from a stream. Returns `Ok(None)` on clean EOF at a
+/// frame boundary; a stream ending mid-frame is a typed
+/// [`ErrorCode::BadFrame`], and a length prefix above [`MAX_FRAME`] is
+/// [`ErrorCode::TooLarge`] (rejected before any payload allocation).
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>, ReadError> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None); // clean EOF between frames
+                }
+                return Err(ReadError::Wire(WireError::new(
+                    ErrorCode::BadFrame,
+                    "stream ended inside a length prefix",
+                )));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ReadError::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME {
+        return Err(ReadError::Wire(WireError::new(
+            ErrorCode::TooLarge,
+            format!("frame payload {len} bytes exceeds the {MAX_FRAME}-byte cap"),
+        )));
+    }
+    let mut payload = vec![0u8; len as usize];
+    match r.read_exact(&mut payload) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            return Err(ReadError::Wire(WireError::new(
+                ErrorCode::BadFrame,
+                "stream ended inside a frame payload",
+            )));
+        }
+        Err(e) => return Err(ReadError::Io(e)),
+    }
+    // Checked only after the payload was consumed, so an undersized
+    // frame leaves the stream synced at the next frame boundary.
+    if len < 2 {
+        return Err(ReadError::Wire(WireError::new(
+            ErrorCode::BadFrame,
+            "frame payload shorter than version + type",
+        )));
+    }
+    decode_payload(&payload).map(Some).map_err(ReadError::Wire)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let wire = encode(frame);
+        let mut r = &wire[..];
+        let got = read_frame(&mut r).expect("decode").expect("some frame");
+        assert_eq!(r.len(), 0, "frame fully consumed");
+        got
+    }
+
+    #[test]
+    fn every_frame_kind_round_trips() {
+        let batch = RowBatch::new(2, 3, vec![1.0, -2.5, 0.0, 3.25, f32::MIN, f32::MAX]).unwrap();
+        let frames = [
+            Frame::Infer { key: "k16".into(), batch: batch.clone() },
+            Frame::Infer { key: String::new(), batch: RowBatch::new(0, 0, vec![]).unwrap() },
+            Frame::Logits(batch),
+            Frame::error(ErrorCode::Overloaded, "queue full"),
+            Frame::StatsRequest,
+            Frame::Stats(vec![("requests".into(), 42), ("spmm_shards".into(), u64::MAX)]),
+            Frame::Swap { key: "v2".into() },
+            Frame::Ok { message: "swapped".into() },
+            Frame::Shutdown,
+        ];
+        for f in &frames {
+            assert_eq!(&roundtrip(f), f, "{}", f.type_name());
+        }
+    }
+
+    #[test]
+    fn type_bytes_are_stable() {
+        assert_eq!(
+            Frame::Infer {
+                key: String::new(),
+                batch: RowBatch::new(0, 0, vec![]).unwrap()
+            }
+            .type_byte(),
+            0x01
+        );
+        assert_eq!(Frame::Shutdown.type_byte(), 0x08);
+        for code in ErrorCode::ALL {
+            assert_eq!(ErrorCode::from_u8(code as u8), Some(code));
+        }
+        assert_eq!(ErrorCode::from_u8(0), None);
+        assert_eq!(ErrorCode::from_u8(99), None);
+    }
+
+    #[test]
+    fn version_byte_is_checked() {
+        let mut wire = encode(&Frame::StatsRequest);
+        wire[4] = PROTOCOL_VERSION + 1;
+        let mut r = &wire[..];
+        match read_frame(&mut r) {
+            Err(ReadError::Wire(e)) => assert_eq!(e.code, ErrorCode::BadVersion),
+            other => panic!("expected BadVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_as_too_large() {
+        let mut wire = (MAX_FRAME + 1).to_le_bytes().to_vec();
+        wire.extend_from_slice(&[0u8; 8]);
+        let mut r = &wire[..];
+        match read_frame(&mut r) {
+            Err(ReadError::Wire(e)) => assert_eq!(e.code, ErrorCode::TooLarge),
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn row_batch_validates_shape_and_size() {
+        assert!(RowBatch::new(2, 3, vec![0.0; 5]).is_err());
+        assert!(RowBatch::new(1 << 20, 1 << 20, vec![]).is_err(), "shape overflow");
+        assert!(RowBatch::from_rows(&[vec![1.0, 2.0], vec![3.0]]).is_err(), "ragged");
+        let b = RowBatch::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        assert_eq!((b.rows(), b.cols()), (2, 2));
+        assert_eq!(b.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn wire_error_converts_to_typed_crate_error() {
+        let e: Error = WireError::new(ErrorCode::Overloaded, "q full").into();
+        let msg = e.to_string();
+        assert!(msg.contains("overloaded"), "{msg}");
+        assert!(msg.contains("protocol error"), "{msg}");
+    }
+}

@@ -1,0 +1,818 @@
+//! The network serving frontend: a `std::net` TCP server speaking the
+//! `serve::protocol` wire format (`lrbi serve --listen ADDR`).
+//!
+//! Architecture — one OS thread per live connection, all feeding the
+//! per-model [`DynamicBatcher`](crate::serve::batcher::DynamicBatcher):
+//!
+//! ```text
+//! clients ──TCP──▶ acceptor ──▶ conn handler threads
+//!                     │              │  (decode INFER, submit rows)
+//!                 --max-conns        ▼
+//!                  rejection   ModelHub { key → ModelSlot }
+//!                                    │  bounded queue (--max-queue)
+//!                                    ▼
+//!                          ServingEngine executor
+//!                        (DynamicBatcher → SparseKernel SpMM plan)
+//! ```
+//!
+//! Rows from concurrent connections coalesce into shared plan
+//! executions (the whole point of dynamic batching), and each row's
+//! reply channel demultiplexes its logits back to the connection that
+//! sent it. Because every kernel computes each output row from its
+//! input row alone, logits served over the wire are **bit-identical**
+//! to a direct in-process [`NativeBackend`] call (pinned by
+//! `tests/server.rs`).
+//!
+//! Admission control is explicit, never a silent stall:
+//! - at accept time, a connection beyond `--max-conns` is answered
+//!   with one [`ErrorCode::Overloaded`] frame and closed;
+//! - at submit time, a request that does not fit the bounded engine
+//!   queue (`--max-queue`) is answered with an `overloaded` error
+//!   frame (rows already admitted still execute; their results are
+//!   discarded).
+//!
+//! Hot-swap safety: `SWAP name` rebuilds that model's engine from the
+//! registry and replaces the [`ModelHub`] entry atomically. In-flight
+//! requests hold an `Arc` to the old slot, so their batches finish on
+//! the old kernel; requests arriving after the swap see the new one.
+//! The old executor thread drains and exits once its last reference
+//! drops.
+//!
+//! Graceful shutdown (a `SHUTDOWN` frame, or [`ServerHandle::shutdown`]):
+//! stop accepting, half-close every connection's read side so blocked
+//! readers wake, finish in-flight requests, join the handlers, return
+//! from [`Server::run`]. Operations guide: `docs/SERVING.md`.
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::ExecCtx;
+use crate::serve::batcher::{BatchPolicy, SubmitError};
+use crate::serve::engine::{InferenceBackend, NativeBackend, ServingEngine};
+use crate::serve::protocol::{self, ErrorCode, Frame, ReadError, RowBatch, WireError};
+use crate::store::{Artifact, Registry};
+use crate::util::error::{Error, Result};
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Read timeout on every connection: a peer that sits silent this
+/// long between requests has its `--max-conns` slot reclaimed, so
+/// idle (or dead) clients cannot permanently deny service — see
+/// docs/SERVING.md §Overload behavior.
+const CONN_IDLE_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// Write timeout on every connection: a peer that stops *reading*
+/// must not pin its handler in `write_frame` forever — that handler
+/// holds a connection slot and would block graceful shutdown's join.
+const CONN_WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Frontend sizing knobs (`lrbi serve --listen` flags).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    /// Concurrent connections admitted; the next accept is answered
+    /// with an `overloaded` error frame and closed (`--max-conns`).
+    pub max_conns: usize,
+    /// Bound of each model's request queue; a request that does not
+    /// fit is rejected with an `overloaded` error frame
+    /// (`--max-queue`).
+    pub max_queue: usize,
+    /// Dynamic-batching policy every model engine runs
+    /// (`--max-batch`, `--max-wait-ms`).
+    pub policy: BatchPolicy,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { max_conns: 64, max_queue: 256, policy: BatchPolicy::default() }
+    }
+}
+
+/// One served model: a running [`ServingEngine`] plus the geometry
+/// the frontend validates requests against.
+pub struct ModelSlot {
+    engine: ServingEngine,
+    input_dim: usize,
+    classes: usize,
+    kernel: &'static str,
+}
+
+impl ModelSlot {
+    /// Wrap an already-running engine (the generic path; tests and
+    /// benches use it to serve custom backends).
+    pub fn from_engine(
+        engine: ServingEngine,
+        input_dim: usize,
+        classes: usize,
+        kernel: &'static str,
+    ) -> Self {
+        ModelSlot { engine, input_dim, classes, kernel }
+    }
+
+    /// Input feature dimension requests must match.
+    pub fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    /// Output classes per row.
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Name of the sparse kernel executing this model.
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel
+    }
+
+    /// Run a wire batch: every row is submitted to the engine's
+    /// batcher without blocking (so concurrent connections coalesce
+    /// into shared plan executions), then the replies are collected in
+    /// row order. A full queue rejects the request with
+    /// [`ErrorCode::Overloaded`] — rows already admitted still execute
+    /// and their results are discarded.
+    fn infer_batch(&self, batch: &RowBatch) -> std::result::Result<RowBatch, WireError> {
+        if batch.rows() == 0 {
+            return RowBatch::new(0, self.classes, Vec::new())
+                .map_err(|e| WireError::new(ErrorCode::Internal, e));
+        }
+        if batch.cols() != self.input_dim {
+            return Err(WireError::new(
+                ErrorCode::BadShape,
+                format!("rows are {} wide, model expects {}", batch.cols(), self.input_dim),
+            ));
+        }
+        let client = self.engine.client();
+        let mut pending = Vec::with_capacity(batch.rows());
+        for i in 0..batch.rows() {
+            match client.try_submit(batch.row(i).to_vec()) {
+                Ok(rx) => pending.push(rx),
+                Err(SubmitError::Overloaded) => {
+                    // Drain what was admitted so the executor's reply
+                    // sends don't linger, then reject explicitly.
+                    for rx in pending {
+                        let _ = rx.recv();
+                    }
+                    return Err(WireError::new(
+                        ErrorCode::Overloaded,
+                        format!(
+                            "request queue full after {i} of {} rows; retry with backoff",
+                            batch.rows()
+                        ),
+                    ));
+                }
+                Err(SubmitError::Closed) => {
+                    return Err(WireError::new(ErrorCode::Internal, "serving engine stopped"));
+                }
+            }
+        }
+        let mut rows: Vec<Vec<f32>> = Vec::with_capacity(pending.len());
+        for rx in pending {
+            match rx.recv() {
+                Ok(Ok(logits)) => rows.push(logits),
+                Ok(Err(e)) => return Err(WireError::new(ErrorCode::Internal, e)),
+                Err(_) => {
+                    return Err(WireError::new(ErrorCode::Internal, "serving engine stopped"));
+                }
+            }
+        }
+        RowBatch::from_rows(&rows).map_err(|e| WireError::new(ErrorCode::Internal, e))
+    }
+}
+
+/// The set of models a server exposes, keyed by registry name (an
+/// empty wire key selects the default). Swappable under load.
+pub struct ModelHub {
+    models: RwLock<HashMap<String, Arc<ModelSlot>>>,
+    default_key: String,
+    registry_dir: Option<PathBuf>,
+    policy: BatchPolicy,
+    queue_cap: usize,
+    metrics: Arc<Metrics>,
+    ctx: Arc<ExecCtx>,
+}
+
+impl ModelHub {
+    fn empty(
+        default_key: &str,
+        registry_dir: Option<PathBuf>,
+        policy: BatchPolicy,
+        queue_cap: usize,
+        metrics: Arc<Metrics>,
+        ctx: Arc<ExecCtx>,
+    ) -> Self {
+        ModelHub {
+            models: RwLock::new(HashMap::new()),
+            default_key: default_key.to_string(),
+            registry_dir,
+            policy,
+            queue_cap,
+            metrics,
+            ctx,
+        }
+    }
+
+    /// One in-memory backend under `key` (the `--kernel` synthetic
+    /// path; no registry, so `SWAP` frames are refused).
+    pub fn from_backend(
+        key: &str,
+        backend: NativeBackend,
+        policy: BatchPolicy,
+        queue_cap: usize,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        let ctx = ExecCtx::single();
+        let hub = Self::empty(key, None, policy, queue_cap, metrics, ctx);
+        hub.install_backend(key, backend);
+        hub
+    }
+
+    /// One artifact under `key` (`--artifact model.lrbi`).
+    pub fn from_artifact(
+        key: &str,
+        artifact: &Artifact,
+        policy: BatchPolicy,
+        queue_cap: usize,
+        metrics: Arc<Metrics>,
+        ctx: Arc<ExecCtx>,
+    ) -> Result<Self> {
+        let backend = NativeBackend::from_artifact_exec(artifact, Arc::clone(&ctx))?
+            .with_metrics(Arc::clone(&metrics));
+        let hub = Self::empty(key, None, policy, queue_cap, metrics, ctx);
+        hub.install_backend(key, backend);
+        Ok(hub)
+    }
+
+    /// Every artifact in a registry, one engine per entry
+    /// (`--registry dir`); the first manifest entry is the default
+    /// model, and `SWAP name` reloads `name` from this registry.
+    pub fn from_registry(
+        dir: impl AsRef<Path>,
+        policy: BatchPolicy,
+        queue_cap: usize,
+        metrics: Arc<Metrics>,
+        ctx: Arc<ExecCtx>,
+    ) -> Result<Self> {
+        let registry = Registry::open(&dir)?;
+        if registry.is_empty() {
+            return Err(Error::store(format!(
+                "registry {} is empty — publish artifacts with `lrbi pack --registry`",
+                registry.dir().display()
+            )));
+        }
+        let default = registry.entries()[0].name.clone();
+        let hub = Self::empty(
+            &default,
+            Some(dir.as_ref().to_path_buf()),
+            policy,
+            queue_cap,
+            metrics,
+            ctx,
+        );
+        for entry in registry.entries() {
+            let name = entry.name.clone();
+            let t0 = Instant::now();
+            let artifact = registry.load(&name)?;
+            hub.metrics.record_artifact_load(t0);
+            let backend = NativeBackend::from_artifact_exec(&artifact, Arc::clone(&hub.ctx))?
+                .with_metrics(Arc::clone(&hub.metrics));
+            hub.install_backend(&name, backend);
+        }
+        Ok(hub)
+    }
+
+    /// Register (or replace) `key` with a freshly-started engine over
+    /// `backend`; returns the kernel name now serving `key`. The
+    /// batching policy is clamped to the backend's fixed batch size.
+    pub fn install_backend(&self, key: &str, backend: NativeBackend) -> &'static str {
+        let input_dim = backend.input_dim();
+        let classes = backend.classes();
+        let kernel = backend.kernel_name();
+        let policy = BatchPolicy {
+            max_batch: self.policy.max_batch.min(backend.batch()).max(1),
+            max_wait: self.policy.max_wait,
+        };
+        let engine = ServingEngine::start_bounded(
+            backend,
+            policy,
+            self.queue_cap,
+            Arc::clone(&self.metrics),
+        );
+        self.install_slot(key, ModelSlot::from_engine(engine, input_dim, classes, kernel));
+        kernel
+    }
+
+    /// Register (or replace) `key` with a pre-built slot (custom
+    /// backends in tests/benches).
+    pub fn install_slot(&self, key: &str, slot: ModelSlot) {
+        self.models
+            .write()
+            .expect("model hub lock")
+            .insert(key.to_string(), Arc::new(slot));
+    }
+
+    /// Look up a model; the empty key means the default model.
+    pub fn get(&self, key: &str) -> Option<Arc<ModelSlot>> {
+        let key = if key.is_empty() { self.default_key.as_str() } else { key };
+        self.models.read().expect("model hub lock").get(key).cloned()
+    }
+
+    /// Registered model keys, sorted.
+    pub fn keys(&self) -> Vec<String> {
+        let mut keys: Vec<String> =
+            self.models.read().expect("model hub lock").keys().cloned().collect();
+        keys.sort();
+        keys
+    }
+
+    /// The key an empty wire key resolves to.
+    pub fn default_key(&self) -> &str {
+        &self.default_key
+    }
+
+    /// Metrics shared by every engine in the hub.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Hot-swap: reload `name` from the registry this hub was built
+    /// over and replace (or add) that model's engine. In-flight
+    /// requests finish on the old kernel (they hold its slot);
+    /// requests arriving after the swap see the new artifact.
+    pub fn swap(&self, name: &str) -> Result<String> {
+        let dir = self.registry_dir.as_ref().ok_or_else(|| {
+            Error::invalid("hot swap requires a server started with --registry")
+        })?;
+        let registry = Registry::open(dir)?;
+        let t0 = Instant::now();
+        let artifact = registry.load(name)?;
+        self.metrics.record_artifact_load(t0);
+        let backend = NativeBackend::from_artifact_exec(&artifact, Arc::clone(&self.ctx))?
+            .with_metrics(Arc::clone(&self.metrics));
+        let kernel = self.install_backend(name, backend);
+        self.metrics.hot_swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(format!(
+            "swapped '{name}' in (kernel '{kernel}'); in-flight batches finish on the old kernel"
+        ))
+    }
+}
+
+/// Shared acceptor/handler state.
+struct ServerState {
+    shutdown: AtomicBool,
+    active: AtomicUsize,
+    next_conn: AtomicU64,
+    /// Read-half handles of live connections, half-closed on shutdown
+    /// so blocked readers wake without cutting in-flight replies.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    addr: SocketAddr,
+}
+
+impl ServerState {
+    fn conns_lock(&self) -> std::sync::MutexGuard<'_, HashMap<u64, TcpStream>> {
+        // A handler that panicked while holding the lock must not take
+        // the whole server down with a poisoned-lock panic.
+        self.conns.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    fn begin_shutdown(&self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return; // already shutting down
+        }
+        // Wake every reader blocked in read_frame; the write half
+        // stays open so in-flight replies still go out. (A connection
+        // racing registration against this sweep half-closes itself:
+        // the acceptor re-checks the flag after inserting.)
+        for stream in self.conns_lock().values() {
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+        // Wake the acceptor with a no-op connection. A wildcard bind
+        // (0.0.0.0 / [::]) is not connectable everywhere — aim at the
+        // matching loopback address instead.
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake.ip() {
+                std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect(wake);
+    }
+}
+
+/// Cloneable trigger for graceful shutdown (also fired by a client
+/// `SHUTDOWN` frame).
+#[derive(Clone)]
+pub struct ServerHandle {
+    state: Arc<ServerState>,
+}
+
+impl ServerHandle {
+    /// Stop accepting, wake blocked readers, let in-flight requests
+    /// finish; [`Server::run`] then joins the handlers and returns.
+    pub fn shutdown(&self) {
+        self.state.begin_shutdown();
+    }
+
+    /// Whether shutdown has been triggered.
+    pub fn is_shutdown(&self) -> bool {
+        self.state.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Live connection count (admission-control observability).
+    pub fn active_connections(&self) -> usize {
+        self.state.active.load(Ordering::SeqCst)
+    }
+}
+
+/// Decrements the live-connection count and unregisters the read-half
+/// clone even if the handler unwinds.
+struct ConnGuard {
+    state: Arc<ServerState>,
+    id: u64,
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.state.conns_lock().remove(&self.id);
+        self.state.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A bound (not yet running) TCP frontend over a [`ModelHub`].
+pub struct Server {
+    listener: TcpListener,
+    hub: Arc<ModelHub>,
+    max_conns: usize,
+    state: Arc<ServerState>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:4000`; port 0 picks a free port,
+    /// read it back with [`Server::local_addr`]).
+    pub fn bind(addr: impl ToSocketAddrs, hub: Arc<ModelHub>, opts: &ServeOptions) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        Ok(Server {
+            listener,
+            hub,
+            max_conns: opts.max_conns.max(1),
+            state: Arc::new(ServerState {
+                shutdown: AtomicBool::new(false),
+                active: AtomicUsize::new(0),
+                next_conn: AtomicU64::new(0),
+                conns: Mutex::new(HashMap::new()),
+                addr: local,
+            }),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    /// A shutdown trigger usable from any thread.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { state: Arc::clone(&self.state) }
+    }
+
+    /// Accept and serve until shutdown is triggered (by a `SHUTDOWN`
+    /// frame or [`ServerHandle::shutdown`]); returns after in-flight
+    /// connections drain.
+    pub fn run(self) -> Result<()> {
+        let Server { listener, hub, max_conns, state } = self;
+        let metrics = hub.metrics();
+        let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+        loop {
+            let (mut stream, _peer) = match listener.accept() {
+                Ok(pair) => pair,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    if state.shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    // Persistent accept failures (e.g. EMFILE during a
+                    // connection storm) must not busy-spin the
+                    // acceptor hot — back off briefly so handlers can
+                    // release fds.
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                    continue;
+                }
+            };
+            if state.shutdown.load(Ordering::SeqCst) {
+                break; // the shutdown wake-up connection lands here
+            }
+            // Reap finished handler threads so the list stays bounded
+            // by the connection cap, not the server's lifetime.
+            handlers.retain(|h| !h.is_finished());
+            if state.active.load(Ordering::SeqCst) >= max_conns {
+                metrics.net_conns_rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = protocol::write_frame(
+                    &mut stream,
+                    &Frame::error(
+                        ErrorCode::Overloaded,
+                        format!("server at its connection cap ({max_conns}); retry later"),
+                    ),
+                );
+                continue; // dropped: explicit rejection, never a stall
+            }
+            // A connection that cannot be registered for the shutdown
+            // wake (clone failure under fd pressure) must not be
+            // served — its blocked reader would hang the drain.
+            let read_half = match stream.try_clone() {
+                Ok(half) => half,
+                Err(_) => {
+                    metrics.net_conns_rejected.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+            };
+            let id = state.next_conn.fetch_add(1, Ordering::Relaxed);
+            state.conns_lock().insert(id, read_half);
+            if state.shutdown.load(Ordering::SeqCst) {
+                // begin_shutdown's half-close sweep may have run
+                // between the flag check above and the insert; this
+                // connection would then block in read_frame forever
+                // and hang the drain. Half-close it ourselves —
+                // SeqCst ordering guarantees one of the two sides
+                // sees the other.
+                if let Some(stream) = state.conns_lock().get(&id) {
+                    let _ = stream.shutdown(Shutdown::Read);
+                }
+            }
+            state.active.fetch_add(1, Ordering::SeqCst);
+            let guard = ConnGuard { state: Arc::clone(&state), id };
+            let hub = Arc::clone(&hub);
+            let conn_state = Arc::clone(&state);
+            let conn_metrics = Arc::clone(&metrics);
+            let spawned = std::thread::Builder::new()
+                .name(format!("lrbi-conn-{id}"))
+                .spawn(move || {
+                    let _guard = guard;
+                    handle_conn(stream, &hub, &conn_state, &conn_metrics);
+                });
+            match spawned {
+                Ok(handle) => {
+                    // Counted accepted only once a handler actually
+                    // serves it, so a shed connection is never both
+                    // accepted and rejected in STATS.
+                    metrics.net_conns_accepted.fetch_add(1, Ordering::Relaxed);
+                    handlers.push(handle);
+                }
+                Err(_) => {
+                    // Thread exhaustion (EAGAIN/ENOMEM) must shed this
+                    // connection, not panic the acceptor: dropping the
+                    // un-run closure closes the stream and runs the
+                    // guard's cleanup.
+                    metrics.net_conns_rejected.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        drop(listener); // stop accepting before draining handlers
+        for handle in handlers {
+            let _ = handle.join();
+        }
+        Ok(())
+    }
+}
+
+/// Per-connection request loop: read frames, dispatch, write replies.
+fn handle_conn(stream: TcpStream, hub: &ModelHub, state: &ServerState, metrics: &Metrics) {
+    let _ = stream.set_nodelay(true);
+    // Socket options are shared with the read-half clones below, so
+    // both directions get bounded before any clone is used.
+    let _ = stream.set_read_timeout(Some(CONN_IDLE_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(CONN_WRITE_TIMEOUT));
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    loop {
+        let frame = match protocol::read_frame(&mut reader) {
+            Ok(Some(frame)) => frame,
+            Ok(None) => break, // client closed cleanly
+            Err(ReadError::Io(_)) => break,
+            Err(ReadError::Wire(e)) => {
+                metrics.net_protocol_errors.fetch_add(1, Ordering::Relaxed);
+                // An oversized length prefix leaves unread payload on
+                // the stream — it cannot be re-synced, so reply and
+                // close. Every other decode error consumed exactly one
+                // frame; the connection stays usable.
+                let fatal = e.code == ErrorCode::TooLarge;
+                let _ = protocol::write_frame(
+                    &mut writer,
+                    &Frame::Error { code: e.code, message: e.message },
+                );
+                if fatal {
+                    break;
+                }
+                continue;
+            }
+        };
+        let reply = match frame {
+            Frame::Infer { key, batch } => {
+                metrics.net_requests.fetch_add(1, Ordering::Relaxed);
+                if state.shutdown.load(Ordering::SeqCst) {
+                    Frame::error(ErrorCode::ShuttingDown, "server is shutting down")
+                } else {
+                    match hub.get(&key) {
+                        None => Frame::error(
+                            ErrorCode::UnknownModel,
+                            format!("no model '{key}' (available: {})", hub.keys().join(", ")),
+                        ),
+                        Some(slot) => match slot.infer_batch(&batch) {
+                            Ok(logits) => Frame::Logits(logits),
+                            Err(e) => {
+                                if e.code == ErrorCode::Overloaded {
+                                    metrics.net_rejected_overload.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Frame::Error { code: e.code, message: e.message }
+                            }
+                        },
+                    }
+                }
+            }
+            Frame::StatsRequest => Frame::Stats(
+                metrics
+                    .snapshot()
+                    .named_counters()
+                    .into_iter()
+                    .map(|(name, value)| (name.to_string(), value))
+                    .collect(),
+            ),
+            Frame::Swap { key } => match hub.swap(&key) {
+                Ok(message) => Frame::Ok { message },
+                Err(e) => Frame::error(ErrorCode::Internal, e),
+            },
+            Frame::Shutdown => {
+                let _ = protocol::write_frame(
+                    &mut writer,
+                    &Frame::Ok { message: "shutting down".into() },
+                );
+                state.begin_shutdown();
+                break;
+            }
+            other => {
+                metrics.net_protocol_errors.fetch_add(1, Ordering::Relaxed);
+                Frame::error(
+                    ErrorCode::BadFrame,
+                    format!("unexpected {} frame from a client", other.type_name()),
+                )
+            }
+        };
+        if protocol::write_frame(&mut writer, &reply).is_err() {
+            break;
+        }
+    }
+}
+
+/// Blocking client for the wire protocol — used by the CLI example,
+/// the `perf_serve_loadgen` bench, and the integration tests.
+pub struct NetClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// Turn a server reply into the expected payload: error frames and
+/// unexpected types both become typed [`Error::Protocol`]s.
+fn expect_reply<T>(
+    reply: Frame,
+    want: &str,
+    extract: impl FnOnce(Frame) -> std::result::Result<T, Frame>,
+) -> Result<T> {
+    match reply {
+        Frame::Error { code, message } => {
+            Err(Error::Protocol(format!("{}: {message}", code.name())))
+        }
+        other => extract(other)
+            .map_err(|got| Error::Protocol(format!("expected {want}, got {}", got.type_name()))),
+    }
+}
+
+impl NetClient {
+    /// Connect to a running `lrbi serve --listen` frontend.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(NetClient { reader, writer: stream })
+    }
+
+    /// Send one frame, read one reply (the protocol is strictly
+    /// request/response per connection).
+    pub fn call(&mut self, frame: &Frame) -> Result<Frame> {
+        protocol::write_frame(&mut self.writer, frame)?;
+        match protocol::read_frame(&mut self.reader) {
+            Ok(Some(reply)) => Ok(reply),
+            Ok(None) => Err(Error::Protocol("server closed the connection".into())),
+            Err(ReadError::Io(e)) => Err(Error::Io(e)),
+            Err(ReadError::Wire(e)) => Err(e.into()),
+        }
+    }
+
+    /// Run a row batch through the model named `key` ("" = default);
+    /// an error frame becomes a typed [`Error::Protocol`].
+    pub fn infer(&mut self, key: &str, batch: RowBatch) -> Result<RowBatch> {
+        let reply = self.call(&Frame::Infer { key: key.to_string(), batch })?;
+        expect_reply(reply, "LOGITS", |frame| match frame {
+            Frame::Logits(logits) => Ok(logits),
+            other => Err(other),
+        })
+    }
+
+    /// Fetch the server's metrics snapshot as named counters.
+    pub fn stats(&mut self) -> Result<Vec<(String, u64)>> {
+        let reply = self.call(&Frame::StatsRequest)?;
+        expect_reply(reply, "STATS", |frame| match frame {
+            Frame::Stats(entries) => Ok(entries),
+            other => Err(other),
+        })
+    }
+
+    /// Hot-swap the registry artifact `name` into the server.
+    pub fn swap(&mut self, name: &str) -> Result<String> {
+        let reply = self.call(&Frame::Swap { key: name.to_string() })?;
+        expect_reply(reply, "OK", |frame| match frame {
+            Frame::Ok { message } => Ok(message),
+            other => Err(other),
+        })
+    }
+
+    /// Ask the server to shut down gracefully.
+    pub fn shutdown_server(&mut self) -> Result<String> {
+        let reply = self.call(&Frame::Shutdown)?;
+        expect_reply(reply, "OK", |frame| match frame {
+            Frame::Ok { message } => Ok(message),
+            other => Err(other),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::GEOMETRY;
+    use crate::serve::engine::MlpParams;
+    use crate::serve::kernels::KernelFormat;
+    use crate::util::bits::BitMatrix;
+    use crate::util::rng::Rng;
+
+    fn small_hub() -> Arc<ModelHub> {
+        let g = GEOMETRY;
+        let params = MlpParams::init(3);
+        let mut rng = Rng::new(4);
+        let ip = BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.25));
+        let iz = BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.25));
+        let backend =
+            NativeBackend::with_format(params, KernelFormat::DenseMasked, &ip, &iz).unwrap();
+        Arc::new(ModelHub::from_backend(
+            "default",
+            backend,
+            BatchPolicy::default(),
+            64,
+            Arc::new(Metrics::new()),
+        ))
+    }
+
+    #[test]
+    fn hub_resolves_default_and_unknown_keys() {
+        let hub = small_hub();
+        assert!(hub.get("").is_some(), "empty key selects the default");
+        assert!(hub.get("default").is_some());
+        assert!(hub.get("nope").is_none());
+        assert_eq!(hub.keys(), vec!["default".to_string()]);
+        assert_eq!(hub.default_key(), "default");
+        let err = hub.swap("default").unwrap_err();
+        assert!(err.to_string().contains("--registry"), "{err}");
+    }
+
+    #[test]
+    fn slot_rejects_bad_shape_and_serves_empty_batches() {
+        let hub = small_hub();
+        let slot = hub.get("").unwrap();
+        let bad = RowBatch::new(1, slot.input_dim() + 1, vec![0.0; slot.input_dim() + 1]).unwrap();
+        let err = slot.infer_batch(&bad).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadShape);
+        let empty = RowBatch::new(0, 0, vec![]).unwrap();
+        let logits = slot.infer_batch(&empty).unwrap();
+        assert_eq!((logits.rows(), logits.cols()), (0, slot.classes()));
+    }
+
+    #[test]
+    fn bound_server_reports_resolved_addr_and_handle_state() {
+        let hub = small_hub();
+        let server = Server::bind("127.0.0.1:0", hub, &ServeOptions::default()).unwrap();
+        let addr = server.local_addr();
+        assert_ne!(addr.port(), 0, "port 0 must resolve to a real port");
+        let handle = server.handle();
+        assert!(!handle.is_shutdown());
+        assert_eq!(handle.active_connections(), 0);
+        let runner = std::thread::spawn(move || server.run());
+        handle.shutdown();
+        runner.join().unwrap().unwrap();
+        assert!(handle.is_shutdown());
+    }
+}

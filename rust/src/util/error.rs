@@ -20,6 +20,10 @@ pub enum Error {
     /// Artifact-store failure: malformed `.lrbi` container, CRC
     /// mismatch, bad magic/version, registry manifest errors.
     Store(String),
+    /// Wire-protocol failure: malformed/oversized frame, version
+    /// mismatch, or a typed error frame received from a server
+    /// (see `serve::protocol`).
+    Protocol(String),
 }
 
 impl std::fmt::Display for Error {
@@ -32,6 +36,7 @@ impl std::fmt::Display for Error {
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Store(m) => write!(f, "store error: {m}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
         }
     }
 }

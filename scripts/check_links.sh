@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Markdown link check for the documentation suite: every relative
+# link target in README.md and docs/*.md must exist on disk (http(s)
+# and mailto links are skipped; "#anchor" fragments are stripped).
+# Part of the CI docs job and scripts/verify.sh, so the docs cannot
+# point at files that moved or were renamed.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fail=0
+for md in README.md docs/*.md; do
+  dir=$(dirname "$md")
+  # extract the (target) of every [text](target) link
+  while IFS= read -r target; do
+    target=${target%%#*}              # drop anchors
+    [ -z "$target" ] && continue      # pure in-page anchor
+    case "$target" in
+      http://*|https://*|mailto:*) continue ;;
+    esac
+    if [ ! -e "$dir/$target" ] && [ ! -e "$target" ]; then
+      echo "broken link in $md: $target"
+      fail=1
+    fi
+  done < <(grep -oE '\]\([^)]+\)' "$md" | sed -E 's/^\]\(//; s/\)$//')
+done
+
+if [ "$fail" -ne 0 ]; then
+  echo "link check: FAILED"
+  exit 1
+fi
+echo "link check: OK"

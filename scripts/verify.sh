@@ -19,6 +19,9 @@ done
 echo "== cargo doc --no-deps (warnings are errors)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
+echo "== markdown link check (README.md + docs/)"
+../scripts/check_links.sh
+
 echo "== cargo clippy --all-targets -- -D warnings"
 cargo clippy --all-targets -- -D warnings
 
