@@ -1,0 +1,167 @@
+//! §Perf: SIMD micro-kernel dispatch — `spmm` wall time across
+//! simd {on, off} × threads × all five kernel formats on the
+//! FC1-shaped layer. Writes the human table, a CSV under `reports/`,
+//! and the machine-readable `BENCH_simd.json` at the repository root
+//! (schema `lrbi-bench-simd-v1`, documented in README.md) so the
+//! vectorized hot path has numbers to regress against.
+//!
+//! The `off` cells pin the scalar tier via the same process-global
+//! hook the bit-identity tests use (`tensor::simd::force_scalar`), so
+//! one run measures both paths on identical plans and inputs; outputs
+//! are byte-identical by construction (re-asserted here per cell).
+//!
+//!     cargo run --release --bench perf_simd
+//!     LRBI_BENCH_QUICK=1 cargo run --release --bench perf_simd
+
+mod bench_common;
+
+use bench_common::{fc1_weights, quick, report_dir};
+use lrbi::coordinator::pool::ExecCtx;
+use lrbi::formats::StoredIndex;
+use lrbi::runtime::artifacts::GEOMETRY;
+use lrbi::serve::kernels::{
+    build_kernel_exec, build_kernel_from_stored_exec, KernelFormat, SparseKernel,
+};
+use lrbi::tensor::{simd, Matrix};
+use lrbi::tiling::{TileFactors, TilePlan, TiledLowRankIndex};
+use lrbi::util::bench::{write_table_csv, Bench};
+use lrbi::util::bits::BitMatrix;
+use lrbi::util::rng::Rng;
+
+/// Factor density giving a boolean product of two `d`-dense rank-`k`
+/// factors a mask sparsity near `s`: solves `s = (1 - d²)^k`.
+fn factor_density(sparsity: f64, rank: usize) -> f64 {
+    (1.0 - sparsity.powf(1.0 / rank as f64)).sqrt()
+}
+
+struct Cell {
+    kernel: &'static str,
+    simd_on: bool,
+    threads: usize,
+    spmm_ns: f64,
+}
+
+fn main() {
+    let g = GEOMETRY;
+    let w = fc1_weights(1);
+    let (m, n, rank) = (g.hidden0, g.hidden1, g.rank);
+    let sparsity = 0.9;
+    let mut rng = Rng::new(2);
+    let x = Matrix::gaussian(g.batch, m, 0.0, 1.0, &mut rng);
+    let d = factor_density(sparsity, rank);
+    let mut fr = Rng::new(3);
+    let ip = BitMatrix::from_fn(m, rank, |_, _| fr.bernoulli(d));
+    let iz = BitMatrix::from_fn(rank, n, |_, _| fr.bernoulli(d));
+    let plan = TilePlan::new(4, 4);
+    let tiles: Vec<TileFactors> = plan
+        .tiles(m, n)
+        .expect("tile plan")
+        .iter()
+        .map(|spec| {
+            let k = rank / 4;
+            TileFactors {
+                rank: k,
+                ip: BitMatrix::from_fn(spec.rows(), k, |_, _| fr.bernoulli(factor_density(sparsity, k))),
+                iz: BitMatrix::from_fn(k, spec.cols(), |_, _| fr.bernoulli(factor_density(sparsity, k))),
+            }
+        })
+        .collect();
+    let tiled =
+        StoredIndex::Tiled(TiledLowRankIndex::new(m, n, plan, tiles).expect("tiled index"));
+
+    let probed = simd::probed_tier();
+    let thread_sweep: &[usize] = if quick() { &[1] } else { &[1, 4] };
+    let mut cells: Vec<Cell> = Vec::new();
+    for &threads in thread_sweep {
+        let ctx = ExecCtx::new(threads, None);
+        let mut kernels: Vec<Box<dyn SparseKernel>> = KernelFormat::ALL
+            .iter()
+            .map(|&fmt| build_kernel_exec(fmt, &w, &ip, &iz, &ctx, None).expect("build"))
+            .collect();
+        kernels.push(build_kernel_from_stored_exec(&tiled, &w, &ctx, None).expect("tiled"));
+        for kern in &kernels {
+            // byte-identity sanity per cell (the pinned contract)
+            simd::force_scalar(true);
+            let scalar_out = kern.spmm(&x).expect("scalar spmm");
+            simd::force_scalar(false);
+            assert_eq!(
+                kern.spmm(&x).expect("simd spmm").data(),
+                scalar_out.data(),
+                "{}: SIMD output must be byte-identical to scalar",
+                kern.name()
+            );
+            for simd_on in [false, true] {
+                simd::force_scalar(!simd_on);
+                let mut bench = Bench::new();
+                let label = format!(
+                    "{}/{}/t{threads}",
+                    kern.name(),
+                    if simd_on { probed.label() } else { "scalar" }
+                );
+                let ns = bench.run(&label, || {
+                    let _ = std::hint::black_box(kern.spmm(&x).expect("spmm"));
+                });
+                cells.push(Cell { kernel: kern.name(), simd_on, threads, spmm_ns: ns });
+            }
+            simd::force_scalar(false);
+        }
+    }
+
+    // speedup of the simd cell vs the scalar cell at the same config
+    let off_ns = |kernel: &str, threads: usize| {
+        cells
+            .iter()
+            .find(|c| c.kernel == kernel && c.threads == threads && !c.simd_on)
+            .map(|c| c.spmm_ns)
+            .unwrap_or(f64::NAN)
+    };
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.kernel.to_string(),
+                if c.simd_on { probed.label().to_string() } else { "scalar".to_string() },
+                c.threads.to_string(),
+                format!("{:.1}", c.spmm_ns),
+                format!("{:.3}", off_ns(c.kernel, c.threads) / c.spmm_ns),
+            ]
+        })
+        .collect();
+    write_table_csv(
+        report_dir().join("perf_simd.csv").to_str().unwrap(),
+        &["kernel", "tier", "threads", "spmm_ns", "speedup_vs_scalar"],
+        &rows,
+    )
+    .unwrap();
+
+    // Machine-readable trajectory point at the repository root.
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"schema\": \"lrbi-bench-simd-v1\",\n");
+    json.push_str("  \"bench\": \"perf_simd\",\n");
+    json.push_str(&format!("  \"probed_tier\": \"{}\",\n", probed.label()));
+    json.push_str(&format!(
+        "  \"geometry\": {{\"m\": {m}, \"n\": {n}, \"batch\": {}, \"rank\": {rank}, \
+         \"sparsity\": {sparsity}}},\n",
+        g.batch
+    ));
+    json.push_str(&format!("  \"quick\": {},\n", quick()));
+    json.push_str("  \"results\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"simd\": \"{}\", \"tier\": \"{}\", \"threads\": {}, \
+             \"spmm_ns\": {:.1}, \"speedup_vs_scalar\": {:.4}}}{}\n",
+            c.kernel,
+            if c.simd_on { "on" } else { "off" },
+            if c.simd_on { probed.label() } else { "scalar" },
+            c.threads,
+            c.spmm_ns,
+            off_ns(c.kernel, c.threads) / c.spmm_ns,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_simd.json");
+    std::fs::write(out, &json).expect("write BENCH_simd.json");
+    println!("\nwrote {out} ({} cells, probed tier: {})", cells.len(), probed.label());
+}

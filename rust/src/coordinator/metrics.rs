@@ -76,6 +76,17 @@ pub struct Metrics {
     pub net_rejected_overload: AtomicU64,
     /// Malformed/unexpected frames answered with a typed error frame.
     pub net_protocol_errors: AtomicU64,
+    /// Bytes newly allocated for SpMM scratch (execution-plan
+    /// partials, input transposes) by `ExecCtx::take_scratch`. Flat
+    /// after the first batch ⇒ the hot path allocates nothing.
+    pub spmm_alloc_bytes: AtomicU64,
+    /// Scratch checkouts served from the pool without allocating —
+    /// the other half of the zero-allocation proof.
+    pub scratch_reuse: AtomicU64,
+    /// Drained batch buffers accepted back for reuse by the dynamic
+    /// batcher (`DynamicBatcher::recycle`) — one per steady-state
+    /// flush, so flushes stop allocating request storage.
+    pub batch_buffer_reuse: AtomicU64,
 }
 
 /// A point-in-time copy for reporting.
@@ -127,6 +138,12 @@ pub struct MetricsSnapshot {
     pub net_rejected_overload: u64,
     /// Malformed/unexpected frames answered with an error frame.
     pub net_protocol_errors: u64,
+    /// Bytes newly allocated for SpMM scratch buffers.
+    pub spmm_alloc_bytes: u64,
+    /// Scratch checkouts served without allocating.
+    pub scratch_reuse: u64,
+    /// Batcher flushes served from a recycled request buffer.
+    pub batch_buffer_reuse: u64,
 }
 
 impl Metrics {
@@ -178,6 +195,9 @@ impl Metrics {
             net_requests: self.net_requests.load(Ordering::Relaxed),
             net_rejected_overload: self.net_rejected_overload.load(Ordering::Relaxed),
             net_protocol_errors: self.net_protocol_errors.load(Ordering::Relaxed),
+            spmm_alloc_bytes: self.spmm_alloc_bytes.load(Ordering::Relaxed),
+            scratch_reuse: self.scratch_reuse.load(Ordering::Relaxed),
+            batch_buffer_reuse: self.batch_buffer_reuse.load(Ordering::Relaxed),
         }
     }
 
@@ -280,6 +300,9 @@ impl MetricsSnapshot {
             ("net_requests", self.net_requests),
             ("net_rejected_overload", self.net_rejected_overload),
             ("net_protocol_errors", self.net_protocol_errors),
+            ("spmm_alloc_bytes", self.spmm_alloc_bytes),
+            ("scratch_reuse", self.scratch_reuse),
+            ("batch_buffer_reuse", self.batch_buffer_reuse),
         ];
         for (i, name) in SPMM_NS_COUNTER_NAMES.into_iter().enumerate() {
             out.push((name, self.spmm_kernel_ns[i]));
@@ -365,7 +388,7 @@ mod tests {
         let s = m.snapshot();
         let named = s.named_counters();
         // scalar fields + one entry per spmm kernel slot
-        assert_eq!(named.len(), 22 + SPMM_NS_COUNTER_NAMES.len());
+        assert_eq!(named.len(), 25 + SPMM_NS_COUNTER_NAMES.len());
         let mut names: Vec<&str> = named.iter().map(|(n, _)| *n).collect();
         names.sort_unstable();
         names.dedup();
@@ -374,6 +397,8 @@ mod tests {
         assert_eq!(get("net_requests"), 7);
         assert_eq!(get("spmm_ns_tiled"), 99);
         assert_eq!(get("net_rejected_overload"), 0);
+        assert_eq!(get("spmm_alloc_bytes"), 0);
+        assert_eq!(get("batch_buffer_reuse"), 0);
     }
 
     #[test]

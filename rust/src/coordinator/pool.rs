@@ -176,21 +176,101 @@ pub struct ExecCtx {
     threads: usize,
     pool: Option<WorkerPool>,
     metrics: Option<Arc<Metrics>>,
+    /// Recycled `f32` work buffers (SpMM partials, input transposes)
+    /// checked out by [`ExecCtx::take_scratch`] — the context-level
+    /// half of the serving path's zero-allocation steady state.
+    scratch: Mutex<Vec<Vec<f32>>>,
 }
+
+/// Cap on pooled scratch buffers per context: enough for every
+/// concurrent buffer a plan execution checks out, small enough that a
+/// burst of odd sizes cannot hoard memory.
+const SCRATCH_POOL_CAP: usize = 8;
 
 impl ExecCtx {
     /// Single-threaded context (no pool): shards run inline, in order.
     pub fn single() -> Arc<ExecCtx> {
-        Arc::new(ExecCtx { threads: 1, pool: None, metrics: None })
+        Arc::new(ExecCtx { threads: 1, pool: None, metrics: None, scratch: Mutex::new(Vec::new()) })
     }
 
     /// Context with `threads` workers (clamped to ≥ 1; 1 means no
     /// pool). `metrics`, when given, receives `spmm_shards` and
-    /// per-kernel spmm nanoseconds from every plan execution.
+    /// per-kernel spmm nanoseconds from every plan execution, plus the
+    /// scratch-pool pair `spmm_alloc_bytes` / `scratch_reuse`.
     pub fn new(threads: usize, metrics: Option<Arc<Metrics>>) -> Arc<ExecCtx> {
         let threads = threads.max(1);
         let pool = (threads > 1).then(|| WorkerPool::new(threads, threads * 4));
-        Arc::new(ExecCtx { threads, pool, metrics })
+        Arc::new(ExecCtx { threads, pool, metrics, scratch: Mutex::new(Vec::new()) })
+    }
+
+    /// Check out a zeroed `len`-element work buffer, reusing a pooled
+    /// allocation when one is large enough (best fit; falls back to
+    /// growing the largest available). Return it with
+    /// [`ExecCtx::put_scratch`] when done — after one warm-up
+    /// execution per buffer shape, every subsequent `spmm` on this
+    /// context is served entirely from the pool. With metrics
+    /// attached, a satisfied checkout counts into
+    /// `Metrics::scratch_reuse` and a growing one adds the fresh bytes
+    /// to `Metrics::spmm_alloc_bytes` — the observable proof that the
+    /// steady state allocates nothing (see `docs/PERFORMANCE.md`).
+    pub fn take_scratch(&self, len: usize) -> Vec<f32> {
+        let mut buf = self.checkout(len);
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// [`ExecCtx::take_scratch`] without the zero fill: the buffer has
+    /// `len` elements but stale ones keep their previous contents —
+    /// for checkouts the caller **fully overwrites** before reading
+    /// (the SpMM input transposes), where the memset would be pure
+    /// waste. Reduction partials must use the zeroed variant.
+    pub fn take_scratch_uninit(&self, len: usize) -> Vec<f32> {
+        let mut buf = self.checkout(len);
+        // grow (zero-filling only the gap) or truncate to len; the
+        // retained prefix is stale on purpose.
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Pop the best-fitting pooled buffer (smallest adequate capacity,
+    /// else the largest available) and record the reuse/alloc metrics
+    /// pair for a `len`-element checkout.
+    fn checkout(&self, len: usize) -> Vec<f32> {
+        let mut pool = self.scratch.lock().unwrap_or_else(|p| p.into_inner());
+        let pos = pool
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.capacity() >= len)
+            .min_by_key(|(_, b)| b.capacity())
+            .or_else(|| pool.iter().enumerate().max_by_key(|(_, b)| b.capacity()))
+            .map(|(i, _)| i);
+        let buf = pos.map(|i| pool.swap_remove(i)).unwrap_or_default();
+        drop(pool);
+        if let Some(m) = &self.metrics {
+            if len > 0 {
+                if buf.capacity() >= len {
+                    m.scratch_reuse.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    m.spmm_alloc_bytes
+                        .fetch_add((len * std::mem::size_of::<f32>()) as u64, Ordering::Relaxed);
+                }
+            }
+        }
+        buf
+    }
+
+    /// Return a buffer taken with [`ExecCtx::take_scratch`] to the
+    /// pool (dropped silently once the pool is full or the buffer
+    /// never allocated).
+    pub fn put_scratch(&self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut pool = self.scratch.lock().unwrap_or_else(|p| p.into_inner());
+        if pool.len() < SCRATCH_POOL_CAP {
+            pool.push(buf);
+        }
     }
 
     /// Configured worker count (1 = inline execution).
@@ -388,6 +468,47 @@ mod tests {
         assert_eq!(ExecCtx::single().threads(), 1);
         assert_eq!(ExecCtx::new(0, None).threads(), 1, "clamped to >= 1");
         assert_eq!(ExecCtx::new(4, None).threads(), 4);
+    }
+
+    #[test]
+    fn scratch_pool_reuses_buffers_and_records_the_alloc_pair() {
+        let metrics = Arc::new(Metrics::new());
+        let ctx = ExecCtx::new(1, Some(Arc::clone(&metrics)));
+        // cold: both checkouts allocate
+        let a = ctx.take_scratch(1000);
+        let b = ctx.take_scratch(500);
+        assert!(a.iter().all(|&v| v == 0.0) && a.len() == 1000);
+        ctx.put_scratch(a);
+        ctx.put_scratch(b);
+        let cold = metrics.snapshot();
+        assert_eq!(cold.spmm_alloc_bytes, 1500 * 4);
+        assert_eq!(cold.scratch_reuse, 0);
+        // warm: the same shapes are served from the pool, best fit
+        // keeps the big buffer for the big request
+        let b = ctx.take_scratch(500);
+        let a = ctx.take_scratch(1000);
+        assert_eq!((a.len(), b.len()), (1000, 500));
+        ctx.put_scratch(a);
+        ctx.put_scratch(b);
+        let warm = metrics.snapshot();
+        assert_eq!(warm.spmm_alloc_bytes, cold.spmm_alloc_bytes, "warm takes must not allocate");
+        assert_eq!(warm.scratch_reuse, 2);
+        // zero-length checkouts are free and uncounted
+        let z = ctx.take_scratch(0);
+        assert!(z.is_empty());
+        ctx.put_scratch(z);
+        assert_eq!(metrics.snapshot().scratch_reuse, 2);
+    }
+
+    #[test]
+    fn scratch_pool_without_metrics_still_pools() {
+        let ctx = ExecCtx::single();
+        let a = ctx.take_scratch(64);
+        let ptr = a.as_ptr();
+        ctx.put_scratch(a);
+        let b = ctx.take_scratch(64);
+        assert_eq!(b.as_ptr(), ptr, "same allocation must come back");
+        ctx.put_scratch(b);
     }
 
     #[test]

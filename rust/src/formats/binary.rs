@@ -1,6 +1,6 @@
 //! Dense binary (bitmap) index: 1 bit per weight, fully regular.
 
-use crate::util::bits::BitMatrix;
+use crate::util::bits::{bits_word_at, BitMatrix};
 use crate::util::error::{Error, Result};
 
 /// The dense bitmap format of Figure 1.
@@ -27,24 +27,27 @@ impl BinaryIndex {
         BinaryIndex { rows, cols, bytes }
     }
 
-    /// Recover the mask. Byte-skipping fast path: at the paper's
-    /// sparsity levels most bytes are zero, so scanning bytes and
-    /// expanding only set bits is ~10x faster than per-bit reads
-    /// (docs/ARCHITECTURE.md §Performance-notes).
+    /// Recover the mask, assembling each row **64 bits at a time**:
+    /// the MSB-first payload is bit-reversed per byte once (one table
+    /// op per byte) into an LSB-first stream, and every packed mask
+    /// word is then two shifted `u64` loads (`bits_word_at`) instead
+    /// of 64 per-bit probes — the word-parallel discipline of the
+    /// serving kernels applied to the store decode path (supersedes
+    /// the byte-skipping walk; see docs/ARCHITECTURE.md
+    /// §Performance-notes).
     pub fn decode(&self) -> BitMatrix {
         let mut mask = BitMatrix::zeros(self.rows, self.cols);
-        for (bi, &byte) in self.bytes.iter().enumerate() {
-            if byte == 0 {
-                continue;
-            }
-            let base = bi * 8;
-            for b in 0..8 {
-                if byte >> (7 - b) & 1 == 1 {
-                    let bit = base + b;
-                    if bit < self.rows * self.cols {
-                        mask.set(bit / self.cols, bit % self.cols, true);
-                    }
-                }
+        if self.rows * self.cols == 0 {
+            return mask;
+        }
+        let rev: Vec<u8> = self.bytes.iter().map(|b| b.reverse_bits()).collect();
+        for i in 0..self.rows {
+            let row_off = i * self.cols;
+            let words = mask.row_words_mut(i);
+            let wpr = words.len();
+            for (wi, w) in words.iter_mut().enumerate() {
+                let nb = if wi + 1 == wpr { self.cols - wi * 64 } else { 64 };
+                *w = bits_word_at(&rev, row_off + wi * 64, nb);
             }
         }
         mask

@@ -28,7 +28,7 @@
 //! ```
 
 use crate::bmf::algorithm1::FactorizedIndex;
-use crate::util::bits::BitMatrix;
+use crate::util::bits::{bits_word_at, BitMatrix};
 use crate::util::error::{Error, Result};
 
 /// Serialized low-rank index: dims + packed factor bits.
@@ -88,11 +88,34 @@ impl LowRankIndex {
         Ok(LowRankIndex { m, n, k, payload })
     }
 
-    fn bit(&self, idx: usize) -> bool {
+    /// Probe one payload bit (flat LSB-first index) — the per-bit
+    /// reference that the word-at-a-time unpack in
+    /// [`LowRankIndex::factors`] must reproduce exactly.
+    pub fn bit(&self, idx: usize) -> bool {
         self.payload[idx / 8] >> (idx % 8) & 1 == 1
     }
 
-    /// Unpack to (I_p, I_z).
+    /// Unpack to (I_p, I_z), assembling each factor row **64 bits at a
+    /// time** from the payload (`bits_word_at`) instead of probing
+    /// bit-by-bit — the same word-parallel discipline the serving
+    /// kernels use, applied to the store decode path.
+    ///
+    /// The word-level reconstruction is exactly the per-bit one:
+    ///
+    /// ```
+    /// use lrbi::formats::lowrank::LowRankIndex;
+    /// use lrbi::util::bits::BitMatrix;
+    ///
+    /// let ip = BitMatrix::from_fn(5, 3, |i, j| (i + j) % 2 == 0);
+    /// let iz = BitMatrix::from_fn(3, 70, |i, j| (i * j) % 5 == 1); // > 1 word per row
+    /// let enc = LowRankIndex::from_factors(&ip, &iz)?;
+    /// let (ip2, iz2) = enc.factors()?; // word-at-a-time unpack
+    /// let ip_bits = BitMatrix::from_fn(5, 3, |i, j| enc.bit(i * 3 + j));
+    /// let iz_bits = BitMatrix::from_fn(3, 70, |i, j| enc.bit(5 * 3 + i * 70 + j));
+    /// assert_eq!((ip2, iz2), (ip_bits, iz_bits));
+    /// assert_eq!(enc.decode()?, ip.bool_product(&iz));
+    /// # Ok::<(), lrbi::Error>(())
+    /// ```
     pub fn factors(&self) -> Result<(BitMatrix, BitMatrix)> {
         let need = (self.k * (self.m + self.n)).div_ceil(8);
         if self.payload.len() < need {
@@ -101,9 +124,8 @@ impl LowRankIndex {
                 self.payload.len()
             )));
         }
-        let ip = BitMatrix::from_fn(self.m, self.k, |i, j| self.bit(i * self.k + j));
-        let base = self.m * self.k;
-        let iz = BitMatrix::from_fn(self.k, self.n, |i, j| self.bit(base + i * self.n + j));
+        let ip = unpack_rows(&self.payload, 0, self.m, self.k);
+        let iz = unpack_rows(&self.payload, self.m * self.k, self.k, self.n);
         Ok((ip, iz))
     }
 
@@ -117,6 +139,27 @@ impl LowRankIndex {
     pub fn index_bytes(&self) -> usize {
         self.payload.len()
     }
+}
+
+/// Unpack `rows × cols` bits starting at flat offset `base` of an
+/// LSB-first payload into a [`BitMatrix`], one `u64` word per step
+/// (the last word of each row masked to its remaining columns so row
+/// padding stays clear).
+fn unpack_rows(payload: &[u8], base: usize, rows: usize, cols: usize) -> BitMatrix {
+    let mut out = BitMatrix::zeros(rows, cols);
+    if cols == 0 {
+        return out;
+    }
+    for i in 0..rows {
+        let row_off = base + i * cols;
+        let words = out.row_words_mut(i);
+        let wpr = words.len();
+        for (wi, w) in words.iter_mut().enumerate() {
+            let nb = if wi + 1 == wpr { cols - wi * 64 } else { 64 };
+            *w = bits_word_at(payload, row_off + wi * 64, nb);
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -150,6 +193,22 @@ mod tests {
         let f = factorize(2);
         let enc = LowRankIndex::encode(&f);
         assert_eq!(enc.index_bytes(), (6usize * (48 + 36)).div_ceil(8));
+    }
+
+    #[test]
+    fn word_unpack_matches_per_bit_probes_at_awkward_widths() {
+        use crate::util::rng::Rng;
+        // widths around the u64 boundary exercise every masking path
+        for (m, k, n) in [(3usize, 1usize, 64usize), (5, 2, 65), (1, 7, 1), (4, 3, 130)] {
+            let mut rng = Rng::new((m * 1000 + k * 100 + n) as u64);
+            let ip = BitMatrix::from_fn(m, k, |_, _| rng.bernoulli(0.5));
+            let iz = BitMatrix::from_fn(k, n, |_, _| rng.bernoulli(0.5));
+            let enc = LowRankIndex::from_factors(&ip, &iz).unwrap();
+            let (ip2, iz2) = enc.factors().unwrap();
+            let ip_ref = BitMatrix::from_fn(m, k, |i, j| enc.bit(i * k + j));
+            let iz_ref = BitMatrix::from_fn(k, n, |i, j| enc.bit(m * k + i * n + j));
+            assert_eq!((ip2, iz2), (ip_ref, iz_ref), "m={m} k={k} n={n}");
+        }
     }
 
     #[test]

@@ -39,6 +39,10 @@ pub struct DynamicBatcher<T, R> {
     rx: mpsc::Receiver<Request<T, R>>,
     policy: BatchPolicy,
     pending: Vec<Request<T, R>>,
+    /// Drained batch vector handed back by [`DynamicBatcher::recycle`]
+    /// — becomes the next `pending`, so steady-state flushes never
+    /// allocate the request buffer.
+    spare: Vec<Request<T, R>>,
     metrics: Option<Arc<Metrics>>,
 }
 
@@ -96,7 +100,7 @@ impl<T, R> DynamicBatcher<T, R> {
     pub fn new(policy: BatchPolicy, queue_cap: usize) -> (Self, BatcherClient<T, R>) {
         let (tx, rx) = mpsc::sync_channel(queue_cap);
         (
-            DynamicBatcher { rx, policy, pending: Vec::new(), metrics: None },
+            DynamicBatcher { rx, policy, pending: Vec::new(), spare: Vec::new(), metrics: None },
             BatcherClient { tx },
         )
     }
@@ -110,6 +114,10 @@ impl<T, R> DynamicBatcher<T, R> {
     /// Block until a batch is ready (or the channel closed and the
     /// backlog drained). Returns None on shutdown with nothing left.
     pub fn next_batch(&mut self) -> Option<Vec<Request<T, R>>> {
+        // collect into the recycled buffer, not a fresh allocation
+        if self.pending.is_empty() && self.pending.capacity() < self.spare.capacity() {
+            std::mem::swap(&mut self.pending, &mut self.spare);
+        }
         // wait for the first request (blocking)
         if self.pending.is_empty() {
             match self.rx.recv() {
@@ -133,6 +141,28 @@ impl<T, R> DynamicBatcher<T, R> {
             m.record_batch_flush(self.pending.len());
         }
         Some(std::mem::take(&mut self.pending))
+    }
+
+    /// Hand a **drained** batch vector back for reuse: its allocation
+    /// becomes the next flush's `pending` buffer, so a steady-state
+    /// executor loop (`next_batch` → drain → `recycle`) never grows or
+    /// re-allocates request storage — each accepted buffer counts into
+    /// `Metrics::batch_buffer_reuse`. Requests still inside the vector
+    /// are dropped (their callers see a closed reply channel).
+    pub fn recycle(&mut self, mut buf: Vec<Request<T, R>>) {
+        buf.clear();
+        if buf.capacity() > self.spare.capacity() {
+            self.spare = buf;
+            if let Some(m) = &self.metrics {
+                m.batch_buffer_reuse.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Capacity of the buffer the next flush will collect into (for
+    /// the no-per-flush-growth regression test).
+    pub fn pending_capacity(&self) -> usize {
+        self.pending.capacity().max(self.spare.capacity())
     }
 }
 
@@ -212,6 +242,43 @@ mod tests {
             let _ = r.reply.send(r.input * 2);
         }
         assert_eq!(rx.recv().unwrap(), 42);
+    }
+
+    #[test]
+    fn recycled_buffers_stop_per_flush_capacity_growth() {
+        // Regression: next_batch used to hand out a freshly grown Vec
+        // every flush; with recycle() the same allocation must cycle.
+        let (mut b, client) = DynamicBatcher::<u32, u32>::new(
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            16,
+        );
+        let metrics = Arc::new(Metrics::new());
+        b.attach_metrics(Arc::clone(&metrics));
+        let mut warm_cap = 0usize;
+        for round in 0..10 {
+            let receivers: Vec<_> =
+                (0..4).map(|i| client.try_submit(i).unwrap()).collect();
+            let mut batch = b.next_batch().unwrap();
+            assert_eq!(batch.len(), 4);
+            for r in batch.drain(..) {
+                let _ = r.reply.send(r.input);
+            }
+            b.recycle(batch);
+            for rx in receivers {
+                rx.recv().unwrap();
+            }
+            if round == 1 {
+                warm_cap = b.pending_capacity();
+                assert!(warm_cap >= 4);
+            } else if round > 1 {
+                assert_eq!(b.pending_capacity(), warm_cap, "round {round} grew the buffer");
+            }
+        }
+        assert!(
+            metrics.snapshot().batch_buffer_reuse >= 9,
+            "recycles recorded: {}",
+            metrics.snapshot().batch_buffer_reuse
+        );
     }
 
     #[test]

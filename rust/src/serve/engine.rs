@@ -35,9 +35,20 @@ pub trait InferenceBackend {
     fn input_dim(&self) -> usize;
     /// Output classes.
     fn classes(&self) -> usize;
-    /// Run one full batch: x is (batch, input_dim); returns logits
-    /// (batch, classes).
-    fn predict(&mut self, x: &Matrix) -> Result<Matrix>;
+    /// Run one full batch into a caller-owned output buffer: `x` is
+    /// (batch, input_dim); `out` is re-shaped in place to
+    /// (batch, classes). The serving executor passes one persistent
+    /// `out` across flushes, so a backend that also reuses its
+    /// internal buffers (like [`NativeBackend`]) makes the whole
+    /// predict path allocation-free after the first flush.
+    fn predict_into(&mut self, x: &Matrix, out: &mut Matrix) -> Result<()>;
+    /// Allocating convenience wrapper over
+    /// [`InferenceBackend::predict_into`].
+    fn predict(&mut self, x: &Matrix) -> Result<Matrix> {
+        let mut out = Matrix::zeros(0, 0);
+        self.predict_into(x, &mut out)?;
+        Ok(out)
+    }
 }
 
 /// Model parameters for the LeNet-FC classifier (mirrors model.py).
@@ -104,6 +115,11 @@ pub struct NativeBackend {
     /// Execution context the kernel's plan shards run on; shared with
     /// any kernel rebuilt by `update_factors`.
     ctx: Arc<ExecCtx>,
+    /// Persistent hidden-layer activation buffers, re-shaped in place
+    /// every predict — after the first batch the forward pass
+    /// allocates nothing.
+    h0: Matrix,
+    h1: Matrix,
 }
 
 impl NativeBackend {
@@ -144,6 +160,8 @@ impl NativeBackend {
             batch: GEOMETRY.batch,
             metrics: None,
             ctx,
+            h0: Matrix::zeros(0, 0),
+            h1: Matrix::zeros(0, 0),
         })
     }
 
@@ -176,6 +194,8 @@ impl NativeBackend {
             batch: GEOMETRY.batch,
             metrics: None,
             ctx,
+            h0: Matrix::zeros(0, 0),
+            h1: Matrix::zeros(0, 0),
         })
     }
 
@@ -190,6 +210,8 @@ impl NativeBackend {
             batch: GEOMETRY.batch,
             metrics: None,
             ctx: ExecCtx::single(),
+            h0: Matrix::zeros(0, 0),
+            h1: Matrix::zeros(0, 0),
         })
     }
 
@@ -236,20 +258,20 @@ impl InferenceBackend for NativeBackend {
     fn classes(&self) -> usize {
         self.params.w2.cols()
     }
-    fn predict(&mut self, x: &Matrix) -> Result<Matrix> {
-        let mut h0 = x.matmul(&self.params.w0)?;
-        add_bias(&mut h0, &self.params.b0);
-        relu_inplace(&mut h0);
+    fn predict_into(&mut self, x: &Matrix, out: &mut Matrix) -> Result<()> {
+        x.matmul_into(&self.params.w0, &mut self.h0)?;
+        add_bias(&mut self.h0, &self.params.b0);
+        relu_inplace(&mut self.h0);
         let t0 = Instant::now();
-        let mut h1 = self.kernel.spmm(&h0)?;
+        self.kernel.spmm_into(&self.h0, &mut self.h1)?;
         if let Some(m) = &self.metrics {
             m.record_spmm(t0);
         }
-        add_bias(&mut h1, &self.params.b1);
-        relu_inplace(&mut h1);
-        let mut out = h1.matmul(&self.params.w2)?;
-        add_bias(&mut out, &self.params.b2);
-        Ok(out)
+        add_bias(&mut self.h1, &self.params.b1);
+        relu_inplace(&mut self.h1);
+        self.h1.matmul_into(&self.params.w2, out)?;
+        add_bias(out, &self.params.b2);
+        Ok(())
     }
 }
 
@@ -293,14 +315,15 @@ impl InferenceBackend for PjrtBackend {
     fn classes(&self) -> usize {
         GEOMETRY.classes
     }
-    fn predict(&mut self, x: &Matrix) -> Result<Matrix> {
+    fn predict_into(&mut self, x: &Matrix, out: &mut Matrix) -> Result<()> {
         let mut inputs: Vec<xla::Literal> = Vec::with_capacity(9);
         for lit in &self.inputs {
             inputs.push(lit.clone());
         }
         inputs.push(matrix_literal(x)?);
-        let out = self.runtime.execute("predict", &inputs)?;
-        literal_matrix(&out[0], GEOMETRY.batch, GEOMETRY.classes)
+        let res = self.runtime.execute("predict", &inputs)?;
+        *out = literal_matrix(&res[0], GEOMETRY.batch, GEOMETRY.classes)?;
+        Ok(())
     }
 }
 
@@ -381,12 +404,21 @@ impl ServingEngine {
                 let bsz = backend.batch();
                 let dim = backend.input_dim();
                 let classes = backend.classes();
-                while let Some(batch) = batcher.next_batch() {
+                // Steady-state buffers, reused across flushes: the
+                // padded input batch, the logits, and the per-slot
+                // validity flags all stop allocating after flush 1
+                // (the request *vector* is recycled through the
+                // batcher — `Metrics::batch_buffer_reuse`).
+                let mut x = Matrix::zeros(bsz, dim);
+                let mut logits = Matrix::zeros(0, 0);
+                let mut bad: Vec<bool> = Vec::new();
+                while let Some(mut batch) = batcher.next_batch() {
                     m.batches.fetch_add(1, Ordering::Relaxed);
                     m.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
                     // assemble padded batch
-                    let mut x = Matrix::zeros(bsz, dim);
-                    let mut bad: Vec<bool> = vec![false; batch.len()];
+                    x.reset_zero(bsz, dim);
+                    bad.clear();
+                    bad.resize(batch.len(), false);
                     for (slot, req) in batch.iter().enumerate().take(bsz) {
                         if req.input.len() == dim {
                             for (j, &v) in req.input.iter().enumerate() {
@@ -396,20 +428,21 @@ impl ServingEngine {
                             bad[slot] = true;
                         }
                     }
-                    let result = backend.predict(&x);
-                    for (slot, req) in batch.into_iter().enumerate() {
+                    let result = backend.predict_into(&x, &mut logits);
+                    for (slot, req) in batch.drain(..).enumerate() {
                         let reply = if slot >= bsz {
                             Err(Error::Coordinator("batch overflow".into()))
                         } else if bad[slot] {
                             Err(Error::shape("bad input dimension"))
                         } else {
                             match &result {
-                                Ok(logits) => Ok(logits.row(slot)[..classes].to_vec()),
+                                Ok(()) => Ok(logits.row(slot)[..classes].to_vec()),
                                 Err(e) => Err(Error::Runtime(e.to_string())),
                             }
                         };
                         let _ = req.reply.send(reply);
                     }
+                    batcher.recycle(batch);
                 }
             })
             .expect("spawn serving thread");

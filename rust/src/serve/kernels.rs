@@ -29,6 +29,17 @@
 //! depend only on the index — never on the thread count — and every
 //! reduction keeps a fixed shard→merge order, so parallel output is
 //! bit-identical to `threads = 1` (pinned by `tests/kernels.rs`).
+//!
+//! Inner loops dispatch to the runtime-probed SIMD micro-kernels of
+//! [`tensor::simd`](crate::tensor::simd) (AVX2 / NEON / scalar,
+//! `LRBI_SIMD=off` pins scalar). Vectorization is strictly
+//! lane-owns-output — each lane accumulates one output element in the
+//! scalar order with non-fused mul+add — so output is also
+//! byte-identical across tiers (see `docs/PERFORMANCE.md`). The hot
+//! entry point is [`SparseKernel::spmm_into`]: callers hand in a
+//! persistent output matrix, plan scratch comes from the context's
+//! pool, and steady-state serving allocates nothing
+//! (`Metrics::spmm_alloc_bytes` / `scratch_reuse`).
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::ExecCtx;
@@ -39,7 +50,7 @@ use crate::serve::plan::{
     lock_tile_scratch, shard_ranges, tile_col_shards, CscPlan, OutCell, RelShard, RelativePlan,
     RowShards, TileColShard, MAX_SHARDS, REDUCE_COLS_FACTOR, SHARD_COLS, SHARD_NNZ,
 };
-use crate::tensor::matrix::matmul_bt_cols;
+use crate::tensor::simd;
 use crate::tensor::Matrix;
 use crate::tiling::TiledLowRankIndex;
 use crate::util::bits::BitMatrix;
@@ -67,8 +78,19 @@ const SLOT_TILED: usize = 4;
 pub trait SparseKernel: Send {
     /// Kernel name as reported in metrics/benches.
     fn name(&self) -> &'static str;
-    /// `x (batch × m)` → `x · (W ⊙ I)` of shape `(batch × n)`.
-    fn spmm(&self, x: &Matrix) -> Result<Matrix>;
+    /// `x (batch × m)` → `x · (W ⊙ I)` written into `out`, which is
+    /// re-shaped in place to `(batch × n)`
+    /// ([`Matrix::reset_zero`]) — the serving hot path: a persistent
+    /// `out` plus the kernel's pooled plan scratch make steady-state
+    /// calls allocation-free (`Metrics::spmm_alloc_bytes` /
+    /// `scratch_reuse`).
+    fn spmm_into(&self, x: &Matrix, out: &mut Matrix) -> Result<()>;
+    /// Allocating convenience wrapper over [`SparseKernel::spmm_into`].
+    fn spmm(&self, x: &Matrix) -> Result<Matrix> {
+        let mut out = Matrix::zeros(0, 0);
+        self.spmm_into(x, &mut out)?;
+        Ok(out)
+    }
     /// Bytes of index metadata this kernel executes from.
     fn index_bytes(&self) -> usize;
     /// Mask rows `m` (the layer's input width).
@@ -263,19 +285,23 @@ pub fn build_kernel_from_stored_exec(
 }
 
 /// Baseline: the mask is decoded to dense once and burned into a
-/// pre-masked copy of `W`, which the plan also stores transposed so
-/// `spmm` runs the register-blocked, B-transposed micro-kernel
-/// (`tensor::matrix::matmul_bt_cols`) over output-column shards — an
-/// honest dense baseline that scales with the same `ExecCtx` the
-/// sparse kernels use. Each output element is a single dot product
-/// computed entirely by one shard, so sharding never changes a bit.
+/// pre-masked copy of `W`, which the plan stores **panel-packed**
+/// (B-transposed, [`simd::PANEL`]-column lane interleave — see
+/// `tensor::simd::pack_bt_panels`) so `spmm` runs the
+/// runtime-dispatched vector micro-kernel
+/// (`tensor::simd::matmul_packed_cols`) over output-column shards
+/// with zero per-call packing — an honest dense baseline that scales
+/// with the same `ExecCtx` the sparse kernels use. Each output
+/// element is a single ascending-`k` dot product computed entirely by
+/// one shard lane, so neither sharding nor the SIMD tier changes a
+/// bit.
 pub struct DenseMaskedKernel {
     m: usize,
     n: usize,
-    /// The pre-masked weight, stored transposed (`n × m`): contiguous
-    /// columns for the output-stationary micro-kernel — the only copy
-    /// the kernel keeps.
-    wt: Matrix,
+    /// The pre-masked weight, transposed and packed into
+    /// lane-interleaved panels at build time — the only copy the
+    /// kernel keeps.
+    packed: Vec<f32>,
     /// Output-column shard ranges (~[`SHARD_COLS`] columns each).
     shards: Vec<(usize, usize)>,
     index_bytes: usize,
@@ -288,11 +314,12 @@ impl DenseMaskedKernel {
         check_mask_shape(w, mask)?;
         let w_masked = crate::pruning::prune_with_mask(w, mask)?;
         let wt = w_masked.transpose();
+        let packed = simd::pack_bt_panels(wt.data(), w_masked.cols(), w_masked.rows());
         let shards = shard_ranges(w_masked.cols(), SHARD_COLS);
         Ok(DenseMaskedKernel {
             m: w_masked.rows(),
             n: w_masked.cols(),
-            wt,
+            packed,
             shards,
             index_bytes: mask.index_bytes(),
             ctx: ExecCtx::single(),
@@ -304,32 +331,36 @@ impl DenseMaskedKernel {
         self.ctx = ctx;
         self
     }
-
-    /// The pre-masked weight, transposed (`n × m`) — the layout the
-    /// micro-kernel executes from (for oracles in tests/benches).
-    pub fn weights_t(&self) -> &Matrix {
-        &self.wt
-    }
 }
 
 impl SparseKernel for DenseMaskedKernel {
     fn name(&self) -> &'static str {
         "dense"
     }
-    fn spmm(&self, x: &Matrix) -> Result<Matrix> {
+    fn spmm_into(&self, x: &Matrix, out: &mut Matrix) -> Result<()> {
         let (m, n) = (self.m, self.n);
         check_input(x, m)?;
         let batch = x.rows();
-        let mut out = Matrix::zeros(batch, n);
+        out.reset_zero(batch, n);
         let t0 = Instant::now();
+        let t = simd::tier();
         let cell = OutCell::new(out.data_mut());
-        let (xd, wt) = (x.data(), self.wt.data());
+        let xd = x.data();
         self.ctx.run(self.shards.len(), |s| {
             // SAFETY: shards own disjoint output-column ranges.
-            unsafe { matmul_bt_cols(xd, wt, cell.at(0), batch, m, n, self.shards[s]) };
+            unsafe {
+                simd::matmul_packed_cols(
+                    t,
+                    xd,
+                    &self.packed,
+                    cell.at(0),
+                    (batch, m, n),
+                    self.shards[s],
+                )
+            };
         })?;
         self.ctx.record_plan_spmm(SLOT_DENSE, self.shards.len() as u64, t0);
-        Ok(out)
+        Ok(())
     }
     fn index_bytes(&self) -> usize {
         self.index_bytes
@@ -400,13 +431,13 @@ impl SparseKernel for CsrKernel {
     fn name(&self) -> &'static str {
         "csr"
     }
-    fn spmm(&self, x: &Matrix) -> Result<Matrix> {
+    fn spmm_into(&self, x: &Matrix, out: &mut Matrix) -> Result<()> {
         check_input(x, self.m)?;
-        let mut out = Matrix::zeros(x.rows(), self.n);
+        out.reset_zero(x.rows(), self.n);
         let t0 = Instant::now();
-        self.plan.execute(x, &mut out, &self.ctx)?;
+        self.plan.execute(x, out, &self.ctx)?;
         self.ctx.record_plan_spmm(SLOT_CSR, self.plan.shard_count() as u64, t0);
-        Ok(out)
+        Ok(())
     }
     fn index_bytes(&self) -> usize {
         self.index_bytes
@@ -592,15 +623,15 @@ impl SparseKernel for RelativeKernel {
     fn name(&self) -> &'static str {
         "relative"
     }
-    fn spmm(&self, x: &Matrix) -> Result<Matrix> {
+    fn spmm_into(&self, x: &Matrix, out: &mut Matrix) -> Result<()> {
         check_input(x, self.m)?;
-        let mut out = Matrix::zeros(x.rows(), self.n);
+        out.reset_zero(x.rows(), self.n);
         let t0 = Instant::now();
         // Stream outer, batch inner within each shard: every decoded
         // (i, j) is applied to all batch rows while it is hot.
-        self.plan.execute(&self.entries, &self.vals, self.n, x, &mut out, &self.ctx)?;
+        self.plan.execute(&self.entries, &self.vals, self.n, x, out, &self.ctx)?;
         self.ctx.record_plan_spmm(SLOT_RELATIVE, self.plan.shard_count() as u64, t0);
-        Ok(out)
+        Ok(())
     }
     fn index_bytes(&self) -> usize {
         self.index_bytes
@@ -687,13 +718,14 @@ impl SparseKernel for LowRankFusedKernel {
     fn name(&self) -> &'static str {
         "lowrank"
     }
-    fn spmm(&self, x: &Matrix) -> Result<Matrix> {
+    fn spmm_into(&self, x: &Matrix, out: &mut Matrix) -> Result<()> {
         let (m, n, k) = (self.w.rows(), self.w.cols(), self.ip.cols());
         check_input(x, m)?;
         let batch = x.rows();
-        let mut out = Matrix::zeros(batch, n);
+        out.reset_zero(batch, n);
         let t0 = Instant::now();
-        self.row_shards.execute(batch, n, &mut out, &self.ctx, |(r0, r1), tile, part| {
+        let tier = simd::tier();
+        self.row_shards.execute(batch, n, out, &self.ctx, |(r0, r1), tile, part| {
             for i in r0..r1 {
                 // Expand mask row i: OR the I_z rows named by I_p row i.
                 tile.fill(0);
@@ -715,7 +747,8 @@ impl SparseKernel for LowRankFusedKernel {
                 if !any {
                     continue; // fully pruned row
                 }
-                // Consume the tile against W row i for every batch row.
+                // Consume the tile against W row i for every batch
+                // row: one masked vector axpy per 64-column word.
                 let wrow = self.w.row(i);
                 for b in 0..batch {
                     let xv = x.get(b, i);
@@ -724,19 +757,29 @@ impl SparseKernel for LowRankFusedKernel {
                     }
                     let orow = &mut part[b * n..(b + 1) * n];
                     for (wi, &word) in tile.iter().enumerate() {
-                        let mut bits = word;
-                        while bits != 0 {
-                            let j = wi * 64 + bits.trailing_zeros() as usize;
-                            bits &= bits - 1;
-                            orow[j] += xv * wrow[j];
+                        if word == 0 {
+                            continue;
                         }
+                        // SAFETY: set bits of `word` only name columns
+                        // < n - wi*64 (BitMatrix keeps padding bits
+                        // clear), and this shard exclusively owns
+                        // `part`.
+                        unsafe {
+                            simd::masked_axpy(
+                                tier,
+                                word,
+                                xv,
+                                wrow.as_ptr().add(wi * 64),
+                                orow.as_mut_ptr().add(wi * 64),
+                            )
+                        };
                     }
                 }
             }
         })?;
         self.ctx
             .record_plan_spmm(SLOT_LOWRANK, self.row_shards.shard_count() as u64, t0);
-        Ok(out)
+        Ok(())
     }
     fn index_bytes(&self) -> usize {
         (self.ip.cols() * (self.ip.rows() + self.iz.cols())).div_ceil(8)
@@ -816,12 +859,13 @@ impl SparseKernel for TiledLowRankKernel {
     fn name(&self) -> &'static str {
         "tiled"
     }
-    fn spmm(&self, x: &Matrix) -> Result<Matrix> {
+    fn spmm_into(&self, x: &Matrix, out: &mut Matrix) -> Result<()> {
         let (m, n) = (self.w.rows(), self.w.cols());
         check_input(x, m)?;
         let batch = x.rows();
-        let mut out = Matrix::zeros(batch, n);
+        out.reset_zero(batch, n);
         let t0 = Instant::now();
+        let tier = simd::tier();
         let cell = OutCell::new(out.data_mut());
         self.ctx.run(self.col_shards.len(), |s| {
             let shard = &self.col_shards[s];
@@ -852,7 +896,8 @@ impl SparseKernel for TiledLowRankKernel {
                     if !any {
                         continue; // fully pruned tile row
                     }
-                    // Consume against W row i, columns [c0, c1).
+                    // Consume against W row i, columns [c0, c1): one
+                    // masked vector axpy per 64-column tile word.
                     let wrow = self.w.row(i);
                     for b in 0..batch {
                         let xv = x.get(b, i);
@@ -860,15 +905,24 @@ impl SparseKernel for TiledLowRankKernel {
                             continue;
                         }
                         for (wi, &word) in tile[..words].iter().enumerate() {
-                            let mut bits = word;
-                            while bits != 0 {
-                                let lj = wi * 64 + bits.trailing_zeros() as usize;
-                                bits &= bits - 1;
-                                let j = spec.c0 + lj;
-                                // SAFETY: this shard exclusively owns
-                                // output columns [spec.c0, spec.c1).
-                                unsafe { cell.add(b * n + j, xv * wrow[j]) };
+                            if word == 0 {
+                                continue;
                             }
+                            let j0 = spec.c0 + wi * 64;
+                            // SAFETY: this shard exclusively owns
+                            // output columns [spec.c0, spec.c1), and
+                            // set bits of `word` only name columns
+                            // < spec.c1 - j0 (BitMatrix keeps padding
+                            // bits clear).
+                            unsafe {
+                                simd::masked_axpy(
+                                    tier,
+                                    word,
+                                    xv,
+                                    wrow.as_ptr().add(j0),
+                                    cell.at(b * n + j0),
+                                )
+                            };
                         }
                     }
                 }
@@ -876,7 +930,7 @@ impl SparseKernel for TiledLowRankKernel {
         })?;
         self.ctx
             .record_plan_spmm(SLOT_TILED, self.col_shards.len() as u64, t0);
-        Ok(out)
+        Ok(())
     }
     fn index_bytes(&self) -> usize {
         self.index_bytes

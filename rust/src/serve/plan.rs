@@ -19,10 +19,20 @@
 //! `tests/kernels.rs::parallel_spmm_bit_identical_across_thread_counts`):
 //! the shard partition depends only on the index — never on the thread
 //! count — and every floating-point accumulation order is fixed by the
-//! plan, so `spmm` output is bit-identical for any `threads`.
+//! plan, so `spmm` output is bit-identical for any `threads`. The same
+//! holds across SIMD tiers: inner loops dispatch to the lane-owns-output
+//! micro-kernels of `tensor::simd`, whose per-element operation
+//! sequence is exactly the scalar order (see `docs/PERFORMANCE.md`).
+//!
+//! Steady-state executions are allocation-free: partial buffers and
+//! input transposes are checked out of the shared
+//! [`ExecCtx`] scratch pool (`take_scratch`/`put_scratch`) and
+//! returned after the merge, observable through the
+//! `spmm_alloc_bytes`/`scratch_reuse` metrics pair.
 
 use crate::coordinator::pool::ExecCtx;
 use crate::formats::relative::MAX_GAP;
+use crate::tensor::simd::{self, SimdTier};
 use crate::tensor::Matrix;
 use crate::util::error::Result;
 use std::sync::Mutex;
@@ -192,30 +202,67 @@ impl CscPlan {
     }
 
     /// Run the plan: `out += x · (sparse)` with `out` pre-zeroed.
+    ///
+    /// On a SIMD tier the input is transposed once into a pooled
+    /// scratch buffer (batch-contiguous layout) and each column runs
+    /// the batch-lane vector kernel; the scalar tier keeps the
+    /// row-major register walk. Both accumulate every `(b, j)` element
+    /// in ascending entry order, so the bytes are identical.
     pub(crate) fn execute(&self, x: &Matrix, out: &mut Matrix, ctx: &ExecCtx) -> Result<()> {
         let batch = x.rows();
         let (m, n) = (self.m, self.n);
         let xd = x.data();
         let cell = OutCell::new(out.data_mut());
-        ctx.run(self.shards.len(), |s| {
-            let (c0, c1) = self.shards[s];
-            for b in 0..batch {
-                let xrow = &xd[b * m..(b + 1) * m];
-                for j in c0..c1 {
-                    let (a, e) = (self.cp[j] as usize, self.cp[j + 1] as usize);
-                    if a == e {
-                        continue;
+        let t = simd::tier();
+        if t == SimdTier::Scalar || batch == 0 {
+            return ctx.run(self.shards.len(), |s| {
+                let (c0, c1) = self.shards[s];
+                for b in 0..batch {
+                    let xrow = &xd[b * m..(b + 1) * m];
+                    for j in c0..c1 {
+                        let (a, e) = (self.cp[j] as usize, self.cp[j + 1] as usize);
+                        if a == e {
+                            continue;
+                        }
+                        let mut acc = 0f32;
+                        for (r, v) in self.ri[a..e].iter().zip(&self.vals[a..e]) {
+                            acc += xrow[*r as usize] * v;
+                        }
+                        // SAFETY: shard `s` exclusively owns columns
+                        // [c0, c1) of every output row.
+                        unsafe { cell.add(b * n + j, acc) };
                     }
-                    let mut acc = 0f32;
-                    for (r, v) in self.ri[a..e].iter().zip(&self.vals[a..e]) {
-                        acc += xrow[*r as usize] * v;
-                    }
-                    // SAFETY: shard `s` exclusively owns columns
-                    // [c0, c1) of every output row.
-                    unsafe { cell.add(b * n + j, acc) };
                 }
+            });
+        }
+        let mut xt = ctx.take_scratch_uninit(m * batch);
+        simd::transpose_into(xd, batch, m, &mut xt);
+        let xt_ref = &xt[..];
+        let res = ctx.run(self.shards.len(), |s| {
+            let (c0, c1) = self.shards[s];
+            for j in c0..c1 {
+                let (a, e) = (self.cp[j] as usize, self.cp[j + 1] as usize);
+                if a == e {
+                    continue;
+                }
+                // SAFETY: shard `s` exclusively owns columns [c0, c1)
+                // of every output row; the kernel writes only offsets
+                // `b * n` from `cell.at(j)`.
+                unsafe {
+                    simd::csc_column_accum(
+                        t,
+                        xt_ref,
+                        batch,
+                        &self.ri[a..e],
+                        &self.vals[a..e],
+                        cell.at(j),
+                        n,
+                    )
+                };
             }
-        })
+        });
+        ctx.put_scratch(xt);
+        res
     }
 }
 
@@ -256,6 +303,9 @@ impl RelativePlan {
     /// merge partials in fixed shard order. With a single shard the
     /// partial *is* the output buffer (merging one partial into zeros
     /// is the identity, so this is bit-identical, just cheaper).
+    /// Partials (and, on a SIMD tier, the batch-contiguous input
+    /// transpose the vector accumulate reads) come from the context's
+    /// scratch pool — steady-state executions allocate nothing.
     pub(crate) fn execute(
         &self,
         entries: &[u8],
@@ -266,36 +316,58 @@ impl RelativePlan {
         ctx: &ExecCtx,
     ) -> Result<()> {
         let batch = x.rows();
-        if self.shards.len() <= 1 {
-            if let Some(sh) = self.shards.first() {
-                decode_rel_shard(sh, entries, vals, n, x, out.data_mut());
-            }
-            return Ok(());
+        let t = simd::tier();
+        let mut xt_buf: Option<Vec<f32>> = None;
+        if t != SimdTier::Scalar && batch > 0 {
+            let m = x.cols();
+            let mut xt = ctx.take_scratch_uninit(m * batch);
+            simd::transpose_into(x.data(), batch, m, &mut xt);
+            xt_buf = Some(xt);
         }
-        let bn = batch * n;
-        let mut partials = vec![0f32; self.shards.len() * bn];
-        let cell = OutCell::new(&mut partials);
-        ctx.run(self.shards.len(), |s| {
-            // SAFETY: shard `s` exclusively owns partial range
-            // [s*bn, (s+1)*bn).
-            let part = unsafe { std::slice::from_raw_parts_mut(cell.at(s * bn), bn) };
-            decode_rel_shard(&self.shards[s], entries, vals, n, x, part);
-        })?;
-        merge_partials(out.data_mut(), &partials);
-        Ok(())
+        let xt = xt_buf.as_deref().map(|s| (t, s));
+        let res = if self.shards.len() <= 1 {
+            if let Some(sh) = self.shards.first() {
+                decode_rel_shard(sh, entries, vals, n, x, xt, out.data_mut());
+            }
+            Ok(())
+        } else {
+            let bn = batch * n;
+            let mut partials = ctx.take_scratch(self.shards.len() * bn);
+            let cell = OutCell::new(&mut partials);
+            let run = ctx.run(self.shards.len(), |s| {
+                // SAFETY: shard `s` exclusively owns partial range
+                // [s*bn, (s+1)*bn).
+                let part = unsafe { std::slice::from_raw_parts_mut(cell.at(s * bn), bn) };
+                decode_rel_shard(&self.shards[s], entries, vals, n, x, xt, part);
+            });
+            if run.is_ok() {
+                merge_partials(out.data_mut(), &partials);
+            }
+            ctx.put_scratch(partials);
+            run
+        };
+        if let Some(buf) = xt_buf {
+            ctx.put_scratch(buf);
+        }
+        res
     }
 }
 
 /// Decode one stream segment from its skip pointer, accumulating
 /// `x[b][i] * v` into `out[b*n + j]` for every non-zero `(i, j)` it
 /// places — the same fused decode-compute loop the kernel always ran,
-/// now restartable mid-stream.
+/// now restartable mid-stream. When `xt` carries the SIMD tier and
+/// the batch-contiguous input transpose, the per-entry batch loop
+/// runs the vector axpy (`tensor::simd::rel_entry_axpy`) — same
+/// per-element mul+add in the same entry order, so the bytes match
+/// the scalar walk.
 fn decode_rel_shard(
     sh: &RelShard,
     entries: &[u8],
     vals: &[f32],
     n: usize,
     x: &Matrix,
+    xt: Option<(SimdTier, &[f32])>,
     out: &mut [f32],
 ) {
     let batch = x.rows();
@@ -311,8 +383,25 @@ fn decode_rel_shard(
         pending = 0;
         let (i, j) = (pos / n, pos % n);
         let v = vals[vi];
-        for b in 0..batch {
-            out[b * n + j] += x.get(b, i) * v;
+        match xt {
+            Some((t, xt)) => {
+                // SAFETY: this call exclusively owns `out`, and the
+                // kernel touches only offsets `j + b*n < batch*n`.
+                unsafe {
+                    simd::rel_entry_axpy(
+                        t,
+                        &xt[i * batch..(i + 1) * batch],
+                        v,
+                        out.as_mut_ptr().add(j),
+                        n,
+                    )
+                };
+            }
+            None => {
+                for b in 0..batch {
+                    out[b * n + j] += x.get(b, i) * v;
+                }
+            }
         }
         vi += 1;
         pos += 1;
@@ -345,7 +434,9 @@ impl RowShards {
     }
 
     /// Run `body(rows, scratch, partial)` per shard and merge partials
-    /// in fixed shard order (single shard: straight into `out`).
+    /// in fixed shard order (single shard: straight into `out`). The
+    /// partial buffer comes from the context's scratch pool, so
+    /// steady-state executions allocate nothing.
     pub(crate) fn execute(
         &self,
         batch: usize,
@@ -364,18 +455,21 @@ impl RowShards {
             return Ok(());
         }
         let bn = batch * n;
-        let mut partials = vec![0f32; k * bn];
+        let mut partials = ctx.take_scratch(k * bn);
         let cell = OutCell::new(&mut partials);
-        ctx.run(k, |s| {
+        let run = ctx.run(k, |s| {
             // SAFETY: shard `s` exclusively owns partial range
             // [s*bn, (s+1)*bn); its scratch Mutex is locked by exactly
             // one shard.
             let part = unsafe { std::slice::from_raw_parts_mut(cell.at(s * bn), bn) };
             let mut scratch = lock_scratch(&self.scratch[s]);
             body(self.shards[s], scratch.as_mut_slice(), part);
-        })?;
-        merge_partials(out.data_mut(), &partials);
-        Ok(())
+        });
+        if run.is_ok() {
+            merge_partials(out.data_mut(), &partials);
+        }
+        ctx.put_scratch(partials);
+        run
     }
 }
 

@@ -1,6 +1,7 @@
 //! Row-major `f32` dense matrix with the operations the pipeline needs:
 //! matmul (threaded, blocked), transpose, elementwise, quantile selection.
 
+use crate::tensor::simd::{self, SimdTier};
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 
@@ -115,6 +116,17 @@ impl Matrix {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Re-shape in place to an all-zeros `rows × cols` matrix,
+    /// **reusing the existing heap buffer** when its capacity
+    /// suffices — the serving hot path's alternative to
+    /// [`Matrix::zeros`] for buffers that persist across batches.
+    pub fn reset_zero(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
     /// Elementwise absolute value — the magnitude matrix `M` of the paper.
     pub fn abs(&self) -> Matrix {
         self.map(|v| v.abs())
@@ -208,7 +220,7 @@ impl Matrix {
             )));
         }
         let mut out = Matrix::zeros(self.rows, other.cols);
-        matmul_into(
+        matmul_blocked(
             &self.data,
             &other.data,
             &mut out.data,
@@ -221,6 +233,18 @@ impl Matrix {
 
     /// Matrix multiply, threaded across row bands for large problems.
     pub fn matmul(&self, other: &Matrix) -> Result<Matrix> {
+        let mut out = Matrix::zeros(0, 0);
+        self.matmul_into(other, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Matrix::matmul`] writing into a caller-owned output, which is
+    /// re-shaped in place ([`Matrix::reset_zero`]) — the serving hot
+    /// path's allocation-free variant: a persistent `out` stops
+    /// allocating once its capacity has grown to the steady-state
+    /// batch shape. Threading and blocking decisions are identical to
+    /// the allocating call, so the results match it exactly.
+    pub fn matmul_into(&self, other: &Matrix, out: &mut Matrix) -> Result<()> {
         if self.cols != other.rows {
             return Err(Error::shape(format!(
                 "matmul: {}x{} * {}x{}",
@@ -228,12 +252,13 @@ impl Matrix {
             )));
         }
         let (m, k, n) = (self.rows, self.cols, other.cols);
+        out.reset_zero(m, n);
         let work = m * k * n;
         let threads = available_threads();
         if work < 1 << 20 || threads <= 1 || m < 2 {
-            return self.matmul_st(other);
+            matmul_blocked(&self.data, &other.data, &mut out.data, m, k, n);
+            return Ok(());
         }
-        let mut out = Matrix::zeros(m, n);
         let bands = threads.min(m);
         let rows_per = m.div_ceil(bands);
         let a = &self.data;
@@ -245,22 +270,25 @@ impl Matrix {
                 let nrows = chunk.len() / n;
                 let a_band = &a[row0 * k..(row0 + nrows) * k];
                 s.spawn(move || {
-                    matmul_into(a_band, b, chunk, nrows, k, n);
+                    matmul_blocked(a_band, b, chunk, nrows, k, n);
                 });
             }
         });
-        Ok(out)
+        Ok(())
     }
 
     /// Matrix multiply against a **pre-transposed** right operand:
     /// `self (m × k) · btᵀ` where `bt` is `(n × k)` — i.e. `bt` holds
-    /// `B`'s columns as contiguous rows. Runs the register-blocked,
-    /// output-stationary micro-kernel (`matmul_bt_cols`): each
-    /// output element is one dot product over contiguous memory on
-    /// both sides, accumulated in registers in ascending-`k` order —
-    /// no read-modify-write of output rows, and the result for any
-    /// element is independent of how columns are sharded (the
-    /// property the dense kernel's parallel plan relies on).
+    /// `B`'s columns as contiguous rows. On the scalar tier this runs
+    /// the register-blocked micro-kernel (`matmul_bt_cols`); on a SIMD
+    /// tier it packs `bt` into lane-interleaved panels and runs the
+    /// vector micro-kernel (`tensor::simd::matmul_packed_cols`).
+    /// Either way each output element is one dot product accumulated
+    /// in ascending-`k` order with non-fused mul+add, so the result is
+    /// byte-identical across tiers and independent of how columns are
+    /// sharded (the property the dense kernel's parallel plan relies
+    /// on). The dense serving kernel packs once at build time instead
+    /// of per call — see `serve::kernels::DenseMaskedKernel`.
     pub fn matmul_bt(&self, bt: &Matrix) -> Result<Matrix> {
         if self.cols != bt.cols {
             return Err(Error::shape(format!(
@@ -270,9 +298,28 @@ impl Matrix {
         }
         let (m, k, n) = (self.rows, self.cols, bt.rows);
         let mut out = Matrix::zeros(m, n);
-        // SAFETY: `out` is exclusively owned and sized m*n; the full
-        // column range is written by this single call.
-        unsafe { matmul_bt_cols(&self.data, &bt.data, out.data.as_mut_ptr(), m, k, n, (0, n)) };
+        let t = simd::tier();
+        // Packing is a per-call O(n·k) allocation + copy here (unlike
+        // the dense serving kernel, which packs once at build), so it
+        // must be amortized over enough left-hand rows to pay off.
+        if t == SimdTier::Scalar || m < 4 {
+            // SAFETY: `out` is exclusively owned and sized m*n; the
+            // full column range is written by this single call.
+            unsafe { matmul_bt_cols(&self.data, &bt.data, out.data.as_mut_ptr(), m, k, n, (0, n)) };
+        } else {
+            let packed = simd::pack_bt_panels(&bt.data, n, k);
+            // SAFETY: as above — exclusively owned m*n output.
+            unsafe {
+                simd::matmul_packed_cols(
+                    t,
+                    &self.data,
+                    &packed,
+                    out.data.as_mut_ptr(),
+                    (m, k, n),
+                    (0, n),
+                )
+            };
+        }
         Ok(out)
     }
 
@@ -375,7 +422,7 @@ impl Matrix {
 /// `k` so each pass touches the output row once per four rank-1
 /// updates instead of once per update — on the single-core testbed
 /// this took the kernel from ~8.0 to ~1.9x that (see the §Perf log).
-fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+fn matmul_blocked(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
@@ -535,6 +582,46 @@ mod tests {
         for (x, y) in st.data().iter().zip(mt.data()) {
             assert!((x - y).abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn matmul_into_reuses_buffer_and_matches_matmul() {
+        let mut rng = Rng::new(11);
+        let a = Matrix::gaussian(9, 31, 0.0, 1.0, &mut rng);
+        let b = Matrix::gaussian(31, 17, 0.0, 1.0, &mut rng);
+        let want = a.matmul(&b).unwrap();
+        let mut out = Matrix::zeros(9, 17); // pre-sized: must not grow
+        let cap = out.data.capacity();
+        a.matmul_into(&b, &mut out).unwrap();
+        a.matmul_into(&b, &mut out).unwrap();
+        assert_eq!(out.data(), want.data());
+        assert_eq!(out.data.capacity(), cap, "steady state must not reallocate");
+        // shape mismatch leaves an error, not a panic
+        assert!(a.matmul_into(&Matrix::zeros(30, 2), &mut out).is_err());
+    }
+
+    #[test]
+    fn reset_zero_reshapes_and_zeroes_in_place() {
+        let mut m = Matrix::from_vec(2, 3, vec![1.0; 6]).unwrap();
+        let cap = m.data.capacity();
+        m.reset_zero(3, 2);
+        assert_eq!((m.rows(), m.cols()), (3, 2));
+        assert!(m.data().iter().all(|&v| v == 0.0));
+        assert_eq!(m.data.capacity(), cap);
+    }
+
+    #[test]
+    fn matmul_bt_byte_identical_across_simd_tiers() {
+        use crate::tensor::simd;
+        let mut rng = Rng::new(12);
+        let a = Matrix::gaussian(7, 33, 0.0, 1.0, &mut rng);
+        let bt = Matrix::gaussian(21, 33, 0.0, 1.0, &mut rng);
+        let _g = simd::scalar_toggle_lock();
+        simd::force_scalar(true);
+        let scalar = a.matmul_bt(&bt).unwrap();
+        simd::force_scalar(false);
+        let auto = a.matmul_bt(&bt).unwrap();
+        assert_eq!(auto.data(), scalar.data(), "tier {:?}", simd::tier());
     }
 
     #[test]

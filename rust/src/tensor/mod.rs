@@ -1,6 +1,8 @@
 //! Dense matrix substrate (no external linear-algebra crates available
-//! offline, so the library ships its own).
+//! offline, so the library ships its own), plus the runtime-dispatched
+//! SIMD micro-kernels ([`simd`]) the serving hot path executes with.
 
 pub mod matrix;
+pub mod simd;
 
 pub use matrix::Matrix;

@@ -1,0 +1,754 @@
+//! Runtime-dispatched SIMD micro-kernels for the SpMM serving hot
+//! path: AVX2 on x86-64, NEON on aarch64, with a scalar fallback that
+//! is always compiled and always selectable (`LRBI_SIMD=off`).
+//!
+//! # The lane-owns-output bit-identity contract
+//!
+//! Every micro-kernel here vectorizes across **distinct output
+//! elements** (output columns or batch rows): each SIMD lane owns one
+//! output element, and the floating-point reduction *within* a lane
+//! runs in exactly the scalar order (one non-fused multiply + one add
+//! per term, ascending term index). IEEE-754 single-precision `mul`
+//! and `add` are deterministic operations, so a lane's bit pattern is
+//! identical to the scalar loop's — which makes `spmm` byte-identical
+//! across SIMD tiers, thread counts, and shard boundaries (pinned by
+//! `tests/kernels.rs`). Two things are deliberately **not** done:
+//!
+//! - no FMA in accumulations — `fmadd` rounds once where `mul`+`add`
+//!   round twice, so fusing would change bits vs the scalar path;
+//! - no horizontal (cross-lane) reductions — summing lanes together
+//!   would reassociate the reduction.
+//!
+//! # Dispatch
+//!
+//! The ISA is probed once per process ([`tier`]):
+//! `is_x86_feature_detected!("avx2")` on x86-64, NEON unconditionally
+//! on aarch64 (it is a baseline feature there), scalar elsewhere. The
+//! `LRBI_SIMD` environment variable (`off` / `0` / `scalar`) pins the
+//! scalar tier for CI and A/B benching — the SIMD analogue of
+//! `LRBI_THREADS`. [`force_scalar`] is a process-global test/bench
+//! hook that overrides the probe at call granularity, so one process
+//! can compare both paths (`benches/perf_simd.rs`, the bit-identity
+//! suite).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// Columns per packed dense panel (and the widest vector width served:
+/// one AVX2 register, or two NEON registers).
+pub const PANEL: usize = 8;
+
+/// The instruction set a micro-kernel call executes with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdTier {
+    /// Plain scalar loops (always available; the reference order).
+    Scalar,
+    /// 8-lane `f32` AVX2 (x86-64, runtime-detected).
+    Avx2,
+    /// 4-lane `f32` NEON (aarch64 baseline).
+    Neon,
+}
+
+impl SimdTier {
+    /// Stable name for benches/reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Neon => "neon",
+        }
+    }
+}
+
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+static PROBED: OnceLock<SimdTier> = OnceLock::new();
+
+fn env_pins_scalar() -> bool {
+    matches!(
+        std::env::var("LRBI_SIMD").map(|v| v.to_ascii_lowercase()).as_deref(),
+        Ok("off") | Ok("0") | Ok("scalar")
+    )
+}
+
+fn probe() -> SimdTier {
+    if env_pins_scalar() {
+        return SimdTier::Scalar;
+    }
+    arch_tier()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn arch_tier() -> SimdTier {
+    if is_x86_feature_detected!("avx2") {
+        SimdTier::Avx2
+    } else {
+        SimdTier::Scalar
+    }
+}
+
+/// NEON is mandatory in the aarch64 baseline ABI — no runtime probe
+/// needed.
+#[cfg(target_arch = "aarch64")]
+fn arch_tier() -> SimdTier {
+    SimdTier::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn arch_tier() -> SimdTier {
+    SimdTier::Scalar
+}
+
+/// The tier micro-kernel dispatch selects *right now*: the one-time
+/// probe (hardware ∧ `LRBI_SIMD`), overridden to scalar while
+/// [`force_scalar`]`(true)` is in effect.
+pub fn tier() -> SimdTier {
+    if FORCE_SCALAR.load(Ordering::Relaxed) {
+        return SimdTier::Scalar;
+    }
+    *PROBED.get_or_init(probe)
+}
+
+/// The probed tier ignoring any [`force_scalar`] override — what the
+/// hardware + environment would run (bench/report labels).
+pub fn probed_tier() -> SimdTier {
+    *PROBED.get_or_init(probe)
+}
+
+/// Process-global override pinning the scalar tier (test/bench hook:
+/// lets one process produce both a scalar and a SIMD execution to
+/// compare byte-for-byte). Because every micro-kernel is byte-identical
+/// across tiers, a concurrent reader observing a mid-test toggle sees
+/// no behavioral difference — only, at worst, the scalar speed.
+pub fn force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+/// Serialize scopes that toggle [`force_scalar`] **and assert on the
+/// resulting tier** (the flag is process-global, and tests in one
+/// binary run concurrently). Pure byte-identity comparisons don't
+/// need it — they hold under any interleaving — but a test asserting
+/// `tier() == Scalar` after forcing must hold this for the toggle's
+/// whole scope.
+pub fn scalar_toggle_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+// --------------------------------------------------------------- pack
+
+/// Pack a B-transposed operand `bt` (`n × k`, columns of the original
+/// `B` stored as contiguous rows) into lane-interleaved panels of
+/// [`PANEL`] columns: element `(panel p, step l, lane t)` lives at
+/// `p·PANEL·k + l·PANEL + t` and holds `bt[(p·PANEL + t)·k + l]`
+/// (zero for padding lanes past `n`). One contiguous [`PANEL`]-wide
+/// load per `k`-step then feeds all lanes of the panel — the layout
+/// the dense kernel pre-computes at build time so its `spmm` never
+/// gathers strided columns.
+pub fn pack_bt_panels(bt: &[f32], n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(bt.len(), n * k);
+    let panels = n.div_ceil(PANEL);
+    let mut out = vec![0f32; panels * PANEL * k];
+    for p in 0..panels {
+        let lanes = PANEL.min(n - p * PANEL);
+        for t in 0..lanes {
+            let col = &bt[(p * PANEL + t) * k..(p * PANEL + t + 1) * k];
+            for (l, &v) in col.iter().enumerate() {
+                out[p * PANEL * k + l * PANEL + t] = v;
+            }
+        }
+    }
+    out
+}
+
+/// Transpose a row-major `rows × cols` matrix into `out` so that
+/// `out[c * rows + r] == x[r * cols + c]` — the batch-contiguous
+/// layout the CSC/relative batch-lane kernels read (`out` must hold at
+/// least `rows * cols` elements; values are copied bit-exactly).
+pub fn transpose_into(x: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    debug_assert!(x.len() == rows * cols && out.len() >= rows * cols);
+    for r in 0..rows {
+        for (c, &v) in x[r * cols..(r + 1) * cols].iter().enumerate() {
+            out[c * rows + r] = v;
+        }
+    }
+}
+
+// ------------------------------------------------- dense panel kernel
+
+/// Dense micro-kernel over packed panels (see [`pack_bt_panels`]):
+/// for every row `b` of `x` (`bm × k`) and every column
+/// `j ∈ [cols.0, cols.1)`, writes `out[b·n + j] = Σ_l x[b·k+l] ·
+/// col_j[l]` with `dims = (bm, k, n)`. Full in-range panels take the
+/// vector path (lane `t` owns column `j0 + t`); boundary columns take
+/// the scalar-lane path — both accumulate ascending `l` with non-fused
+/// mul+add, so any column's bytes are independent of tier *and* of
+/// how `[c0, c1)` shards the column space.
+///
+/// # Safety
+///
+/// `out` must be valid for `bm * n` floats, and no other thread may
+/// concurrently access columns `[cols.0, cols.1)` of it. Disjoint
+/// column ranges may be filled concurrently (the dense plan's
+/// sharding).
+pub unsafe fn matmul_packed_cols(
+    t: SimdTier,
+    x: &[f32],
+    packed: &[f32],
+    out: *mut f32,
+    dims: (usize, usize, usize),
+    cols: (usize, usize),
+) {
+    let (bm, k, n) = dims;
+    let (c0, c1) = cols;
+    debug_assert!(c1 <= n && x.len() == bm * k);
+    debug_assert!(packed.len() >= n.div_ceil(PANEL) * PANEL * k);
+    let mut j = c0;
+    while j < c1 {
+        if j % PANEL == 0 && j + PANEL <= c1 {
+            let panel = &packed[(j / PANEL) * PANEL * k..(j / PANEL + 1) * PANEL * k];
+            match t {
+                #[cfg(target_arch = "x86_64")]
+                SimdTier::Avx2 => unsafe { panel_cols_avx2(x, panel, out, dims, j) },
+                #[cfg(target_arch = "aarch64")]
+                SimdTier::Neon => unsafe { panel_cols_neon(x, panel, out, dims, j) },
+                _ => unsafe { panel_cols_scalar(x, panel, out, dims, j) },
+            }
+            j += PANEL;
+        } else {
+            unsafe { packed_col_scalar(x, packed, out, dims, j) };
+            j += 1;
+        }
+    }
+}
+
+/// Scalar panel body: eight independent lane accumulators sharing each
+/// pass over the `x` row — the reference order every vector tier
+/// reproduces exactly.
+unsafe fn panel_cols_scalar(
+    x: &[f32],
+    panel: &[f32],
+    out: *mut f32,
+    dims: (usize, usize, usize),
+    j0: usize,
+) {
+    let (bm, k, n) = dims;
+    for b in 0..bm {
+        let xr = &x[b * k..(b + 1) * k];
+        let mut acc = [0f32; PANEL];
+        for (l, &xv) in xr.iter().enumerate() {
+            let row = &panel[l * PANEL..(l + 1) * PANEL];
+            for (a, &v) in acc.iter_mut().zip(row) {
+                *a += xv * v;
+            }
+        }
+        for (t, &a) in acc.iter().enumerate() {
+            // SAFETY: caller guarantees exclusive access to columns
+            // [j0, j0 + PANEL) of row b.
+            unsafe { *out.add(b * n + j0 + t) = a };
+        }
+    }
+}
+
+/// One boundary column `j` via its packed lane — same values, same
+/// ascending-`l` order as the panel paths.
+unsafe fn packed_col_scalar(
+    x: &[f32],
+    packed: &[f32],
+    out: *mut f32,
+    dims: (usize, usize, usize),
+    j: usize,
+) {
+    let (bm, k, n) = dims;
+    let (p, t) = (j / PANEL, j % PANEL);
+    let panel = &packed[p * PANEL * k..(p + 1) * PANEL * k];
+    for b in 0..bm {
+        let xr = &x[b * k..(b + 1) * k];
+        let mut s = 0f32;
+        for (l, &xv) in xr.iter().enumerate() {
+            s += xv * panel[l * PANEL + t];
+        }
+        // SAFETY: caller guarantees exclusive access to column j.
+        unsafe { *out.add(b * n + j) = s };
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn panel_cols_avx2(
+    x: &[f32],
+    panel: &[f32],
+    out: *mut f32,
+    dims: (usize, usize, usize),
+    j0: usize,
+) {
+    use std::arch::x86_64::*;
+    let (bm, k, n) = dims;
+    unsafe {
+        for b in 0..bm {
+            let xr = &x[b * k..(b + 1) * k];
+            let mut acc = _mm256_setzero_ps();
+            for (l, &xv) in xr.iter().enumerate() {
+                let row = _mm256_loadu_ps(panel.as_ptr().add(l * PANEL));
+                // mul + add, NOT fmadd: bit-parity with the scalar path.
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(xv), row));
+            }
+            _mm256_storeu_ps(out.add(b * n + j0), acc);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+unsafe fn panel_cols_neon(
+    x: &[f32],
+    panel: &[f32],
+    out: *mut f32,
+    dims: (usize, usize, usize),
+    j0: usize,
+) {
+    use std::arch::aarch64::*;
+    let (bm, k, n) = dims;
+    unsafe {
+        for b in 0..bm {
+            let xr = &x[b * k..(b + 1) * k];
+            let (mut a0, mut a1) = (vdupq_n_f32(0.0), vdupq_n_f32(0.0));
+            for (l, &xv) in xr.iter().enumerate() {
+                let xs = vdupq_n_f32(xv);
+                let p = panel.as_ptr().add(l * PANEL);
+                // mul + add, NOT vmla/fmla: bit-parity with scalar.
+                a0 = vaddq_f32(a0, vmulq_f32(xs, vld1q_f32(p)));
+                a1 = vaddq_f32(a1, vmulq_f32(xs, vld1q_f32(p.add(4))));
+            }
+            vst1q_f32(out.add(b * n + j0), a0);
+            vst1q_f32(out.add(b * n + j0 + 4), a1);
+        }
+    }
+}
+
+// ---------------------------------------------------- CSC batch lanes
+
+/// One CSC column's dot products for every batch row, reading the
+/// batch-contiguous transpose `xt` (see [`transpose_into`]): writes
+/// `out_col[b·n] = Σ_p vals[p] · xt[ri[p]·batch + b]`. Lanes own batch
+/// rows; every `(b, j)` element accumulates in ascending entry order —
+/// the same per-element sequence as the scalar column walk over
+/// row-major `x`.
+///
+/// # Safety
+///
+/// `out_col` must be valid at offsets `b * n` for every `b < batch`,
+/// and those elements must not be concurrently accessed (the CSC
+/// plan's column shards guarantee this).
+pub unsafe fn csc_column_accum(
+    t: SimdTier,
+    xt: &[f32],
+    batch: usize,
+    ri: &[u32],
+    vals: &[f32],
+    out_col: *mut f32,
+    n: usize,
+) {
+    debug_assert_eq!(ri.len(), vals.len());
+    match t {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { csc_column_avx2(xt, batch, ri, vals, out_col, n) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { csc_column_neon(xt, batch, ri, vals, out_col, n) },
+        _ => unsafe { csc_column_scalar(xt, batch, ri, vals, out_col, n) },
+    }
+}
+
+unsafe fn csc_column_scalar(
+    xt: &[f32],
+    batch: usize,
+    ri: &[u32],
+    vals: &[f32],
+    out_col: *mut f32,
+    n: usize,
+) {
+    for b in 0..batch {
+        let mut s = 0f32;
+        for (&r, &v) in ri.iter().zip(vals) {
+            s += xt[r as usize * batch + b] * v;
+        }
+        // SAFETY: caller guarantees exclusive access to this column.
+        unsafe { *out_col.add(b * n) = s };
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn csc_column_avx2(
+    xt: &[f32],
+    batch: usize,
+    ri: &[u32],
+    vals: &[f32],
+    out_col: *mut f32,
+    n: usize,
+) {
+    use std::arch::x86_64::*;
+    unsafe {
+        let mut b = 0usize;
+        while b + 8 <= batch {
+            let mut acc = _mm256_setzero_ps();
+            for (&r, &v) in ri.iter().zip(vals) {
+                let xs = _mm256_loadu_ps(xt.as_ptr().add(r as usize * batch + b));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(v), xs));
+            }
+            let mut lanes = [0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+            for (i, &s) in lanes.iter().enumerate() {
+                *out_col.add((b + i) * n) = s;
+            }
+            b += 8;
+        }
+        for b in b..batch {
+            let mut s = 0f32;
+            for (&r, &v) in ri.iter().zip(vals) {
+                s += xt[r as usize * batch + b] * v;
+            }
+            *out_col.add(b * n) = s;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+unsafe fn csc_column_neon(
+    xt: &[f32],
+    batch: usize,
+    ri: &[u32],
+    vals: &[f32],
+    out_col: *mut f32,
+    n: usize,
+) {
+    use std::arch::aarch64::*;
+    unsafe {
+        let mut b = 0usize;
+        while b + 4 <= batch {
+            let mut acc = vdupq_n_f32(0.0);
+            for (&r, &v) in ri.iter().zip(vals) {
+                let xs = vld1q_f32(xt.as_ptr().add(r as usize * batch + b));
+                acc = vaddq_f32(acc, vmulq_f32(vdupq_n_f32(v), xs));
+            }
+            let mut lanes = [0f32; 4];
+            vst1q_f32(lanes.as_mut_ptr(), acc);
+            for (i, &s) in lanes.iter().enumerate() {
+                *out_col.add((b + i) * n) = s;
+            }
+            b += 4;
+        }
+        for b in b..batch {
+            let mut s = 0f32;
+            for (&r, &v) in ri.iter().zip(vals) {
+                s += xt[r as usize * batch + b] * v;
+            }
+            *out_col.add(b * n) = s;
+        }
+    }
+}
+
+// ------------------------------------------- relative-stream batching
+
+/// One decoded relative-stream non-zero `(i, j)` with weight `v`
+/// applied to every batch row: `out_j[b·n] += xt_row[b] · v` where
+/// `xt_row` is row `i` of the batch-contiguous transpose. The loads
+/// and multiplies run vector-wide; the strided accumulate is one
+/// scalar add per lane — per element that is exactly the scalar
+/// `out += x·v`, in the same (outer-loop-fixed) entry order.
+///
+/// # Safety
+///
+/// `out_j` must be valid at offsets `b * n` for every
+/// `b < xt_row.len()`, and those elements must not be concurrently
+/// accessed by another shard.
+pub unsafe fn rel_entry_axpy(t: SimdTier, xt_row: &[f32], v: f32, out_j: *mut f32, n: usize) {
+    match t {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { rel_entry_avx2(xt_row, v, out_j, n) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { rel_entry_neon(xt_row, v, out_j, n) },
+        _ => {
+            for (b, &xv) in xt_row.iter().enumerate() {
+                // SAFETY: caller guarantees exclusive access.
+                unsafe { *out_j.add(b * n) += xv * v };
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn rel_entry_avx2(xt_row: &[f32], v: f32, out_j: *mut f32, n: usize) {
+    use std::arch::x86_64::*;
+    unsafe {
+        let batch = xt_row.len();
+        let vs = _mm256_set1_ps(v);
+        let mut b = 0usize;
+        while b + 8 <= batch {
+            let prod = _mm256_mul_ps(_mm256_loadu_ps(xt_row.as_ptr().add(b)), vs);
+            let mut lanes = [0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), prod);
+            for (i, &p) in lanes.iter().enumerate() {
+                *out_j.add((b + i) * n) += p;
+            }
+            b += 8;
+        }
+        for (b, &xv) in xt_row.iter().enumerate().skip(b) {
+            *out_j.add(b * n) += xv * v;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+unsafe fn rel_entry_neon(xt_row: &[f32], v: f32, out_j: *mut f32, n: usize) {
+    use std::arch::aarch64::*;
+    unsafe {
+        let batch = xt_row.len();
+        let vs = vdupq_n_f32(v);
+        let mut b = 0usize;
+        while b + 4 <= batch {
+            let prod = vmulq_f32(vld1q_f32(xt_row.as_ptr().add(b)), vs);
+            let mut lanes = [0f32; 4];
+            vst1q_f32(lanes.as_mut_ptr(), prod);
+            for (i, &p) in lanes.iter().enumerate() {
+                *out_j.add((b + i) * n) += p;
+            }
+            b += 4;
+        }
+        for (b, &xv) in xt_row.iter().enumerate().skip(b) {
+            *out_j.add(b * n) += xv * v;
+        }
+    }
+}
+
+// --------------------------------------------------- masked axpy (LR)
+
+/// `orow[j] += xv * wrow[j]` for every set bit `j` of a packed
+/// 64-column mask word — the low-rank/tiled kernels' consume step.
+/// Fully-set bytes take the vector path (8 contiguous lanes), sparse
+/// bytes fall back to the bit walk; either way each set element
+/// receives exactly one non-fused mul+add, so the bytes match the
+/// scalar walk no matter how dense the word is.
+///
+/// # Safety
+///
+/// For every set bit `j` of `word`, `wrow.add(j)` and `orow.add(j)`
+/// must be valid, and the touched `orow` elements must not be
+/// concurrently accessed by another shard.
+pub unsafe fn masked_axpy(t: SimdTier, word: u64, xv: f32, wrow: *const f32, orow: *mut f32) {
+    match t {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { masked_axpy_avx2(word, xv, wrow, orow) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { masked_axpy_neon(word, xv, wrow, orow) },
+        _ => unsafe { masked_axpy_scalar(word, xv, wrow, orow) },
+    }
+}
+
+unsafe fn masked_axpy_scalar(word: u64, xv: f32, wrow: *const f32, orow: *mut f32) {
+    let mut bits = word;
+    while bits != 0 {
+        let j = bits.trailing_zeros() as usize;
+        bits &= bits - 1;
+        // SAFETY: j is a set bit of word — valid per the caller
+        // contract of masked_axpy.
+        unsafe { *orow.add(j) += xv * *wrow.add(j) };
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn masked_axpy_avx2(word: u64, xv: f32, wrow: *const f32, orow: *mut f32) {
+    use std::arch::x86_64::*;
+    unsafe {
+        let xs = _mm256_set1_ps(xv);
+        for g in 0..8usize {
+            let byte = (word >> (g * 8)) & 0xFF;
+            if byte == 0 {
+                continue;
+            }
+            let base = g * 8;
+            if byte == 0xFF {
+                let w = _mm256_loadu_ps(wrow.add(base));
+                let o = _mm256_loadu_ps(orow.add(base));
+                _mm256_storeu_ps(orow.add(base), _mm256_add_ps(o, _mm256_mul_ps(xs, w)));
+            } else {
+                let mut bits = byte;
+                while bits != 0 {
+                    let j = base + bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    *orow.add(j) += xv * *wrow.add(j);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+unsafe fn masked_axpy_neon(word: u64, xv: f32, wrow: *const f32, orow: *mut f32) {
+    use std::arch::aarch64::*;
+    unsafe {
+        let xs = vdupq_n_f32(xv);
+        for g in 0..16usize {
+            let nib = (word >> (g * 4)) & 0xF;
+            if nib == 0 {
+                continue;
+            }
+            let base = g * 4;
+            if nib == 0xF {
+                let w = vld1q_f32(wrow.add(base));
+                let o = vld1q_f32(orow.add(base));
+                vst1q_f32(orow.add(base), vaddq_f32(o, vmulq_f32(xs, w)));
+            } else {
+                let mut bits = nib;
+                while bits != 0 {
+                    let j = base + bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    *orow.add(j) += xv * *wrow.add(j);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..len).map(|_| rng.gaussian_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn tier_is_probed_and_labelled() {
+        let t = probed_tier();
+        assert!(!t.label().is_empty());
+        // tier() follows the probe unless forced; asserting on the
+        // forced tier requires the toggle lock (concurrent tests may
+        // also flip the flag).
+        let _g = scalar_toggle_lock();
+        force_scalar(true);
+        assert_eq!(tier(), SimdTier::Scalar);
+        force_scalar(false);
+    }
+
+    #[test]
+    fn pack_layout_holds_every_column_lane_interleaved() {
+        let (n, k) = (11, 5); // forces a padded final panel
+        let bt = randv(n * k, 1);
+        let packed = pack_bt_panels(&bt, n, k);
+        assert_eq!(packed.len(), n.div_ceil(PANEL) * PANEL * k);
+        for j in 0..n {
+            let (p, t) = (j / PANEL, j % PANEL);
+            for l in 0..k {
+                assert_eq!(packed[p * PANEL * k + l * PANEL + t], bt[j * k + l]);
+            }
+        }
+        // padding lanes are zero
+        for l in 0..k {
+            for t in 3..PANEL {
+                assert_eq!(packed[PANEL * k + l * PANEL + t], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_into_is_exact() {
+        let (rows, cols) = (5, 7);
+        let x = randv(rows * cols, 2);
+        let mut xt = vec![0f32; rows * cols];
+        transpose_into(&x, rows, cols, &mut xt);
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(xt[c * rows + r], x[r * cols + c]);
+            }
+        }
+    }
+
+    #[test]
+    fn packed_matmul_byte_identical_across_tiers_and_shardings() {
+        let (bm, k, n) = (6, 37, 29); // panel head/tail + batch remainder
+        let x = randv(bm * k, 3);
+        let bt = randv(n * k, 4);
+        let packed = pack_bt_panels(&bt, n, k);
+        let run = |t: SimdTier, ranges: &[(usize, usize)]| {
+            let mut out = vec![0f32; bm * n];
+            for &r in ranges {
+                unsafe { matmul_packed_cols(t, &x, &packed, out.as_mut_ptr(), (bm, k, n), r) };
+            }
+            out
+        };
+        let want = run(SimdTier::Scalar, &[(0, n)]);
+        // dispatched tier, full range and a misaligned sharding
+        assert_eq!(run(tier(), &[(0, n)]), want);
+        assert_eq!(run(tier(), &[(0, 5), (5, 13), (13, n)]), want);
+        // and the values are the plain ascending-k dot products
+        for b in 0..bm {
+            for j in 0..n {
+                let mut s = 0f32;
+                for l in 0..k {
+                    s += x[b * k + l] * bt[j * k + l];
+                }
+                assert_eq!(want[b * n + j], s);
+            }
+        }
+    }
+
+    #[test]
+    fn csc_column_byte_identical_across_tiers() {
+        let (m, batch, n) = (23, 11, 4); // batch remainder lanes
+        let x = randv(batch * m, 5);
+        let mut xt = vec![0f32; m * batch];
+        transpose_into(&x, batch, m, &mut xt);
+        let ri: Vec<u32> = vec![0, 3, 7, 8, 15, 22];
+        let vals = randv(ri.len(), 6);
+        let run = |t: SimdTier| {
+            let mut out = vec![0f32; batch * n];
+            unsafe { csc_column_accum(t, &xt, batch, &ri, &vals, out.as_mut_ptr().add(2), n) };
+            out
+        };
+        let want = run(SimdTier::Scalar);
+        assert_eq!(run(tier()), want);
+        for b in 0..batch {
+            let mut s = 0f32;
+            for (&r, &v) in ri.iter().zip(&vals) {
+                s += x[b * m + r as usize] * v;
+            }
+            assert_eq!(want[b * n + 2], s);
+        }
+    }
+
+    #[test]
+    fn rel_entry_axpy_byte_identical_across_tiers() {
+        let (batch, n) = (13, 6);
+        let xt_row = randv(batch, 7);
+        let run = |t: SimdTier| {
+            let mut out = randv(batch * n, 8);
+            unsafe { rel_entry_axpy(t, &xt_row, 0.37, out.as_mut_ptr().add(4), n) };
+            out
+        };
+        assert_eq!(run(tier()), run(SimdTier::Scalar));
+    }
+
+    #[test]
+    fn masked_axpy_byte_identical_across_tiers_and_densities() {
+        let wrow = randv(64, 9);
+        for word in [0u64, 1, u64::MAX, 0x00FF_00F0_FFFF_0001, 0xAAAA_5555_0000_FFFF] {
+            let run = |t: SimdTier| {
+                let mut orow = randv(64, 10);
+                unsafe { masked_axpy(t, word, -1.25, wrow.as_ptr(), orow.as_mut_ptr()) };
+                orow
+            };
+            let want = run(SimdTier::Scalar);
+            assert_eq!(run(tier()), want, "word {word:#x}");
+            // untouched elements stay bit-identical to their seed
+            let seed = randv(64, 10);
+            for j in 0..64 {
+                if word >> j & 1 == 0 {
+                    assert_eq!(want[j], seed[j]);
+                }
+            }
+        }
+    }
+}

@@ -20,6 +20,46 @@
 //! assert!((mask.sparsity() - 4.0 / 6.0).abs() < 1e-12);
 //! ```
 
+/// Read `nbits` (1..=64) bits starting at flat bit offset `bit_off`
+/// from an **LSB-first** packed byte stream, returned as the low bits
+/// of a `u64` (bit `t` of the result is stream bit `bit_off + t`;
+/// bits past the end of `bytes` read as zero). This is the
+/// word-at-a-time unpack primitive serialized bit payloads decode
+/// with — two shifted `u64` assemblies instead of 64 byte probes.
+///
+/// # Examples
+///
+/// ```
+/// use lrbi::util::bits::bits_word_at;
+///
+/// // stream bits (LSB-first): byte 0 = 0b1011_0001
+/// let bytes = [0b1011_0001u8, 0b0000_0010];
+/// assert_eq!(bits_word_at(&bytes, 0, 8), 0b1011_0001);
+/// assert_eq!(bits_word_at(&bytes, 4, 6), 0b10_1011); // spans bytes
+/// assert_eq!(bits_word_at(&bytes, 12, 64), 0); // tail reads as zero
+/// assert_eq!(bits_word_at(&bytes, 999, 8), 0); // fully past the end too
+/// ```
+pub fn bits_word_at(bytes: &[u8], bit_off: usize, nbits: usize) -> u64 {
+    debug_assert!((1..=64).contains(&nbits));
+    let byte0 = bit_off / 8;
+    let shift = bit_off % 8;
+    let mut lo = [0u8; 8];
+    let take = bytes.len().saturating_sub(byte0).min(8);
+    if take > 0 {
+        lo[..take].copy_from_slice(&bytes[byte0..byte0 + take]);
+    }
+    let mut w = u64::from_le_bytes(lo) >> shift;
+    if shift > 0 {
+        if let Some(&hi) = bytes.get(byte0 + 8) {
+            w |= (hi as u64) << (64 - shift);
+        }
+    }
+    if nbits < 64 {
+        w &= (1u64 << nbits) - 1;
+    }
+    w
+}
+
 /// A row-major binary matrix packed into `u64` words per row.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BitMatrix {
@@ -270,6 +310,33 @@ mod tests {
         let dense = a.to_f32();
         let back = BitMatrix::from_f32(5, 67, &dense);
         assert_eq!(a, back);
+    }
+
+    #[test]
+    fn bits_word_at_matches_per_bit_reads() {
+        let mut rng = Rng::new(9);
+        let bytes: Vec<u8> = (0..23).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        let bit = |idx: usize| -> u64 {
+            if idx / 8 >= bytes.len() {
+                0
+            } else {
+                (bytes[idx / 8] >> (idx % 8) & 1) as u64
+            }
+        };
+        // every offset (aligned and not, incl. the 9-byte span, the
+        // zero-padded tail, and offsets fully past the end) and
+        // several widths
+        for off in 0..bytes.len() * 8 + 77 {
+            for nbits in [1usize, 5, 32, 63, 64] {
+                let w = bits_word_at(&bytes, off, nbits);
+                for t in 0..nbits {
+                    assert_eq!(w >> t & 1, bit(off + t), "off {off} nbits {nbits} bit {t}");
+                }
+                if nbits < 64 {
+                    assert_eq!(w >> nbits, 0, "bits past nbits must be masked");
+                }
+            }
+        }
     }
 
     #[test]

@@ -9,7 +9,10 @@
 //! partition + fixed shard→merge order) — pinned here for all four
 //! factor formats plus the tiled kernel. `LRBI_THREADS` (used by the
 //! CI smoke matrix and `scripts/verify.sh`) selects the pooled thread
-//! count for `threads_env_smoke`.
+//! count for `threads_env_smoke`; `LRBI_SIMD` (`off`/`0`/`scalar`
+//! pins the scalar micro-kernels) is exercised the same way by the CI
+//! `simd-matrix` job, with in-process SIMD-vs-scalar byte identity
+//! pinned by `simd_and_scalar_spmm_byte_identical`.
 
 use lrbi::coordinator::pool::ExecCtx;
 use lrbi::formats::StoredIndex;
@@ -17,6 +20,7 @@ use lrbi::serve::engine::{InferenceBackend, MlpParams, NativeBackend};
 use lrbi::serve::kernels::{
     build_kernel, build_kernel_exec, build_kernel_from_stored_exec, KernelFormat, SparseKernel,
 };
+use lrbi::tensor::simd;
 use lrbi::tensor::Matrix;
 use lrbi::tiling::{TileFactors, TilePlan, TiledLowRankIndex};
 use lrbi::util::bits::BitMatrix;
@@ -154,6 +158,67 @@ fn parallel_spmm_bit_identical_across_thread_counts() {
             );
         }
     });
+}
+
+/// SIMD/scalar bit-identity: all five kernels × threads {1, 4} must
+/// produce byte-identical spmm output with the vector micro-kernels
+/// dispatched and with the scalar tier pinned. `force_scalar` is a
+/// process-global toggle and this suite is its only writer; because
+/// the invariant under test *is* byte-identity across tiers, another
+/// test observing a mid-toggle tier cannot be affected unless the
+/// invariant itself is broken (in which case some test fails, which
+/// is the point). On hardware without AVX2/NEON both runs take the
+/// scalar path and the comparison is trivially exact; the CI
+/// `simd-matrix` job additionally runs this whole suite under
+/// `LRBI_SIMD=off` and `on`.
+#[test]
+fn simd_and_scalar_spmm_byte_identical() {
+    let mut rng = Rng::new(88);
+    let (m, n, k) = (210, 190, 6);
+    let ip = BitMatrix::from_fn(m, k, |_, _| rng.bernoulli(0.35));
+    let iz = BitMatrix::from_fn(k, n, |_, _| rng.bernoulli(0.35));
+    let w = Matrix::gaussian(m, n, 0.0, 1.0, &mut rng);
+    let stored_tiled = StoredIndex::Tiled(random_tiled(m, n, &mut rng));
+    // batch 9 exercises both full vector lanes and remainder lanes
+    for batch in [1usize, 9] {
+        let x = Matrix::gaussian(batch, m, 0.0, 1.0, &mut rng);
+        for threads in [1usize, 4] {
+            let ctx = ExecCtx::new(threads, None);
+            let mut kernels: Vec<Box<dyn SparseKernel>> = KernelFormat::ALL
+                .iter()
+                .map(|&fmt| build_kernel_exec(fmt, &w, &ip, &iz, &ctx, None).unwrap())
+                .collect();
+            kernels.push(build_kernel_from_stored_exec(&stored_tiled, &w, &ctx, None).unwrap());
+            for kern in &kernels {
+                simd::force_scalar(true);
+                let scalar = kern.spmm(&x).unwrap();
+                simd::force_scalar(false);
+                let auto = kern.spmm(&x).unwrap();
+                assert_eq!(
+                    auto.data(),
+                    scalar.data(),
+                    "{} batch={batch} threads={threads} tier={:?}",
+                    kern.name(),
+                    simd::probed_tier()
+                );
+            }
+        }
+    }
+    simd::force_scalar(false);
+}
+
+/// The `LRBI_SIMD` env knob (mirroring `LRBI_THREADS`): when CI pins
+/// `off`/`0`/`scalar`, the probe must resolve to the scalar tier.
+#[test]
+fn lrbi_simd_env_off_pins_scalar_tier() {
+    let pinned = matches!(
+        std::env::var("LRBI_SIMD").map(|v| v.to_ascii_lowercase()).as_deref(),
+        Ok("off") | Ok("0") | Ok("scalar")
+    );
+    if pinned {
+        assert_eq!(simd::probed_tier(), simd::SimdTier::Scalar);
+        assert_eq!(simd::tier(), simd::SimdTier::Scalar);
+    }
 }
 
 #[test]

@@ -333,14 +333,15 @@ impl InferenceBackend for BlockingBackend {
     fn classes(&self) -> usize {
         self.classes
     }
-    fn predict(&mut self, _x: &Matrix) -> Result<Matrix> {
+    fn predict_into(&mut self, _x: &Matrix, out: &mut Matrix) -> Result<()> {
         let _ = self.entered.send(());
         let (lock, cv) = &*self.release;
         let mut go = lock.lock().unwrap();
         while !*go {
             go = cv.wait(go).unwrap();
         }
-        Ok(Matrix::zeros(1, self.classes))
+        out.reset_zero(1, self.classes);
+        Ok(())
     }
 }
 

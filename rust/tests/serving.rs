@@ -1,11 +1,15 @@
 //! Serving integration: compressed model behind the dynamic batcher,
-//! PJRT backend (artifact path) under concurrent load.
+//! PJRT backend (artifact path) under concurrent load, and the
+//! zero-allocation steady state (batches 2..N must be served entirely
+//! from pooled/persistent buffers).
 
 use lrbi::coordinator::metrics::Metrics;
+use lrbi::coordinator::pool::ExecCtx;
 use lrbi::runtime::artifacts::{ArtifactSet, GEOMETRY};
 use lrbi::runtime::client::Runtime;
 use lrbi::serve::batcher::BatchPolicy;
 use lrbi::serve::engine::{MlpParams, NativeBackend, PjrtBackend, ServingEngine};
+use lrbi::serve::kernels::{KernelFormat, SparseKernel};
 use lrbi::tensor::Matrix;
 use lrbi::util::bits::BitMatrix;
 use lrbi::util::rng::Rng;
@@ -53,6 +57,69 @@ fn native_engine_under_concurrent_load() {
     let snap = metrics.snapshot();
     assert_eq!(snap.requests, 256);
     assert!(snap.mean_batch_size() > 1.0, "batcher never batched");
+}
+
+/// Acceptance criterion (ISSUE 5): after the first flush has sized
+/// every pooled buffer, the serving hot path allocates nothing —
+/// `spmm_alloc_bytes` goes flat while `scratch_reuse` and
+/// `batch_buffer_reuse` keep climbing. Exercised for a reduction-shard
+/// kernel (lowrank: pooled partials) and for the relative kernel
+/// (pooled partials + the SIMD input transpose when a vector tier is
+/// active).
+#[test]
+fn steady_state_serving_allocates_nothing_on_the_spmm_hot_path() {
+    for format in [KernelFormat::LowRankFused, KernelFormat::Relative] {
+        let params = MlpParams::init(60);
+        let (ip, iz) = {
+            let g = GEOMETRY;
+            let mut rng = Rng::new(61);
+            (
+                BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.3)),
+                BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.3)),
+            )
+        };
+        let metrics = Arc::new(Metrics::new());
+        // threads 2 ⇒ the plans actually fan out; the ctx carries the
+        // metrics so scratch checkouts are observable.
+        let ctx = ExecCtx::new(2, Some(Arc::clone(&metrics)));
+        let backend =
+            NativeBackend::with_format_exec(params, format, &ip, &iz, ctx).unwrap();
+        assert!(backend.kernel().plan_shards() > 1, "plan must shard for this test");
+        let engine = ServingEngine::start(
+            backend,
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            Arc::clone(&metrics),
+        );
+        // warm-up flush: sizes every pooled buffer (and may allocate)
+        engine.infer(vec![0.5; GEOMETRY.input_dim]).unwrap();
+        let warm = metrics.snapshot();
+        assert!(
+            warm.spmm_alloc_bytes > 0,
+            "{}: the first flush must have gone through the scratch pool",
+            format.name()
+        );
+        for i in 0..10 {
+            engine.infer(vec![0.01 * i as f32; GEOMETRY.input_dim]).unwrap();
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(
+            snap.spmm_alloc_bytes, warm.spmm_alloc_bytes,
+            "{}: batches 2..N allocated on the hot path",
+            format.name()
+        );
+        assert!(
+            snap.scratch_reuse > warm.scratch_reuse,
+            "{}: steady-state flushes must reuse pooled scratch",
+            format.name()
+        );
+        assert!(
+            snap.batch_buffer_reuse >= 10,
+            "{}: every steady-state flush must recycle the request buffer (got {})",
+            format.name(),
+            snap.batch_buffer_reuse
+        );
+        assert_eq!(snap.batch_flush_count, 11);
+    }
 }
 
 #[test]

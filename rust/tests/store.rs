@@ -5,7 +5,7 @@
 
 use lrbi::formats::StoredIndex;
 use lrbi::runtime::artifacts::GEOMETRY;
-use lrbi::serve::engine::{MlpParams, NativeBackend};
+use lrbi::serve::engine::{InferenceBackend, MlpParams, NativeBackend};
 use lrbi::serve::kernels::{build_kernel_from_stored, KernelFormat, SparseKernel};
 use lrbi::store::{Artifact, Container, Registry, SectionKind};
 use lrbi::tensor::Matrix;

@@ -16,6 +16,11 @@ for t in 1 4; do
   LRBI_THREADS="$t" cargo test -q --test kernels
 done
 
+echo "== spmm SIMD matrix (dispatched and LRBI_SIMD=off)"
+for s in on off; do
+  LRBI_SIMD="$s" cargo test -q --test kernels
+done
+
 echo "== cargo doc --no-deps (warnings are errors)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
