@@ -1,8 +1,12 @@
 //! §Perf: sparse-execution kernels — the masked FC1 matmul executed
 //! directly on each index representation (dense-masked baseline, CSR
-//! gather-accumulate, 5-bit relative streaming, fused low-rank) at the
+//! gather-accumulate, 5-bit relative streaming, fused low-rank,
+//! Viterbi shift-register regeneration, 4-bit dCSR deltas) at the
 //! paper's pruning rates. Reports per-kernel build (decode) time,
 //! per-call spmm time, index size, and agreement with the baseline.
+//! Note the `viterbi` row's `max_abs_err` is expectedly large: the
+//! format is mask-shaping, so it serves a different (shaped) mask
+//! than the exact `I_p ⊗ I_z` product the baseline uses.
 //!
 //!     cargo run --release --bench perf_kernels
 //!     LRBI_BENCH_QUICK=1 cargo run --release --bench perf_kernels

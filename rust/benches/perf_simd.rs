@@ -1,5 +1,5 @@
 //! §Perf: SIMD micro-kernel dispatch — `spmm` wall time across
-//! simd {on, off} × threads × all five kernel formats on the
+//! simd {on, off} × threads × all seven kernel formats on the
 //! FC1-shaped layer. Writes the human table, a CSV under `reports/`,
 //! and the machine-readable `BENCH_simd.json` at the repository root
 //! (schema `lrbi-bench-simd-v1`, documented in README.md) so the

@@ -163,7 +163,7 @@ fn print_usage() {
          \x20 serve      run the serving engine on synthetic traffic,\n\
          \x20            or expose it over TCP with --listen\n\
          \x20            --requests N  --max-batch 64  --max-wait-ms 2\n\
-         \x20            --kernel dense|csr|relative|lowrank\n\
+         \x20            --kernel dense|csr|relative|lowrank|viterbi|dcsr\n\
          \x20            --threads N   spmm plan workers (default 0 = all cores)\n\
          \x20            --artifact model.lrbi       serve a packed artifact\n\
          \x20            --registry dir [--swap name]  serve registry variants\n\
@@ -172,7 +172,7 @@ fn print_usage() {
          \x20            (ops guide: docs/SERVING.md, wire spec: docs/PROTOCOL.md)\n\
          \x20 pack       package a compressed model as a .lrbi artifact\n\
          \x20            --out model.lrbi | --registry dir [--name v1]\n\
-         \x20            --format dense|csr|relative|lowrank  --tiles 1\n\
+         \x20            --format dense|csr|relative|lowrank|viterbi|dcsr  --tiles 1\n\
          \x20            --rank 16  --sparsity 0.95  --seed 11\n\
          \x20            --method random|bmf (bmf runs Algorithm 1)\n\
          \x20 inspect    print a .lrbi artifact's sections + metadata\n\

@@ -8,18 +8,22 @@ use std::time::Instant;
 /// [`Metrics::spmm_kernel_ns`] (and of the snapshot's array)
 /// accumulates nanoseconds spent inside `spmm` of the kernel named
 /// `SPMM_KERNEL_NAMES[i]` — pinned by a test in `serve::kernels`.
-pub const SPMM_KERNEL_NAMES: [&str; 5] = ["dense", "csr", "relative", "lowrank", "tiled"];
+pub const SPMM_KERNEL_NAMES: [&str; 7] = [
+    "dense", "csr", "relative", "lowrank", "tiled", "viterbi", "dcsr",
+];
 
 /// Counter names the per-kernel `spmm_kernel_ns` slots serialize
 /// under in [`MetricsSnapshot::named_counters`] (same slot order as
 /// [`SPMM_KERNEL_NAMES`]); the `STATS` wire frame and
 /// `docs/SERVING.md` use these names verbatim.
-pub const SPMM_NS_COUNTER_NAMES: [&str; 5] = [
+pub const SPMM_NS_COUNTER_NAMES: [&str; 7] = [
     "spmm_ns_dense",
     "spmm_ns_csr",
     "spmm_ns_relative",
     "spmm_ns_lowrank",
     "spmm_ns_tiled",
+    "spmm_ns_viterbi",
+    "spmm_ns_dcsr",
 ];
 
 /// Shared coordinator metrics.
@@ -58,7 +62,7 @@ pub struct Metrics {
     pub spmm_shards: AtomicU64,
     /// Nanoseconds inside plan-based `spmm`, split per kernel — slot
     /// order is [`SPMM_KERNEL_NAMES`].
-    pub spmm_kernel_ns: [AtomicU64; 5],
+    pub spmm_kernel_ns: [AtomicU64; 7],
     /// Dynamic-batcher flushes (batches handed to the executor).
     pub batch_flush_count: AtomicU64,
     /// Total requests across all flushed batches; together with
@@ -123,7 +127,7 @@ pub struct MetricsSnapshot {
     /// Execution-plan shards run.
     pub spmm_shards: u64,
     /// Per-kernel plan-spmm nanoseconds ([`SPMM_KERNEL_NAMES`] order).
-    pub spmm_kernel_ns: [u64; 5],
+    pub spmm_kernel_ns: [u64; 7],
     /// Dynamic-batcher flushes.
     pub batch_flush_count: u64,
     /// Requests summed over flushed batches.
@@ -187,6 +191,8 @@ impl Metrics {
                 self.spmm_kernel_ns[2].load(Ordering::Relaxed),
                 self.spmm_kernel_ns[3].load(Ordering::Relaxed),
                 self.spmm_kernel_ns[4].load(Ordering::Relaxed),
+                self.spmm_kernel_ns[5].load(Ordering::Relaxed),
+                self.spmm_kernel_ns[6].load(Ordering::Relaxed),
             ],
             batch_flush_count: self.batch_flush_count.load(Ordering::Relaxed),
             batch_size_sum: self.batch_size_sum.load(Ordering::Relaxed),
@@ -376,7 +382,7 @@ mod tests {
         m.spmm_kernel_ns[2].fetch_add(1234, Ordering::Relaxed);
         let s = m.snapshot();
         assert_eq!(s.spmm_shards, 5);
-        assert_eq!(s.spmm_kernel_ns, [0, 0, 1234, 0, 0]);
+        assert_eq!(s.spmm_kernel_ns, [0, 0, 1234, 0, 0, 0, 0]);
         assert_eq!(SPMM_KERNEL_NAMES[2], "relative");
     }
 

@@ -9,6 +9,7 @@
 
 pub mod binary;
 pub mod csr;
+pub mod dcsr;
 pub mod lowrank;
 pub mod relative;
 pub mod viterbi;
@@ -36,6 +37,10 @@ pub enum StoredIndex {
     LowRank(lowrank::LowRankIndex),
     /// Tiled low-rank: plan + per-tile factor pairs (per-tile ranks).
     Tiled(TiledLowRankIndex),
+    /// Viterbi input bit-stream (rate-1/5 convolutional encoder).
+    Viterbi(viterbi::ViterbiIndex),
+    /// 4-bit delta (dCSR) stream.
+    Dcsr(dcsr::DcsrIndex),
 }
 
 impl StoredIndex {
@@ -47,6 +52,8 @@ impl StoredIndex {
             StoredIndex::Relative(_) => "relative",
             StoredIndex::LowRank(_) => "lowrank",
             StoredIndex::Tiled(_) => "tiled",
+            StoredIndex::Viterbi(_) => "viterbi",
+            StoredIndex::Dcsr(_) => "dcsr",
         }
     }
 
@@ -58,6 +65,8 @@ impl StoredIndex {
             StoredIndex::Relative(r) => (r.rows(), r.cols()),
             StoredIndex::LowRank(l) => (l.m, l.n),
             StoredIndex::Tiled(t) => (t.m, t.n),
+            StoredIndex::Viterbi(v) => (v.rows(), v.cols()),
+            StoredIndex::Dcsr(d) => (d.rows(), d.cols()),
         }
     }
 
@@ -71,6 +80,8 @@ impl StoredIndex {
             StoredIndex::Relative(r) => r.index_bytes(),
             StoredIndex::LowRank(l) => l.index_bytes(),
             StoredIndex::Tiled(t) => t.index_bytes(),
+            StoredIndex::Viterbi(v) => v.index_bytes(),
+            StoredIndex::Dcsr(d) => d.index_bytes(),
         }
     }
 
@@ -83,6 +94,8 @@ impl StoredIndex {
             StoredIndex::Relative(r) => Ok(r.decode()),
             StoredIndex::LowRank(l) => l.decode(),
             StoredIndex::Tiled(t) => t.decode_mask(),
+            StoredIndex::Viterbi(v) => Ok(v.decode()),
+            StoredIndex::Dcsr(d) => Ok(d.decode()),
         }
     }
 
@@ -112,8 +125,14 @@ impl StoredIndex {
             "lowrank" | "low-rank" => {
                 Ok(StoredIndex::LowRank(lowrank::LowRankIndex::from_factors(ip, iz)?))
             }
+            // Mask-shaping: the trellis re-encodes I_p ⊗ I_z as the
+            // nearest emittable mask (deterministic, see `shape_mask`).
+            "viterbi" => Ok(StoredIndex::Viterbi(viterbi::ViterbiIndex::shape_mask(
+                &ip.bool_product(iz),
+            ))),
+            "dcsr" => Ok(StoredIndex::Dcsr(dcsr::DcsrIndex::encode(&ip.bool_product(iz)))),
             other => Err(Error::invalid(format!(
-                "unknown storable format '{other}' (want dense|csr|relative|lowrank)"
+                "unknown storable format '{other}' (want dense|csr|relative|lowrank|viterbi|dcsr)"
             ))),
         }
     }
@@ -183,6 +202,27 @@ pub fn format_comparison(
     ])
 }
 
+/// [`format_comparison`] plus a dCSR row (Trommer 2021) — the
+/// head-to-head the serving benches report. Kept separate so the
+/// paper-pinned five-row table stays byte-for-byte what Table 1R/3
+/// print.
+pub fn format_comparison_extended(
+    w: &Matrix,
+    s: f64,
+    lowrank_bits: usize,
+    lowrank_comment: &str,
+) -> Result<Vec<FormatRow>> {
+    let mut rows = format_comparison(w, s, lowrank_bits, lowrank_comment)?;
+    let (mask, _) = crate::pruning::magnitude_mask(w, s);
+    let d = dcsr::DcsrIndex::encode(&mask);
+    rows.push(FormatRow {
+        name: "dCSR(4bit)".into(),
+        bytes: d.index_bytes(),
+        comment: "Delta Indexing".into(),
+    });
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -194,16 +234,43 @@ mod tests {
         let ip = BitMatrix::from_fn(40, 5, |_, _| rng.bernoulli(0.3));
         let iz = BitMatrix::from_fn(5, 70, |_, _| rng.bernoulli(0.3));
         let want = ip.bool_product(&iz);
-        for name in ["dense", "csr", "relative", "lowrank"] {
+        for name in ["dense", "csr", "relative", "lowrank", "dcsr"] {
             let s = StoredIndex::from_factors(name, &ip, &iz).unwrap();
             assert_eq!(s.format_name(), name);
             assert_eq!(s.shape(), (40, 70));
             assert_eq!(s.decode_mask().unwrap(), want, "{name}");
             assert!(s.index_bytes() > 0);
         }
+        // viterbi is mask-shaping: it stores the trellis's nearest
+        // emittable mask, so equality is against its own re-decode,
+        // not against I_p ⊗ I_z.
+        let v = StoredIndex::from_factors("viterbi", &ip, &iz).unwrap();
+        assert_eq!(v.format_name(), "viterbi");
+        assert_eq!(v.shape(), (40, 70));
+        assert!(v.index_bytes() > 0);
+        let shaped = viterbi::ViterbiIndex::shape_mask(&want);
+        assert_eq!(v.decode_mask().unwrap(), shaped.decode());
         assert!(StoredIndex::from_factors("tiled", &ip, &iz).is_err());
         let bad_iz = BitMatrix::zeros(6, 70);
         assert!(StoredIndex::from_factors("csr", &ip, &bad_iz).is_err());
+    }
+
+    #[test]
+    fn extended_comparison_appends_dcsr_row() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::gaussian(200, 180, 0.0, 0.1, &mut rng);
+        let base = format_comparison(&w, 0.9, 8 * (200 + 180), "k=8").unwrap();
+        let ext = format_comparison_extended(&w, 0.9, 8 * (200 + 180), "k=8").unwrap();
+        assert_eq!(ext.len(), base.len() + 1);
+        for (a, b) in ext.iter().zip(&base) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.bytes, b.bytes);
+        }
+        let d = ext.last().unwrap();
+        assert_eq!(d.name, "dCSR(4bit)");
+        assert!(d.bytes > 0);
+        // at S=0.9 the 4-bit deltas beat the dense bitmap
+        assert!(d.bytes < base[0].bytes);
     }
 
     #[test]

@@ -28,9 +28,15 @@ const NSTATES: usize = 1 << K;
 /// polynomials so outputs are balanced and well-mixed.
 const GEN: [u64; RATE] = [0b1011011, 0b1111001, 0b1100101, 0b1010111, 0b1101101];
 
-/// Index size in bytes for an m×n mask: mn/RATE bits.
+/// Index size in bytes for an m×n mask. Each row stores
+/// `ceil(n/RATE)` input bits (rows are padded to a whole step so the
+/// hardware can decode them independently), so the total is
+/// `ceil(m·ceil(n/RATE) / 8)` bytes — matching the packed layout
+/// `compress` actually emits. (An earlier revision computed
+/// `ceil(ceil(mn/RATE)/8)`, which under-reports whenever `n % RATE
+/// != 0` because it amortises the per-row padding across rows.)
 pub fn index_bytes(m: usize, n: usize) -> usize {
-    (m * n).div_ceil(RATE).div_ceil(8)
+    (m * n.div_ceil(RATE)).div_ceil(8)
 }
 
 /// Encoder output for (state, input) — RATE mask bits.
@@ -76,29 +82,119 @@ impl ViterbiIndex {
 
     /// Decode the full mask (what the on-chip decompressor does).
     pub fn decode(&self) -> BitMatrix {
-        let steps = Self::steps(self.cols);
         let mut mask = BitMatrix::zeros(self.rows, self.cols);
+        let mut words = vec![0u64; self.cols.div_ceil(64)];
         for i in 0..self.rows {
-            let mut state = 0u64;
-            for t in 0..steps {
-                let bit_idx = i * steps + t;
-                let input = (self.inputs[bit_idx / 8] >> (bit_idx % 8)) as u64 & 1;
-                let out = emit(state, input);
-                for (r, &o) in out.iter().enumerate() {
-                    let j = t * RATE + r;
-                    if j < self.cols && o {
-                        mask.set(i, j, true);
-                    }
+            self.decode_row_words(i, &mut words);
+            for (wi, &w) in words.iter().enumerate() {
+                let mut bits = w;
+                while bits != 0 {
+                    let j = wi * 64 + bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    mask.set(i, j, true);
                 }
-                state = ((state << 1) | input) & (NSTATES as u64 - 1);
             }
         }
         mask
     }
 
+    /// Regenerate row `i`'s mask bits straight into packed 64-bit
+    /// words (`words` must hold at least `ceil(cols/64)` — extra words
+    /// are zeroed), without materializing the dense mask: each row's
+    /// shift register restarts at state 0, which is exactly what lets
+    /// the hardware (and the execution kernel's row shards) decode
+    /// rows in parallel. Bits at columns `>= cols` in the truncated
+    /// final step are dropped, so padding words stay clear.
+    pub fn decode_row_words(&self, i: usize, words: &mut [u64]) {
+        words.fill(0);
+        let steps = Self::steps(self.cols);
+        let mut state = 0u64;
+        for t in 0..steps {
+            let bit_idx = i * steps + t;
+            let input = (self.inputs[bit_idx / 8] >> (bit_idx % 8)) as u64 & 1;
+            let out = emit(state, input);
+            for (r, &o) in out.iter().enumerate() {
+                let j = t * RATE + r;
+                if j < self.cols && o {
+                    words[j / 64] |= 1u64 << (j % 64);
+                }
+            }
+            state = ((state << 1) | input) & (NSTATES as u64 - 1);
+        }
+    }
+
+    /// Exact non-zero count of the decoded mask, via the same per-row
+    /// regeneration the execution kernel runs (used to size its row
+    /// shards deterministically — no dense mask is built).
+    pub fn nnz(&self) -> usize {
+        let mut words = vec![0u64; self.cols.div_ceil(64)];
+        let mut n = 0usize;
+        for i in 0..self.rows {
+            self.decode_row_words(i, &mut words);
+            n += words.iter().map(|w| w.count_ones() as usize).sum::<usize>();
+        }
+        n
+    }
+
     /// Stored bytes.
     pub fn index_bytes(&self) -> usize {
         self.inputs.len()
+    }
+
+    /// Mask rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Mask cols.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The packed input bit-stream (row-major, `ceil(cols/RATE)` bits
+    /// per row, LSB-first) — the on-disk form, exactly
+    /// `index_bytes()` long. Exposed so the execution kernel can walk
+    /// the shift register straight off the stored bits.
+    pub fn bytes(&self) -> &[u8] {
+        &self.inputs
+    }
+
+    /// Rebuild from the packed on-disk form (the store read path).
+    pub fn from_bytes(rows: usize, cols: usize, inputs: Vec<u8>) -> Result<Self> {
+        let need = index_bytes(rows, cols);
+        if inputs.len() != need {
+            return Err(Error::store(format!(
+                "viterbi index payload: {} bytes for {rows}x{cols}, need {need}",
+                inputs.len()
+            )));
+        }
+        Ok(ViterbiIndex { rows, cols, inputs })
+    }
+
+    /// Deterministically re-encode an already-chosen mask: per row,
+    /// run the trellis with score +1 for mask-set positions and −1
+    /// otherwise (no λ search), so the emitted stream is the encoder's
+    /// best approximation of `mask`. Both kernel construction paths
+    /// (from factors and from a stored artifact) route through this,
+    /// which is what makes them bitwise identical.
+    pub fn shape_mask(mask: &BitMatrix) -> ViterbiIndex {
+        let (rows, cols) = (mask.rows(), mask.cols());
+        let steps = Self::steps(cols);
+        let mut packed = vec![0u8; (rows * steps).div_ceil(8)];
+        let mut scores = vec![0.0f64; cols];
+        for i in 0..rows {
+            for (j, s) in scores.iter_mut().enumerate() {
+                *s = if mask.get(i, j) { 1.0 } else { -1.0 };
+            }
+            let (inputs, _) = search_row(&scores, cols);
+            for (t, &b) in inputs.iter().enumerate() {
+                if b {
+                    let idx = i * steps + t;
+                    packed[idx / 8] |= 1 << (idx % 8);
+                }
+            }
+        }
+        ViterbiIndex { rows, cols, inputs: packed }
     }
 }
 
@@ -256,6 +352,49 @@ mod tests {
         // Table 3: FC5 922KB (KB=1000): 9216*4096/5/8 = 943,718 B ≈ 921.6 KiB
         let fc5 = index_bytes(9216, 4096);
         assert!((fc5 as f64 / 1024.0 - 921.6).abs() < 1.0);
+    }
+
+    #[test]
+    fn index_bytes_matches_stored_layout_on_odd_shapes() {
+        // The per-row layout pads each row to a whole step, so the
+        // free function must agree with what compress() actually
+        // stores — in particular when cols % RATE != 0 (the old
+        // double-div_ceil formula under-reported there).
+        let mut rng = Rng::new(9);
+        for (m, n) in [(3usize, 7usize), (5, 11), (13, 29), (7, 64), (1, 1), (9, 5)] {
+            assert_eq!(index_bytes(m, n), (m * n.div_ceil(RATE)).div_ceil(8));
+            let w = Matrix::gaussian(m, n, 0.0, 1.0, &mut rng);
+            let res = compress(&w, 0.7).unwrap();
+            assert_eq!(
+                res.index.index_bytes(),
+                index_bytes(m, n),
+                "{m}x{n}: stored bytes disagree with index_bytes()"
+            );
+            // bytes → from_bytes round-trip decodes identically
+            let back =
+                ViterbiIndex::from_bytes(m, n, res.index.bytes().to_vec()).unwrap();
+            assert_eq!(back.decode(), res.index.decode(), "{m}x{n}");
+            // wrong length is a typed store error
+            assert!(ViterbiIndex::from_bytes(m, n, vec![0; index_bytes(m, n) + 1]).is_err());
+        }
+    }
+
+    #[test]
+    fn shape_mask_is_deterministic_and_idempotent() {
+        let mut rng = Rng::new(11);
+        let w = Matrix::gaussian(10, 47, 0.0, 1.0, &mut rng);
+        let res = compress(&w, 0.8).unwrap();
+        // re-shaping a mask the encoder itself produced reproduces the
+        // exact same input stream (the trellis has no reason to differ)
+        let reshaped = ViterbiIndex::shape_mask(&res.mask);
+        assert_eq!(reshaped.bytes(), res.index.bytes());
+        assert_eq!(reshaped.decode(), res.mask);
+        // and it is a pure function of the mask
+        let again = ViterbiIndex::shape_mask(&res.mask);
+        assert_eq!(again.bytes(), reshaped.bytes());
+        // the all-zero mask is representable exactly
+        let z = ViterbiIndex::shape_mask(&BitMatrix::zeros(4, 23));
+        assert_eq!(z.decode(), BitMatrix::zeros(4, 23));
     }
 
     #[test]

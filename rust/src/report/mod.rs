@@ -14,6 +14,7 @@ pub fn generate_all(out_dir: &Path) -> Result<Vec<String>> {
     std::fs::create_dir_all(out_dir)?;
     let mut written = Vec::new();
     written.push(tables::table1_right(out_dir)?);
+    written.push(tables::table1_right_extended(out_dir)?);
     written.push(tables::table3(out_dir)?);
     written.push(tables::table4_ratios(out_dir)?);
     written.push(tables::table2_ratios(out_dir)?);

@@ -3,7 +3,7 @@
 //! are exact arithmetic and run in milliseconds.
 
 use crate::bmf::compression_ratio;
-use crate::formats::format_comparison;
+use crate::formats::{format_comparison, format_comparison_extended};
 use crate::models::alexnet::{
     fc5_tiling, fc6_tiling, tiled_index_bits, FC5_COLS, FC5_ROWS, FC6_COLS, FC6_ROWS,
 };
@@ -25,6 +25,27 @@ pub fn table1_right(out_dir: &Path) -> Result<String> {
         .collect();
     print_table("Table 1 (right): LeNet-5 FC1 index size", &["Method", "Index Size", "Comment"], &rows);
     let path = out_dir.join("table1_right.csv");
+    write_table_csv(path.to_str().unwrap(), &["method", "kb", "comment"], &rows)?;
+    Ok(path.display().to_string())
+}
+
+/// Table 1 (right), extended: the paper's format rows plus the
+/// post-paper dCSR (4-bit delta) row — kept out of `table1_right` so
+/// the paper-pinned table stays byte-stable.
+pub fn table1_right_extended(out_dir: &Path) -> Result<String> {
+    let mut rng = Rng::new(1);
+    let w = Matrix::gaussian(800, 500, 0.0, 0.05, &mut rng);
+    let rows_data = format_comparison_extended(&w, 0.95, 16 * (800 + 500), "k=16")?;
+    let rows: Vec<Vec<String>> = rows_data
+        .iter()
+        .map(|r| vec![r.name.clone(), format!("{:.1}KB", r.kb()), r.comment.clone()])
+        .collect();
+    print_table(
+        "Table 1 (right, extended): FC1 index size incl. dCSR",
+        &["Method", "Index Size", "Comment"],
+        &rows,
+    );
+    let path = out_dir.join("table1_right_extended.csv");
     write_table_csv(path.to_str().unwrap(), &["method", "kb", "comment"], &rows)?;
     Ok(path.display().to_string())
 }

@@ -167,8 +167,8 @@ impl NativeBackend {
 
     /// Build from a loaded `.lrbi` artifact: the stored index decodes
     /// straight into the kernel for its own representation (CSR,
-    /// relative, low-rank, and tiled never materialize the dense
-    /// mask), and the artifact's dense params become the model —
+    /// relative, low-rank, tiled, Viterbi, and dCSR never materialize
+    /// the dense mask), and the artifact's dense params become the model —
     /// Algorithm 1 is not re-run.
     pub fn from_artifact(artifact: &Artifact) -> Result<Self> {
         Self::from_artifact_exec(artifact, ExecCtx::single())
@@ -186,6 +186,8 @@ impl NativeBackend {
             StoredIndex::Csr(_) => KernelFormat::Csr,
             StoredIndex::Relative(_) => KernelFormat::Relative,
             StoredIndex::LowRank(_) | StoredIndex::Tiled(_) => KernelFormat::LowRankFused,
+            StoredIndex::Viterbi(_) => KernelFormat::Viterbi,
+            StoredIndex::Dcsr(_) => KernelFormat::Dcsr,
         };
         Ok(NativeBackend {
             params: artifact.params.clone(),
@@ -528,7 +530,21 @@ mod tests {
             let mut be = NativeBackend::with_format(params.clone(), fmt, &ip, &iz).unwrap();
             assert_eq!(be.kernel_name(), fmt.name());
             let got = be.predict(&x).unwrap();
-            for (a, b) in got.data().iter().zip(want.data()) {
+            // Viterbi is mask-shaping: its kernel serves the nearest
+            // Viterbi-representable mask, so its oracle is the dense
+            // kernel over that same decoded mask — every other format
+            // is mask-exact and compares against the shared baseline.
+            let want_fmt;
+            let oracle = if fmt == KernelFormat::Viterbi {
+                let mask = crate::formats::viterbi::ViterbiIndex::shape_mask(&ip.bool_product(&iz))
+                    .decode();
+                let mut shaped = NativeBackend::with_mask(params.clone(), &mask).unwrap();
+                want_fmt = shaped.predict(&x).unwrap();
+                &want_fmt
+            } else {
+                &want
+            };
+            for (a, b) in got.data().iter().zip(oracle.data()) {
                 assert!((a - b).abs() <= 1e-3 * (1.0 + b.abs()), "{}: {a} vs {b}", fmt.name());
             }
         }
@@ -547,6 +563,8 @@ mod tests {
             (KernelFormat::Csr, "csr"),
             (KernelFormat::Relative, "relative"),
             (KernelFormat::LowRankFused, "lowrank"),
+            (KernelFormat::Viterbi, "viterbi"),
+            (KernelFormat::Dcsr, "dcsr"),
         ] {
             let mut mem = NativeBackend::with_format(params.clone(), fmt, &ip, &iz).unwrap();
             let art =

@@ -14,6 +14,8 @@
 //! | CSR (16-bit)    | gather-accumulate over `IA`/`JA` + packed values    |
 //! | relative (5-bit)| stream the gap entries, fusing decode with compute  |
 //! | fused low-rank  | expand `I_p ⊗ I_z` one packed row at a time         |
+//! | viterbi         | shift-register walk regenerates 5 mask bits/input bit |
+//! | dCSR (4-bit)    | stream the nibble deltas, decode fused with compute |
 //!
 //! The fused low-rank kernel never materialises the full `m × n` mask:
 //! it ORs the packed `u64` rows of `I_z` selected by row `i` of `I_p`
@@ -44,7 +46,9 @@
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::ExecCtx;
 use crate::formats::csr::Csr16;
+use crate::formats::dcsr::{DcsrIndex, ESCAPE};
 use crate::formats::relative::{Csr5Relative, MAX_GAP};
+use crate::formats::viterbi::ViterbiIndex;
 use crate::formats::StoredIndex;
 use crate::serve::plan::{
     lock_tile_scratch, shard_ranges, tile_col_shards, CscPlan, OutCell, RelShard, RelativePlan,
@@ -67,6 +71,8 @@ const SLOT_CSR: usize = 1;
 const SLOT_RELATIVE: usize = 2;
 const SLOT_LOWRANK: usize = 3;
 const SLOT_TILED: usize = 4;
+const SLOT_VITERBI: usize = 5;
+const SLOT_DCSR: usize = 6;
 
 /// A sparse-execution strategy for the masked layer.
 ///
@@ -117,15 +123,26 @@ pub enum KernelFormat {
     /// Fused low-rank: `I_p ⊗ I_z` expanded tile-by-tile from packed
     /// words, never materialising the dense mask.
     LowRankFused,
+    /// Viterbi: the stored input bit-stream drives the rate-1/5
+    /// shift-register encoder per row, regenerating mask words on the
+    /// fly — the dense mask never exists. Mask-shaping: the executed
+    /// mask is the trellis's nearest emittable approximation of
+    /// `I_p ⊗ I_z`, not the product itself.
+    Viterbi,
+    /// dCSR: 4-bit delta stream (Trommer 2021), decode fused with
+    /// compute over skip-pointer segments.
+    Dcsr,
 }
 
 impl KernelFormat {
     /// Every selectable kernel, baseline first.
-    pub const ALL: [KernelFormat; 4] = [
+    pub const ALL: [KernelFormat; 6] = [
         KernelFormat::DenseMasked,
         KernelFormat::Csr,
         KernelFormat::Relative,
         KernelFormat::LowRankFused,
+        KernelFormat::Viterbi,
+        KernelFormat::Dcsr,
     ];
 
     /// Stable CLI/report name.
@@ -135,6 +152,8 @@ impl KernelFormat {
             KernelFormat::Csr => "csr",
             KernelFormat::Relative => "relative",
             KernelFormat::LowRankFused => "lowrank",
+            KernelFormat::Viterbi => "viterbi",
+            KernelFormat::Dcsr => "dcsr",
         }
     }
 
@@ -145,8 +164,10 @@ impl KernelFormat {
             "csr" => Ok(KernelFormat::Csr),
             "relative" | "csr5" => Ok(KernelFormat::Relative),
             "lowrank" | "low-rank" | "fused" => Ok(KernelFormat::LowRankFused),
+            "viterbi" => Ok(KernelFormat::Viterbi),
+            "dcsr" => Ok(KernelFormat::Dcsr),
             other => Err(Error::invalid(format!(
-                "unknown kernel format '{other}' (want dense|csr|relative|lowrank)"
+                "unknown kernel format '{other}' (want dense|csr|relative|lowrank|viterbi|dcsr)"
             ))),
         }
     }
@@ -230,6 +251,17 @@ pub fn build_kernel_exec(
         KernelFormat::LowRankFused => {
             Box::new(LowRankFusedKernel::new(w, ip, iz)?.with_exec(Arc::clone(ctx)))
         }
+        KernelFormat::Viterbi => {
+            // Mask-shaping: re-encode I_p ⊗ I_z as the trellis's
+            // nearest emittable mask (the same deterministic encode
+            // `StoredIndex::from_factors("viterbi", ..)` performs, so
+            // factor and stored construction stay bitwise identical).
+            let index = ViterbiIndex::shape_mask(&ip.bool_product(iz));
+            Box::new(ViterbiKernel::new(w, index)?.with_exec(Arc::clone(ctx)))
+        }
+        KernelFormat::Dcsr => {
+            Box::new(DcsrKernel::new(w, &ip.bool_product(iz))?.with_exec(Arc::clone(ctx)))
+        }
     };
     if let Some(m) = metrics {
         m.kernel_decodes.fetch_add(1, Ordering::Relaxed);
@@ -275,6 +307,10 @@ pub fn build_kernel_from_stored_exec(
             Box::new(LowRankFusedKernel::new(w, &ip, &iz)?.with_exec(Arc::clone(ctx)))
         }
         StoredIndex::Tiled(t) => Box::new(TiledLowRankKernel::new(w, t)?.with_exec(Arc::clone(ctx))),
+        StoredIndex::Viterbi(v) => {
+            Box::new(ViterbiKernel::new(w, v.clone())?.with_exec(Arc::clone(ctx)))
+        }
+        StoredIndex::Dcsr(d) => Box::new(DcsrKernel::from_stream(w, d)?.with_exec(Arc::clone(ctx))),
     };
     if let Some(m) = metrics {
         m.kernel_decodes.fetch_add(1, Ordering::Relaxed);
@@ -573,34 +609,64 @@ fn gather_stream_vals(w: &Matrix, stream: &Csr5Relative) -> Result<(Vec<f32>, Re
             w.cols()
         )));
     }
-    let n = stream.cols();
-    let total = stream.rows() * n;
-    let entries = stream.entries();
+    gather_delta_vals(w, stream.entries(), stream.nnz(), MAX_GAP, "relative")
+}
+
+/// The same fused gather walk for the 4-bit dCSR stream (escape 15) —
+/// shared by both `DcsrKernel` constructors.
+fn gather_dcsr_vals(w: &Matrix, stream: &DcsrIndex) -> Result<(Vec<f32>, RelativePlan)> {
+    if stream.rows() != w.rows() || stream.cols() != w.cols() {
+        return Err(Error::shape(format!(
+            "dcsr index {}x{} vs W {}x{}",
+            stream.rows(),
+            stream.cols(),
+            w.rows(),
+            w.cols()
+        )));
+    }
+    gather_delta_vals(w, stream.entries(), stream.nnz(), ESCAPE, "dcsr")
+}
+
+/// Walk a delta stream (entries equal to `escape` advance `escape`
+/// positions without a weight; anything else advances `entry + 1` and
+/// places one), gathering surviving weights in stream order and
+/// recording the skip-pointer plan. A shard closes after ~[`SHARD_NNZ`]
+/// surviving weights (at least `nnz / MAX_SHARDS`, keeping the count
+/// capped); its successor starts at the entry right after the closing
+/// non-zero, so any escape run stays with the non-zero it precedes.
+fn gather_delta_vals(
+    w: &Matrix,
+    entries: &[u8],
+    nnz: usize,
+    escape: u32,
+    what: &str,
+) -> Result<(Vec<f32>, RelativePlan)> {
+    let n = w.cols();
+    let total = w.rows() * n;
     // Shard size: cache-sized, capped in count, and at least
     // REDUCE_COLS_FACTOR·n non-zeros so the ordered partial merge
     // (2·batch·n streamed ops per shard) stays a small fraction of
     // the shard's own work.
-    let per = stream
-        .nnz()
+    let per = nnz
         .div_ceil(MAX_SHARDS)
         .max(SHARD_NNZ)
         .max(REDUCE_COLS_FACTOR * n);
-    let mut vals = Vec::with_capacity(stream.nnz());
+    let mut vals = Vec::with_capacity(nnz);
     let mut shards = Vec::new();
     let (mut e0, mut v0, mut pos0) = (0usize, 0usize, 0usize);
     let mut run_start = 0usize; // first entry after the last non-zero
     let mut pos = 0usize;
     let mut pending = 0u32;
     for (idx, &e) in entries.iter().enumerate() {
-        if e as u32 == MAX_GAP {
-            pending += MAX_GAP;
+        if e as u32 == escape {
+            pending += escape;
             continue;
         }
         let p = pos + (pending + e as u32) as usize;
         pending = 0;
         if p >= total {
             return Err(Error::store(format!(
-                "relative stream runs past the {total}-element mask"
+                "{what} stream runs past the {total}-element mask"
             )));
         }
         if !vals.is_empty() && vals.len() % per == 0 {
@@ -616,7 +682,7 @@ fn gather_stream_vals(w: &Matrix, stream: &Csr5Relative) -> Result<(Vec<f32>, Re
     if e0 < entries.len() {
         shards.push(RelShard { e0, e1: entries.len(), v0, pos0 });
     }
-    Ok((vals, RelativePlan { shards }))
+    Ok((vals, RelativePlan { shards, escape }))
 }
 
 impl SparseKernel for RelativeKernel {
@@ -631,6 +697,99 @@ impl SparseKernel for RelativeKernel {
         // (i, j) is applied to all batch rows while it is hot.
         self.plan.execute(&self.entries, &self.vals, self.n, x, out, &self.ctx)?;
         self.ctx.record_plan_spmm(SLOT_RELATIVE, self.plan.shard_count() as u64, t0);
+        Ok(())
+    }
+    fn index_bytes(&self) -> usize {
+        self.index_bytes
+    }
+    fn rows(&self) -> usize {
+        self.m
+    }
+    fn cols(&self) -> usize {
+        self.n
+    }
+    fn plan_shards(&self) -> usize {
+        self.plan.shard_count().max(1)
+    }
+}
+
+/// dCSR streaming (Trommer 2021): the 4-bit delta stream of
+/// [`DcsrIndex`] is walked entry-by-entry with decode fused into the
+/// accumulate, exactly like [`RelativeKernel`] — same skip-pointer
+/// segment shards ([`RelShard`]), same fixed merge order, same
+/// `rel_entry_axpy` vector inner loop — but at half the entry width
+/// and with escape value 15. Decode cost per entry is identical
+/// (nibble unpack happens at load, the in-memory stream is one byte
+/// per entry); the format trades more escape entries at extreme
+/// sparsity for a denser index stream everywhere else, and the shared
+/// kernel structure is what makes the head-to-head in
+/// `perf_spmm_scaling` a pure index-representation comparison.
+pub struct DcsrKernel {
+    m: usize,
+    n: usize,
+    entries: Vec<u8>,
+    /// Surviving weights in stream order (escapes carry no value).
+    vals: Vec<f32>,
+    plan: RelativePlan,
+    index_bytes: usize,
+    ctx: Arc<ExecCtx>,
+}
+
+impl DcsrKernel {
+    /// Encode the mask as a 4-bit delta stream, gather surviving
+    /// weights in stream order, and record the skip pointers. The
+    /// freshly-encoded entry stream is *moved* into the kernel.
+    pub fn new(w: &Matrix, mask: &BitMatrix) -> Result<Self> {
+        check_mask_shape(w, mask)?;
+        let stream = DcsrIndex::encode(mask);
+        let (vals, plan) = gather_dcsr_vals(w, &stream)?;
+        let (m, n, index_bytes) = (stream.rows(), stream.cols(), stream.index_bytes());
+        Ok(DcsrKernel {
+            m,
+            n,
+            entries: stream.into_entries(),
+            vals,
+            plan,
+            index_bytes,
+            ctx: ExecCtx::single(),
+        })
+    }
+
+    /// Build directly from an already-encoded delta stream (the
+    /// artifact load path): one walk gathers surviving weights and
+    /// records skip pointers — the mask is never expanded, and the
+    /// gather order matches [`DcsrKernel::new`] so both construction
+    /// paths produce bit-identical `spmm` output.
+    pub fn from_stream(w: &Matrix, stream: &DcsrIndex) -> Result<Self> {
+        let (vals, plan) = gather_dcsr_vals(w, stream)?;
+        Ok(DcsrKernel {
+            m: stream.rows(),
+            n: stream.cols(),
+            entries: stream.entries().to_vec(),
+            vals,
+            plan,
+            index_bytes: stream.index_bytes(),
+            ctx: ExecCtx::single(),
+        })
+    }
+
+    /// Attach the execution context the plan shards run on.
+    pub fn with_exec(mut self, ctx: Arc<ExecCtx>) -> Self {
+        self.ctx = ctx;
+        self
+    }
+}
+
+impl SparseKernel for DcsrKernel {
+    fn name(&self) -> &'static str {
+        "dcsr"
+    }
+    fn spmm_into(&self, x: &Matrix, out: &mut Matrix) -> Result<()> {
+        check_input(x, self.m)?;
+        out.reset_zero(x.rows(), self.n);
+        let t0 = Instant::now();
+        self.plan.execute(&self.entries, &self.vals, self.n, x, out, &self.ctx)?;
+        self.ctx.record_plan_spmm(SLOT_DCSR, self.plan.shard_count() as u64, t0);
         Ok(())
     }
     fn index_bytes(&self) -> usize {
@@ -783,6 +942,126 @@ impl SparseKernel for LowRankFusedKernel {
     }
     fn index_bytes(&self) -> usize {
         (self.ip.cols() * (self.ip.rows() + self.iz.cols())).div_ceil(8)
+    }
+    fn rows(&self) -> usize {
+        self.w.rows()
+    }
+    fn cols(&self) -> usize {
+        self.w.cols()
+    }
+    fn plan_shards(&self) -> usize {
+        self.row_shards.shard_count().max(1)
+    }
+}
+
+/// Viterbi fused execution: for each weight row `i`, the stored input
+/// bit-stream drives the rate-1/5 shift-register encoder
+/// ([`ViterbiIndex::decode_row_words`]), regenerating the row's mask
+/// as packed `u64` words in a reused tile — 5 mask bits per input bit,
+/// the in-register analogue of the paper's [14] on-chip decompressor —
+/// which is consumed immediately by the same `masked_axpy` vector
+/// inner loop the low-rank kernel uses. The dense `m × n` mask never
+/// exists; peak extra memory is one `n/64`-word tile per shard. Rows
+/// decode independently (each restarts the register at state 0 — the
+/// paper's hardware-parallelism argument), so mask rows shard freely
+/// via [`RowShards`] and per-shard partials merge in fixed shard
+/// order.
+pub struct ViterbiKernel {
+    w: Matrix,
+    index: ViterbiIndex,
+    /// Row-range reduction shards with persistent per-shard scratch
+    /// tiles, sized from the index's exact decoded non-zero count so
+    /// the partition depends only on the index.
+    row_shards: RowShards,
+    ctx: Arc<ExecCtx>,
+}
+
+impl ViterbiKernel {
+    /// Capture weights + the compressed index and partition the mask
+    /// rows into the plan's shards. The one-time `nnz` count walks the
+    /// same per-row regeneration the hot loop runs; no dense mask is
+    /// built.
+    pub fn new(w: &Matrix, index: ViterbiIndex) -> Result<Self> {
+        if index.rows() != w.rows() || index.cols() != w.cols() {
+            return Err(Error::shape(format!(
+                "viterbi index {}x{} vs W {}x{}",
+                index.rows(),
+                index.cols(),
+                w.rows(),
+                w.cols()
+            )));
+        }
+        let (m, n) = (w.rows(), w.cols());
+        let nnz = index.nnz();
+        let target_rows = if nnz == 0 {
+            m.max(1) // empty mask: one shard, no merge
+        } else {
+            (REDUCE_COLS_FACTOR * n * m).div_ceil(nnz)
+        };
+        let row_shards = RowShards::new(m, n.div_ceil(64), target_rows);
+        Ok(ViterbiKernel { w: w.clone(), index, row_shards, ctx: ExecCtx::single() })
+    }
+
+    /// Attach the execution context the plan shards run on.
+    pub fn with_exec(mut self, ctx: Arc<ExecCtx>) -> Self {
+        self.ctx = ctx;
+        self
+    }
+}
+
+impl SparseKernel for ViterbiKernel {
+    fn name(&self) -> &'static str {
+        "viterbi"
+    }
+    fn spmm_into(&self, x: &Matrix, out: &mut Matrix) -> Result<()> {
+        let (m, n) = (self.w.rows(), self.w.cols());
+        check_input(x, m)?;
+        let batch = x.rows();
+        out.reset_zero(batch, n);
+        let t0 = Instant::now();
+        let tier = simd::tier();
+        self.row_shards.execute(batch, n, out, &self.ctx, |(r0, r1), tile, part| {
+            for i in r0..r1 {
+                // Regenerate mask row i from the input bits: the
+                // shift-register walk emits RATE bits per input bit
+                // straight into the packed tile.
+                self.index.decode_row_words(i, tile);
+                // Consume the tile against W row i for every batch
+                // row: one masked vector axpy per 64-column word.
+                let wrow = self.w.row(i);
+                for b in 0..batch {
+                    let xv = x.get(b, i);
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let orow = &mut part[b * n..(b + 1) * n];
+                    for (wi, &word) in tile.iter().enumerate() {
+                        if word == 0 {
+                            continue;
+                        }
+                        // SAFETY: set bits of `word` only name columns
+                        // < n - wi*64 (decode_row_words masks the
+                        // truncated final step), and this shard
+                        // exclusively owns `part`.
+                        unsafe {
+                            simd::masked_axpy(
+                                tier,
+                                word,
+                                xv,
+                                wrow.as_ptr().add(wi * 64),
+                                orow.as_mut_ptr().add(wi * 64),
+                            )
+                        };
+                    }
+                }
+            }
+        })?;
+        self.ctx
+            .record_plan_spmm(SLOT_VITERBI, self.row_shards.shard_count() as u64, t0);
+        Ok(())
+    }
+    fn index_bytes(&self) -> usize {
+        self.index.index_bytes()
     }
     fn rows(&self) -> usize {
         self.w.rows()
@@ -970,12 +1249,19 @@ mod tests {
         let mut rng = Rng::new(9);
         let x = Matrix::gaussian(4, 70, 0.0, 1.0, &mut rng);
         let want = reference(&w, &ip, &iz, &x);
+        // viterbi is mask-shaping: its reference is the dense matmul
+        // over its own regenerated mask, not over I_p ⊗ I_z.
+        let vit_mask = ViterbiIndex::shape_mask(&ip.bool_product(&iz)).decode();
+        let want_vit = x
+            .matmul(&crate::pruning::prune_with_mask(&w, &vit_mask).unwrap())
+            .unwrap();
         for fmt in KernelFormat::ALL {
             let kern = build_kernel(fmt, &w, &ip, &iz, None).unwrap();
             assert_eq!(kern.name(), fmt.name());
             assert_eq!((kern.rows(), kern.cols()), (70, 130));
             let got = kern.spmm(&x).unwrap();
-            for (a, b) in got.data().iter().zip(want.data()) {
+            let oracle = if fmt == KernelFormat::Viterbi { &want_vit } else { &want };
+            for (a, b) in got.data().iter().zip(oracle.data()) {
                 assert!(
                     (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
                     "{}: {a} vs {b}",
@@ -1031,6 +1317,8 @@ mod tests {
             (KernelFormat::Csr, "csr"),
             (KernelFormat::Relative, "relative"),
             (KernelFormat::LowRankFused, "lowrank"),
+            (KernelFormat::Viterbi, "viterbi"),
+            (KernelFormat::Dcsr, "dcsr"),
         ] {
             let direct = build_kernel(fmt, &w, &ip, &iz, None).unwrap();
             let stored = StoredIndex::from_factors(name, &ip, &iz).unwrap();
@@ -1054,6 +1342,8 @@ mod tests {
         assert_eq!(SPMM_KERNEL_NAMES[SLOT_RELATIVE], "relative");
         assert_eq!(SPMM_KERNEL_NAMES[SLOT_LOWRANK], "lowrank");
         assert_eq!(SPMM_KERNEL_NAMES[SLOT_TILED], "tiled");
+        assert_eq!(SPMM_KERNEL_NAMES[SLOT_VITERBI], "viterbi");
+        assert_eq!(SPMM_KERNEL_NAMES[SLOT_DCSR], "dcsr");
     }
 
     #[test]
@@ -1076,7 +1366,10 @@ mod tests {
         }
         let snap = metrics.snapshot();
         assert!(snap.spmm_shards > 4, "shards recorded: {}", snap.spmm_shards);
-        for (slot, ns) in snap.spmm_kernel_ns.iter().enumerate().take(4) {
+        for (slot, ns) in snap.spmm_kernel_ns.iter().enumerate() {
+            if slot == SLOT_TILED {
+                continue; // only constructible from a stored index
+            }
             assert!(*ns > 0, "slot {slot} got no time");
         }
     }

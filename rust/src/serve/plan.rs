@@ -10,10 +10,10 @@
 //!   from [`tile_col_shards`]). No merge step exists, so there is
 //!   nothing to reorder.
 //! - **Reduction shards** split the reduction axis (mask rows for the
-//!   fused low-rank kernel via [`RowShards`], stream segments for the
-//!   relative kernel via [`RelativePlan`]); each shard accumulates
-//!   into a private partial buffer and partials merge in **fixed shard
-//!   order**.
+//!   fused low-rank and Viterbi kernels via [`RowShards`], stream
+//!   segments for the relative and dCSR kernels via [`RelativePlan`]);
+//!   each shard accumulates into a private partial buffer and partials
+//!   merge in **fixed shard order**.
 //!
 //! Determinism contract (pinned by
 //! `tests/kernels.rs::parallel_spmm_bit_identical_across_thread_counts`):
@@ -31,7 +31,6 @@
 //! `spmm_alloc_bytes`/`scratch_reuse` metrics pair.
 
 use crate::coordinator::pool::ExecCtx;
-use crate::formats::relative::MAX_GAP;
 use crate::tensor::simd::{self, SimdTier};
 use crate::tensor::Matrix;
 use crate::util::error::Result;
@@ -285,11 +284,18 @@ pub(crate) struct RelShard {
     pub pos0: usize,
 }
 
-/// Skip-pointer plan over a [`Csr5Relative`](crate::formats::relative)
-/// gap stream. Shards split the reduction (the stream), so execution
-/// accumulates into per-shard partials merged in shard order.
+/// Skip-pointer plan over a delta-index stream — either the 5-bit
+/// [`Csr5Relative`](crate::formats::relative) gap stream (`escape` =
+/// its `MAX_GAP`, 31) or the 4-bit [`DcsrIndex`](crate::formats::dcsr)
+/// stream (`escape` = 15). The walk is identical: an entry equal to
+/// `escape` advances the cursor `escape` positions without placing a
+/// weight; anything else advances `entry + 1` and places one. Shards
+/// split the reduction (the stream), so execution accumulates into
+/// per-shard partials merged in shard order.
 pub(crate) struct RelativePlan {
     pub(crate) shards: Vec<RelShard>,
+    /// Escape/filler sentinel value of the stream's entry width.
+    pub(crate) escape: u32,
 }
 
 impl RelativePlan {
@@ -327,7 +333,7 @@ impl RelativePlan {
         let xt = xt_buf.as_deref().map(|s| (t, s));
         let res = if self.shards.len() <= 1 {
             if let Some(sh) = self.shards.first() {
-                decode_rel_shard(sh, entries, vals, n, x, xt, out.data_mut());
+                decode_rel_shard(sh, self.escape, entries, vals, n, x, xt, out.data_mut());
             }
             Ok(())
         } else {
@@ -338,7 +344,7 @@ impl RelativePlan {
                 // SAFETY: shard `s` exclusively owns partial range
                 // [s*bn, (s+1)*bn).
                 let part = unsafe { std::slice::from_raw_parts_mut(cell.at(s * bn), bn) };
-                decode_rel_shard(&self.shards[s], entries, vals, n, x, xt, part);
+                decode_rel_shard(&self.shards[s], self.escape, entries, vals, n, x, xt, part);
             });
             if run.is_ok() {
                 merge_partials(out.data_mut(), &partials);
@@ -361,8 +367,10 @@ impl RelativePlan {
 /// runs the vector axpy (`tensor::simd::rel_entry_axpy`) — same
 /// per-element mul+add in the same entry order, so the bytes match
 /// the scalar walk.
+#[allow(clippy::too_many_arguments)]
 fn decode_rel_shard(
     sh: &RelShard,
+    escape: u32,
     entries: &[u8],
     vals: &[f32],
     n: usize,
@@ -375,8 +383,8 @@ fn decode_rel_shard(
     let mut pending = 0u32;
     let mut vi = sh.v0;
     for &e in &entries[sh.e0..sh.e1] {
-        if e as u32 == MAX_GAP {
-            pending += MAX_GAP;
+        if e as u32 == escape {
+            pending += escape;
             continue;
         }
         pos += (pending + e as u32) as usize;

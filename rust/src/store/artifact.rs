@@ -12,8 +12,10 @@
 
 use crate::formats::binary::BinaryIndex;
 use crate::formats::csr::Csr16;
+use crate::formats::dcsr::DcsrIndex;
 use crate::formats::lowrank::LowRankIndex;
 use crate::formats::relative::Csr5Relative;
+use crate::formats::viterbi::ViterbiIndex;
 use crate::formats::StoredIndex;
 use crate::serve::engine::MlpParams;
 use crate::store::container::{Container, ContainerWriter, Rd, SectionKind, Wr};
@@ -325,6 +327,19 @@ fn encode_index(index: &StoredIndex) -> (SectionKind, Vec<u8>) {
             }
             (SectionKind::IndexTiled, w.into_bytes())
         }
+        StoredIndex::Viterbi(v) => {
+            w.u32(v.rows() as u32);
+            w.u32(v.cols() as u32);
+            w.raw(v.bytes());
+            (SectionKind::IndexViterbi, w.into_bytes())
+        }
+        StoredIndex::Dcsr(d) => {
+            w.u32(d.rows() as u32);
+            w.u32(d.cols() as u32);
+            w.u32(d.entry_count() as u32);
+            w.raw(&d.to_packed_bytes());
+            (SectionKind::IndexDcsr, w.into_bytes())
+        }
     }
 }
 
@@ -396,6 +411,22 @@ fn decode_index(kind: SectionKind, payload: &[u8]) -> Result<StoredIndex> {
             }
             StoredIndex::Tiled(TiledLowRankIndex::new(m, n, plan, tiles)?)
         }
+        SectionKind::IndexViterbi => {
+            let rows = r.u32()? as usize;
+            let cols = r.u32()? as usize;
+            check_dims(rows, cols)?;
+            let need = crate::formats::viterbi::index_bytes(rows, cols);
+            let bytes = r.bytes(need)?.to_vec();
+            StoredIndex::Viterbi(ViterbiIndex::from_bytes(rows, cols, bytes)?)
+        }
+        SectionKind::IndexDcsr => {
+            let rows = r.u32()? as usize;
+            let cols = r.u32()? as usize;
+            check_dims(rows, cols)?;
+            let entries = r.u32()? as usize;
+            let bytes = r.bytes((entries * 4).div_ceil(8))?;
+            StoredIndex::Dcsr(DcsrIndex::from_packed_bytes(rows, cols, entries, bytes)?)
+        }
         SectionKind::Params | SectionKind::Meta => {
             return Err(Error::store("not an index section"));
         }
@@ -435,7 +466,7 @@ mod tests {
     fn roundtrip_every_format() {
         let params = small_params(1);
         let (ip, iz) = factors(2, 20, 3, 30);
-        for name in ["dense", "csr", "relative", "lowrank"] {
+        for name in ["dense", "csr", "relative", "lowrank", "viterbi", "dcsr"] {
             let art = Artifact::pack_factors(params.clone(), name, &ip, &iz, "test").unwrap();
             let bytes = art.to_bytes();
             let back = Artifact::from_bytes(bytes).unwrap();
@@ -455,7 +486,7 @@ mod tests {
     fn index_section_size_is_index_bytes_plus_shape_header() {
         let params = small_params(3);
         let (ip, iz) = factors(4, 20, 4, 30);
-        for name in ["dense", "csr", "relative", "lowrank"] {
+        for name in ["dense", "csr", "relative", "lowrank", "viterbi", "dcsr"] {
             let art = Artifact::pack_factors(params.clone(), name, &ip, &iz, "t").unwrap();
             let c = Container::from_bytes(art.to_bytes()).unwrap();
             let kind = SectionKind::INDEX_KINDS
@@ -513,7 +544,14 @@ mod tests {
     fn rank_recorded_only_for_factor_storing_formats() {
         let params = small_params(13);
         let (ip, iz) = factors(14, 20, 5, 30);
-        for (name, want) in [("dense", 0), ("csr", 0), ("relative", 0), ("lowrank", 5)] {
+        for (name, want) in [
+            ("dense", 0),
+            ("csr", 0),
+            ("relative", 0),
+            ("lowrank", 5),
+            ("viterbi", 0),
+            ("dcsr", 0),
+        ] {
             let art = Artifact::pack_factors(params.clone(), name, &ip, &iz, "t").unwrap();
             assert_eq!(art.meta.rank, want, "{name}");
         }

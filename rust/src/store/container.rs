@@ -52,16 +52,22 @@ pub enum SectionKind {
     IndexLowRank,
     /// Tiled low-rank payload (plan + per-tile factors).
     IndexTiled,
+    /// Viterbi input bit-stream payload.
+    IndexViterbi,
+    /// dCSR 4-bit delta index payload.
+    IndexDcsr,
 }
 
 impl SectionKind {
     /// Every index-section kind, in wire-code order.
-    pub const INDEX_KINDS: [SectionKind; 5] = [
+    pub const INDEX_KINDS: [SectionKind; 7] = [
         SectionKind::IndexBinary,
         SectionKind::IndexCsr,
         SectionKind::IndexRelative,
         SectionKind::IndexLowRank,
         SectionKind::IndexTiled,
+        SectionKind::IndexViterbi,
+        SectionKind::IndexDcsr,
     ];
 
     /// Stable wire code.
@@ -74,6 +80,8 @@ impl SectionKind {
             SectionKind::IndexRelative => 18,
             SectionKind::IndexLowRank => 19,
             SectionKind::IndexTiled => 20,
+            SectionKind::IndexViterbi => 21,
+            SectionKind::IndexDcsr => 22,
         }
     }
 
@@ -87,6 +95,8 @@ impl SectionKind {
             18 => Some(SectionKind::IndexRelative),
             19 => Some(SectionKind::IndexLowRank),
             20 => Some(SectionKind::IndexTiled),
+            21 => Some(SectionKind::IndexViterbi),
+            22 => Some(SectionKind::IndexDcsr),
             _ => None,
         }
     }
@@ -101,6 +111,8 @@ impl SectionKind {
             SectionKind::IndexRelative => "index/relative",
             SectionKind::IndexLowRank => "index/lowrank",
             SectionKind::IndexTiled => "index/tiled",
+            SectionKind::IndexViterbi => "index/viterbi",
+            SectionKind::IndexDcsr => "index/dcsr",
         }
     }
 }

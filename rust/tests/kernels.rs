@@ -6,8 +6,12 @@
 //!
 //! Parallel determinism: each kernel's execution plan must produce
 //! **bit-identical** output at every thread count (fixed shard
-//! partition + fixed shard→merge order) — pinned here for all four
-//! factor formats plus the tiled kernel. `LRBI_THREADS` (used by the
+//! partition + fixed shard→merge order) — pinned here for all six
+//! factor formats plus the tiled kernel. Viterbi is *mask-shaping*
+//! (it serves the nearest convolutional-code-representable mask, not
+//! the exact `I_p ⊗ I_z` product), so equivalence tests compare it
+//! against a dense oracle over its own decoded mask; the other five
+//! formats are mask-exact. `LRBI_THREADS` (used by the
 //! CI smoke matrix and `scripts/verify.sh`) selects the pooled thread
 //! count for `threads_env_smoke`; `LRBI_SIMD` (`off`/`0`/`scalar`
 //! pins the scalar micro-kernels) is exercised the same way by the CI
@@ -33,6 +37,14 @@ fn reference(w: &Matrix, ip: &BitMatrix, iz: &BitMatrix, x: &Matrix) -> Matrix {
     x.matmul(&wm).unwrap()
 }
 
+/// Dense oracle over the mask the Viterbi encoder actually serves
+/// (the shaped approximation of `I_p ⊗ I_z`, not the exact product).
+fn viterbi_reference(w: &Matrix, ip: &BitMatrix, iz: &BitMatrix, x: &Matrix) -> Matrix {
+    let mask = lrbi::formats::viterbi::ViterbiIndex::shape_mask(&ip.bool_product(iz)).decode();
+    let wm = lrbi::pruning::prune_with_mask(w, &mask).unwrap();
+    x.matmul(&wm).unwrap()
+}
+
 fn close(a: f32, b: f32) -> bool {
     (a - b).abs() <= 1e-3 * (1.0 + b.abs())
 }
@@ -52,11 +64,13 @@ fn kernels_agree_with_dense_reference() {
         let w = Matrix::gaussian(m, n, 0.0, 1.0, &mut r2);
         let x = Matrix::gaussian(batch, m, 0.0, 1.0, &mut r2);
         let want = reference(&w, &ip, &iz, &x);
+        let want_vit = viterbi_reference(&w, &ip, &iz, &x);
         for fmt in KernelFormat::ALL {
             let kernel = build_kernel(fmt, &w, &ip, &iz, None).unwrap();
             let got = kernel.spmm(&x).unwrap();
             assert_eq!((got.rows(), got.cols()), (batch, n), "{}", fmt.name());
-            for (a, b) in got.data().iter().zip(want.data()) {
+            let oracle = if fmt == KernelFormat::Viterbi { &want_vit } else { &want };
+            for (a, b) in got.data().iter().zip(oracle.data()) {
                 assert!(
                     close(*a, *b),
                     "{} at m={m} n={n} k={k}: {a} vs {b}",
@@ -82,10 +96,15 @@ fn kernels_agree_on_degenerate_masks() {
     ];
     for (ip, iz) in &cases {
         let want = reference(&w, ip, iz, &x);
+        // The all-zero mask is exactly Viterbi-representable (the
+        // all-zero input stream emits it); the all-ones mask is not,
+        // so Viterbi compares against its own shaped mask instead.
+        let want_vit = viterbi_reference(&w, ip, iz, &x);
         for fmt in KernelFormat::ALL {
             let kernel = build_kernel(fmt, &w, ip, iz, None).unwrap();
             let got = kernel.spmm(&x).unwrap();
-            for (a, b) in got.data().iter().zip(want.data()) {
+            let oracle = if fmt == KernelFormat::Viterbi { &want_vit } else { &want };
+            for (a, b) in got.data().iter().zip(oracle.data()) {
                 assert!(close(*a, *b), "{}: {a} vs {b}", fmt.name());
             }
         }
@@ -125,7 +144,7 @@ fn parallel_spmm_bit_identical_across_thread_counts() {
         let iz = BitMatrix::from_fn(k, n, |_, _| r2.bernoulli(dz));
         let w = Matrix::gaussian(m, n, 0.0, 1.0, &mut r2);
         let x = Matrix::gaussian(batch, m, 0.0, 1.0, &mut r2);
-        // all four factor formats
+        // all six factor formats
         for fmt in KernelFormat::ALL {
             let base = build_kernel(fmt, &w, &ip, &iz, None)
                 .unwrap()
@@ -160,7 +179,7 @@ fn parallel_spmm_bit_identical_across_thread_counts() {
     });
 }
 
-/// SIMD/scalar bit-identity: all five kernels × threads {1, 4} must
+/// SIMD/scalar bit-identity: all seven kernels × threads {1, 4} must
 /// produce byte-identical spmm output with the vector micro-kernels
 /// dispatched and with the scalar tier pinned. `force_scalar` is a
 /// process-global toggle and this suite is its only writer; because
@@ -266,6 +285,19 @@ fn full_serving_logits_identical_across_formats() {
     for fmt in KernelFormat::ALL {
         let mut backend = NativeBackend::with_format(params.clone(), fmt, &ip, &iz).unwrap();
         let got = backend.predict(&x).unwrap();
+        if fmt == KernelFormat::Viterbi {
+            // Mask-shaping format: serve logits must match a dense
+            // backend over the same shaped mask, not the exact-mask
+            // baseline the other formats share.
+            let mask =
+                lrbi::formats::viterbi::ViterbiIndex::shape_mask(&ip.bool_product(&iz)).decode();
+            let mut shaped = NativeBackend::with_mask(params.clone(), &mask).unwrap();
+            let base = shaped.predict(&x).unwrap();
+            for (a, b) in got.data().iter().zip(base.data()) {
+                assert!(close(*a, *b), "viterbi vs shaped-mask oracle: {a} vs {b}");
+            }
+            continue;
+        }
         match &want {
             None => want = Some(got),
             Some(base) => {

@@ -34,8 +34,11 @@ fn geometry_factors(seed: u64) -> (BitMatrix, BitMatrix) {
 
 /// The PR's acceptance criterion: `pack` → `serve --artifact` logits
 /// must be bit-identical to serving the in-memory compression, for
-/// all four kernel formats; and the on-disk index section must cost
-/// `index_bytes()` plus only a fixed shape header.
+/// all six kernel formats; and the on-disk index section must cost
+/// `index_bytes()` plus only a fixed shape header. Viterbi joins this
+/// loop because both construction paths shape the same mask through
+/// the same deterministic encoder — the stored stream and the
+/// factor-built stream are byte-identical.
 #[test]
 fn packed_artifact_serves_bit_identical_logits_all_formats() {
     let dir = tmp("formats");
@@ -48,6 +51,8 @@ fn packed_artifact_serves_bit_identical_logits_all_formats() {
         (KernelFormat::Csr, "csr"),
         (KernelFormat::Relative, "relative"),
         (KernelFormat::LowRankFused, "lowrank"),
+        (KernelFormat::Viterbi, "viterbi"),
+        (KernelFormat::Dcsr, "dcsr"),
     ] {
         // in-memory serving path
         let mut mem = NativeBackend::with_format(params.clone(), fmt, &ip, &iz).unwrap();
@@ -141,7 +146,7 @@ fn property_pack_load_mask_roundtrip() {
         let mut r2 = Rng::new(rng.next_u64());
         let ip = BitMatrix::from_fn(m, k, |_, _| r2.bernoulli(d));
         let iz = BitMatrix::from_fn(k, n, |_, _| r2.bernoulli(d));
-        for name in ["dense", "csr", "relative", "lowrank"] {
+        for name in ["dense", "csr", "relative", "lowrank", "viterbi", "dcsr"] {
             let stored = StoredIndex::from_factors(name, &ip, &iz).unwrap();
             let want = stored.decode_mask().unwrap();
             // serialize the index through a full container round-trip
@@ -175,45 +180,55 @@ fn tiny_params(m: usize, n: usize, rng: &mut Rng) -> MlpParams {
 }
 
 fn sample_artifact_bytes() -> Vec<u8> {
+    sample_artifact_bytes_for("lowrank")
+}
+
+fn sample_artifact_bytes_for(format: &str) -> Vec<u8> {
     let mut rng = Rng::new(71);
     let params = tiny_params(24, 36, &mut rng);
     let ip = BitMatrix::from_fn(24, 4, |_, _| rng.bernoulli(0.3));
     let iz = BitMatrix::from_fn(4, 36, |_, _| rng.bernoulli(0.3));
-    Artifact::pack_factors(params, "lowrank", &ip, &iz, "corruption")
+    Artifact::pack_factors(params, format, &ip, &iz, "corruption")
         .unwrap()
         .to_bytes()
 }
 
 /// Corruption must always produce a typed `Error::Store` — truncated
 /// files, flipped payload bytes, bad magic, unsupported versions —
-/// and must never panic.
+/// and must never panic. The truncation/flip sweep runs over the
+/// low-rank sample plus the two stream-decoded formats (Viterbi input
+/// bits, dCSR nibbles), whose decoders walk variable-length payloads
+/// and so have the most to prove about bounds handling.
 #[test]
 fn corruption_yields_typed_errors_never_panics() {
+    for format in ["lowrank", "viterbi", "dcsr"] {
+        let bytes = sample_artifact_bytes_for(format);
+        assert!(Artifact::from_bytes(bytes.clone()).is_ok(), "{format}");
+
+        // truncation at every prefix length
+        for cut in (0..bytes.len()).step_by(7) {
+            match Artifact::from_bytes(bytes[..cut].to_vec()) {
+                Err(Error::Store(_)) => {}
+                other => panic!("{format} cut at {cut}: expected Error::Store, got {other:?}"),
+            }
+        }
+
+        // single-byte flips anywhere in the file
+        for i in (0..bytes.len()).step_by(3) {
+            let mut b = bytes.clone();
+            b[i] ^= 0x10;
+            match Artifact::from_bytes(b) {
+                // flips in header/table/payload are all caught...
+                Err(Error::Store(_)) => {}
+                // ...except a flip that only changes provenance text etc.
+                // is impossible: every payload byte is CRC-covered, and
+                // table/header bytes fail structural validation. A flip
+                // that produced Ok would be a checksum hole.
+                other => panic!("{format} flip at {i}: expected Error::Store, got {other:?}"),
+            }
+        }
+    }
     let bytes = sample_artifact_bytes();
-    assert!(Artifact::from_bytes(bytes.clone()).is_ok());
-
-    // truncation at every prefix length
-    for cut in (0..bytes.len()).step_by(7) {
-        match Artifact::from_bytes(bytes[..cut].to_vec()) {
-            Err(Error::Store(_)) => {}
-            other => panic!("cut at {cut}: expected Error::Store, got {other:?}"),
-        }
-    }
-
-    // single-byte flips anywhere in the file
-    for i in (0..bytes.len()).step_by(3) {
-        let mut b = bytes.clone();
-        b[i] ^= 0x10;
-        match Artifact::from_bytes(b) {
-            // flips in header/table/payload are all caught...
-            Err(Error::Store(_)) => {}
-            // ...except a flip that only changes provenance text etc.
-            // is impossible: every payload byte is CRC-covered, and
-            // table/header bytes fail structural validation. A flip
-            // that produced Ok would be a checksum hole.
-            other => panic!("flip at {i}: expected Error::Store, got {other:?}"),
-        }
-    }
 
     // bad magic
     let mut b = bytes.clone();

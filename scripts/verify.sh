@@ -11,15 +11,26 @@ cargo build --release
 echo "== cargo test -q"
 cargo test -q
 
-echo "== spmm determinism suite (thread matrix: 1 and 4)"
+echo "== spmm determinism suite (thread matrix: 1 and 4; all 7 kernel formats)"
 for t in 1 4; do
   LRBI_THREADS="$t" cargo test -q --test kernels
 done
 
-echo "== spmm SIMD matrix (dispatched and LRBI_SIMD=off)"
+echo "== spmm SIMD matrix (dispatched and LRBI_SIMD=off; all 7 kernel formats)"
 for s in on off; do
   LRBI_SIMD="$s" cargo test -q --test kernels
 done
+
+echo "== pack/inspect smoke over every storable format"
+smoke_dir="$(mktemp -d)"
+trap 'rm -rf "$smoke_dir"' EXIT
+for f in dense csr relative lowrank viterbi dcsr; do
+  ./target/release/lrbi pack --format "$f" --out "$smoke_dir/$f.lrbi" --rank 8 --sparsity 0.9 >/dev/null
+  ./target/release/lrbi inspect --artifact "$smoke_dir/$f.lrbi" >/dev/null
+done
+# tiled packs via --tiles regardless of --format
+./target/release/lrbi pack --format lowrank --tiles 2 --out "$smoke_dir/tiled.lrbi" --rank 8 --sparsity 0.9 >/dev/null
+./target/release/lrbi inspect --artifact "$smoke_dir/tiled.lrbi" >/dev/null
 
 echo "== cargo doc --no-deps (warnings are errors)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
