@@ -82,7 +82,7 @@ fn run_load(
     all
 }
 
-fn percentiles_us(lat_ns: &mut [f64]) -> (f64, f64, f64) {
+fn percentiles_us(lat_ns: &[f64]) -> (f64, f64, f64) {
     (
         percentile(lat_ns, 0.50) / 1e3,
         percentile(lat_ns, 0.95) / 1e3,
@@ -108,9 +108,9 @@ fn main() {
         for &clients in client_sweep {
             let per_client = (total_requests / clients).max(1);
             let t0 = Instant::now();
-            let mut lat = run_load(addr, clients, per_client, g.input_dim);
+            let lat = run_load(addr, clients, per_client, g.input_dim);
             let wall = t0.elapsed().as_secs_f64();
-            let (p50, p95, p99) = percentiles_us(&mut lat);
+            let (p50, p95, p99) = percentiles_us(&lat);
             println!(
                 "remote {addr}: {clients} clients -> {:.0} req/s, p50 {:.0}us p99 {:.0}us",
                 lat.len() as f64 / wall,
@@ -175,12 +175,12 @@ fn main() {
 
                     let per_client = (total_requests / clients).max(1);
                     let t0 = Instant::now();
-                    let mut lat = run_load(addr, clients, per_client, g.input_dim);
+                    let lat = run_load(addr, clients, per_client, g.input_dim);
                     let wall = t0.elapsed().as_secs_f64();
                     handle.shutdown();
                     runner.join().expect("server thread").expect("server run");
 
-                    let (p50, p95, p99) = percentiles_us(&mut lat);
+                    let (p50, p95, p99) = percentiles_us(&lat);
                     let snap = metrics.snapshot();
                     let flushes = snap.batch_flush_count - warm.batch_flush_count;
                     let mean_flush = if flushes == 0 {

@@ -43,11 +43,7 @@ fn drive(engine: &ServingEngine, clients: usize, per_client: usize) -> (f64, f64
     }
     let wall = t0.elapsed().as_secs_f64();
     let total = (clients * per_client) as f64;
-    (
-        total / wall,
-        percentile(&mut lat.clone(), 0.5),
-        percentile(&mut lat, 0.99),
-    )
+    (total / wall, percentile(&lat, 0.5), percentile(&lat, 0.99))
 }
 
 fn main() {

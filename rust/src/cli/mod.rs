@@ -133,6 +133,7 @@ fn dispatch<I: IntoIterator<Item = String>>(argv: I) -> Result<()> {
         "compress" => cmd_compress(&args),
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "top" => cmd_top(&args),
         "pack" => cmd_pack(&args),
         "inspect" => cmd_inspect(&args),
         "report" => cmd_report(&args),
@@ -169,7 +170,13 @@ fn print_usage() {
          \x20            --registry dir [--swap name]  serve registry variants\n\
          \x20            --listen HOST:PORT   speak the wire protocol\n\
          \x20            --max-conns 64  --max-queue 256   admission control\n\
-         \x20            (ops guide: docs/SERVING.md, wire spec: docs/PROTOCOL.md)\n\
+         \x20            --metrics-addr HOST:PORT   Prometheus text scrape endpoint\n\
+         \x20            --connect HOST:PORT [--requests N --rows R --shutdown]\n\
+         \x20            \x20  drive INFER traffic at a running server instead\n\
+         \x20            (ops guide: docs/SERVING.md, wire spec: docs/PROTOCOL.md,\n\
+         \x20             telemetry: docs/OBSERVABILITY.md)\n\
+         \x20 top        live per-stage/per-kernel latency table from a server\n\
+         \x20            --addr 127.0.0.1:4000  --interval-ms 1000  --iters 0\n\
          \x20 pack       package a compressed model as a .lrbi artifact\n\
          \x20            --out model.lrbi | --registry dir [--name v1]\n\
          \x20            --format dense|csr|relative|lowrank|viterbi|dcsr  --tiles 1\n\
@@ -311,6 +318,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(addr) = args.flags.get("listen") {
         return serve_listen(args, addr);
     }
+    if let Some(addr) = args.flags.get("connect") {
+        return serve_connect(args, addr);
+    }
     if let Some(dir) = args.flags.get("registry") {
         return serve_registry(args, dir);
     }
@@ -442,6 +452,19 @@ fn serve_listen(args: &Args, addr: &str) -> Result<()> {
     let keys = hub.keys();
     let default_key = hub.default_key().to_string();
     let server = Server::bind(addr, std::sync::Arc::new(hub), &opts)?;
+    // Bound for the server's whole lifetime; dropping it after run()
+    // returns joins the scrape thread.
+    let metrics_server = match args.flags.get("metrics-addr") {
+        Some(maddr) => {
+            let ms = crate::serve::metrics_http::MetricsServer::bind(
+                maddr,
+                std::sync::Arc::clone(&metrics),
+            )?;
+            println!("metrics on http://{} (Prometheus text, docs/OBSERVABILITY.md)", ms.local_addr());
+            Some(ms)
+        }
+        None => None,
+    };
     println!(
         "listening on {} — {} model(s) {:?}, default '{default_key}', {} thread(s), \
          max-conns {}, max-queue {}",
@@ -454,6 +477,7 @@ fn serve_listen(args: &Args, addr: &str) -> Result<()> {
     );
     println!("send a SHUTDOWN frame to stop (see docs/PROTOCOL.md)");
     server.run()?;
+    drop(metrics_server);
     let snap = metrics.snapshot();
     println!(
         "served {} wire requests over {} connections ({} rejected at accept, \
@@ -465,6 +489,115 @@ fn serve_listen(args: &Args, addr: &str) -> Result<()> {
         snap.net_protocol_errors
     );
     Ok(())
+}
+
+/// `lrbi serve --connect HOST:PORT`: drive synthetic INFER traffic at
+/// a running `--listen` server (the smoke-test / demo client).
+/// `--requests N` frames of `--rows R` each against `--model KEY`
+/// ("" = server default); `--shutdown` sends a SHUTDOWN frame after
+/// the traffic (usable alone with `--requests 0`).
+fn serve_connect(args: &Args, addr: &str) -> Result<()> {
+    use crate::serve::protocol::RowBatch;
+    use crate::serve::server::NetClient;
+    let requests: usize = args.get("requests", 64)?;
+    let rows: usize = args.get("rows", 4)?;
+    let dim: usize = args.get("dim", crate::runtime::artifacts::GEOMETRY.input_dim)?;
+    let key = args.get_str("model", "");
+    let mut client = NetClient::connect(addr)?;
+    let mut rng = crate::util::rng::Rng::new(23);
+    let t0 = Instant::now();
+    for _ in 0..requests {
+        let data: Vec<f32> = (0..rows * dim).map(|_| rng.next_f32()).collect();
+        let batch = RowBatch::new(rows, dim, data)?;
+        client.infer(&key, batch)?;
+    }
+    let dt = t0.elapsed();
+    if requests > 0 {
+        println!(
+            "sent {requests} INFER frames ({rows} row(s) each) to {addr} in {:.3}s ({:.0} req/s)",
+            dt.as_secs_f64(),
+            requests as f64 / dt.as_secs_f64().max(1e-9)
+        );
+    }
+    if args.flags.contains_key("shutdown") {
+        println!("{}", client.shutdown_server()?);
+    }
+    Ok(())
+}
+
+/// Humanize a nanosecond reading for the `lrbi top` table.
+fn fmt_ns(ns: u64) -> String {
+    match ns {
+        0..=999 => format!("{ns}ns"),
+        1_000..=999_999 => format!("{:.1}us", ns as f64 / 1e3),
+        1_000_000..=999_999_999 => format!("{:.2}ms", ns as f64 / 1e6),
+        _ => format!("{:.2}s", ns as f64 / 1e9),
+    }
+}
+
+/// Render one `lrbi top` refresh: headline counters, then every
+/// histogram series as a `count / mean / p50 / p95 / p99` row.
+fn render_top(counters: &[(String, u64)], hists: &[crate::serve::protocol::HistSummary]) -> String {
+    let mut out = String::new();
+    let find = |name: &str| {
+        counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(0)
+    };
+    out.push_str(&format!(
+        "requests={} batches={} wire-requests={} overloaded={} hot-swaps={}\n\n",
+        find("requests"),
+        find("batches"),
+        find("net_requests"),
+        find("net_rejected_overload"),
+        find("hot_swaps")
+    ));
+    out.push_str(&format!(
+        "{:<34} {:>10} {:>9} {:>9} {:>9} {:>9}\n",
+        "SERIES", "COUNT", "MEAN", "P50", "P95", "P99"
+    ));
+    for h in hists {
+        let series = if h.labels.is_empty() {
+            h.name.clone()
+        } else {
+            format!("{}{{{}}}", h.name, h.labels)
+        };
+        let mean = if h.count > 0 { h.sum / h.count } else { 0 };
+        out.push_str(&format!(
+            "{:<34} {:>10} {:>9} {:>9} {:>9} {:>9}\n",
+            series,
+            h.count,
+            fmt_ns(mean),
+            fmt_ns(h.p50),
+            fmt_ns(h.p95),
+            fmt_ns(h.p99)
+        ));
+    }
+    out
+}
+
+/// `lrbi top`: poll a running server's STATS2 frame and render a live
+/// per-stage / per-kernel latency table (`--addr`, `--interval-ms`;
+/// `--iters N` stops after N refreshes, 0 = until interrupted).
+fn cmd_top(args: &Args) -> Result<()> {
+    use crate::serve::server::NetClient;
+    let addr = args.get_str("addr", "127.0.0.1:4000");
+    let interval = std::time::Duration::from_millis(args.get("interval-ms", 1000u64)?);
+    let iters: usize = args.get("iters", 0)?;
+    let mut client = NetClient::connect(&addr)?;
+    let mut shown = 0usize;
+    loop {
+        let (counters, hists) = client.stats_v2()?;
+        if iters != 1 {
+            // live mode repaints in place; a single shot stays greppable
+            print!("\x1b[2J\x1b[H");
+        }
+        println!("lrbi top — {addr}\n");
+        print!("{}", render_top(&counters, &hists));
+        shown += 1;
+        if iters > 0 && shown >= iters {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
 }
 
 /// Serve every artifact in a registry round-robin through a
@@ -753,5 +886,46 @@ mod tests {
         assert_eq!(manip_by_number(1).unwrap(), ManipMethod::None);
         assert_eq!(manip_by_number(3).unwrap(), ManipMethod::AmplifyAboveThreshold);
         assert!(manip_by_number(0).is_err());
+    }
+
+    #[test]
+    fn fmt_ns_picks_readable_units() {
+        assert_eq!(fmt_ns(0), "0ns");
+        assert_eq!(fmt_ns(999), "999ns");
+        assert_eq!(fmt_ns(1_500), "1.5us");
+        assert_eq!(fmt_ns(2_340_000), "2.34ms");
+        assert_eq!(fmt_ns(1_500_000_000), "1.50s");
+    }
+
+    #[test]
+    fn top_table_renders_counters_and_series() {
+        use crate::serve::protocol::HistSummary;
+        let counters = vec![("requests".to_string(), 42), ("batches".to_string(), 7)];
+        let hists = vec![
+            HistSummary {
+                name: "stage_ns".into(),
+                labels: "stage=spmm".into(),
+                count: 10,
+                sum: 10_000,
+                p50: 900,
+                p95: 1_900,
+                p99: 2_000,
+            },
+            HistSummary {
+                name: "spmm_shard_ns".into(),
+                labels: String::new(),
+                count: 0,
+                sum: 0,
+                p50: 0,
+                p95: 0,
+                p99: 0,
+            },
+        ];
+        let table = render_top(&counters, &hists);
+        assert!(table.contains("requests=42 batches=7"), "{table}");
+        assert!(table.contains("stage_ns{stage=spmm}"), "{table}");
+        assert!(table.contains("1.0us"), "mean of 10_000/10: {table}");
+        // unlabeled series render bare, and zero-count rows don't divide
+        assert!(table.contains("spmm_shard_ns "), "{table}");
     }
 }

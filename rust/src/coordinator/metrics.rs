@@ -1,13 +1,18 @@
 //! Lightweight metrics: atomic counters + wall-time accounting,
-//! snapshotted by the CLI/report layer.
+//! snapshotted by the CLI/report layer, plus the embedded
+//! [`Telemetry`] hub of labeled latency histograms
+//! (`coordinator::telemetry`).
 
+use crate::coordinator::telemetry::Telemetry;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
-/// Kernel names in `spmm_kernel_ns` slot order. Slot `i` of
-/// [`Metrics::spmm_kernel_ns`] (and of the snapshot's array)
-/// accumulates nanoseconds spent inside `spmm` of the kernel named
-/// `SPMM_KERNEL_NAMES[i]` — pinned by a test in `serve::kernels`.
+/// Kernel names in `spmm_kernel_ns` slot order. Slot `i` of the
+/// snapshot's array accumulates nanoseconds spent inside `spmm` of
+/// the kernel named `SPMM_KERNEL_NAMES[i]` — pinned by a test in
+/// `serve::kernels`. These are also the label values of the
+/// `spmm_ns{kernel=...}` histogram series the totals are derived
+/// from.
 pub const SPMM_KERNEL_NAMES: [&str; 7] = [
     "dense", "csr", "relative", "lowrank", "tiled", "viterbi", "dcsr",
 ];
@@ -60,9 +65,12 @@ pub struct Metrics {
     /// Execution-plan shards run across all plan-based `spmm` calls
     /// (`ExecCtx::record_plan_spmm`).
     pub spmm_shards: AtomicU64,
-    /// Nanoseconds inside plan-based `spmm`, split per kernel — slot
-    /// order is [`SPMM_KERNEL_NAMES`].
-    pub spmm_kernel_ns: [AtomicU64; 7],
+    /// Labeled latency histograms (per-stage, per-kernel, per-shard,
+    /// per-model) — the `STATS` v2 / Prometheus exposition source.
+    /// Replaces the old hand-grown `spmm_kernel_ns: [AtomicU64; 7]`
+    /// array: per-kernel nanosecond totals are now derived from the
+    /// `spmm_ns{kernel=...}` series' exact sums.
+    pub telemetry: Telemetry,
     /// Dynamic-batcher flushes (batches handed to the executor).
     pub batch_flush_count: AtomicU64,
     /// Total requests across all flushed batches; together with
@@ -185,15 +193,7 @@ impl Metrics {
             artifact_load_ns: self.artifact_load_ns.load(Ordering::Relaxed),
             hot_swaps: self.hot_swaps.load(Ordering::Relaxed),
             spmm_shards: self.spmm_shards.load(Ordering::Relaxed),
-            spmm_kernel_ns: [
-                self.spmm_kernel_ns[0].load(Ordering::Relaxed),
-                self.spmm_kernel_ns[1].load(Ordering::Relaxed),
-                self.spmm_kernel_ns[2].load(Ordering::Relaxed),
-                self.spmm_kernel_ns[3].load(Ordering::Relaxed),
-                self.spmm_kernel_ns[4].load(Ordering::Relaxed),
-                self.spmm_kernel_ns[5].load(Ordering::Relaxed),
-                self.spmm_kernel_ns[6].load(Ordering::Relaxed),
-            ],
+            spmm_kernel_ns: self.telemetry.spmm_ns_totals(),
             batch_flush_count: self.batch_flush_count.load(Ordering::Relaxed),
             batch_size_sum: self.batch_size_sum.load(Ordering::Relaxed),
             net_conns_accepted: self.net_conns_accepted.load(Ordering::Relaxed),
@@ -222,9 +222,15 @@ impl Metrics {
 
     /// Record one sparse-kernel `spmm` with its wall time.
     pub fn record_spmm(&self, started: Instant) {
+        self.record_spmm_ns(started.elapsed().as_nanos() as u64);
+    }
+
+    /// Record one sparse-kernel `spmm` whose duration was already
+    /// measured (the engine measures once and feeds both this and the
+    /// per-stage histogram, so the two never disagree).
+    pub fn record_spmm_ns(&self, ns: u64) {
         self.kernel_spmms.fetch_add(1, Ordering::Relaxed);
-        self.kernel_spmm_ns
-            .fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.kernel_spmm_ns.fetch_add(ns, Ordering::Relaxed);
     }
 }
 
@@ -379,7 +385,7 @@ mod tests {
     fn spmm_plan_counters_snapshot() {
         let m = Metrics::new();
         m.spmm_shards.fetch_add(5, Ordering::Relaxed);
-        m.spmm_kernel_ns[2].fetch_add(1234, Ordering::Relaxed);
+        m.telemetry.record_spmm_kernel(2, 1234);
         let s = m.snapshot();
         assert_eq!(s.spmm_shards, 5);
         assert_eq!(s.spmm_kernel_ns, [0, 0, 1234, 0, 0, 0, 0]);
@@ -390,7 +396,7 @@ mod tests {
     fn named_counters_cover_every_field_with_unique_names() {
         let m = Metrics::new();
         m.net_requests.fetch_add(7, Ordering::Relaxed);
-        m.spmm_kernel_ns[4].fetch_add(99, Ordering::Relaxed);
+        m.telemetry.record_spmm_kernel(4, 99);
         let s = m.snapshot();
         let named = s.named_counters();
         // scalar fields + one entry per spmm kernel slot

@@ -10,8 +10,13 @@ pub mod jobs;
 pub mod metrics;
 pub mod pool;
 pub mod sweep;
+pub mod telemetry;
 
 pub use jobs::{CompressionJob, JobResult};
 pub use metrics::Metrics;
 pub use pool::{parallel_map, ExecCtx, WorkerPool};
+pub use telemetry::{
+    HistogramSnapshot, LatencyHistogram, MetricRegistry, SeriesSnapshot, Stage, StageNanos,
+    Telemetry, STAGE_NAMES,
+};
 pub use sweep::{compress_model, ModelCompressionReport, SweepOptions};

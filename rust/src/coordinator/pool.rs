@@ -6,7 +6,7 @@
 
 use crate::coordinator::metrics::Metrics;
 use crate::util::error::{Error, Result};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -180,6 +180,13 @@ pub struct ExecCtx {
     /// checked out by [`ExecCtx::take_scratch`] — the context-level
     /// half of the serving path's zero-allocation steady state.
     scratch: Mutex<Vec<Vec<f32>>>,
+    /// Nanoseconds spent merging reduction-shard partials since the
+    /// last [`ExecCtx::take_last_merge_ns`] — accumulated by
+    /// [`ExecCtx::record_merge`] from inside plan execution, drained
+    /// by the serving engine into the `merge` stage histogram (the
+    /// plans can't record the stage directly without double counting
+    /// when a batch runs several layers).
+    last_merge_ns: AtomicU64,
 }
 
 /// Cap on pooled scratch buffers per context: enough for every
@@ -190,7 +197,13 @@ const SCRATCH_POOL_CAP: usize = 8;
 impl ExecCtx {
     /// Single-threaded context (no pool): shards run inline, in order.
     pub fn single() -> Arc<ExecCtx> {
-        Arc::new(ExecCtx { threads: 1, pool: None, metrics: None, scratch: Mutex::new(Vec::new()) })
+        Arc::new(ExecCtx {
+            threads: 1,
+            pool: None,
+            metrics: None,
+            scratch: Mutex::new(Vec::new()),
+            last_merge_ns: AtomicU64::new(0),
+        })
     }
 
     /// Context with `threads` workers (clamped to ≥ 1; 1 means no
@@ -200,7 +213,13 @@ impl ExecCtx {
     pub fn new(threads: usize, metrics: Option<Arc<Metrics>>) -> Arc<ExecCtx> {
         let threads = threads.max(1);
         let pool = (threads > 1).then(|| WorkerPool::new(threads, threads * 4));
-        Arc::new(ExecCtx { threads, pool, metrics, scratch: Mutex::new(Vec::new()) })
+        Arc::new(ExecCtx {
+            threads,
+            pool,
+            metrics,
+            scratch: Mutex::new(Vec::new()),
+            last_merge_ns: AtomicU64::new(0),
+        })
     }
 
     /// Check out a zeroed `len`-element work buffer, reusing a pooled
@@ -282,9 +301,43 @@ impl ExecCtx {
     /// single-threaded (or when there is nothing to fan out), on the
     /// pool otherwise. Shard panics on the pool surface as
     /// [`Error::Coordinator`]; inline panics propagate normally.
+    ///
+    /// With metrics attached, each shard's wall time lands in the
+    /// `spmm_shard_ns` histogram, and multi-shard runs additionally
+    /// record the shard-imbalance gauge (`spmm_imbalance_pm`:
+    /// `max_shard_ns / mean_shard_ns` in per-mille, 1000 = balanced)
+    /// — the profiling signal the planned autotuner keys on. Timing
+    /// is atomics-only: no allocation, no change to how `f` runs, so
+    /// plan outputs stay bit-identical with telemetry on.
     pub fn run(&self, shards: usize, f: impl Fn(usize) + Sync) -> Result<()> {
+        let Some(m) = &self.metrics else {
+            return self.run_inner(shards, &f);
+        };
+        let max_ns = AtomicU64::new(0);
+        let sum_ns = AtomicU64::new(0);
+        let shard_hist = m.telemetry.shard();
+        let timed = |s: usize| {
+            let t0 = Instant::now();
+            f(s);
+            let ns = shard_hist.record_since(t0);
+            max_ns.fetch_max(ns, Ordering::Relaxed);
+            sum_ns.fetch_add(ns, Ordering::Relaxed);
+        };
+        let res = self.run_inner(shards, &timed);
+        let sum = sum_ns.load(Ordering::Relaxed);
+        if shards > 1 && sum > 0 {
+            // max/mean in per-mille; u128 keeps ns * shards * 1000
+            // from overflowing
+            let pm = max_ns.load(Ordering::Relaxed) as u128 * shards as u128 * 1000
+                / sum as u128;
+            m.telemetry.imbalance().record(pm as u64);
+        }
+        res
+    }
+
+    fn run_inner(&self, shards: usize, f: &(dyn Fn(usize) + Sync)) -> Result<()> {
         match &self.pool {
-            Some(pool) if shards > 1 => pool.run_indexed(shards, &f),
+            Some(pool) if shards > 1 => pool.run_indexed(shards, f),
             _ => {
                 for s in 0..shards {
                     f(s);
@@ -295,19 +348,31 @@ impl ExecCtx {
     }
 
     /// Record one plan-based spmm execution: `shards` into
-    /// `Metrics::spmm_shards`, elapsed time into the per-kernel slot
-    /// (see `Metrics::spmm_kernel_ns` for the slot ↔ kernel map).
-    /// No-op without attached metrics.
+    /// `Metrics::spmm_shards`, elapsed time into the per-kernel
+    /// `spmm_ns{kernel=...}` histogram (slot order is
+    /// `SPMM_KERNEL_NAMES`; out-of-range slots are ignored). No-op
+    /// without attached metrics.
     pub fn record_plan_spmm(&self, slot: usize, shards: u64, started: Instant) {
         if let Some(m) = &self.metrics {
-            m.spmm_shards.fetch_add(shards, std::sync::atomic::Ordering::Relaxed);
-            if let Some(c) = m.spmm_kernel_ns.get(slot) {
-                c.fetch_add(
-                    started.elapsed().as_nanos() as u64,
-                    std::sync::atomic::Ordering::Relaxed,
-                );
-            }
+            m.spmm_shards.fetch_add(shards, Ordering::Relaxed);
+            m.telemetry
+                .record_spmm_kernel(slot, started.elapsed().as_nanos() as u64);
         }
+    }
+
+    /// Accumulate partial-merge time from inside a plan execution
+    /// (reduction-sharded plans call this around `merge_partials`).
+    /// Drained by [`ExecCtx::take_last_merge_ns`].
+    pub fn record_merge(&self, started: Instant) {
+        self.last_merge_ns
+            .fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Drain the merge nanoseconds accumulated since the last call —
+    /// the serving engine takes this once per batch and records it as
+    /// the `merge` stage.
+    pub fn take_last_merge_ns(&self) -> u64 {
+        self.last_merge_ns.swap(0, Ordering::Relaxed)
     }
 }
 
@@ -525,5 +590,42 @@ mod tests {
         // out-of-range slot is ignored, shards still counted
         ctx.record_plan_spmm(99, 1, Instant::now());
         assert_eq!(metrics.snapshot().spmm_shards, 7);
+    }
+
+    #[test]
+    fn run_times_shards_and_records_imbalance() {
+        use crate::coordinator::telemetry::Stage;
+        let metrics = Arc::new(Metrics::new());
+        for ctx in [
+            ExecCtx::new(1, Some(Arc::clone(&metrics))),
+            ExecCtx::new(3, Some(Arc::clone(&metrics))),
+        ] {
+            ctx.run(5, |_| std::hint::black_box(())).unwrap();
+        }
+        let t = &metrics.telemetry;
+        assert_eq!(t.shard().count(), 10, "every shard of both runs timed");
+        assert_eq!(t.imbalance().count(), 2, "one gauge sample per multi-shard run");
+        // per-mille ratio max/mean is >= 1000 by construction (mean is
+        // exact — the quantiles are bucket midpoints)
+        assert!(t.imbalance().snapshot().mean() >= 1000.0);
+        // single-shard runs time the shard but skip the gauge
+        let before = t.imbalance().count();
+        ExecCtx::new(1, Some(Arc::clone(&metrics))).run(1, |_| {}).unwrap();
+        assert_eq!(t.imbalance().count(), before);
+        assert_eq!(t.stage(Stage::Merge).count(), 0, "run() itself never records stages");
+        // without metrics, run() stays untimed and works
+        ExecCtx::new(2, None).run(4, |_| {}).unwrap();
+        assert_eq!(t.shard().count(), 11);
+    }
+
+    #[test]
+    fn merge_ns_accumulates_then_drains() {
+        let ctx = ExecCtx::single();
+        assert_eq!(ctx.take_last_merge_ns(), 0);
+        ctx.record_merge(Instant::now());
+        ctx.record_merge(Instant::now());
+        let drained = ctx.take_last_merge_ns();
+        assert!(drained > 0, "two merges accumulated");
+        assert_eq!(ctx.take_last_merge_ns(), 0, "drain resets");
     }
 }

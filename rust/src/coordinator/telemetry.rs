@@ -1,0 +1,709 @@
+//! Lock-free serving telemetry: log-bucketed latency histograms, a
+//! name+label metric registry, and the per-stage trace vocabulary the
+//! serving stack records into (see `docs/OBSERVABILITY.md`).
+//!
+//! Design constraints, in priority order:
+//!
+//! 1. **Nothing on the hot path but atomics.** A histogram is a
+//!    preallocated `[AtomicU64; HIST_BUCKETS]`; recording a sample is
+//!    three relaxed `fetch_add`s. Handles to the histograms the
+//!    request path touches are resolved **once** at construction
+//!    ([`Telemetry::new`] pre-registers fixed arrays indexed by
+//!    [`Stage`] / kernel slot), so the registry's lock is never taken
+//!    while serving — the PR 5 zero-allocation steady-state proof
+//!    (`tests/serving.rs`) holds with telemetry on.
+//! 2. **Bounded error.** Buckets are logarithmic with
+//!    2^[`SUB_BITS`] = 8 sub-buckets per octave, so any reported
+//!    quantile is within 12.5% of the true sample — plenty for p50/
+//!    p95/p99 dashboards, at 496 buckets (≈4 KiB) per series.
+//! 3. **Mergeable.** Snapshots add bucket-wise
+//!    ([`HistogramSnapshot::merge`]), so per-worker histograms can be
+//!    combined without losing quantile fidelity — the property the
+//!    `STATS` v2 exposition relies on.
+
+use crate::coordinator::metrics::SPMM_KERNEL_NAMES;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Sub-bucket resolution: 2^3 = 8 logarithmic sub-buckets per octave,
+/// bounding a bucket's relative width at 1/8 = 12.5%.
+const SUB_BITS: u32 = 3;
+const SUB: u64 = 1 << SUB_BITS;
+
+/// Total buckets: values `0..8` get exact unit buckets, then 8 per
+/// octave for the remaining 61 octaves of `u64` — every nanosecond
+/// count from 0 to `u64::MAX` maps to exactly one bucket.
+pub const HIST_BUCKETS: usize = (SUB + (64 - SUB_BITS as u64 - 1) * SUB) as usize;
+
+/// Bucket index for a sample (total order preserving: `a <= b` ⇒
+/// `bucket_index(a) <= bucket_index(b)`).
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as u64; // >= SUB_BITS
+    let sub = (v >> (msb - SUB_BITS as u64)) & (SUB - 1);
+    (SUB + (msb - SUB_BITS as u64) * SUB + sub) as usize
+}
+
+/// Half-open value range `[lo, hi)` covered by bucket `idx` (the last
+/// bucket's `hi` saturates at `u64::MAX`).
+pub fn bucket_bounds(idx: usize) -> (u64, u64) {
+    assert!(idx < HIST_BUCKETS, "bucket {idx} out of range");
+    if (idx as u64) < SUB {
+        return (idx as u64, idx as u64 + 1);
+    }
+    let octave = (idx as u64 - SUB) / SUB;
+    let msb = octave + SUB_BITS as u64;
+    let sub = (idx as u64 - SUB) % SUB;
+    let width = 1u64 << (msb - SUB_BITS as u64);
+    let lo = (1u64 << msb) + sub * width;
+    let hi = lo.checked_add(width).unwrap_or(u64::MAX);
+    (lo, hi)
+}
+
+/// A fixed-size log-bucketed latency histogram. Recording is lock-free
+/// and allocation-free (three relaxed atomic adds); reading goes
+/// through [`LatencyHistogram::snapshot`].
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// A zeroed histogram.
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample (nanoseconds by convention, but any `u64`
+    /// magnitude works — the shard-imbalance gauge records per-mille).
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record the nanoseconds elapsed since `started`; returns them.
+    pub fn record_since(&self, started: Instant) -> u64 {
+        let ns = started.elapsed().as_nanos() as u64;
+        self.record(ns);
+        ns
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact sum of recorded samples (not bucket-quantized).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Copy out a point-in-time snapshot for quantile extraction.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl std::fmt::Debug for LatencyHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LatencyHistogram")
+            .field("count", &self.count())
+            .field("sum", &self.sum())
+            .finish_non_exhaustive()
+    }
+}
+
+/// A point-in-time copy of a [`LatencyHistogram`]: mergeable, with
+/// nearest-rank quantile extraction.
+#[derive(Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    buckets: [u64; HIST_BUCKETS],
+    /// Samples recorded.
+    pub count: u64,
+    /// Exact sum of recorded samples.
+    pub sum: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        HistogramSnapshot { buckets: [0; HIST_BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+impl HistogramSnapshot {
+    /// Add another snapshot bucket-wise: the result is exactly the
+    /// histogram of the union of both sample sets.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// Nearest-rank quantile (`q` in `[0, 1]`), reported as the
+    /// midpoint of the bucket holding the rank-selected sample — so
+    /// the result always lies within that bucket's bounds, i.e. within
+    /// 12.5% of the true sample. Returns 0 on an empty snapshot.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = crate::util::stats::nearest_rank(self.count as usize, q) as u64;
+        let mut cum = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                let (lo, hi) = bucket_bounds(idx);
+                return lo + (hi - lo) / 2;
+            }
+        }
+        // unreachable with count > 0; fall back to the top bucket
+        bucket_bounds(HIST_BUCKETS - 1).0
+    }
+
+    /// Mean of recorded samples (exact, from the un-quantized sum).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// The (p50, p95, p99) triple every exposition surface reports.
+    pub fn percentiles(&self) -> (u64, u64, u64) {
+        (self.quantile(0.50), self.quantile(0.95), self.quantile(0.99))
+    }
+
+    /// Count in bucket `idx` (bucket-scheme tests).
+    pub fn bucket(&self, idx: usize) -> u64 {
+        self.buckets[idx]
+    }
+}
+
+impl std::fmt::Debug for HistogramSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HistogramSnapshot")
+            .field("count", &self.count)
+            .field("sum", &self.sum)
+            .field("p50", &self.quantile(0.5))
+            .finish_non_exhaustive()
+    }
+}
+
+/// One registered series: a metric name, its label set, and the live
+/// histogram behind it.
+struct Series {
+    name: &'static str,
+    labels: Vec<(&'static str, String)>,
+    hist: Arc<LatencyHistogram>,
+}
+
+/// A name+label registry of latency histograms. Registration
+/// (`histogram`) takes a lock and is meant for startup / model
+/// install; hot paths hold the returned `Arc` and never touch the
+/// registry again.
+#[derive(Default)]
+pub struct MetricRegistry {
+    series: Mutex<Vec<Series>>,
+}
+
+impl MetricRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-create the histogram for `name` + `labels`. The same
+    /// (name, labels) pair always returns the same histogram, so
+    /// re-registration after a hot swap keeps accumulating into the
+    /// existing series.
+    pub fn histogram(
+        &self,
+        name: &'static str,
+        labels: &[(&'static str, &str)],
+    ) -> Arc<LatencyHistogram> {
+        let mut series = self.series.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(s) = series.iter().find(|s| {
+            s.name == name
+                && s.labels.len() == labels.len()
+                && s.labels.iter().zip(labels).all(|((k0, v0), (k1, v1))| k0 == k1 && v0 == v1)
+        }) {
+            return Arc::clone(&s.hist);
+        }
+        let hist = Arc::new(LatencyHistogram::new());
+        series.push(Series {
+            name,
+            labels: labels.iter().map(|(k, v)| (*k, v.to_string())).collect(),
+            hist: Arc::clone(&hist),
+        });
+        hist
+    }
+
+    /// Snapshot every registered series, in registration order.
+    pub fn export(&self) -> Vec<SeriesSnapshot> {
+        let series = self.series.lock().unwrap_or_else(|p| p.into_inner());
+        series
+            .iter()
+            .map(|s| SeriesSnapshot {
+                name: s.name,
+                labels: s.labels.clone(),
+                hist: s.hist.snapshot(),
+            })
+            .collect()
+    }
+}
+
+impl std::fmt::Debug for MetricRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let n = self.series.lock().map(|s| s.len()).unwrap_or(0);
+        f.debug_struct("MetricRegistry").field("series", &n).finish()
+    }
+}
+
+/// A snapshot of one registered series (the `STATS` v2 / Prometheus
+/// exposition unit).
+#[derive(Debug, Clone)]
+pub struct SeriesSnapshot {
+    /// Metric name (e.g. `stage_ns`).
+    pub name: &'static str,
+    /// Label pairs (e.g. `[("stage", "decode")]`).
+    pub labels: Vec<(&'static str, String)>,
+    /// The histogram's state at export time.
+    pub hist: HistogramSnapshot,
+}
+
+impl SeriesSnapshot {
+    /// Labels as a stable `k=v,k=v` string ("" when unlabeled) — the
+    /// wire form `STATS` v2 carries.
+    pub fn label_string(&self) -> String {
+        self.labels
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// `name{k=v,...}` (or the bare name), the registry's uniqueness
+    /// key rendered for display.
+    pub fn full_name(&self) -> String {
+        let labels = self.label_string();
+        if labels.is_empty() {
+            self.name.to_string()
+        } else {
+            format!("{}{{{labels}}}", self.name)
+        }
+    }
+}
+
+/// The traced request stages, in pipeline order. Values index the
+/// pre-registered `stage_ns` histogram array, so recording a stage is
+/// a single array index away from the atomics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Wire-frame decode (`protocol::read_frame_timed`, CPU time of
+    /// the payload parse — not the socket wait).
+    Decode = 0,
+    /// Submit → executor dequeue (includes batch-formation wait; see
+    /// `docs/OBSERVABILITY.md` for the overlap note).
+    Queue = 1,
+    /// Batch-formation window: first request of the flush received →
+    /// flush handed to the executor.
+    Batch = 2,
+    /// The sparse kernel's `spmm` inside `predict` (also split
+    /// per-kernel under `spmm_ns{kernel=...}`).
+    Spmm = 3,
+    /// Ordered merge of reduction-shard partials (zero for
+    /// output-disjoint plans, which have no merge step).
+    Merge = 4,
+    /// Reply encode + socket write.
+    Write = 5,
+}
+
+/// Stage names in [`Stage`] discriminant order (label values of the
+/// `stage_ns` series).
+pub const STAGE_NAMES: [&str; 6] = ["decode", "queue", "batch", "spmm", "merge", "write"];
+
+impl Stage {
+    /// Every stage, in pipeline order.
+    pub const ALL: [Stage; 6] =
+        [Stage::Decode, Stage::Queue, Stage::Batch, Stage::Spmm, Stage::Merge, Stage::Write];
+
+    /// Stable lowercase name (the `stage` label value).
+    pub fn name(self) -> &'static str {
+        STAGE_NAMES[self as usize]
+    }
+}
+
+/// Per-request stage timings in nanoseconds — assembled along the
+/// request path (server fills decode/write, the engine executor fills
+/// queue/batch/spmm/merge) and carried back with each reply for the
+/// slow-request log.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageNanos {
+    /// Wire-frame decode.
+    pub decode: u64,
+    /// Submit → executor dequeue.
+    pub queue: u64,
+    /// Batch-formation window of the flush that carried this request.
+    pub batch: u64,
+    /// Sparse-kernel `spmm` of that flush.
+    pub spmm: u64,
+    /// Partial-merge time of that flush (0 for merge-free plans).
+    pub merge: u64,
+    /// Reply encode + socket write.
+    pub write: u64,
+}
+
+impl StageNanos {
+    /// Values in [`Stage::ALL`] order.
+    pub fn as_array(&self) -> [u64; 6] {
+        [self.decode, self.queue, self.batch, self.spmm, self.merge, self.write]
+    }
+
+    /// Per-stage maximum with `other` — how a multi-row wire request
+    /// aggregates its rows' timings (the slowest row bounds the
+    /// request).
+    pub fn max_with(&mut self, other: &StageNanos) {
+        self.decode = self.decode.max(other.decode);
+        self.queue = self.queue.max(other.queue);
+        self.batch = self.batch.max(other.batch);
+        self.spmm = self.spmm.max(other.spmm);
+        self.merge = self.merge.max(other.merge);
+        self.write = self.write.max(other.write);
+    }
+
+    /// `stage=ns` breakdown for the slow-request log line.
+    pub fn breakdown(&self) -> String {
+        STAGE_NAMES
+            .iter()
+            .zip(self.as_array())
+            .map(|(name, ns)| format!("{name}={ns}ns"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// The serving stack's telemetry hub, embedded in
+/// [`Metrics`](crate::coordinator::metrics::Metrics). Pre-registers
+/// every histogram the hot path records into as fixed arrays, so
+/// request-path lookups are array indexing — never a registry lock.
+pub struct Telemetry {
+    registry: MetricRegistry,
+    stages: [Arc<LatencyHistogram>; STAGE_NAMES.len()],
+    spmm_kernels: [Arc<LatencyHistogram>; SPMM_KERNEL_NAMES.len()],
+    shard: Arc<LatencyHistogram>,
+    imbalance: Arc<LatencyHistogram>,
+    next_trace: AtomicU64,
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Telemetry {
+    /// Build the hub with its fixed series pre-registered.
+    pub fn new() -> Self {
+        let registry = MetricRegistry::new();
+        let stages =
+            std::array::from_fn(|i| registry.histogram("stage_ns", &[("stage", STAGE_NAMES[i])]));
+        let spmm_kernels = std::array::from_fn(|i| {
+            registry.histogram("spmm_ns", &[("kernel", SPMM_KERNEL_NAMES[i])])
+        });
+        let shard = registry.histogram("spmm_shard_ns", &[]);
+        let imbalance = registry.histogram("spmm_imbalance_pm", &[]);
+        Telemetry {
+            registry,
+            stages,
+            spmm_kernels,
+            shard,
+            imbalance,
+            next_trace: AtomicU64::new(1),
+        }
+    }
+
+    /// The histogram behind a pipeline stage.
+    pub fn stage(&self, s: Stage) -> &LatencyHistogram {
+        &self.stages[s as usize]
+    }
+
+    /// Record `ns` into a stage's histogram.
+    pub fn record_stage(&self, s: Stage, ns: u64) {
+        self.stages[s as usize].record(ns);
+    }
+
+    /// Record `ns` into the per-kernel `spmm_ns` series for `slot`
+    /// ([`SPMM_KERNEL_NAMES`] order); out-of-range slots are ignored,
+    /// matching the old array-counter semantics.
+    pub fn record_spmm_kernel(&self, slot: usize, ns: u64) {
+        if let Some(h) = self.spmm_kernels.get(slot) {
+            h.record(ns);
+        }
+    }
+
+    /// The per-kernel `spmm_ns` histogram for `slot`, if in range.
+    pub fn spmm_kernel(&self, slot: usize) -> Option<&LatencyHistogram> {
+        self.spmm_kernels.get(slot).map(|h| h.as_ref())
+    }
+
+    /// Exact per-kernel nanosecond totals in slot order — the source
+    /// of the legacy `spmm_ns_*` counters
+    /// ([`MetricsSnapshot::spmm_kernel_ns`]
+    /// (crate::coordinator::metrics::MetricsSnapshot::spmm_kernel_ns)
+    /// is derived from these sums, so the v1 `STATS` frame is
+    /// unchanged).
+    pub fn spmm_ns_totals(&self) -> [u64; SPMM_KERNEL_NAMES.len()] {
+        std::array::from_fn(|i| self.spmm_kernels[i].sum())
+    }
+
+    /// Per-shard `spmm` execution-time histogram (`spmm_shard_ns`).
+    pub fn shard(&self) -> &LatencyHistogram {
+        &self.shard
+    }
+
+    /// Shard-imbalance gauge (`spmm_imbalance_pm`): per plan
+    /// execution with > 1 shard, `max_shard_ns / mean_shard_ns` in
+    /// per-mille — 1000 means perfectly balanced; 2000 means the
+    /// slowest shard ran twice the mean. The profiling hook the
+    /// autotuner (`ROADMAP.md`) will consume.
+    pub fn imbalance(&self) -> &LatencyHistogram {
+        &self.imbalance
+    }
+
+    /// Allocate the next request trace id (monotonic, starts at 1).
+    pub fn next_trace_id(&self) -> u64 {
+        self.next_trace.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Get-or-create the per-model end-to-end latency series
+    /// (`request_ns{model=...}`) — resolved once per model install,
+    /// held by the model slot.
+    pub fn request_histogram(&self, model: &str) -> Arc<LatencyHistogram> {
+        self.registry.histogram("request_ns", &[("model", model)])
+    }
+
+    /// Snapshot every registered series (fixed + per-model).
+    pub fn export(&self) -> Vec<SeriesSnapshot> {
+        self.registry.export()
+    }
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry").field("registry", &self.registry).finish_non_exhaustive()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_index_is_monotonic_and_bounds_contain_value() {
+        let mut rng = Rng::new(0xB0C1);
+        let mut samples: Vec<u64> = (0..4000).map(|_| rng.next_u64() >> (rng.next_u64() % 64)).collect();
+        samples.extend([0, 1, 7, 8, 9, 15, 16, 255, 256, u64::MAX - 1, u64::MAX]);
+        for &v in &samples {
+            let idx = bucket_index(v);
+            assert!(idx < HIST_BUCKETS);
+            let (lo, hi) = bucket_bounds(idx);
+            let contained = v >= lo && (v < hi || (v == u64::MAX && hi == u64::MAX));
+            assert!(contained, "{v} not in [{lo}, {hi}) of bucket {idx}");
+        }
+        samples.sort_unstable();
+        for w in samples.windows(2) {
+            assert!(bucket_index(w[0]) <= bucket_index(w[1]), "{} vs {}", w[0], w[1]);
+        }
+        // buckets tile the axis: consecutive bounds meet exactly
+        for idx in 0..HIST_BUCKETS - 1 {
+            assert_eq!(bucket_bounds(idx).1, bucket_bounds(idx + 1).0, "gap after bucket {idx}");
+        }
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_relative_width_is_bounded() {
+        for idx in 0..HIST_BUCKETS {
+            let (lo, hi) = bucket_bounds(idx);
+            if lo >= SUB && hi > lo {
+                let width = hi - lo;
+                assert!(
+                    width as f64 / lo as f64 <= 0.125 + 1e-12,
+                    "bucket {idx} [{lo}, {hi}) wider than 12.5%"
+                );
+            }
+        }
+    }
+
+    /// Property: a quantile of recorded values always lands inside the
+    /// bounds of the bucket holding the true nearest-rank sample.
+    #[test]
+    fn quantile_lands_within_its_buckets_bounds() {
+        let mut rng = Rng::new(0xD1CE);
+        for case in 0..20 {
+            let h = LatencyHistogram::new();
+            let n = 1 + (rng.next_u64() % 300) as usize;
+            let mut vals: Vec<u64> =
+                (0..n).map(|_| rng.next_u64() >> (32 + case % 24)).collect();
+            for &v in &vals {
+                h.record(v);
+            }
+            vals.sort_unstable();
+            let snap = h.snapshot();
+            assert_eq!(snap.count, n as u64);
+            for q in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                let got = snap.quantile(q);
+                let truth = vals[crate::util::stats::nearest_rank(n, q)];
+                let idx = bucket_index(truth);
+                let (lo, hi) = bucket_bounds(idx);
+                assert!(
+                    got >= lo && got < hi.max(lo + 1),
+                    "case {case} q={q}: got {got}, truth {truth} in bucket {idx} [{lo},{hi})"
+                );
+            }
+        }
+    }
+
+    /// Property: merging two snapshots equals recording the union.
+    #[test]
+    fn merge_equals_recording_the_union() {
+        let mut rng = Rng::new(0x11E6);
+        for _ in 0..10 {
+            let (a, b, u) = (LatencyHistogram::new(), LatencyHistogram::new(), LatencyHistogram::new());
+            for _ in 0..(rng.next_u64() % 200) {
+                let v = rng.next_u64() >> (rng.next_u64() % 50);
+                a.record(v);
+                u.record(v);
+            }
+            for _ in 0..(rng.next_u64() % 200) {
+                let v = rng.next_u64() >> (rng.next_u64() % 50);
+                b.record(v);
+                u.record(v);
+            }
+            let mut merged = a.snapshot();
+            merged.merge(&b.snapshot());
+            assert_eq!(merged, u.snapshot());
+        }
+    }
+
+    #[test]
+    fn empty_snapshot_is_all_zero() {
+        let snap = LatencyHistogram::new().snapshot();
+        assert_eq!(snap.count, 0);
+        assert_eq!(snap.quantile(0.5), 0);
+        assert_eq!(snap.mean(), 0.0);
+        assert_eq!(snap.percentiles(), (0, 0, 0));
+    }
+
+    #[test]
+    fn concurrent_records_are_all_counted() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let h = std::sync::Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record(t * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        for handle in handles {
+            handle.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+        assert_eq!(h.snapshot().count, 4000);
+    }
+
+    #[test]
+    fn registry_deduplicates_and_exports_unique_series_names() {
+        let reg = MetricRegistry::new();
+        let a = reg.histogram("stage_ns", &[("stage", "decode")]);
+        let b = reg.histogram("stage_ns", &[("stage", "decode")]);
+        let c = reg.histogram("stage_ns", &[("stage", "queue")]);
+        let d = reg.histogram("request_ns", &[("model", "default")]);
+        let bare = reg.histogram("spmm_shard_ns", &[]);
+        a.record(7);
+        assert_eq!(b.count(), 1, "same (name, labels) must share the histogram");
+        c.record(1);
+        d.record(2);
+        bare.record(3);
+        let export = reg.export();
+        assert_eq!(export.len(), 4);
+        let mut names: Vec<String> = export.iter().map(|s| s.full_name()).collect();
+        names.sort();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(names.len(), before, "exported series names must be unique: {names:?}");
+        assert!(names.contains(&"stage_ns{stage=decode}".to_string()));
+        assert!(names.contains(&"spmm_shard_ns".to_string()));
+    }
+
+    #[test]
+    fn telemetry_preregisters_every_fixed_series() {
+        let t = Telemetry::new();
+        let export = t.export();
+        // 6 stages + 7 kernels + shard + imbalance
+        assert_eq!(export.len(), STAGE_NAMES.len() + SPMM_KERNEL_NAMES.len() + 2);
+        let mut names: Vec<String> = export.iter().map(|s| s.full_name()).collect();
+        names.sort();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(names.len(), before, "series names unique: {names:?}");
+        t.record_stage(Stage::Spmm, 1234);
+        t.record_spmm_kernel(3, 500);
+        t.record_spmm_kernel(99, 500); // ignored, like the old array
+        assert_eq!(t.stage(Stage::Spmm).count(), 1);
+        assert_eq!(t.spmm_ns_totals(), [0, 0, 0, 500, 0, 0, 0]);
+        // per-model series registers on demand and persists
+        let m = t.request_histogram("default");
+        m.record(42);
+        assert_eq!(t.request_histogram("default").count(), 1);
+        assert_eq!(t.export().len(), export.len() + 1);
+    }
+
+    #[test]
+    fn trace_ids_are_monotonic_from_one() {
+        let t = Telemetry::new();
+        assert_eq!(t.next_trace_id(), 1);
+        assert_eq!(t.next_trace_id(), 2);
+        assert_eq!(t.next_trace_id(), 3);
+    }
+
+    #[test]
+    fn stage_nanos_aggregates_and_prints() {
+        let mut a = StageNanos { decode: 5, queue: 10, ..Default::default() };
+        let b = StageNanos { decode: 3, queue: 20, spmm: 7, ..Default::default() };
+        a.max_with(&b);
+        assert_eq!(a.as_array(), [5, 20, 0, 7, 0, 0]);
+        let s = a.breakdown();
+        assert!(s.contains("queue=20ns") && s.contains("spmm=7ns"), "{s}");
+        assert_eq!(Stage::ALL.len(), STAGE_NAMES.len());
+        for st in Stage::ALL {
+            assert_eq!(STAGE_NAMES[st as usize], st.name());
+        }
+    }
+}

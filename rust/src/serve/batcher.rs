@@ -31,6 +31,9 @@ pub struct Request<T, R> {
     pub input: T,
     /// Channel the batch executor answers on.
     pub reply: mpsc::SyncSender<R>,
+    /// When the request entered the submit queue — the executor turns
+    /// this into the `queue` stage (submit → dequeue wall time).
+    pub enqueued: Instant,
 }
 
 /// Collects requests into batches per the policy. The executor thread
@@ -44,6 +47,11 @@ pub struct DynamicBatcher<T, R> {
     /// allocate the request buffer.
     spare: Vec<Request<T, R>>,
     metrics: Option<Arc<Metrics>>,
+    /// Formation window of the last flushed batch (first request
+    /// received → flush) — the `batch` stage of every request that
+    /// rode in it, read by the executor via
+    /// [`DynamicBatcher::last_flush_wait_ns`].
+    last_flush_wait_ns: u64,
 }
 
 /// Client handle for submitting requests.
@@ -76,7 +84,9 @@ impl<T, R> BatcherClient<T, R> {
     /// overload-rejecting path.
     pub fn call(&self, input: T) -> Option<R> {
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
-        self.tx.send(Request { input, reply: reply_tx }).ok()?;
+        self.tx
+            .send(Request { input, reply: reply_tx, enqueued: Instant::now() })
+            .ok()?;
         reply_rx.recv().ok()
     }
 
@@ -86,7 +96,7 @@ impl<T, R> BatcherClient<T, R> {
     /// bounded queues must reject, not silently queue-build.
     pub fn try_submit(&self, input: T) -> std::result::Result<mpsc::Receiver<R>, SubmitError> {
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
-        match self.tx.try_send(Request { input, reply: reply_tx }) {
+        match self.tx.try_send(Request { input, reply: reply_tx, enqueued: Instant::now() }) {
             Ok(()) => Ok(reply_rx),
             Err(mpsc::TrySendError::Full(_)) => Err(SubmitError::Overloaded),
             Err(mpsc::TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
@@ -100,7 +110,14 @@ impl<T, R> DynamicBatcher<T, R> {
     pub fn new(policy: BatchPolicy, queue_cap: usize) -> (Self, BatcherClient<T, R>) {
         let (tx, rx) = mpsc::sync_channel(queue_cap);
         (
-            DynamicBatcher { rx, policy, pending: Vec::new(), spare: Vec::new(), metrics: None },
+            DynamicBatcher {
+                rx,
+                policy,
+                pending: Vec::new(),
+                spare: Vec::new(),
+                metrics: None,
+                last_flush_wait_ns: 0,
+            },
             BatcherClient { tx },
         )
     }
@@ -125,7 +142,11 @@ impl<T, R> DynamicBatcher<T, R> {
                 Err(_) => return None,
             }
         }
-        let deadline = Instant::now() + self.policy.max_wait;
+        // the formation window (the `batch` stage) starts once the
+        // first request is in hand — idle blocking above is not
+        // batching latency
+        let formed = Instant::now();
+        let deadline = formed + self.policy.max_wait;
         while self.pending.len() < self.policy.max_batch {
             let now = Instant::now();
             if now >= deadline {
@@ -137,10 +158,19 @@ impl<T, R> DynamicBatcher<T, R> {
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
+        self.last_flush_wait_ns = formed.elapsed().as_nanos() as u64;
         if let Some(m) = &self.metrics {
             m.record_batch_flush(self.pending.len());
+            m.telemetry
+                .record_stage(crate::coordinator::telemetry::Stage::Batch, self.last_flush_wait_ns);
         }
         Some(std::mem::take(&mut self.pending))
+    }
+
+    /// Formation window (ns) of the most recently flushed batch —
+    /// the `batch` stage every request in that flush shares.
+    pub fn last_flush_wait_ns(&self) -> u64 {
+        self.last_flush_wait_ns
     }
 
     /// Hand a **drained** batch vector back for reuse: its allocation
@@ -318,5 +348,22 @@ mod tests {
         assert_eq!(snap.batch_size_sum, 6, "every request counted once");
         assert!(snap.batch_flush_count >= 3, "max_batch 2 forces >= 3 flushes");
         assert!(snap.mean_flush_size() <= 2.0);
+        // every flush also lands one sample in the `batch` stage histogram
+        let batch_stage = metrics.telemetry.stage(crate::coordinator::telemetry::Stage::Batch);
+        assert_eq!(batch_stage.count(), snap.batch_flush_count);
+    }
+
+    #[test]
+    fn flush_wait_is_observable() {
+        let (mut b, client) = DynamicBatcher::<u32, u32>::new(
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) },
+            16,
+        );
+        assert_eq!(b.last_flush_wait_ns(), 0);
+        let _rx = client.try_submit(1).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        // the lone request forced a timeout flush: the window is ~max_wait
+        assert!(b.last_flush_wait_ns() >= Duration::from_millis(4).as_nanos() as u64);
     }
 }

@@ -6,6 +6,7 @@
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::ExecCtx;
+use crate::coordinator::telemetry::{Stage, StageNanos};
 use crate::runtime::artifacts::GEOMETRY;
 use crate::runtime::client::{literal_matrix, matrix_literal, Runtime};
 use crate::serve::batcher::{BatchPolicy, BatcherClient, DynamicBatcher};
@@ -48,6 +49,19 @@ pub trait InferenceBackend {
         let mut out = Matrix::zeros(0, 0);
         self.predict_into(x, &mut out)?;
         Ok(out)
+    }
+    /// Nanoseconds the last `predict_into` spent inside the sparse
+    /// kernel's `spmm` — the `spmm` stage of every request in that
+    /// flush. Backends that don't time themselves report 0 (the
+    /// executor then skips the stage rather than recording zeros).
+    fn last_spmm_ns(&self) -> u64 {
+        0
+    }
+    /// Drain the partial-merge nanoseconds accumulated since the last
+    /// call (reduction-sharded plans only) — the `merge` stage.
+    /// Backends without plan execution report 0.
+    fn take_last_merge_ns(&mut self) -> u64 {
+        0
     }
 }
 
@@ -120,6 +134,9 @@ pub struct NativeBackend {
     /// allocates nothing.
     h0: Matrix,
     h1: Matrix,
+    /// `spmm` wall time of the last `predict_into` (the executor reads
+    /// it back as the flush's `spmm` stage).
+    last_spmm_ns: u64,
 }
 
 impl NativeBackend {
@@ -162,6 +179,7 @@ impl NativeBackend {
             ctx,
             h0: Matrix::zeros(0, 0),
             h1: Matrix::zeros(0, 0),
+            last_spmm_ns: 0,
         })
     }
 
@@ -198,6 +216,7 @@ impl NativeBackend {
             ctx,
             h0: Matrix::zeros(0, 0),
             h1: Matrix::zeros(0, 0),
+            last_spmm_ns: 0,
         })
     }
 
@@ -214,6 +233,7 @@ impl NativeBackend {
             ctx: ExecCtx::single(),
             h0: Matrix::zeros(0, 0),
             h1: Matrix::zeros(0, 0),
+            last_spmm_ns: 0,
         })
     }
 
@@ -266,14 +286,23 @@ impl InferenceBackend for NativeBackend {
         relu_inplace(&mut self.h0);
         let t0 = Instant::now();
         self.kernel.spmm_into(&self.h0, &mut self.h1)?;
+        // measure once; the counter and the `spmm` stage histogram
+        // (recorded by the executor) see the same number
+        self.last_spmm_ns = t0.elapsed().as_nanos() as u64;
         if let Some(m) = &self.metrics {
-            m.record_spmm(t0);
+            m.record_spmm_ns(self.last_spmm_ns);
         }
         add_bias(&mut self.h1, &self.params.b1);
         relu_inplace(&mut self.h1);
         self.h1.matmul_into(&self.params.w2, out)?;
         add_bias(out, &self.params.b2);
         Ok(())
+    }
+    fn last_spmm_ns(&self) -> u64 {
+        self.last_spmm_ns
+    }
+    fn take_last_merge_ns(&mut self) -> u64 {
+        self.ctx.take_last_merge_ns()
     }
 }
 
@@ -329,9 +358,14 @@ impl InferenceBackend for PjrtBackend {
     }
 }
 
+/// The engine's reply payload: logits plus the per-stage timing the
+/// executor assembled for the request (`decode`/`write` are zero here
+/// — the network frontend fills them before logging/recording).
+pub type TracedLogits = (Vec<f32>, StageNanos);
+
 /// A running serving engine: executor thread + batcher client.
 pub struct ServingEngine {
-    client: BatcherClient<Vec<f32>, Result<Vec<f32>>>,
+    client: BatcherClient<Vec<f32>, Result<TracedLogits>>,
     handle: Option<JoinHandle<()>>,
     metrics: Arc<Metrics>,
 }
@@ -385,7 +419,7 @@ impl ServingEngine {
         metrics: Arc<Metrics>,
     ) -> Self {
         let (mut batcher, client) =
-            DynamicBatcher::<Vec<f32>, Result<Vec<f32>>>::new(policy, queue_cap.max(1));
+            DynamicBatcher::<Vec<f32>, Result<TracedLogits>>::new(policy, queue_cap.max(1));
         batcher.attach_metrics(Arc::clone(&metrics));
         let m = Arc::clone(&metrics);
         let handle = std::thread::Builder::new()
@@ -414,23 +448,55 @@ impl ServingEngine {
                 let mut x = Matrix::zeros(bsz, dim);
                 let mut logits = Matrix::zeros(0, 0);
                 let mut bad: Vec<bool> = Vec::new();
+                // per-request queue wait of the current flush; cleared
+                // and refilled each flush, so it stops allocating once
+                // capacity covers max_batch
+                let mut queue_ns: Vec<u64> = Vec::new();
                 while let Some(mut batch) = batcher.next_batch() {
+                    let dequeued = Instant::now();
                     m.batches.fetch_add(1, Ordering::Relaxed);
                     m.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
                     // assemble padded batch
                     x.reset_zero(bsz, dim);
                     bad.clear();
                     bad.resize(batch.len(), false);
-                    for (slot, req) in batch.iter().enumerate().take(bsz) {
-                        if req.input.len() == dim {
-                            for (j, &v) in req.input.iter().enumerate() {
-                                x.set(slot, j, v);
+                    queue_ns.clear();
+                    for (slot, req) in batch.iter().enumerate() {
+                        // submit → dequeue (includes the formation
+                        // window; see docs/OBSERVABILITY.md)
+                        let ns = dequeued.duration_since(req.enqueued).as_nanos() as u64;
+                        m.telemetry.record_stage(Stage::Queue, ns);
+                        queue_ns.push(ns);
+                        if slot < bsz {
+                            if req.input.len() == dim {
+                                for (j, &v) in req.input.iter().enumerate() {
+                                    x.set(slot, j, v);
+                                }
+                            } else {
+                                bad[slot] = true;
                             }
-                        } else {
-                            bad[slot] = true;
                         }
                     }
                     let result = backend.predict_into(&x, &mut logits);
+                    // flush-level stages, shared by every request that
+                    // rode in this batch (0 = the backend doesn't time
+                    // that stage / nothing ran — not recorded)
+                    let spmm_ns = backend.last_spmm_ns();
+                    let merge_ns = backend.take_last_merge_ns();
+                    if result.is_ok() {
+                        if spmm_ns > 0 {
+                            m.telemetry.record_stage(Stage::Spmm, spmm_ns);
+                        }
+                        if merge_ns > 0 {
+                            m.telemetry.record_stage(Stage::Merge, merge_ns);
+                        }
+                    }
+                    let stages_base = StageNanos {
+                        batch: batcher.last_flush_wait_ns(),
+                        spmm: spmm_ns,
+                        merge: merge_ns,
+                        ..Default::default()
+                    };
                     for (slot, req) in batch.drain(..).enumerate() {
                         let reply = if slot >= bsz {
                             Err(Error::Coordinator("batch overflow".into()))
@@ -438,7 +504,11 @@ impl ServingEngine {
                             Err(Error::shape("bad input dimension"))
                         } else {
                             match &result {
-                                Ok(()) => Ok(logits.row(slot)[..classes].to_vec()),
+                                Ok(()) => {
+                                    let mut stages = stages_base;
+                                    stages.queue = queue_ns[slot];
+                                    Ok((logits.row(slot)[..classes].to_vec(), stages))
+                                }
                                 Err(e) => Err(Error::Runtime(e.to_string())),
                             }
                         };
@@ -453,13 +523,19 @@ impl ServingEngine {
 
     /// Blocking single-request inference.
     pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+        self.infer_traced(input).map(|(logits, _)| logits)
+    }
+
+    /// Blocking single-request inference with the request's per-stage
+    /// timing (`decode`/`write` are zero at this layer).
+    pub fn infer_traced(&self, input: Vec<f32>) -> Result<TracedLogits> {
         self.client
             .call(input)
             .ok_or_else(|| Error::Coordinator("serving engine stopped".into()))?
     }
 
     /// A cloneable client handle for concurrent load generators.
-    pub fn client(&self) -> BatcherClient<Vec<f32>, Result<Vec<f32>>> {
+    pub fn client(&self) -> BatcherClient<Vec<f32>, Result<TracedLogits>> {
         self.client.clone()
     }
 
@@ -602,12 +678,19 @@ mod tests {
             })
             .collect();
         for h in handles {
-            let logits = h.join().unwrap();
+            let (logits, stages) = h.join().unwrap();
             assert_eq!(logits.len(), GEOMETRY.classes);
             assert!(logits.iter().all(|v| v.is_finite()));
+            assert!(stages.spmm > 0, "native backend times its spmm");
+            assert_eq!(stages.decode, 0, "decode/write belong to the net frontend");
         }
         let snap = metrics.snapshot();
         assert_eq!(snap.requests, 16);
+        // every request landed a queue-stage sample; every flush an
+        // spmm-stage sample
+        let t = &metrics.telemetry;
+        assert_eq!(t.stage(crate::coordinator::telemetry::Stage::Queue).count(), 16);
+        assert_eq!(t.stage(crate::coordinator::telemetry::Stage::Spmm).count(), snap.batches);
         assert!(snap.batches >= 2, "expected batching, got {} batches", snap.batches);
         // the batcher-side distribution counters agree with the
         // engine-side totals

@@ -63,9 +63,10 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
-/// Metrics slots per kernel: indexes into `Metrics::spmm_kernel_ns`,
-/// matching `coordinator::metrics::SPMM_KERNEL_NAMES` (pinned by a
-/// test below).
+/// Metrics slots per kernel: indexes into the telemetry
+/// `spmm_ns{kernel=...}` series (and the derived
+/// `MetricsSnapshot::spmm_kernel_ns` totals), matching
+/// `coordinator::metrics::SPMM_KERNEL_NAMES` (pinned by a test below).
 const SLOT_DENSE: usize = 0;
 const SLOT_CSR: usize = 1;
 const SLOT_RELATIVE: usize = 2;

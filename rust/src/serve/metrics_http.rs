@@ -1,0 +1,215 @@
+//! `--metrics-addr`: a plaintext HTTP/1.0 metrics endpoint in
+//! Prometheus text exposition format, built on `std::net` only (no
+//! HTTP library). One scrape = one snapshot of every counter in
+//! `MetricsSnapshot::named_counters` plus every telemetry histogram
+//! series, rendered as summary-style metrics
+//! (`lrbi_stage_ns{stage="spmm",quantile="0.5"} …` with `_sum` and
+//! `_count` companions). Exposition details and example output live in
+//! `docs/OBSERVABILITY.md`.
+//!
+//! The server is deliberately minimal: it answers **any** request on
+//! the socket with the full metrics page (a real Prometheus scraper
+//! sends `GET / HTTP/1.1`; path and headers are ignored), serves one
+//! connection at a time on a background thread, and holds no
+//! per-connection state. Scrapes read atomics — they never lock the
+//! request path.
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::telemetry::SeriesSnapshot;
+use crate::util::error::{Error, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Escape a label value per the Prometheus text format (`\`, `"`, and
+/// newlines).
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render one histogram series as a Prometheus summary: three
+/// `quantile` samples plus `_sum` and `_count`.
+fn render_series(out: &mut String, s: &SeriesSnapshot) {
+    let base_labels: String = s
+        .labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\",", escape_label(v)))
+        .collect();
+    let (p50, p95, p99) = s.hist.percentiles();
+    for (q, v) in [("0.5", p50), ("0.95", p95), ("0.99", p99)] {
+        out.push_str(&format!(
+            "lrbi_{name}{{{base_labels}quantile=\"{q}\"}} {v}\n",
+            name = s.name
+        ));
+    }
+    let plain = if base_labels.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", base_labels.trim_end_matches(','))
+    };
+    out.push_str(&format!("lrbi_{}_sum{plain} {}\n", s.name, s.hist.sum));
+    out.push_str(&format!("lrbi_{}_count{plain} {}\n", s.name, s.hist.count));
+}
+
+/// Render the full metrics page: every named counter (as a Prometheus
+/// counter) followed by every histogram series (as a summary). One
+/// `# TYPE` line per distinct metric name, as the format requires.
+pub fn render_prometheus(metrics: &Metrics) -> String {
+    let mut out = String::with_capacity(8 * 1024);
+    for (name, value) in metrics.snapshot().named_counters() {
+        out.push_str(&format!("# TYPE lrbi_{name} counter\n"));
+        out.push_str(&format!("lrbi_{name} {value}\n"));
+    }
+    let mut last_name = "";
+    for series in metrics.telemetry.export() {
+        if series.name != last_name {
+            out.push_str(&format!("# TYPE lrbi_{} summary\n", series.name));
+            last_name = series.name;
+        }
+        render_series(&mut out, &series);
+    }
+    out
+}
+
+fn answer(stream: &mut TcpStream, body: &str) -> std::io::Result<()> {
+    // drain whatever request line/headers arrived (best effort — the
+    // reply does not depend on them), then answer and close
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let mut scratch = [0u8; 1024];
+    let _ = stream.read(&mut scratch);
+    let head = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// A running metrics endpoint: accept loop on a background thread,
+/// one page per connection. Dropping the handle (or calling
+/// [`MetricsServer::stop`]) shuts it down.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9095`; port 0 picks a free port)
+    /// and start serving scrapes of `metrics`.
+    pub fn bind(addr: &str, metrics: Arc<Metrics>) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Coordinator(format!("metrics bind {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| Error::Coordinator(format!("metrics local_addr: {e}")))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("lrbi-metrics".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop_flag.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(mut stream) = conn else { continue };
+                    let body = render_prometheus(&metrics);
+                    let _ = answer(&mut stream, &body);
+                }
+            })
+            .map_err(|e| Error::Coordinator(format!("spawn metrics thread: {e}")))?;
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join the thread.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the blocking accept with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::telemetry::Stage;
+
+    #[test]
+    fn rendered_page_is_valid_prometheus_text() {
+        let metrics = Metrics::new();
+        metrics.net_requests.fetch_add(3, Ordering::Relaxed);
+        metrics.telemetry.record_stage(Stage::Spmm, 1_500);
+        metrics.telemetry.record_spmm_kernel(3, 2_000);
+        metrics.telemetry.request_histogram("default").record(9_000);
+        let page = render_prometheus(&metrics);
+        assert!(page.contains("# TYPE lrbi_net_requests counter\n"));
+        assert!(page.contains("lrbi_net_requests 3\n"));
+        assert!(page.contains("# TYPE lrbi_stage_ns summary\n"));
+        assert!(page.contains("lrbi_stage_ns{stage=\"spmm\",quantile=\"0.5\"}"));
+        assert!(page.contains("lrbi_stage_ns_count{stage=\"spmm\"} 1\n"));
+        assert!(page.contains("lrbi_stage_ns_sum{stage=\"spmm\"} 1500\n"));
+        assert!(page.contains("lrbi_spmm_ns{kernel=\"lowrank\",quantile=\"0.99\"}"));
+        assert!(page.contains("lrbi_request_ns{model=\"default\",quantile=\"0.95\"}"));
+        assert!(page.contains("lrbi_spmm_shard_ns_count 0\n"), "unlabeled series render bare");
+        // `# TYPE` appears once per metric name, not per series
+        let stage_types = page.matches("# TYPE lrbi_stage_ns summary").count();
+        assert_eq!(stage_types, 1);
+        // every non-comment line is `name{...} value` or `name value`
+        for line in page.lines().filter(|l| !l.starts_with('#')) {
+            let (series, value) = line.rsplit_once(' ').expect("sample line");
+            assert!(series.starts_with("lrbi_"), "{line}");
+            assert!(value.parse::<u64>().is_ok(), "{line}");
+        }
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn endpoint_serves_a_scrape_over_http() {
+        let metrics = Arc::new(Metrics::new());
+        metrics.telemetry.record_stage(Stage::Decode, 777);
+        let mut server = MetricsServer::bind("127.0.0.1:0", Arc::clone(&metrics)).unwrap();
+        let addr = server.local_addr();
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut response = String::new();
+        conn.read_to_string(&mut response).unwrap();
+        assert!(response.starts_with("HTTP/1.0 200 OK\r\n"), "{response}");
+        assert!(response.contains("Content-Type: text/plain"), "{response}");
+        let body = response.split("\r\n\r\n").nth(1).expect("header/body split");
+        assert!(body.contains("lrbi_stage_ns_count{stage=\"decode\"} 1\n"), "{body}");
+        // Content-Length matches the body exactly
+        let clen: usize = response
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert_eq!(clen, body.len());
+        server.stop();
+        // stop is idempotent and the port is released
+        server.stop();
+    }
+}

@@ -11,6 +11,9 @@
 //!   that *rejects* (never silently stalls) when full.
 //! - [`engine`] / [`variants`]: fixed-batch inference backends and
 //!   multi-variant serving with the LRU decode [`cache`].
+//! - [`metrics_http`]: the `--metrics-addr` plaintext HTTP/1.0
+//!   endpoint exposing the telemetry histograms in Prometheus text
+//!   format (see `docs/OBSERVABILITY.md`).
 //! - [`kernels`]: sparse-execution kernels that run the masked layer
 //!   directly on each index representation (or the PJRT artifact
 //!   path; the native kernels keep the full pipeline testable without
@@ -22,6 +25,7 @@ pub mod batcher;
 pub mod cache;
 pub mod engine;
 pub mod kernels;
+pub mod metrics_http;
 pub(crate) mod plan;
 pub mod protocol;
 pub mod server;
@@ -34,5 +38,8 @@ pub use kernels::{
     build_kernel, build_kernel_exec, build_kernel_from_stored, build_kernel_from_stored_exec,
     KernelFormat, SparseKernel,
 };
-pub use protocol::{ErrorCode, Frame, RowBatch, WireError, MAX_FRAME, PROTOCOL_VERSION};
+pub use metrics_http::MetricsServer;
+pub use protocol::{
+    ErrorCode, Frame, HistSummary, RowBatch, WireError, MAX_FRAME, PROTOCOL_VERSION,
+};
 pub use server::{ModelHub, ModelSlot, NetClient, ServeOptions, Server, ServerHandle};

@@ -35,6 +35,7 @@ use crate::tensor::simd::{self, SimdTier};
 use crate::tensor::Matrix;
 use crate::util::error::Result;
 use std::sync::Mutex;
+use std::time::Instant;
 
 /// Cap on reduction shards per plan: bounds partial-buffer memory at
 /// `MAX_SHARDS · batch · n` floats regardless of layer size.
@@ -347,7 +348,9 @@ impl RelativePlan {
                 decode_rel_shard(&self.shards[s], self.escape, entries, vals, n, x, xt, part);
             });
             if run.is_ok() {
+                let t_merge = Instant::now();
                 merge_partials(out.data_mut(), &partials);
+                ctx.record_merge(t_merge);
             }
             ctx.put_scratch(partials);
             run
@@ -474,7 +477,9 @@ impl RowShards {
             body(self.shards[s], scratch.as_mut_slice(), part);
         });
         if run.is_ok() {
+            let t_merge = Instant::now();
             merge_partials(out.data_mut(), &partials);
+            ctx.record_merge(t_merge);
         }
         ctx.put_scratch(partials);
         run

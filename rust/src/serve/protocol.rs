@@ -28,6 +28,7 @@
 
 use crate::util::error::Error;
 use std::io::{Read, Write};
+use std::time::Instant;
 
 /// Protocol version carried in every frame (byte 4 on the wire).
 pub const PROTOCOL_VERSION: u8 = 1;
@@ -47,6 +48,8 @@ const FT_STATS: u8 = 0x05;
 const FT_SWAP: u8 = 0x06;
 const FT_OK: u8 = 0x07;
 const FT_SHUTDOWN: u8 = 0x08;
+const FT_STATS2_REQ: u8 = 0x09;
+const FT_STATS2: u8 = 0x0A;
 
 /// Typed error codes carried by [`Frame::Error`] (wire values are
 /// stable; see `docs/PROTOCOL.md`).
@@ -211,9 +214,30 @@ impl RowBatch {
     }
 }
 
-/// One protocol message. `Infer`, `StatsRequest`, `Swap` and
-/// `Shutdown` flow client → server; `Logits`, `Error`, `Stats` and
-/// `Ok` flow server → client.
+/// One latency-histogram summary inside [`Frame::Stats2`]: the series
+/// identity plus its count, exact nanosecond sum, and the p50/p95/p99
+/// triple (see `docs/PROTOCOL.md` for the field table).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSummary {
+    /// Metric name (e.g. `stage_ns`).
+    pub name: String,
+    /// Label pairs as a `k=v,k=v` string ("" when unlabeled).
+    pub labels: String,
+    /// Samples recorded.
+    pub count: u64,
+    /// Exact sum of recorded values.
+    pub sum: u64,
+    /// 50th-percentile value (bucket midpoint; 0 when empty).
+    pub p50: u64,
+    /// 95th-percentile value.
+    pub p95: u64,
+    /// 99th-percentile value.
+    pub p99: u64,
+}
+
+/// One protocol message. `Infer`, `StatsRequest`, `Stats2Request`,
+/// `Swap` and `Shutdown` flow client → server; `Logits`, `Error`,
+/// `Stats`, `Stats2` and `Ok` flow server → client.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
     /// Run a row batch through the model named `key` (empty key =
@@ -252,6 +276,20 @@ pub enum Frame {
     /// Ask the server to shut down gracefully (stop accepting, finish
     /// in-flight requests, exit).
     Shutdown,
+    /// Ask for the v2 stats snapshot: counters *and* histogram
+    /// summaries. A v1 client that never sends this byte sees no
+    /// change — `STATS` framing is untouched.
+    Stats2Request,
+    /// Counters + latency-histogram summaries answering a
+    /// `Stats2Request`.
+    Stats2 {
+        /// Named counters (`MetricsSnapshot::named_counters` order —
+        /// identical content to [`Frame::Stats`]).
+        counters: Vec<(String, u64)>,
+        /// One summary per registered histogram series, in
+        /// registration order.
+        histograms: Vec<HistSummary>,
+    },
 }
 
 impl Frame {
@@ -271,6 +309,8 @@ impl Frame {
             Frame::Swap { .. } => FT_SWAP,
             Frame::Ok { .. } => FT_OK,
             Frame::Shutdown => FT_SHUTDOWN,
+            Frame::Stats2Request => FT_STATS2_REQ,
+            Frame::Stats2 { .. } => FT_STATS2,
         }
     }
 
@@ -285,6 +325,8 @@ impl Frame {
             Frame::Swap { .. } => "SWAP",
             Frame::Ok { .. } => "OK",
             Frame::Shutdown => "SHUTDOWN",
+            Frame::Stats2Request => "STATS2_REQ",
+            Frame::Stats2 { .. } => "STATS2",
         }
     }
 }
@@ -328,6 +370,24 @@ fn put_batch(out: &mut Vec<u8>, b: &RowBatch) {
     }
 }
 
+/// u8-length-prefixed string (counter/series names and label strings).
+fn put_tiny_str(out: &mut Vec<u8>, s: &str) {
+    let bytes = utf8_prefix(s, u8::MAX as usize);
+    out.push(bytes.len() as u8);
+    out.extend_from_slice(bytes);
+}
+
+/// The counter list layout shared by `STATS` and `STATS2`: u16 count,
+/// then per entry a u8-length name and a u64 LE value.
+fn put_counters(out: &mut Vec<u8>, entries: &[(String, u64)]) {
+    let count = entries.len().min(u16::MAX as usize);
+    put_u16(out, count as u16);
+    for (name, value) in entries.iter().take(count) {
+        put_tiny_str(out, name);
+        out.extend_from_slice(&value.to_le_bytes());
+    }
+}
+
 /// Encode a frame to its full wire bytes (length prefix included).
 pub fn encode(frame: &Frame) -> Vec<u8> {
     let mut payload = Vec::with_capacity(64);
@@ -343,15 +403,18 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             payload.push(*code as u8);
             put_short_str(&mut payload, message);
         }
-        Frame::StatsRequest | Frame::Shutdown => {}
-        Frame::Stats(entries) => {
-            let count = entries.len().min(u16::MAX as usize);
+        Frame::StatsRequest | Frame::Shutdown | Frame::Stats2Request => {}
+        Frame::Stats(entries) => put_counters(&mut payload, entries),
+        Frame::Stats2 { counters, histograms } => {
+            put_counters(&mut payload, counters);
+            let count = histograms.len().min(u16::MAX as usize);
             put_u16(&mut payload, count as u16);
-            for (name, value) in entries.iter().take(count) {
-                let bytes = utf8_prefix(name, u8::MAX as usize);
-                payload.push(bytes.len() as u8);
-                payload.extend_from_slice(bytes);
-                payload.extend_from_slice(&value.to_le_bytes());
+            for h in histograms.iter().take(count) {
+                put_tiny_str(&mut payload, &h.name);
+                put_tiny_str(&mut payload, &h.labels);
+                for v in [h.count, h.sum, h.p50, h.p95, h.p99] {
+                    payload.extend_from_slice(&v.to_le_bytes());
+                }
             }
         }
         Frame::Swap { key } => put_short_str(&mut payload, key),
@@ -410,6 +473,25 @@ impl<'a> Cur<'a> {
             .map_err(|_| WireError::new(ErrorCode::BadFrame, format!("{what}: invalid UTF-8")))
     }
 
+    fn tiny_str(&mut self, what: &str) -> Result<String, WireError> {
+        let len = self.u8(what)? as usize;
+        let bytes = self.take(len, what)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::new(ErrorCode::BadFrame, format!("{what}: invalid UTF-8")))
+    }
+
+    /// The counter list layout shared by `STATS` and `STATS2`.
+    fn counters(&mut self) -> Result<Vec<(String, u64)>, WireError> {
+        let count = self.u16("stats count")? as usize;
+        let mut entries = Vec::with_capacity(count.min(1024));
+        for _ in 0..count {
+            let name = self.tiny_str("stats name")?;
+            let value = self.u64("stats value")?;
+            entries.push((name, value));
+        }
+        Ok(entries)
+    }
+
     fn batch(&mut self) -> Result<RowBatch, WireError> {
         let rows = self.u32("batch rows")? as usize;
         let cols = self.u32("batch cols")? as usize;
@@ -465,19 +547,23 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
             Frame::Error { code, message }
         }
         FT_STATS_REQ => Frame::StatsRequest,
-        FT_STATS => {
-            let count = cur.u16("stats count")? as usize;
-            let mut entries = Vec::with_capacity(count.min(1024));
+        FT_STATS => Frame::Stats(cur.counters()?),
+        FT_STATS2_REQ => Frame::Stats2Request,
+        FT_STATS2 => {
+            let counters = cur.counters()?;
+            let count = cur.u16("histogram count")? as usize;
+            let mut histograms = Vec::with_capacity(count.min(1024));
             for _ in 0..count {
-                let len = cur.u8("stats name length")? as usize;
-                let name = String::from_utf8(cur.take(len, "stats name")?.to_vec())
-                    .map_err(|_| {
-                        WireError::new(ErrorCode::BadFrame, "stats name: invalid UTF-8")
-                    })?;
-                let value = cur.u64("stats value")?;
-                entries.push((name, value));
+                let name = cur.tiny_str("histogram name")?;
+                let labels = cur.tiny_str("histogram labels")?;
+                let count = cur.u64("histogram count")?;
+                let sum = cur.u64("histogram sum")?;
+                let p50 = cur.u64("histogram p50")?;
+                let p95 = cur.u64("histogram p95")?;
+                let p99 = cur.u64("histogram p99")?;
+                histograms.push(HistSummary { name, labels, count, sum, p50, p95, p99 });
             }
-            Frame::Stats(entries)
+            Frame::Stats2 { counters, histograms }
         }
         FT_SWAP => Frame::Swap { key: cur.short_str("swap key")? },
         FT_OK => Frame::Ok { message: cur.short_str("ok message")? },
@@ -504,6 +590,13 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> std::io::Result<()> {
 /// [`ErrorCode::BadFrame`], and a length prefix above [`MAX_FRAME`] is
 /// [`ErrorCode::TooLarge`] (rejected before any payload allocation).
 pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>, ReadError> {
+    read_frame_timed(r).map(|opt| opt.map(|(frame, _)| frame))
+}
+
+/// [`read_frame`] plus the nanoseconds spent *decoding* the payload —
+/// parse CPU time only, deliberately excluding the socket wait (which
+/// would otherwise dominate every idle connection's `decode` stage).
+pub fn read_frame_timed(r: &mut impl Read) -> Result<Option<(Frame, u64)>, ReadError> {
     let mut len_buf = [0u8; 4];
     let mut got = 0usize;
     while got < 4 {
@@ -548,7 +641,9 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>, ReadError> {
             "frame payload shorter than version + type",
         )));
     }
-    decode_payload(&payload).map(Some).map_err(ReadError::Wire)
+    let t0 = Instant::now();
+    let frame = decode_payload(&payload).map_err(ReadError::Wire)?;
+    Ok(Some((frame, t0.elapsed().as_nanos() as u64)))
 }
 
 #[cfg(test)]
@@ -576,10 +671,45 @@ mod tests {
             Frame::Swap { key: "v2".into() },
             Frame::Ok { message: "swapped".into() },
             Frame::Shutdown,
+            Frame::Stats2Request,
+            Frame::Stats2 { counters: vec![], histograms: vec![] },
+            Frame::Stats2 {
+                counters: vec![("requests".into(), 42)],
+                histograms: vec![
+                    HistSummary {
+                        name: "stage_ns".into(),
+                        labels: "stage=spmm".into(),
+                        count: 100,
+                        sum: 123_456,
+                        p50: 1_000,
+                        p95: 2_000,
+                        p99: u64::MAX,
+                    },
+                    HistSummary {
+                        name: "spmm_shard_ns".into(),
+                        labels: String::new(),
+                        count: 0,
+                        sum: 0,
+                        p50: 0,
+                        p95: 0,
+                        p99: 0,
+                    },
+                ],
+            },
         ];
         for f in &frames {
             assert_eq!(&roundtrip(f), f, "{}", f.type_name());
         }
+    }
+
+    #[test]
+    fn timed_read_reports_decode_nanos() {
+        let wire = encode(&Frame::Stats(vec![("requests".into(), 1)]));
+        let mut r = &wire[..];
+        let (frame, _decode_ns) = read_frame_timed(&mut r).unwrap().unwrap();
+        assert_eq!(frame.type_name(), "STATS");
+        // decode_ns is CPU parse time — can legitimately round to 0 on
+        // a coarse clock, so only the framing is asserted here
     }
 
     #[test]
@@ -593,6 +723,8 @@ mod tests {
             0x01
         );
         assert_eq!(Frame::Shutdown.type_byte(), 0x08);
+        assert_eq!(Frame::Stats2Request.type_byte(), 0x09);
+        assert_eq!(Frame::Stats2 { counters: vec![], histograms: vec![] }.type_byte(), 0x0A);
         for code in ErrorCode::ALL {
             assert_eq!(ErrorCode::from_u8(code as u8), Some(code));
         }

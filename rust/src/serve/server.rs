@@ -42,20 +42,29 @@
 //! stop accepting, half-close every connection's read side so blocked
 //! readers wake, finish in-flight requests, join the handlers, return
 //! from [`Server::run`]. Operations guide: `docs/SERVING.md`.
+//!
+//! Observability: every INFER gets a trace id and a per-stage timing
+//! breakdown (decode → queue → batch → spmm → merge → write) recorded
+//! into the shared [`Telemetry`](crate::coordinator::telemetry)
+//! histograms; `STATS2` frames and the `--metrics-addr` scrape expose
+//! the summaries, and requests over `LRBI_SLOW_MS` log their breakdown
+//! (`docs/OBSERVABILITY.md`).
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::ExecCtx;
+use crate::coordinator::telemetry::{LatencyHistogram, Stage, StageNanos};
 use crate::serve::batcher::{BatchPolicy, SubmitError};
 use crate::serve::engine::{InferenceBackend, NativeBackend, ServingEngine};
-use crate::serve::protocol::{self, ErrorCode, Frame, ReadError, RowBatch, WireError};
+use crate::serve::protocol::{self, ErrorCode, Frame, HistSummary, ReadError, RowBatch, WireError};
 use crate::store::{Artifact, Registry};
 use crate::util::error::{Error, Result};
+use crate::util::log::Level;
 use std::collections::HashMap;
 use std::io::BufReader;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -69,6 +78,21 @@ const CONN_IDLE_TIMEOUT: Duration = Duration::from_secs(300);
 /// must not pin its handler in `write_frame` forever — that handler
 /// holds a connection slot and would block graceful shutdown's join.
 const CONN_WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Requests slower than this end-to-end (decode → write, in ns) emit
+/// an `INFO` line with their trace id and per-stage breakdown, so a
+/// tail-latency spike names its stage without a debugger attached.
+/// Tuned via `LRBI_SLOW_MS` (milliseconds, default 100); parsed once.
+fn slow_request_threshold_ns() -> u64 {
+    static THRESHOLD: OnceLock<u64> = OnceLock::new();
+    *THRESHOLD.get_or_init(|| {
+        std::env::var("LRBI_SLOW_MS")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .unwrap_or(100)
+            .saturating_mul(1_000_000)
+    })
+}
 
 /// Frontend sizing knobs (`lrbi serve --listen` flags).
 #[derive(Debug, Clone, Copy)]
@@ -98,6 +122,10 @@ pub struct ModelSlot {
     input_dim: usize,
     classes: usize,
     kernel: &'static str,
+    /// Per-model end-to-end latency series (`request_ns{model=…}`),
+    /// attached by [`ModelHub::install_slot`] so the hub's registry
+    /// owns the series; a slot built outside a hub records nowhere.
+    request_hist: Option<Arc<LatencyHistogram>>,
 }
 
 impl ModelSlot {
@@ -109,7 +137,7 @@ impl ModelSlot {
         classes: usize,
         kernel: &'static str,
     ) -> Self {
-        ModelSlot { engine, input_dim, classes, kernel }
+        ModelSlot { engine, input_dim, classes, kernel, request_hist: None }
     }
 
     /// Input feature dimension requests must match.
@@ -132,10 +160,17 @@ impl ModelSlot {
     /// into shared plan executions), then the replies are collected in
     /// row order. A full queue rejects the request with
     /// [`ErrorCode::Overloaded`] — rows already admitted still execute
-    /// and their results are discarded.
-    fn infer_batch(&self, batch: &RowBatch) -> std::result::Result<RowBatch, WireError> {
+    /// and their results are discarded. The returned [`StageNanos`] is
+    /// the per-stage **max** over the request's rows (a row that
+    /// straggled in a different flush dominates, which is what the
+    /// slow-request log should name).
+    fn infer_batch(
+        &self,
+        batch: &RowBatch,
+    ) -> std::result::Result<(RowBatch, StageNanos), WireError> {
         if batch.rows() == 0 {
             return RowBatch::new(0, self.classes, Vec::new())
+                .map(|b| (b, StageNanos::default()))
                 .map_err(|e| WireError::new(ErrorCode::Internal, e));
         }
         if batch.cols() != self.input_dim {
@@ -169,16 +204,22 @@ impl ModelSlot {
             }
         }
         let mut rows: Vec<Vec<f32>> = Vec::with_capacity(pending.len());
+        let mut stages = StageNanos::default();
         for rx in pending {
             match rx.recv() {
-                Ok(Ok(logits)) => rows.push(logits),
+                Ok(Ok((logits, st))) => {
+                    rows.push(logits);
+                    stages.max_with(&st);
+                }
                 Ok(Err(e)) => return Err(WireError::new(ErrorCode::Internal, e)),
                 Err(_) => {
                     return Err(WireError::new(ErrorCode::Internal, "serving engine stopped"));
                 }
             }
         }
-        RowBatch::from_rows(&rows).map_err(|e| WireError::new(ErrorCode::Internal, e))
+        RowBatch::from_rows(&rows)
+            .map(|b| (b, stages))
+            .map_err(|e| WireError::new(ErrorCode::Internal, e))
     }
 }
 
@@ -305,8 +346,11 @@ impl ModelHub {
     }
 
     /// Register (or replace) `key` with a pre-built slot (custom
-    /// backends in tests/benches).
-    pub fn install_slot(&self, key: &str, slot: ModelSlot) {
+    /// backends in tests/benches). The slot is wired to this hub's
+    /// `request_ns{model=key}` latency series; a swap reuses the
+    /// existing series, so the model's history survives the reload.
+    pub fn install_slot(&self, key: &str, mut slot: ModelSlot) {
+        slot.request_hist = Some(self.metrics.telemetry.request_histogram(key));
         self.models
             .write()
             .expect("model hub lock")
@@ -591,8 +635,8 @@ fn handle_conn(stream: TcpStream, hub: &ModelHub, state: &ServerState, metrics: 
     };
     let mut writer = stream;
     loop {
-        let frame = match protocol::read_frame(&mut reader) {
-            Ok(Some(frame)) => frame,
+        let (frame, decode_ns) = match protocol::read_frame_timed(&mut reader) {
+            Ok(Some(pair)) => pair,
             Ok(None) => break, // client closed cleanly
             Err(ReadError::Io(_)) => break,
             Err(ReadError::Wire(e)) => {
@@ -615,25 +659,62 @@ fn handle_conn(stream: TcpStream, hub: &ModelHub, state: &ServerState, metrics: 
         let reply = match frame {
             Frame::Infer { key, batch } => {
                 metrics.net_requests.fetch_add(1, Ordering::Relaxed);
-                if state.shutdown.load(Ordering::SeqCst) {
-                    Frame::error(ErrorCode::ShuttingDown, "server is shutting down")
+                metrics.telemetry.record_stage(Stage::Decode, decode_ns);
+                let trace = metrics.telemetry.next_trace_id();
+                let t_req = Instant::now();
+                let (reply, stages, request_hist) = if state.shutdown.load(Ordering::SeqCst) {
+                    (Frame::error(ErrorCode::ShuttingDown, "server is shutting down"), None, None)
                 } else {
                     match hub.get(&key) {
-                        None => Frame::error(
-                            ErrorCode::UnknownModel,
-                            format!("no model '{key}' (available: {})", hub.keys().join(", ")),
+                        None => (
+                            Frame::error(
+                                ErrorCode::UnknownModel,
+                                format!("no model '{key}' (available: {})", hub.keys().join(", ")),
+                            ),
+                            None,
+                            None,
                         ),
-                        Some(slot) => match slot.infer_batch(&batch) {
-                            Ok(logits) => Frame::Logits(logits),
-                            Err(e) => {
-                                if e.code == ErrorCode::Overloaded {
-                                    metrics.net_rejected_overload.fetch_add(1, Ordering::Relaxed);
+                        Some(slot) => {
+                            let hist = slot.request_hist.clone();
+                            match slot.infer_batch(&batch) {
+                                Ok((logits, st)) => (Frame::Logits(logits), Some(st), hist),
+                                Err(e) => {
+                                    if e.code == ErrorCode::Overloaded {
+                                        metrics
+                                            .net_rejected_overload
+                                            .fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    (Frame::Error { code: e.code, message: e.message }, None, hist)
                                 }
-                                Frame::Error { code: e.code, message: e.message }
                             }
-                        },
+                        }
+                    }
+                };
+                // The INFER path writes its own reply so encode+write
+                // lands in the trace as the `write` stage.
+                let t_write = Instant::now();
+                let write_ok = protocol::write_frame(&mut writer, &reply).is_ok();
+                let write_ns = t_write.elapsed().as_nanos() as u64;
+                metrics.telemetry.record_stage(Stage::Write, write_ns);
+                let total_ns = decode_ns.saturating_add(t_req.elapsed().as_nanos() as u64);
+                if let Some(hist) = request_hist {
+                    hist.record(total_ns);
+                }
+                if let Some(mut st) = stages {
+                    st.decode = decode_ns;
+                    st.write = write_ns;
+                    if total_ns >= slow_request_threshold_ns() {
+                        crate::lrbi_log!(
+                            Level::Info,
+                            "slow request trace={trace} model='{key}' total={total_ns}ns {}",
+                            st.breakdown()
+                        );
                     }
                 }
+                if write_ok {
+                    continue;
+                }
+                break;
             }
             Frame::StatsRequest => Frame::Stats(
                 metrics
@@ -643,6 +724,32 @@ fn handle_conn(stream: TcpStream, hub: &ModelHub, state: &ServerState, metrics: 
                     .map(|(name, value)| (name.to_string(), value))
                     .collect(),
             ),
+            Frame::Stats2Request => {
+                let counters = metrics
+                    .snapshot()
+                    .named_counters()
+                    .into_iter()
+                    .map(|(name, value)| (name.to_string(), value))
+                    .collect();
+                let histograms = metrics
+                    .telemetry
+                    .export()
+                    .into_iter()
+                    .map(|s| {
+                        let (p50, p95, p99) = s.hist.percentiles();
+                        HistSummary {
+                            name: s.name.to_string(),
+                            labels: s.label_string(),
+                            count: s.hist.count,
+                            sum: s.hist.sum,
+                            p50,
+                            p95,
+                            p99,
+                        }
+                    })
+                    .collect();
+                Frame::Stats2 { counters, histograms }
+            }
             Frame::Swap { key } => match hub.swap(&key) {
                 Ok(message) => Frame::Ok { message },
                 Err(e) => Frame::error(ErrorCode::Internal, e),
@@ -732,6 +839,16 @@ impl NetClient {
         })
     }
 
+    /// Fetch the v2 stats: the same named counters plus a summary
+    /// (count/sum/p50/p95/p99) of every telemetry histogram series.
+    pub fn stats_v2(&mut self) -> Result<(Vec<(String, u64)>, Vec<HistSummary>)> {
+        let reply = self.call(&Frame::Stats2Request)?;
+        expect_reply(reply, "STATS2", |frame| match frame {
+            Frame::Stats2 { counters, histograms } => Ok((counters, histograms)),
+            other => Err(other),
+        })
+    }
+
     /// Hot-swap the registry artifact `name` into the server.
     pub fn swap(&mut self, name: &str) -> Result<String> {
         let reply = self.call(&Frame::Swap { key: name.to_string() })?;
@@ -797,8 +914,10 @@ mod tests {
         let err = slot.infer_batch(&bad).unwrap_err();
         assert_eq!(err.code, ErrorCode::BadShape);
         let empty = RowBatch::new(0, 0, vec![]).unwrap();
-        let logits = slot.infer_batch(&empty).unwrap();
+        let (logits, stages) = slot.infer_batch(&empty).unwrap();
         assert_eq!((logits.rows(), logits.cols()), (0, slot.classes()));
+        assert_eq!(stages, StageNanos::default(), "no rows ran, no stages timed");
+        assert!(slot.request_hist.is_some(), "hub-installed slots get a request series");
     }
 
     #[test]

@@ -4,6 +4,7 @@ pub mod bench;
 pub mod bits;
 pub mod crc;
 pub mod error;
+pub mod log;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -164,12 +164,29 @@ impl Welford {
     }
 }
 
+/// The nearest-rank index for quantile `q` (in `[0, 1]`) over `len`
+/// samples — the one rank rule shared by [`percentile`] and the
+/// telemetry histograms'
+/// [`HistogramSnapshot::quantile`](crate::coordinator::telemetry::HistogramSnapshot::quantile),
+/// so bench reports and serving stats agree on what "p99" means.
+pub fn nearest_rank(len: usize, q: f64) -> usize {
+    assert!(len > 0, "nearest_rank of an empty sample set");
+    ((len as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize
+}
+
 /// Percentile of a sample set (nearest-rank; `q` in [0,1]).
-pub fn percentile(xs: &mut [f64], q: f64) -> f64 {
+///
+/// Non-mutating: the caller's samples are left untouched (the old
+/// version sorted its `&mut [f64]` argument in place, silently
+/// reordering every later use of the buffer). Selection runs in
+/// O(n) via `select_nth_unstable` on a scratch copy. NaNs order last
+/// under `total_cmp`.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty());
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let idx = ((xs.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
-    xs[idx]
+    let mut scratch = xs.to_vec();
+    let idx = nearest_rank(scratch.len(), q);
+    let (_, &mut v, _) = scratch.select_nth_unstable_by(idx, f64::total_cmp);
+    v
 }
 
 #[cfg(test)]
@@ -222,10 +239,15 @@ mod tests {
 
     #[test]
     fn percentile_nearest_rank() {
-        let mut xs = vec![5.0, 1.0, 3.0, 2.0, 4.0];
-        assert_eq!(percentile(&mut xs, 0.0), 1.0);
-        assert_eq!(percentile(&mut xs, 0.5), 3.0);
-        assert_eq!(percentile(&mut xs, 1.0), 5.0);
+        let xs = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        // non-mutating: the caller's order survives
+        assert_eq!(xs, vec![5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(nearest_rank(5, 0.5), 2);
+        assert_eq!(nearest_rank(1, 0.99), 0);
+        assert_eq!(nearest_rank(100, 0.99), 98);
     }
 
     #[test]

@@ -558,6 +558,141 @@ fn stats_frame_serializes_the_metrics_snapshot() {
     runner.join().unwrap().unwrap();
 }
 
+/// ISSUE 7 acceptance: two kernels served over TCP with telemetry
+/// recording produce logits byte-identical to direct in-process
+/// inference with no telemetry attached, and both the STATS2 frame
+/// and the `--metrics-addr` Prometheus scrape report per-stage
+/// p50/p95/p99 with non-zero counts for every pipeline stage.
+#[test]
+fn stats_v2_and_http_scrape_report_per_stage_percentiles() {
+    use lrbi::coordinator::telemetry::STAGE_NAMES;
+    use lrbi::runtime::artifacts::GEOMETRY;
+    use lrbi::serve::kernels::KernelFormat;
+    use lrbi::serve::metrics_http::MetricsServer;
+    use std::io::{Read, Write};
+
+    let g = GEOMETRY;
+    let params = MlpParams::init(77);
+    let mut rng = Rng::new(78);
+    let ip = BitMatrix::from_fn(g.hidden0, g.rank, |_, _| rng.bernoulli(0.3));
+    let iz = BitMatrix::from_fn(g.rank, g.hidden1, |_, _| rng.bernoulli(0.3));
+    let metrics = Arc::new(Metrics::new());
+    // 2 plan threads so the lowrank kernel's reduction shards fan out
+    // and the merge stage actually runs (single-shard plans skip it).
+    let ctx = ExecCtx::new(2, Some(Arc::clone(&metrics)));
+    let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+    let kernels = [KernelFormat::LowRankFused, KernelFormat::Relative];
+    let lowrank = NativeBackend::with_format_exec(
+        params.clone(),
+        kernels[0],
+        &ip,
+        &iz,
+        Arc::clone(&ctx),
+    )
+    .unwrap()
+    .with_metrics(Arc::clone(&metrics));
+    let hub = ModelHub::from_backend("lowrank", lowrank, policy, 64, Arc::clone(&metrics));
+    let relative =
+        NativeBackend::with_format_exec(params.clone(), kernels[1], &ip, &iz, ctx)
+            .unwrap()
+            .with_metrics(Arc::clone(&metrics));
+    hub.install_backend("relative", relative);
+
+    let (addr, handle, runner) = start_server(hub, &ServeOptions::default());
+    let scraper = MetricsServer::bind("127.0.0.1:0", Arc::clone(&metrics)).unwrap();
+    let mut client = NetClient::connect(addr).unwrap();
+
+    // Drive both kernels and pin byte-identity against direct
+    // in-process backends that carry no metrics/telemetry at all.
+    let mut rng = Rng::new(79);
+    for (key, fmt) in ["lowrank", "relative"].into_iter().zip(kernels) {
+        let mut direct = NativeBackend::with_format(params.clone(), fmt, &ip, &iz).unwrap();
+        for _ in 0..8 {
+            let row = random_row(&mut rng, g.input_dim);
+            let got = client
+                .infer(key, RowBatch::from_rows(&[row.clone()]).unwrap())
+                .unwrap();
+            assert_eq!((got.rows(), got.cols()), (1, g.classes), "{key}");
+            let mut x = Matrix::zeros(g.batch, g.input_dim);
+            for (j, &v) in row.iter().enumerate() {
+                x.set(0, j, v);
+            }
+            let want = direct.predict(&x).unwrap();
+            assert_eq!(
+                got.row(0),
+                &want.row(0)[..g.classes],
+                "{key}: telemetry-on wire logits must be byte-identical to telemetry-off"
+            );
+        }
+    }
+
+    // STATS v1 still answers on the same connection (framing compat).
+    assert!(!client.stats().unwrap().is_empty());
+
+    // STATS2: every pipeline stage has traffic and real percentiles.
+    let (counters, hists) = client.stats_v2().unwrap();
+    assert!(counters.iter().any(|(n, v)| n == "net_requests" && *v == 16));
+    let stage = |name: &str| {
+        hists
+            .iter()
+            .find(|h| h.name == "stage_ns" && h.labels == format!("stage={name}"))
+            .unwrap_or_else(|| panic!("missing stage series '{name}'"))
+    };
+    for name in STAGE_NAMES {
+        let h = stage(name);
+        assert!(h.count > 0, "stage '{name}' must have samples, got {h:?}");
+        assert!(h.sum > 0, "stage '{name}' must have spent time, got {h:?}");
+        assert!(
+            h.p50 > 0 && h.p50 <= h.p95 && h.p95 <= h.p99,
+            "stage '{name}' percentiles must be non-zero and ordered, got {h:?}"
+        );
+    }
+    for key in ["lowrank", "relative"] {
+        let h = hists
+            .iter()
+            .find(|h| h.name == "spmm_ns" && h.labels == format!("kernel={key}"))
+            .unwrap_or_else(|| panic!("missing spmm series '{key}'"));
+        assert!(h.count > 0 && h.p50 > 0, "kernel '{key}': {h:?}");
+        let r = hists
+            .iter()
+            .find(|h| h.name == "request_ns" && h.labels == format!("model={key}"))
+            .unwrap_or_else(|| panic!("missing request series '{key}'"));
+        assert_eq!(r.count, 8, "model '{key}': {r:?}");
+    }
+    assert!(
+        hists.iter().any(|h| h.name == "spmm_shard_ns" && h.count > 0),
+        "per-shard timings must flow from the exec pool"
+    );
+
+    // The Prometheus scrape reports the same stages with counts.
+    let mut conn = TcpStream::connect(scraper.local_addr()).unwrap();
+    conn.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+    let mut response = String::new();
+    conn.read_to_string(&mut response).unwrap();
+    let body = response.split("\r\n\r\n").nth(1).expect("http body");
+    for name in STAGE_NAMES {
+        for q in ["0.5", "0.95", "0.99"] {
+            let line = format!("lrbi_stage_ns{{stage=\"{name}\",quantile=\"{q}\"}}");
+            assert!(body.contains(&line), "scrape missing {line}");
+        }
+        let count_line = format!("lrbi_stage_ns_count{{stage=\"{name}\"}}");
+        let count: u64 = body
+            .lines()
+            .find_map(|l| l.strip_prefix(count_line.as_str()))
+            .unwrap_or_else(|| panic!("scrape missing {count_line}"))
+            .trim()
+            .parse()
+            .unwrap();
+        assert!(count > 0, "scrape reports zero samples for stage '{name}'");
+    }
+    assert!(body.contains("lrbi_spmm_ns{kernel=\"relative\",quantile=\"0.5\"}"));
+    assert!(body.contains("# TYPE lrbi_net_requests counter"));
+
+    drop(scraper);
+    handle.shutdown();
+    runner.join().unwrap().unwrap();
+}
+
 #[test]
 fn shutdown_frame_stops_the_server_gracefully() {
     let params = small_params(10);

@@ -5,6 +5,7 @@
 
 use lrbi::coordinator::metrics::Metrics;
 use lrbi::coordinator::pool::ExecCtx;
+use lrbi::coordinator::telemetry::Stage;
 use lrbi::runtime::artifacts::{ArtifactSet, GEOMETRY};
 use lrbi::runtime::client::Runtime;
 use lrbi::serve::batcher::BatchPolicy;
@@ -45,8 +46,9 @@ fn native_engine_under_concurrent_load() {
                 for _ in 0..64 {
                     let x: Vec<f32> =
                         (0..GEOMETRY.input_dim).map(|_| rng.next_f32()).collect();
-                    let logits = c.call(x).unwrap().unwrap();
+                    let (logits, stages) = c.call(x).unwrap().unwrap();
                     assert_eq!(logits.len(), GEOMETRY.classes);
+                    assert!(stages.spmm > 0, "every served row carries its spmm timing");
                 }
             })
         })
@@ -119,6 +121,21 @@ fn steady_state_serving_allocates_nothing_on_the_spmm_hot_path() {
             snap.batch_buffer_reuse
         );
         assert_eq!(snap.batch_flush_count, 11);
+        // ISSUE 7: the telemetry histograms were recording the whole
+        // time (lock-free fetch_adds into preallocated buckets) and the
+        // hot path still allocated nothing after warm-up.
+        assert_eq!(
+            metrics.telemetry.stage(Stage::Queue).count(),
+            11,
+            "{}: every request's queue wait must land in the stage histogram",
+            format.name()
+        );
+        assert!(
+            metrics.telemetry.stage(Stage::Spmm).count() >= 1
+                && metrics.telemetry.stage(Stage::Spmm).sum() > 0,
+            "{}: spmm stage timings must record while staying allocation-free",
+            format.name()
+        );
     }
 }
 

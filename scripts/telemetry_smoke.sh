@@ -1,0 +1,89 @@
+#!/usr/bin/env bash
+# Telemetry smoke test: boot `lrbi serve --listen --metrics-addr`,
+# drive traffic through the wire protocol, snapshot `lrbi top`,
+# scrape the Prometheus endpoint, and validate the exposition format
+# line-by-line. Finishes by running the zero-allocation steady-state
+# test, proving the hot path stays allocation-free with the telemetry
+# histograms recording. Part of scripts/verify.sh and the CI
+# telemetry-smoke job; guide: docs/OBSERVABILITY.md.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+LRBI=./target/release/lrbi
+[ -x "$LRBI" ] || cargo build --release
+
+log="$(mktemp)"
+srv_pid=""
+cleanup() {
+  [ -n "$srv_pid" ] && kill "$srv_pid" 2>/dev/null || true
+  rm -f "$log"
+}
+trap cleanup EXIT
+
+echo "== boot: serve --listen --metrics-addr (lowrank kernel, 2 plan threads)"
+"$LRBI" serve --listen 127.0.0.1:0 --metrics-addr 127.0.0.1:0 \
+  --kernel lowrank --threads 2 --max-wait-ms 1 >"$log" 2>&1 &
+srv_pid=$!
+
+for _ in $(seq 1 100); do
+  grep -q "listening on " "$log" && break
+  kill -0 "$srv_pid" 2>/dev/null || { echo "server died:"; cat "$log"; exit 1; }
+  sleep 0.1
+done
+grep -q "listening on " "$log" || { echo "server never came up:"; cat "$log"; exit 1; }
+
+addr=$(sed -n 's/^listening on \([0-9.:]*\) .*/\1/p' "$log" | head -n1)
+maddr=$(sed -n 's|^metrics on http://\([0-9.:]*\) .*|\1|p' "$log" | head -n1)
+[ -n "$addr" ] || { echo "could not parse server address:"; cat "$log"; exit 1; }
+[ -n "$maddr" ] || { echo "could not parse metrics address:"; cat "$log"; exit 1; }
+echo "   server $addr, metrics $maddr"
+
+echo "== traffic: 32 INFER frames through the wire client"
+"$LRBI" serve --connect "$addr" --requests 32 --rows 2 >/dev/null
+
+echo "== lrbi top --iters 1 shows per-stage and per-kernel series"
+top_out=$("$LRBI" top --addr "$addr" --iters 1)
+echo "$top_out" | grep -q 'stage_ns{stage=spmm}' \
+  || { echo "top output missing spmm stage:"; echo "$top_out"; exit 1; }
+echo "$top_out" | grep -q 'spmm_ns{kernel=lowrank}' \
+  || { echo "top output missing kernel series:"; echo "$top_out"; exit 1; }
+
+echo "== scrape: ${maddr} answers Prometheus text"
+mhost=${maddr%:*}
+mport=${maddr##*:}
+exec 3<>"/dev/tcp/${mhost}/${mport}"
+printf 'GET /metrics HTTP/1.0\r\n\r\n' >&3
+scrape=$(cat <&3)
+exec 3<&- 3>&-
+
+body=$(printf '%s\n' "$scrape" | awk 'body{print} /^\r?$/{body=1}')
+for stage in decode queue batch spmm merge write; do
+  printf '%s\n' "$body" | grep -q "lrbi_stage_ns{stage=\"$stage\",quantile=\"0.5\"}" \
+    || { echo "scrape missing stage '$stage':"; printf '%s\n' "$body"; exit 1; }
+done
+printf '%s\n' "$body" | grep -q '# TYPE lrbi_stage_ns summary' \
+  || { echo "scrape missing TYPE line"; exit 1; }
+spmm_count=$(printf '%s\n' "$body" \
+  | sed -n 's/^lrbi_stage_ns_count{stage="spmm"} \([0-9]*\).*/\1/p')
+[ -n "$spmm_count" ] && [ "$spmm_count" -gt 0 ] \
+  || { echo "scrape reports no spmm samples (got '${spmm_count:-}')"; exit 1; }
+
+# every sample line must parse as `name{labels} value` / `name value`
+bad=$(printf '%s\n' "$body" | tr -d '\r' | grep -v '^#' | grep -v '^[[:space:]]*$' \
+  | grep -Ev '^lrbi_[A-Za-z0-9_]+(\{[^}]*\})? [0-9]+$' || true)
+if [ -n "$bad" ]; then
+  echo "malformed exposition lines:"
+  printf '%s\n' "$bad"
+  exit 1
+fi
+
+echo "== graceful shutdown over the wire"
+"$LRBI" serve --connect "$addr" --requests 0 --shutdown >/dev/null
+wait "$srv_pid"
+srv_pid=""
+
+echo "== zero-allocation steady state holds with telemetry recording"
+cargo test -q --release --test serving \
+  steady_state_serving_allocates_nothing_on_the_spmm_hot_path
+
+echo "telemetry smoke: OK"

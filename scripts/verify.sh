@@ -32,6 +32,9 @@ done
 ./target/release/lrbi pack --format lowrank --tiles 2 --out "$smoke_dir/tiled.lrbi" --rank 8 --sparsity 0.9 >/dev/null
 ./target/release/lrbi inspect --artifact "$smoke_dir/tiled.lrbi" >/dev/null
 
+echo "== telemetry smoke (serve --listen --metrics-addr + scrape + top + zero-alloc)"
+../scripts/telemetry_smoke.sh
+
 echo "== cargo doc --no-deps (warnings are errors)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
