@@ -28,7 +28,7 @@ use lrbi::serve::batcher::BatchPolicy;
 use lrbi::serve::engine::{MlpParams, NativeBackend};
 use lrbi::serve::kernels::KernelFormat;
 use lrbi::serve::protocol::RowBatch;
-use lrbi::serve::server::{ModelHub, NetClient, ServeOptions, Server};
+use lrbi::serve::server::{ClientOptions, ModelHub, NetClient, RetryPolicy, ServeOptions, Server};
 use lrbi::util::bench::{print_table, write_table_csv};
 use lrbi::util::bits::BitMatrix;
 use lrbi::util::rng::Rng;
@@ -60,7 +60,17 @@ fn run_load(
     let workers: Vec<_> = (0..clients)
         .map(|c| {
             std::thread::spawn(move || {
-                let mut client = NetClient::connect(addr).expect("connect");
+                // Transient overloads under the most aggressive cells
+                // are retried with jittered backoff instead of killing
+                // the worker; retry time counts against the request's
+                // measured latency, which is what an end-to-end client
+                // actually experiences.
+                let opts = ClientOptions {
+                    connect_timeout: Some(Duration::from_secs(5)),
+                    retry: RetryPolicy { seed: 0xBE5C + c as u64, ..RetryPolicy::default() },
+                    ..ClientOptions::default()
+                };
+                let mut client = NetClient::connect_with(addr, opts).expect("connect");
                 let mut rng = Rng::new(0xBE5C + c as u64);
                 let mut lat = Vec::with_capacity(per_client);
                 for _ in 0..per_client {
@@ -153,6 +163,7 @@ fn main() {
                         max_conns: clients + 4,
                         max_queue: 1024,
                         policy,
+                        ..ServeOptions::default()
                     };
                     let hub = ModelHub::from_backend(
                         "default",

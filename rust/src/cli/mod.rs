@@ -170,11 +170,15 @@ fn print_usage() {
          \x20            --registry dir [--swap name]  serve registry variants\n\
          \x20            --listen HOST:PORT   speak the wire protocol\n\
          \x20            --max-conns 64  --max-queue 256   admission control\n\
+         \x20            --idle-timeout-ms 300000   reclaim silent connections\n\
          \x20            --metrics-addr HOST:PORT   Prometheus text scrape endpoint\n\
          \x20            --connect HOST:PORT [--requests N --rows R --shutdown]\n\
          \x20            \x20  drive INFER traffic at a running server instead\n\
+         \x20            --deadline-ms D   per-call budget (0 = expired-shed probe)\n\
+         \x20            --retries N  --retry-base-ms 10   retry transient failures\n\
+         \x20            --connect-timeout-ms T  --io-timeout-ms T   socket bounds\n\
          \x20            (ops guide: docs/SERVING.md, wire spec: docs/PROTOCOL.md,\n\
-         \x20             telemetry: docs/OBSERVABILITY.md)\n\
+         \x20             telemetry: docs/OBSERVABILITY.md, faults: docs/ROBUSTNESS.md)\n\
          \x20 top        live per-stage/per-kernel latency table from a server\n\
          \x20            --addr 127.0.0.1:4000  --interval-ms 1000  --iters 0\n\
          \x20 pack       package a compressed model as a .lrbi artifact\n\
@@ -411,6 +415,7 @@ fn serve_listen(args: &Args, addr: &str) -> Result<()> {
     let metrics = std::sync::Arc::new(Metrics::new());
     let ctx = exec_ctx_from_args(args, &metrics)?;
     let threads = ctx.threads();
+    let defaults = ServeOptions::default();
     let opts = ServeOptions {
         max_conns: args.get("max-conns", 64usize)?,
         max_queue: args.get("max-queue", 256usize)?,
@@ -418,6 +423,9 @@ fn serve_listen(args: &Args, addr: &str) -> Result<()> {
             max_batch: args.get("max-batch", 64usize)?,
             max_wait: std::time::Duration::from_millis(args.get("max-wait-ms", 2u64)?),
         },
+        idle_timeout: std::time::Duration::from_millis(
+            args.get("idle-timeout-ms", defaults.idle_timeout.as_millis() as u64)?,
+        ),
     };
     let hub = if let Some(dir) = args.flags.get("registry") {
         ModelHub::from_registry(
@@ -491,32 +499,105 @@ fn serve_listen(args: &Args, addr: &str) -> Result<()> {
     Ok(())
 }
 
+/// Optional millisecond-flag → `Duration` (absent flag = `None`).
+fn opt_ms(args: &Args, key: &str) -> Result<Option<std::time::Duration>> {
+    match args.flags.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<u64>()
+            .map(|ms| Some(std::time::Duration::from_millis(ms)))
+            .map_err(|_| Error::invalid(format!("bad value for --{key}: {v}"))),
+    }
+}
+
 /// `lrbi serve --connect HOST:PORT`: drive synthetic INFER traffic at
 /// a running `--listen` server (the smoke-test / demo client).
 /// `--requests N` frames of `--rows R` each against `--model KEY`
 /// ("" = server default); `--shutdown` sends a SHUTDOWN frame after
 /// the traffic (usable alone with `--requests 0`).
+///
+/// Resilience knobs: `--retries N --retry-base-ms B` retries
+/// `overloaded` replies and transient I/O with jittered backoff;
+/// `--connect-timeout-ms` / `--io-timeout-ms` bound the socket;
+/// `--deadline-ms D` sets the per-call budget (sent on the wire as
+/// `deadline_us` so the server sheds abandoned work). `--deadline-ms
+/// 0` is the explicit shed probe: each INFER is sent already expired
+/// and the `deadline-exceeded` replies are counted, not fatal.
 fn serve_connect(args: &Args, addr: &str) -> Result<()> {
-    use crate::serve::protocol::RowBatch;
-    use crate::serve::server::NetClient;
+    use crate::serve::protocol::{ErrorCode, Frame, RowBatch};
+    use crate::serve::server::{ClientOptions, NetClient, RetryPolicy};
     let requests: usize = args.get("requests", 64)?;
     let rows: usize = args.get("rows", 4)?;
     let dim: usize = args.get("dim", crate::runtime::artifacts::GEOMETRY.input_dim)?;
     let key = args.get_str("model", "");
-    let mut client = NetClient::connect(addr)?;
+    let deadline_ms: Option<u64> = match args.flags.get("deadline-ms") {
+        None => None,
+        Some(v) => Some(
+            v.parse::<u64>()
+                .map_err(|_| Error::invalid(format!("bad value for --deadline-ms: {v}")))?,
+        ),
+    };
+    let probe_expired = deadline_ms == Some(0);
+    let base = RetryPolicy::default();
+    let opts = ClientOptions {
+        connect_timeout: opt_ms(args, "connect-timeout-ms")?,
+        io_timeout: opt_ms(args, "io-timeout-ms")?,
+        retry: RetryPolicy {
+            max_retries: args.get("retries", 0u32)?,
+            base_backoff: std::time::Duration::from_millis(args.get("retry-base-ms", 10u64)?),
+            ..base
+        },
+        deadline: deadline_ms
+            .filter(|ms| *ms > 0)
+            .map(std::time::Duration::from_millis),
+    };
+    let mut client = NetClient::connect_with(addr, opts)?;
     let mut rng = crate::util::rng::Rng::new(23);
+    let mut shed = 0usize;
     let t0 = Instant::now();
     for _ in 0..requests {
         let data: Vec<f32> = (0..rows * dim).map(|_| rng.next_f32()).collect();
         let batch = RowBatch::new(rows, dim, data)?;
-        client.infer(&key, batch)?;
+        if probe_expired {
+            // Already-expired on arrival: the server must answer
+            // DEADLINE_EXCEEDED without running spmm.
+            let reply = client.call(&Frame::Infer {
+                key: key.clone(),
+                batch,
+                deadline_us: Some(0),
+            })?;
+            match reply {
+                Frame::Error { code: ErrorCode::DeadlineExceeded, .. } => shed += 1,
+                Frame::Logits(_) => {}
+                Frame::Error { code, message } => {
+                    return Err(Error::Protocol(format!("{}: {message}", code.name())));
+                }
+                other => {
+                    return Err(Error::Protocol(format!(
+                        "expected LOGITS or ERROR, got {}",
+                        other.type_name()
+                    )));
+                }
+            }
+        } else {
+            match client.infer(&key, batch) {
+                Ok(_) => {}
+                // A shed request is an expected outcome under an
+                // aggressive budget, not a client failure.
+                Err(Error::Protocol(m)) if m.starts_with("deadline-exceeded") => shed += 1,
+                Err(Error::Deadline(_)) => shed += 1,
+                Err(e) => return Err(e),
+            }
+        }
     }
     let dt = t0.elapsed();
     if requests > 0 {
         println!(
-            "sent {requests} INFER frames ({rows} row(s) each) to {addr} in {:.3}s ({:.0} req/s)",
+            "sent {requests} INFER frames ({rows} row(s) each) to {addr} in {:.3}s \
+             ({:.0} req/s); {shed} shed by deadline, {} retries observed",
             dt.as_secs_f64(),
-            requests as f64 / dt.as_secs_f64().max(1e-9)
+            requests as f64 / dt.as_secs_f64().max(1e-9),
+            crate::coordinator::metrics::net_retries_total()
         );
     }
     if args.flags.contains_key("shutdown") {

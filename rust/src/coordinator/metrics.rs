@@ -99,6 +99,37 @@ pub struct Metrics {
     /// batcher (`DynamicBatcher::recycle`) — one per steady-state
     /// flush, so flushes stop allocating request storage.
     pub batch_buffer_reuse: AtomicU64,
+    /// Requests shed with a `deadline-exceeded` error frame because
+    /// their budget expired before execution (at admission or at
+    /// dequeue, before spmm ran).
+    pub net_deadline_exceeded: AtomicU64,
+    /// Requests shed at admission because predicted completion time
+    /// (the p95 of the model's `request_ns` histogram) exceeded the
+    /// remaining deadline budget — a subset of work that would have
+    /// become `net_deadline_exceeded` later, refused early instead.
+    pub net_shed_predicted: AtomicU64,
+    /// Connections dropped because arming the idle/write socket
+    /// timeout failed — a connection is never allowed to run
+    /// untimed (see `docs/ROBUSTNESS.md`).
+    pub net_timeout_config_errors: AtomicU64,
+}
+
+/// Client-side retries (`NetClient` backoff) observed in this process.
+/// Process-global rather than a [`Metrics`] field because the client
+/// has no server `Metrics` instance; in-process clients (tests, the
+/// loadgen bench, `serve --connect`) surface through the snapshot's
+/// `net_retries_observed` counter.
+static NET_RETRIES: AtomicU64 = AtomicU64::new(0);
+
+/// Record one client-side retry (a re-sent request, not the first
+/// attempt).
+pub fn record_net_retry() {
+    NET_RETRIES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Total client-side retries observed in this process.
+pub fn net_retries_total() -> u64 {
+    NET_RETRIES.load(Ordering::Relaxed)
 }
 
 /// A point-in-time copy for reporting.
@@ -156,6 +187,19 @@ pub struct MetricsSnapshot {
     pub scratch_reuse: u64,
     /// Batcher flushes served from a recycled request buffer.
     pub batch_buffer_reuse: u64,
+    /// Requests shed with `deadline-exceeded` (expired budget).
+    pub net_deadline_exceeded: u64,
+    /// Requests shed at admission by predicted completion time.
+    pub net_shed_predicted: u64,
+    /// Connections closed because a socket timeout could not be armed.
+    pub net_timeout_config_errors: u64,
+    /// Client-side retries observed in this process (process-global;
+    /// see [`record_net_retry`]).
+    pub net_retries_observed: u64,
+    /// Faults injected by the process-global fault plan
+    /// (`util::fault`; 0 unless `LRBI_FAULT` / a chaos test installed
+    /// a plan).
+    pub faults_injected: u64,
 }
 
 impl Metrics {
@@ -204,6 +248,11 @@ impl Metrics {
             spmm_alloc_bytes: self.spmm_alloc_bytes.load(Ordering::Relaxed),
             scratch_reuse: self.scratch_reuse.load(Ordering::Relaxed),
             batch_buffer_reuse: self.batch_buffer_reuse.load(Ordering::Relaxed),
+            net_deadline_exceeded: self.net_deadline_exceeded.load(Ordering::Relaxed),
+            net_shed_predicted: self.net_shed_predicted.load(Ordering::Relaxed),
+            net_timeout_config_errors: self.net_timeout_config_errors.load(Ordering::Relaxed),
+            net_retries_observed: net_retries_total(),
+            faults_injected: crate::util::fault::injected_total(),
         }
     }
 
@@ -315,6 +364,11 @@ impl MetricsSnapshot {
             ("spmm_alloc_bytes", self.spmm_alloc_bytes),
             ("scratch_reuse", self.scratch_reuse),
             ("batch_buffer_reuse", self.batch_buffer_reuse),
+            ("net_deadline_exceeded", self.net_deadline_exceeded),
+            ("net_shed_predicted", self.net_shed_predicted),
+            ("net_timeout_config_errors", self.net_timeout_config_errors),
+            ("net_retries_observed", self.net_retries_observed),
+            ("faults_injected", self.faults_injected),
         ];
         for (i, name) in SPMM_NS_COUNTER_NAMES.into_iter().enumerate() {
             out.push((name, self.spmm_kernel_ns[i]));
@@ -400,7 +454,7 @@ mod tests {
         let s = m.snapshot();
         let named = s.named_counters();
         // scalar fields + one entry per spmm kernel slot
-        assert_eq!(named.len(), 25 + SPMM_NS_COUNTER_NAMES.len());
+        assert_eq!(named.len(), 30 + SPMM_NS_COUNTER_NAMES.len());
         let mut names: Vec<&str> = named.iter().map(|(n, _)| *n).collect();
         names.sort_unstable();
         names.dedup();
@@ -411,6 +465,27 @@ mod tests {
         assert_eq!(get("net_rejected_overload"), 0);
         assert_eq!(get("spmm_alloc_bytes"), 0);
         assert_eq!(get("batch_buffer_reuse"), 0);
+        assert_eq!(get("net_deadline_exceeded"), 0);
+        assert_eq!(get("net_shed_predicted"), 0);
+        assert_eq!(get("net_timeout_config_errors"), 0);
+        // net_retries_observed / faults_injected are process-global
+        // (other tests may have moved them) — presence is asserted by
+        // the uniqueness sweep above, not a zero value.
+    }
+
+    #[test]
+    fn deadline_and_retry_counters_snapshot() {
+        let m = Metrics::new();
+        m.net_deadline_exceeded.fetch_add(3, Ordering::Relaxed);
+        m.net_shed_predicted.fetch_add(1, Ordering::Relaxed);
+        m.net_timeout_config_errors.fetch_add(2, Ordering::Relaxed);
+        let before = net_retries_total();
+        record_net_retry();
+        let s = m.snapshot();
+        assert_eq!(s.net_deadline_exceeded, 3);
+        assert_eq!(s.net_shed_predicted, 1);
+        assert_eq!(s.net_timeout_config_errors, 2);
+        assert!(s.net_retries_observed >= before + 1, "retry global is monotonic");
     }
 
     #[test]

@@ -337,7 +337,27 @@ impl ExecCtx {
 
     fn run_inner(&self, shards: usize, f: &(dyn Fn(usize) + Sync)) -> Result<()> {
         match &self.pool {
-            Some(pool) if shards > 1 => pool.run_indexed(shards, f),
+            Some(pool) if shards > 1 => {
+                // Chaos hooks (no-ops unless a fault plan is live; see
+                // util::fault). Only shard 0 consults the plan, so one
+                // plan execution consumes exactly one hit ordinal, and
+                // only pooled runs inject the panic — run_indexed's
+                // unwind fence turns it into a typed coordinator error
+                // instead of killing the calling thread.
+                let faulted = |s: usize| {
+                    if s == 0 {
+                        use crate::util::fault::{self, FaultPoint};
+                        if let Some(a) = fault::fire(FaultPoint::SlowShard) {
+                            fault::stall(&a);
+                        }
+                        if fault::fire(FaultPoint::ShardPanic).is_some() {
+                            panic!("injected shard panic (fault plan)");
+                        }
+                    }
+                    f(s);
+                };
+                pool.run_indexed(shards, &faulted)
+            }
             _ => {
                 for s in 0..shards {
                     f(s);
@@ -616,6 +636,42 @@ mod tests {
         // without metrics, run() stays untimed and works
         ExecCtx::new(2, None).run(4, |_| {}).unwrap();
         assert_eq!(t.shard().count(), 11);
+    }
+
+    #[test]
+    fn injected_shard_faults_degrade_gracefully() {
+        use crate::util::fault::{self, FaultPlan};
+        let _g = fault::test_guard();
+
+        // slow shard: the run completes correctly, just later
+        fault::install(FaultPlan::parse("slow_shard=1:5").unwrap());
+        let ctx = ExecCtx::new(3, None);
+        let hits: Vec<AtomicU64> = (0..6).map(|_| AtomicU64::new(0)).collect();
+        ctx.run(6, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+
+        // shard panic: typed coordinator error, pool survives
+        fault::install(FaultPlan::parse("shard_panic=1").unwrap());
+        let err = ctx.run(6, |_| {}).unwrap_err();
+        assert!(
+            err.to_string().contains("injected shard panic"),
+            "want the fault surfaced as a typed error, got: {err}"
+        );
+        // hit 1 was consumed; the next run is clean on the same pool
+        let ok: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+        ctx.run(4, |i| {
+            ok[i].fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert!(ok.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+
+        // inline contexts never consult the shard fault points
+        fault::install(FaultPlan::parse("shard_panic=1+*").unwrap());
+        ExecCtx::single().run(3, |_| {}).unwrap();
+        fault::clear();
     }
 
     #[test]

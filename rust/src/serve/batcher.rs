@@ -34,6 +34,11 @@ pub struct Request<T, R> {
     /// When the request entered the submit queue — the executor turns
     /// this into the `queue` stage (submit → dequeue wall time).
     pub enqueued: Instant,
+    /// Absolute expiry of the request's deadline budget, if it carried
+    /// one. The batcher flushes no later than the earliest pending
+    /// deadline, and the executor sheds expired requests at dequeue
+    /// instead of running them (see `docs/ROBUSTNESS.md`).
+    pub deadline: Option<Instant>,
 }
 
 /// Collects requests into batches per the policy. The executor thread
@@ -85,7 +90,7 @@ impl<T, R> BatcherClient<T, R> {
     pub fn call(&self, input: T) -> Option<R> {
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
         self.tx
-            .send(Request { input, reply: reply_tx, enqueued: Instant::now() })
+            .send(Request { input, reply: reply_tx, enqueued: Instant::now(), deadline: None })
             .ok()?;
         reply_rx.recv().ok()
     }
@@ -95,8 +100,25 @@ impl<T, R> BatcherClient<T, R> {
     /// [`SubmitError::Overloaded`] instead of stalling the caller —
     /// bounded queues must reject, not silently queue-build.
     pub fn try_submit(&self, input: T) -> std::result::Result<mpsc::Receiver<R>, SubmitError> {
+        self.try_submit_with(input, None)
+    }
+
+    /// [`BatcherClient::try_submit`] with a deadline: the request is
+    /// shed (not executed) if `deadline` passes before the executor
+    /// dequeues it, and its arrival pulls the flush window forward to
+    /// no later than the deadline.
+    pub fn try_submit_with(
+        &self,
+        input: T,
+        deadline: Option<Instant>,
+    ) -> std::result::Result<mpsc::Receiver<R>, SubmitError> {
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
-        match self.tx.try_send(Request { input, reply: reply_tx, enqueued: Instant::now() }) {
+        match self.tx.try_send(Request {
+            input,
+            reply: reply_tx,
+            enqueued: Instant::now(),
+            deadline,
+        }) {
             Ok(()) => Ok(reply_rx),
             Err(mpsc::TrySendError::Full(_)) => Err(SubmitError::Overloaded),
             Err(mpsc::TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
@@ -146,14 +168,29 @@ impl<T, R> DynamicBatcher<T, R> {
         // first request is in hand — idle blocking above is not
         // batching latency
         let formed = Instant::now();
-        let deadline = formed + self.policy.max_wait;
+        // earliest-deadline flush: the window closes at max_wait or at
+        // the earliest pending request deadline, whichever comes first,
+        // so a tight-budget request is never held for stragglers (and
+        // an already-expired one reaches the executor's shed path
+        // immediately)
+        let mut flush_at = formed + self.policy.max_wait;
+        for r in &self.pending {
+            if let Some(d) = r.deadline {
+                flush_at = flush_at.min(d);
+            }
+        }
         while self.pending.len() < self.policy.max_batch {
             let now = Instant::now();
-            if now >= deadline {
+            if now >= flush_at {
                 break;
             }
-            match self.rx.recv_timeout(deadline - now) {
-                Ok(r) => self.pending.push(r),
+            match self.rx.recv_timeout(flush_at - now) {
+                Ok(r) => {
+                    if let Some(d) = r.deadline {
+                        flush_at = flush_at.min(d);
+                    }
+                    self.pending.push(r);
+                }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
@@ -309,6 +346,49 @@ mod tests {
             "recycles recorded: {}",
             metrics.snapshot().batch_buffer_reuse
         );
+    }
+
+    #[test]
+    fn earliest_deadline_pulls_the_flush_window_forward() {
+        // max_wait is far (1 s); a request with a ~10 ms deadline must
+        // flush near its deadline, not the window.
+        let (mut b, client) = DynamicBatcher::<u32, u32>::new(
+            BatchPolicy { max_batch: 100, max_wait: Duration::from_secs(1) },
+            16,
+        );
+        let _rx = client
+            .try_submit_with(1, Some(Instant::now() + Duration::from_millis(10)))
+            .unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(batch.len(), 1);
+        assert!(batch[0].deadline.is_some());
+        assert!(waited < Duration::from_millis(500), "flushed at deadline, not max_wait");
+    }
+
+    #[test]
+    fn expired_deadline_flushes_immediately() {
+        let (mut b, client) = DynamicBatcher::<u32, u32>::new(
+            BatchPolicy { max_batch: 100, max_wait: Duration::from_secs(1) },
+            16,
+        );
+        let _rx = client.try_submit_with(1, Some(Instant::now())).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn plain_submits_carry_no_deadline() {
+        let (mut b, client) = DynamicBatcher::<u32, u32>::new(
+            BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+            4,
+        );
+        let _rx = client.try_submit(5).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert!(batch[0].deadline.is_none());
     }
 
     #[test]

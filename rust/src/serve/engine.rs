@@ -448,6 +448,7 @@ impl ServingEngine {
                 let mut x = Matrix::zeros(bsz, dim);
                 let mut logits = Matrix::zeros(0, 0);
                 let mut bad: Vec<bool> = Vec::new();
+                let mut shed: Vec<bool> = Vec::new();
                 // per-request queue wait of the current flush; cleared
                 // and refilled each flush, so it stops allocating once
                 // capacity covers max_batch
@@ -460,6 +461,8 @@ impl ServingEngine {
                     x.reset_zero(bsz, dim);
                     bad.clear();
                     bad.resize(batch.len(), false);
+                    shed.clear();
+                    shed.resize(batch.len(), false);
                     queue_ns.clear();
                     for (slot, req) in batch.iter().enumerate() {
                         // submit → dequeue (includes the formation
@@ -467,6 +470,14 @@ impl ServingEngine {
                         let ns = dequeued.duration_since(req.enqueued).as_nanos() as u64;
                         m.telemetry.record_stage(Stage::Queue, ns);
                         queue_ns.push(ns);
+                        // deadline check at dequeue: an expired request
+                        // is shed *before* its row is padded into the
+                        // batch, so it never enters spmm
+                        if req.deadline.is_some_and(|d| dequeued >= d) {
+                            shed[slot] = true;
+                            m.net_deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
                         if slot < bsz {
                             if req.input.len() == dim {
                                 for (j, &v) in req.input.iter().enumerate() {
@@ -477,12 +488,17 @@ impl ServingEngine {
                             }
                         }
                     }
-                    let result = backend.predict_into(&x, &mut logits);
+                    // skip the backend entirely when every slot was
+                    // shed or invalid — an all-expired flush must not
+                    // run (or count) an spmm
+                    let live = (0..batch.len().min(bsz)).any(|s| !bad[s] && !shed[s]);
+                    let result =
+                        if live { backend.predict_into(&x, &mut logits) } else { Ok(()) };
                     // flush-level stages, shared by every request that
                     // rode in this batch (0 = the backend doesn't time
                     // that stage / nothing ran — not recorded)
-                    let spmm_ns = backend.last_spmm_ns();
-                    let merge_ns = backend.take_last_merge_ns();
+                    let spmm_ns = if live { backend.last_spmm_ns() } else { 0 };
+                    let merge_ns = if live { backend.take_last_merge_ns() } else { 0 };
                     if result.is_ok() {
                         if spmm_ns > 0 {
                             m.telemetry.record_stage(Stage::Spmm, spmm_ns);
@@ -498,7 +514,11 @@ impl ServingEngine {
                         ..Default::default()
                     };
                     for (slot, req) in batch.drain(..).enumerate() {
-                        let reply = if slot >= bsz {
+                        let reply = if shed[slot] {
+                            Err(Error::Deadline(
+                                "budget expired before execution; request shed".into(),
+                            ))
+                        } else if slot >= bsz {
                             Err(Error::Coordinator("batch overflow".into()))
                         } else if bad[slot] {
                             Err(Error::shape("bad input dimension"))
@@ -719,6 +739,64 @@ mod tests {
                 fmt.name()
             );
         }
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_at_dequeue_without_running_spmm() {
+        let params = MlpParams::init(5);
+        let (ip, iz) = dense_factors();
+        let metrics = Arc::new(Metrics::new());
+        let backend =
+            NativeBackend::new(params, &ip, &iz).unwrap().with_metrics(Arc::clone(&metrics));
+        let engine = ServingEngine::start(
+            backend,
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) },
+            Arc::clone(&metrics),
+        );
+        let client = engine.client();
+        // a deadline already in the past: the batcher flushes it
+        // immediately and the executor sheds it at dequeue
+        let rx = client
+            .try_submit_with(
+                vec![0.0; GEOMETRY.input_dim],
+                Some(std::time::Instant::now() - Duration::from_millis(1)),
+            )
+            .unwrap();
+        let reply = rx.recv().unwrap();
+        assert!(
+            matches!(reply, Err(Error::Deadline(_))),
+            "expected a deadline shed, got {reply:?}"
+        );
+        let snap = metrics.snapshot();
+        assert_eq!(snap.net_deadline_exceeded, 1);
+        assert_eq!(snap.kernel_spmms, 0, "shed rows must never enter spmm");
+        // the engine is still healthy: a deadline-free request serves
+        let (logits, _) = client.call(vec![0.0; GEOMETRY.input_dim]).unwrap().unwrap();
+        assert_eq!(logits.len(), GEOMETRY.classes);
+        assert!(metrics.snapshot().kernel_spmms >= 1);
+    }
+
+    #[test]
+    fn unexpired_deadline_serves_normally() {
+        let params = MlpParams::init(6);
+        let (ip, iz) = dense_factors();
+        let backend = NativeBackend::new(params, &ip, &iz).unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let engine = ServingEngine::start(
+            backend,
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) },
+            Arc::clone(&metrics),
+        );
+        let rx = engine
+            .client()
+            .try_submit_with(
+                vec![0.0; GEOMETRY.input_dim],
+                Some(std::time::Instant::now() + Duration::from_secs(30)),
+            )
+            .unwrap();
+        let (logits, _) = rx.recv().unwrap().unwrap();
+        assert_eq!(logits.len(), GEOMETRY.classes);
+        assert_eq!(metrics.snapshot().net_deadline_exceeded, 0);
     }
 
     #[test]

@@ -42,4 +42,6 @@ pub use metrics_http::MetricsServer;
 pub use protocol::{
     ErrorCode, Frame, HistSummary, RowBatch, WireError, MAX_FRAME, PROTOCOL_VERSION,
 };
-pub use server::{ModelHub, ModelSlot, NetClient, ServeOptions, Server, ServerHandle};
+pub use server::{
+    ClientOptions, ModelHub, ModelSlot, NetClient, RetryPolicy, ServeOptions, Server, ServerHandle,
+};

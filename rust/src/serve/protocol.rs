@@ -74,11 +74,17 @@ pub enum ErrorCode {
     Internal = 7,
     /// The server is shutting down and no longer admits requests.
     ShuttingDown = 8,
+    /// The request's deadline budget expired before (or during)
+    /// execution, or admission control predicted the request could
+    /// not finish inside its remaining budget — the request was shed
+    /// without running spmm (see `docs/ROBUSTNESS.md`). Retrying is
+    /// only useful with a larger budget.
+    DeadlineExceeded = 9,
 }
 
 impl ErrorCode {
     /// Every code, in wire order.
-    pub const ALL: [ErrorCode; 8] = [
+    pub const ALL: [ErrorCode; 9] = [
         ErrorCode::BadVersion,
         ErrorCode::BadFrame,
         ErrorCode::TooLarge,
@@ -87,6 +93,7 @@ impl ErrorCode {
         ErrorCode::Overloaded,
         ErrorCode::Internal,
         ErrorCode::ShuttingDown,
+        ErrorCode::DeadlineExceeded,
     ];
 
     /// Decode a wire byte.
@@ -105,6 +112,7 @@ impl ErrorCode {
             ErrorCode::Overloaded => "overloaded",
             ErrorCode::Internal => "internal",
             ErrorCode::ShuttingDown => "shutting-down",
+            ErrorCode::DeadlineExceeded => "deadline-exceeded",
         }
     }
 }
@@ -123,6 +131,15 @@ impl WireError {
     /// Build from a code + displayable context.
     pub fn new(code: ErrorCode, message: impl std::fmt::Display) -> Self {
         WireError { code, message: message.to_string() }
+    }
+
+    /// True when the stream can no longer be re-synced after this
+    /// error and the server must close the connection (an oversized
+    /// length prefix, or a peer that went silent mid-frame). All other
+    /// wire errors are answered with an error frame and the connection
+    /// stays usable.
+    pub fn unsyncable(&self) -> bool {
+        self.code == ErrorCode::TooLarge || self.message.starts_with("stream timed out inside")
     }
 }
 
@@ -247,6 +264,14 @@ pub enum Frame {
         key: String,
         /// Input rows, each `input_dim` wide.
         batch: RowBatch,
+        /// Optional deadline budget in **microseconds**, measured by
+        /// the server from the moment it decodes the frame (a relative
+        /// budget needs no clock sync). `None` encodes byte-identically
+        /// to the original INFER layout, so pre-deadline clients keep
+        /// working unchanged; `Some(0)` is an already-expired request
+        /// (useful to probe shedding). Expired or unaffordable
+        /// requests are answered with [`ErrorCode::DeadlineExceeded`].
+        deadline_us: Option<u64>,
     },
     /// Per-row logits answering an `Infer`.
     Logits(RowBatch),
@@ -394,9 +419,15 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
     payload.push(PROTOCOL_VERSION);
     payload.push(frame.type_byte());
     match frame {
-        Frame::Infer { key, batch } => {
+        Frame::Infer { key, batch, deadline_us } => {
             put_short_str(&mut payload, key);
             put_batch(&mut payload, batch);
+            // Optional trailing deadline (minor protocol revision):
+            // omitted entirely for `None`, so deadline-free frames stay
+            // byte-identical to the original INFER layout.
+            if let Some(us) = deadline_us {
+                payload.extend_from_slice(&us.to_le_bytes());
+            }
         }
         Frame::Logits(batch) => put_batch(&mut payload, batch),
         Frame::Error { code, message } => {
@@ -507,6 +538,10 @@ impl<'a> Cur<'a> {
         Ok(RowBatch { rows, cols, data })
     }
 
+    fn remaining(&self) -> usize {
+        self.b.len() - self.off
+    }
+
     fn done(self, what: &str) -> Result<(), WireError> {
         if self.off != self.b.len() {
             return Err(WireError::new(
@@ -535,7 +570,13 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
         FT_INFER => {
             let key = cur.short_str("model key")?;
             let batch = cur.batch()?;
-            Frame::Infer { key, batch }
+            // Optional trailing deadline: exactly 8 more bytes means a
+            // deadline-carrying client; 0 means a legacy frame. Any
+            // other residue falls through to the strict trailing-bytes
+            // check in `done`.
+            let deadline_us =
+                if cur.remaining() == 8 { Some(cur.u64("deadline")?) } else { None };
+            Frame::Infer { key, batch, deadline_us }
         }
         FT_LOGITS => Frame::Logits(cur.batch()?),
         FT_ERROR => {
@@ -579,6 +620,12 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
     Ok(frame)
 }
 
+/// Whether an I/O error is a read-timeout expiry. Timeouts surface as
+/// `WouldBlock` or `TimedOut` depending on platform.
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
 /// Write one frame to a stream.
 pub fn write_frame(w: &mut impl Write, frame: &Frame) -> std::io::Result<()> {
     w.write_all(&encode(frame))?;
@@ -612,6 +659,17 @@ pub fn read_frame_timed(r: &mut impl Read) -> Result<Option<(Frame, u64)>, ReadE
             }
             Ok(n) => got += n,
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) && got > 0 => {
+                // Slow-loris: the peer opened a frame and went silent.
+                // Mid-frame silence is a protocol violation (the stream
+                // can no longer be re-synced), unlike an idle timeout
+                // at a frame boundary (`got == 0`), which stays a plain
+                // I/O close below.
+                return Err(ReadError::Wire(WireError::new(
+                    ErrorCode::BadFrame,
+                    "stream timed out inside a length prefix",
+                )));
+            }
             Err(e) => return Err(ReadError::Io(e)),
         }
     }
@@ -629,6 +687,12 @@ pub fn read_frame_timed(r: &mut impl Read) -> Result<Option<(Frame, u64)>, ReadE
             return Err(ReadError::Wire(WireError::new(
                 ErrorCode::BadFrame,
                 "stream ended inside a frame payload",
+            )));
+        }
+        Err(e) if is_timeout(&e) => {
+            return Err(ReadError::Wire(WireError::new(
+                ErrorCode::BadFrame,
+                "stream timed out inside a frame payload",
             )));
         }
         Err(e) => return Err(ReadError::Io(e)),
@@ -662,8 +726,14 @@ mod tests {
     fn every_frame_kind_round_trips() {
         let batch = RowBatch::new(2, 3, vec![1.0, -2.5, 0.0, 3.25, f32::MIN, f32::MAX]).unwrap();
         let frames = [
-            Frame::Infer { key: "k16".into(), batch: batch.clone() },
-            Frame::Infer { key: String::new(), batch: RowBatch::new(0, 0, vec![]).unwrap() },
+            Frame::Infer { key: "k16".into(), batch: batch.clone(), deadline_us: None },
+            Frame::Infer { key: "k16".into(), batch: batch.clone(), deadline_us: Some(1500) },
+            Frame::Infer { key: "k16".into(), batch: batch.clone(), deadline_us: Some(0) },
+            Frame::Infer {
+                key: String::new(),
+                batch: RowBatch::new(0, 0, vec![]).unwrap(),
+                deadline_us: Some(u64::MAX),
+            },
             Frame::Logits(batch),
             Frame::error(ErrorCode::Overloaded, "queue full"),
             Frame::StatsRequest,
@@ -717,7 +787,8 @@ mod tests {
         assert_eq!(
             Frame::Infer {
                 key: String::new(),
-                batch: RowBatch::new(0, 0, vec![]).unwrap()
+                batch: RowBatch::new(0, 0, vec![]).unwrap(),
+                deadline_us: None,
             }
             .type_byte(),
             0x01
@@ -725,11 +796,114 @@ mod tests {
         assert_eq!(Frame::Shutdown.type_byte(), 0x08);
         assert_eq!(Frame::Stats2Request.type_byte(), 0x09);
         assert_eq!(Frame::Stats2 { counters: vec![], histograms: vec![] }.type_byte(), 0x0A);
+        assert_eq!(ErrorCode::DeadlineExceeded as u8, 9);
+        assert_eq!(ErrorCode::DeadlineExceeded.name(), "deadline-exceeded");
         for code in ErrorCode::ALL {
             assert_eq!(ErrorCode::from_u8(code as u8), Some(code));
         }
         assert_eq!(ErrorCode::from_u8(0), None);
         assert_eq!(ErrorCode::from_u8(99), None);
+    }
+
+    #[test]
+    fn deadline_free_infer_is_byte_identical_to_the_v0_layout() {
+        // Handcraft the original (pre-deadline) INFER encoding and pin
+        // that `deadline_us: None` still produces exactly those bytes —
+        // the "old clients keep working unchanged" guarantee.
+        let batch = RowBatch::new(1, 2, vec![1.0, -2.0]).unwrap();
+        let mut payload = vec![PROTOCOL_VERSION, 0x01];
+        payload.extend_from_slice(&(3u16).to_le_bytes());
+        payload.extend_from_slice(b"key");
+        payload.extend_from_slice(&(1u32).to_le_bytes());
+        payload.extend_from_slice(&(2u32).to_le_bytes());
+        payload.extend_from_slice(&1.0f32.to_le_bytes());
+        payload.extend_from_slice(&(-2.0f32).to_le_bytes());
+        let mut legacy = (payload.len() as u32).to_le_bytes().to_vec();
+        legacy.extend_from_slice(&payload);
+
+        let frame = Frame::Infer { key: "key".into(), batch, deadline_us: None };
+        assert_eq!(encode(&frame), legacy);
+        // and a deadline adds exactly the 8 trailing bytes
+        let Frame::Infer { key, batch, .. } = frame else { unreachable!() };
+        let with = encode(&Frame::Infer { key, batch, deadline_us: Some(7) });
+        assert_eq!(with.len(), legacy.len() + 8);
+    }
+
+    #[test]
+    fn partial_trailing_deadline_is_rejected() {
+        let batch = RowBatch::new(1, 1, vec![0.5]).unwrap();
+        let mut wire =
+            encode(&Frame::Infer { key: "k".into(), batch, deadline_us: Some(42) });
+        // chop 3 of the 8 deadline bytes and fix up the length prefix
+        wire.truncate(wire.len() - 3);
+        let plen = (wire.len() - 4) as u32;
+        wire[..4].copy_from_slice(&plen.to_le_bytes());
+        let mut r = &wire[..];
+        match read_frame(&mut r) {
+            Err(ReadError::Wire(e)) => {
+                assert_eq!(e.code, ErrorCode::BadFrame);
+                assert!(e.message.contains("trailing"), "{}", e.message);
+            }
+            other => panic!("expected BadFrame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn midframe_timeout_is_a_typed_wire_error() {
+        // A reader that yields some bytes then times out — the
+        // slow-loris shape. Mid-prefix and mid-payload silences must
+        // both be typed (unsyncable) wire errors, not silent I/O ends;
+        // a timeout at a frame boundary stays plain I/O.
+        struct Loris {
+            bytes: Vec<u8>,
+            off: usize,
+        }
+        impl std::io::Read for Loris {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                if self.off >= self.bytes.len() {
+                    return Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "timeout"));
+                }
+                let n = buf.len().min(self.bytes.len() - self.off);
+                buf[..n].copy_from_slice(&self.bytes[self.off..self.off + n]);
+                self.off += n;
+                Ok(n)
+            }
+        }
+        let wire = encode(&Frame::StatsRequest);
+
+        // 2 of 4 length-prefix bytes, then silence
+        let mut r = Loris { bytes: wire[..2].to_vec(), off: 0 };
+        match read_frame(&mut r) {
+            Err(ReadError::Wire(e)) => {
+                assert_eq!(e.code, ErrorCode::BadFrame);
+                assert!(e.unsyncable(), "mid-prefix timeout must close the conn");
+            }
+            other => panic!("expected BadFrame, got {other:?}"),
+        }
+
+        // full prefix + 1 payload byte, then silence
+        let mut r = Loris { bytes: wire[..5].to_vec(), off: 0 };
+        match read_frame(&mut r) {
+            Err(ReadError::Wire(e)) => {
+                assert_eq!(e.code, ErrorCode::BadFrame);
+                assert!(e.unsyncable(), "mid-payload timeout must close the conn");
+            }
+            other => panic!("expected BadFrame, got {other:?}"),
+        }
+
+        // frame-boundary timeout: plain I/O, caller reaps silently
+        let mut r = Loris { bytes: vec![], off: 0 };
+        match read_frame(&mut r) {
+            Err(ReadError::Io(e)) => {
+                assert_eq!(e.kind(), std::io::ErrorKind::WouldBlock);
+            }
+            other => panic!("expected Io, got {other:?}"),
+        }
+
+        // plain truncation (TooLarge) is still flagged unsyncable,
+        // ordinary bad frames are not
+        assert!(WireError::new(ErrorCode::TooLarge, "x").unsyncable());
+        assert!(!WireError::new(ErrorCode::BadFrame, "trailing bytes").unsyncable());
     }
 
     #[test]

@@ -43,6 +43,15 @@
 //! readers wake, finish in-flight requests, join the handlers, return
 //! from [`Server::run`]. Operations guide: `docs/SERVING.md`.
 //!
+//! Deadlines: an INFER may carry a microsecond budget (`deadline_us`,
+//! protocol minor revision — absent encodes byte-identically to v0).
+//! The budget is measured from decode; an already-expired request is
+//! answered [`ErrorCode::DeadlineExceeded`] before any row is queued,
+//! admission control additionally sheds requests whose remaining
+//! budget is below the model's observed p95 (`net_shed_predicted`),
+//! and the batcher/executor shed expired rows at dequeue — before
+//! spmm runs (`net_deadline_exceeded`). See `docs/ROBUSTNESS.md`.
+//!
 //! Observability: every INFER gets a trace id and a per-stage timing
 //! breakdown (decode → queue → batch → spmm → merge → write) recorded
 //! into the shared [`Telemetry`](crate::coordinator::telemetry)
@@ -107,11 +116,20 @@ pub struct ServeOptions {
     /// Dynamic-batching policy every model engine runs
     /// (`--max-batch`, `--max-wait-ms`).
     pub policy: BatchPolicy,
+    /// Per-connection read timeout (`--idle-timeout-ms`): a peer
+    /// silent this long — including one stalled *mid-frame*, the
+    /// slow-loris case — has its connection slot reclaimed.
+    pub idle_timeout: Duration,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { max_conns: 64, max_queue: 256, policy: BatchPolicy::default() }
+        ServeOptions {
+            max_conns: 64,
+            max_queue: 256,
+            policy: BatchPolicy::default(),
+            idle_timeout: CONN_IDLE_TIMEOUT,
+        }
     }
 }
 
@@ -164,9 +182,19 @@ impl ModelSlot {
     /// the per-stage **max** over the request's rows (a row that
     /// straggled in a different flush dominates, which is what the
     /// slow-request log should name).
+    ///
+    /// A request carrying a `deadline` is shed with
+    /// [`ErrorCode::DeadlineExceeded`] **before** any row reaches the
+    /// queue when (a) the deadline already passed, or (b) this model's
+    /// observed p95 end-to-end latency exceeds the remaining budget
+    /// (predictive admission control off the `request_ns` histogram —
+    /// a cold model with no samples never predictive-sheds). Rows that
+    /// are admitted carry the deadline into the batcher, which pulls
+    /// the flush window forward and sheds expired rows at dequeue.
     fn infer_batch(
         &self,
         batch: &RowBatch,
+        deadline: Option<Instant>,
     ) -> std::result::Result<(RowBatch, StageNanos), WireError> {
         if batch.rows() == 0 {
             return RowBatch::new(0, self.classes, Vec::new())
@@ -179,10 +207,35 @@ impl ModelSlot {
                 format!("rows are {} wide, model expects {}", batch.cols(), self.input_dim),
             ));
         }
+        if let Some(d) = deadline {
+            let metrics = self.engine.metrics();
+            let now = Instant::now();
+            if now >= d {
+                metrics.net_deadline_exceeded.fetch_add(batch.rows() as u64, Ordering::Relaxed);
+                return Err(WireError::new(
+                    ErrorCode::DeadlineExceeded,
+                    "deadline expired before admission; request shed",
+                ));
+            }
+            let remaining_ns = (d - now).as_nanos().min(u64::MAX as u128) as u64;
+            if let Some(hist) = &self.request_hist {
+                let p95 = hist.snapshot().quantile(0.95);
+                if p95 > remaining_ns {
+                    metrics.net_shed_predicted.fetch_add(1, Ordering::Relaxed);
+                    return Err(WireError::new(
+                        ErrorCode::DeadlineExceeded,
+                        format!(
+                            "predicted completion {p95}ns (observed p95) exceeds remaining \
+                             budget {remaining_ns}ns; shed before queueing"
+                        ),
+                    ));
+                }
+            }
+        }
         let client = self.engine.client();
         let mut pending = Vec::with_capacity(batch.rows());
         for i in 0..batch.rows() {
-            match client.try_submit(batch.row(i).to_vec()) {
+            match client.try_submit_with(batch.row(i).to_vec(), deadline) {
                 Ok(rx) => pending.push(rx),
                 Err(SubmitError::Overloaded) => {
                     // Drain what was admitted so the executor's reply
@@ -210,6 +263,12 @@ impl ModelSlot {
                 Ok(Ok((logits, st))) => {
                     rows.push(logits);
                     stages.max_with(&st);
+                }
+                // The executor already counted the shed row in
+                // `net_deadline_exceeded`; here it only needs its
+                // typed wire code.
+                Ok(Err(e @ Error::Deadline(_))) => {
+                    return Err(WireError::new(ErrorCode::DeadlineExceeded, e));
                 }
                 Ok(Err(e)) => return Err(WireError::new(ErrorCode::Internal, e)),
                 Err(_) => {
@@ -490,6 +549,7 @@ pub struct Server {
     listener: TcpListener,
     hub: Arc<ModelHub>,
     max_conns: usize,
+    idle_timeout: Duration,
     state: Arc<ServerState>,
 }
 
@@ -503,6 +563,7 @@ impl Server {
             listener,
             hub,
             max_conns: opts.max_conns.max(1),
+            idle_timeout: opts.idle_timeout,
             state: Arc::new(ServerState {
                 shutdown: AtomicBool::new(false),
                 active: AtomicUsize::new(0),
@@ -527,7 +588,7 @@ impl Server {
     /// frame or [`ServerHandle::shutdown`]); returns after in-flight
     /// connections drain.
     pub fn run(self) -> Result<()> {
-        let Server { listener, hub, max_conns, state } = self;
+        let Server { listener, hub, max_conns, idle_timeout, state } = self;
         let metrics = hub.metrics();
         let mut handlers: Vec<JoinHandle<()>> = Vec::new();
         loop {
@@ -595,7 +656,7 @@ impl Server {
                 .name(format!("lrbi-conn-{id}"))
                 .spawn(move || {
                     let _guard = guard;
-                    handle_conn(stream, &hub, &conn_state, &conn_metrics);
+                    handle_conn(stream, &hub, &conn_state, &conn_metrics, idle_timeout);
                 });
             match spawned {
                 Ok(handle) => {
@@ -623,29 +684,59 @@ impl Server {
 }
 
 /// Per-connection request loop: read frames, dispatch, write replies.
-fn handle_conn(stream: TcpStream, hub: &ModelHub, state: &ServerState, metrics: &Metrics) {
+fn handle_conn(
+    stream: TcpStream,
+    hub: &ModelHub,
+    state: &ServerState,
+    metrics: &Metrics,
+    idle_timeout: Duration,
+) {
+    use crate::util::fault::{self, FaultPoint};
     let _ = stream.set_nodelay(true);
     // Socket options are shared with the read-half clones below, so
-    // both directions get bounded before any clone is used.
-    let _ = stream.set_read_timeout(Some(CONN_IDLE_TIMEOUT));
-    let _ = stream.set_write_timeout(Some(CONN_WRITE_TIMEOUT));
+    // both directions get bounded before any clone is used. A
+    // connection whose timeouts cannot be armed is *closed*, never
+    // served untimed: an untimed reader would hold its `--max-conns`
+    // slot forever once the peer goes silent.
+    for (dir, res) in [
+        ("read", stream.set_read_timeout(Some(idle_timeout))),
+        ("write", stream.set_write_timeout(Some(CONN_WRITE_TIMEOUT))),
+    ] {
+        if let Err(e) = res {
+            metrics.net_timeout_config_errors.fetch_add(1, Ordering::Relaxed);
+            crate::lrbi_log!(
+                Level::Warn,
+                "closing connection: cannot arm {dir} timeout ({e}); refusing to serve untimed"
+            );
+            return;
+        }
+    }
     let mut reader = match stream.try_clone() {
         Ok(s) => BufReader::new(s),
         Err(_) => return,
     };
     let mut writer = stream;
     loop {
+        // Fault-plan hooks (no-ops unless `LRBI_FAULT` names them; one
+        // relaxed atomic load when disabled — see util::fault).
+        if let Some(a) = fault::fire(FaultPoint::ReadStall) {
+            fault::stall(&a);
+        }
+        if fault::fire(FaultPoint::ConnClose).is_some() {
+            break; // simulate the transport dying mid-conversation
+        }
         let (frame, decode_ns) = match protocol::read_frame_timed(&mut reader) {
             Ok(Some(pair)) => pair,
             Ok(None) => break, // client closed cleanly
             Err(ReadError::Io(_)) => break,
             Err(ReadError::Wire(e)) => {
                 metrics.net_protocol_errors.fetch_add(1, Ordering::Relaxed);
-                // An oversized length prefix leaves unread payload on
-                // the stream — it cannot be re-synced, so reply and
-                // close. Every other decode error consumed exactly one
-                // frame; the connection stays usable.
-                let fatal = e.code == ErrorCode::TooLarge;
+                // Some wire errors leave unread payload on the stream
+                // (oversized prefix, a peer silent mid-frame — the
+                // slow-loris case): those cannot be re-synced, so
+                // reply and close. Every other decode error consumed
+                // exactly one frame; the connection stays usable.
+                let fatal = e.unsyncable();
                 let _ = protocol::write_frame(
                     &mut writer,
                     &Frame::Error { code: e.code, message: e.message },
@@ -656,14 +747,44 @@ fn handle_conn(stream: TcpStream, hub: &ModelHub, state: &ServerState, metrics: 
                 continue;
             }
         };
+        if fault::fire(FaultPoint::ReadTruncate).is_some() {
+            // Pretend the frame arrived torn: answer the typed error a
+            // real truncation would get; the connection stays usable.
+            metrics.net_protocol_errors.fetch_add(1, Ordering::Relaxed);
+            let reply = Frame::error(ErrorCode::BadFrame, "injected truncated frame (fault plan)");
+            if protocol::write_frame(&mut writer, &reply).is_err() {
+                break;
+            }
+            continue;
+        }
+        if let Some(a) = fault::fire(FaultPoint::WriteStall) {
+            fault::stall(&a);
+        }
         let reply = match frame {
-            Frame::Infer { key, batch } => {
+            Frame::Infer { key, batch, deadline_us } => {
+                // The budget is measured from decode: the clock starts
+                // the moment the server understood the request.
+                let deadline =
+                    deadline_us.map(|us| Instant::now() + Duration::from_micros(us));
                 metrics.net_requests.fetch_add(1, Ordering::Relaxed);
                 metrics.telemetry.record_stage(Stage::Decode, decode_ns);
                 let trace = metrics.telemetry.next_trace_id();
                 let t_req = Instant::now();
                 let (reply, stages, request_hist) = if state.shutdown.load(Ordering::SeqCst) {
                     (Frame::error(ErrorCode::ShuttingDown, "server is shutting down"), None, None)
+                } else if fault::fire(FaultPoint::InferOverload).is_some() {
+                    // Simulate transient admission-control rejection:
+                    // exactly what a real full queue answers, so client
+                    // retry paths can be exercised deterministically.
+                    metrics.net_rejected_overload.fetch_add(1, Ordering::Relaxed);
+                    (
+                        Frame::error(
+                            ErrorCode::Overloaded,
+                            "injected transient overload (fault plan); retry with backoff",
+                        ),
+                        None,
+                        None,
+                    )
                 } else {
                     match hub.get(&key) {
                         None => (
@@ -676,7 +797,7 @@ fn handle_conn(stream: TcpStream, hub: &ModelHub, state: &ServerState, metrics: 
                         ),
                         Some(slot) => {
                             let hist = slot.request_hist.clone();
-                            match slot.infer_batch(&batch) {
+                            match slot.infer_batch(&batch, deadline) {
                                 Ok((logits, st)) => (Frame::Logits(logits), Some(st), hist),
                                 Err(e) => {
                                     if e.code == ErrorCode::Overloaded {
@@ -776,11 +897,118 @@ fn handle_conn(stream: TcpStream, hub: &ModelHub, state: &ServerState, metrics: 
     }
 }
 
+/// Client-side retry policy for transient failures: `overloaded`
+/// replies and timeout / connection-reset I/O errors are retried with
+/// capped exponential backoff plus equal jitter (deterministic per
+/// `seed`, so tests and the loadgen bench are reproducible). Anything
+/// typed — bad shape, unknown model, deadline exceeded — is never
+/// retried: the same request would fail the same way.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (0 = fail fast).
+    pub max_retries: u32,
+    /// Backoff before retry `n` is `base_backoff * 2^n`, capped at
+    /// `max_backoff`, then jittered into `[cap/2, cap]`.
+    pub base_backoff: Duration,
+    /// Upper bound on any single backoff sleep.
+    pub max_backoff: Duration,
+    /// Jitter RNG seed (same seed ⇒ same backoff schedule).
+    pub seed: u64,
+}
+
+impl RetryPolicy {
+    /// No retries: every transient failure surfaces immediately
+    /// (the pre-PR-8 client behavior).
+    pub fn none() -> Self {
+        RetryPolicy {
+            max_retries: 0,
+            base_backoff: Duration::ZERO,
+            max_backoff: Duration::ZERO,
+            seed: 0,
+        }
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(500),
+            seed: 0x7E7,
+        }
+    }
+}
+
+/// Connection/resilience knobs for [`NetClient::connect_with`].
+#[derive(Debug, Clone, Copy)]
+pub struct ClientOptions {
+    /// Bound on TCP connect (and reconnect) time; `None` blocks on
+    /// the OS default.
+    pub connect_timeout: Option<Duration>,
+    /// Socket read/write timeout per frame; a server stalled longer
+    /// surfaces as a timed-out I/O error (retryable under `retry`).
+    pub io_timeout: Option<Duration>,
+    /// Retry policy for transient failures.
+    pub retry: RetryPolicy,
+    /// Default per-call budget for [`NetClient::infer`]: bounds the
+    /// whole attempt+retry loop client-side and rides the wire as the
+    /// INFER frame's `deadline_us`, so the server sheds work the
+    /// client has already given up on.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for ClientOptions {
+    /// Defaults preserve the original client behavior exactly: no
+    /// timeouts, no retries, no deadline.
+    fn default() -> Self {
+        ClientOptions {
+            connect_timeout: None,
+            io_timeout: None,
+            retry: RetryPolicy::none(),
+            deadline: None,
+        }
+    }
+}
+
 /// Blocking client for the wire protocol — used by the CLI example,
 /// the `perf_serve_loadgen` bench, and the integration tests.
 pub struct NetClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// Resolved peer, kept so a retry can reconnect after an I/O
+    /// failure left the old stream in an unknown framing state.
+    addr: SocketAddr,
+    opts: ClientOptions,
+}
+
+/// I/O failures worth retrying: the peer (or network) hiccuped in a
+/// way a fresh connection may survive. Everything else — refused,
+/// unreachable, permission — fails the same way again immediately.
+fn transient_io(kind: std::io::ErrorKind) -> bool {
+    use std::io::ErrorKind::*;
+    matches!(
+        kind,
+        TimedOut | WouldBlock | ConnectionReset | ConnectionAborted | BrokenPipe | UnexpectedEof
+    )
+}
+
+/// Backoff before retry `attempt`: `base * 2^attempt` capped at
+/// `max_backoff`, equal-jittered into `[cap/2, cap]` so synchronized
+/// clients do not re-stampede the server on the same tick.
+fn backoff_with_jitter(
+    policy: &RetryPolicy,
+    attempt: u32,
+    rng: &mut crate::util::rng::Rng,
+) -> Duration {
+    let cap = policy
+        .base_backoff
+        .saturating_mul(1u32.checked_shl(attempt.min(20)).unwrap_or(u32::MAX))
+        .min(policy.max_backoff);
+    let half = cap / 2;
+    let span_ns = (cap - half).as_nanos().min(u64::MAX as u128) as u64;
+    let jitter = if span_ns == 0 { 0 } else { rng.next_range(span_ns + 1) };
+    half + Duration::from_nanos(jitter)
 }
 
 /// Turn a server reply into the expected payload: error frames and
@@ -800,12 +1028,50 @@ fn expect_reply<T>(
 }
 
 impl NetClient {
-    /// Connect to a running `lrbi serve --listen` frontend.
+    /// Connect to a running `lrbi serve --listen` frontend with the
+    /// plain (no timeout, no retry) options.
     pub fn connect(addr: impl ToSocketAddrs) -> Result<NetClient> {
-        let stream = TcpStream::connect(addr)?;
+        Self::connect_with(addr, ClientOptions::default())
+    }
+
+    /// Connect with explicit resilience options. Every resolved
+    /// address is tried in order; the last error is returned if none
+    /// accepts.
+    pub fn connect_with(addr: impl ToSocketAddrs, opts: ClientOptions) -> Result<NetClient> {
+        let mut last: Option<std::io::Error> = None;
+        for sock in addr.to_socket_addrs()? {
+            match Self::open_stream(sock, &opts) {
+                Ok(stream) => {
+                    let reader = BufReader::new(stream.try_clone()?);
+                    return Ok(NetClient { reader, writer: stream, addr: sock, opts });
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(match last {
+            Some(e) => Error::Io(e),
+            None => Error::invalid("address resolved to nothing"),
+        })
+    }
+
+    fn open_stream(addr: SocketAddr, opts: &ClientOptions) -> std::io::Result<TcpStream> {
+        let stream = match opts.connect_timeout {
+            Some(t) => TcpStream::connect_timeout(&addr, t)?,
+            None => TcpStream::connect(addr)?,
+        };
         let _ = stream.set_nodelay(true);
-        let reader = BufReader::new(stream.try_clone()?);
-        Ok(NetClient { reader, writer: stream })
+        stream.set_read_timeout(opts.io_timeout)?;
+        stream.set_write_timeout(opts.io_timeout)?;
+        Ok(stream)
+    }
+
+    /// Drop the (possibly desynced) stream and dial the peer again
+    /// with the same options.
+    fn reconnect(&mut self) -> Result<()> {
+        let stream = Self::open_stream(self.addr, &self.opts)?;
+        self.reader = BufReader::new(stream.try_clone()?);
+        self.writer = stream;
+        Ok(())
     }
 
     /// Send one frame, read one reply (the protocol is strictly
@@ -821,13 +1087,83 @@ impl NetClient {
     }
 
     /// Run a row batch through the model named `key` ("" = default);
-    /// an error frame becomes a typed [`Error::Protocol`].
+    /// an error frame becomes a typed [`Error::Protocol`]. Honors the
+    /// client's configured retry policy and default deadline: see
+    /// [`NetClient::infer_with_deadline`].
     pub fn infer(&mut self, key: &str, batch: RowBatch) -> Result<RowBatch> {
-        let reply = self.call(&Frame::Infer { key: key.to_string(), batch })?;
-        expect_reply(reply, "LOGITS", |frame| match frame {
-            Frame::Logits(logits) => Ok(logits),
-            other => Err(other),
-        })
+        self.infer_with_deadline(key, batch, self.opts.deadline)
+    }
+
+    /// Run a row batch with an explicit per-call budget.
+    ///
+    /// The budget bounds the **whole** attempt+retry loop: each
+    /// attempt sends the *remaining* budget as the frame's
+    /// `deadline_us` (so the server never works on a request the
+    /// client has abandoned), and a retry whose backoff would
+    /// overshoot the budget returns the last failure instead of
+    /// sleeping past it. Retries fire on `overloaded` replies and on
+    /// transient I/O (timeout, reset, broken pipe — the connection is
+    /// re-dialed first, since a half-read frame cannot be re-synced);
+    /// every retry is counted in the process-wide
+    /// `net_retries_observed` metric.
+    pub fn infer_with_deadline(
+        &mut self,
+        key: &str,
+        batch: RowBatch,
+        budget: Option<Duration>,
+    ) -> Result<RowBatch> {
+        let deadline = budget.map(|b| Instant::now() + b);
+        let policy = self.opts.retry;
+        let mut rng = crate::util::rng::Rng::new(policy.seed);
+        let mut attempt: u32 = 0;
+        loop {
+            let deadline_us = match deadline {
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Err(Error::Deadline(
+                            "client budget exhausted before send".into(),
+                        ));
+                    }
+                    Some((d - now).as_micros().min(u64::MAX as u128) as u64)
+                }
+                None => None,
+            };
+            let result = self.call(&Frame::Infer {
+                key: key.to_string(),
+                batch: batch.clone(),
+                deadline_us,
+            });
+            let (retryable, reconnect) = match &result {
+                Ok(Frame::Error { code: ErrorCode::Overloaded, .. }) => (true, false),
+                Err(Error::Io(e)) if transient_io(e.kind()) => (true, true),
+                _ => (false, false),
+            };
+            if !retryable || attempt >= policy.max_retries {
+                return expect_reply(result?, "LOGITS", |frame| match frame {
+                    Frame::Logits(logits) => Ok(logits),
+                    other => Err(other),
+                });
+            }
+            let sleep = backoff_with_jitter(&policy, attempt, &mut rng);
+            if let Some(d) = deadline {
+                if Instant::now() + sleep >= d {
+                    // No budget left to retry inside — surface the
+                    // last failure rather than sleeping past the
+                    // deadline.
+                    return expect_reply(result?, "LOGITS", |frame| match frame {
+                        Frame::Logits(logits) => Ok(logits),
+                        other => Err(other),
+                    });
+                }
+            }
+            crate::coordinator::metrics::record_net_retry();
+            std::thread::sleep(sleep);
+            if reconnect {
+                self.reconnect()?;
+            }
+            attempt += 1;
+        }
     }
 
     /// Fetch the server's metrics snapshot as named counters.
@@ -911,13 +1247,62 @@ mod tests {
         let hub = small_hub();
         let slot = hub.get("").unwrap();
         let bad = RowBatch::new(1, slot.input_dim() + 1, vec![0.0; slot.input_dim() + 1]).unwrap();
-        let err = slot.infer_batch(&bad).unwrap_err();
+        let err = slot.infer_batch(&bad, None).unwrap_err();
         assert_eq!(err.code, ErrorCode::BadShape);
         let empty = RowBatch::new(0, 0, vec![]).unwrap();
-        let (logits, stages) = slot.infer_batch(&empty).unwrap();
+        let (logits, stages) = slot.infer_batch(&empty, None).unwrap();
         assert_eq!((logits.rows(), logits.cols()), (0, slot.classes()));
         assert_eq!(stages, StageNanos::default(), "no rows ran, no stages timed");
         assert!(slot.request_hist.is_some(), "hub-installed slots get a request series");
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_before_admission() {
+        let hub = small_hub();
+        let slot = hub.get("").unwrap();
+        let row = RowBatch::new(1, slot.input_dim(), vec![0.0; slot.input_dim()]).unwrap();
+        let past = Instant::now() - Duration::from_millis(5);
+        let err = slot.infer_batch(&row, Some(past)).unwrap_err();
+        assert_eq!(err.code, ErrorCode::DeadlineExceeded);
+        let snap = hub.metrics().snapshot();
+        assert_eq!(snap.net_deadline_exceeded, 1, "shed counted at admission");
+        assert_eq!(snap.kernel_spmms, 0, "no row may reach spmm");
+        // A generous deadline serves normally on the same slot.
+        let (logits, _) = slot.infer_batch(&row, Some(Instant::now() + Duration::from_secs(30))).unwrap();
+        assert_eq!(logits.rows(), 1);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_jittered() {
+        let policy = RetryPolicy {
+            max_retries: 5,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(80),
+            seed: 42,
+        };
+        let mut a = Rng::new(policy.seed);
+        let mut b = Rng::new(policy.seed);
+        for attempt in 0..6 {
+            let x = backoff_with_jitter(&policy, attempt, &mut a);
+            let y = backoff_with_jitter(&policy, attempt, &mut b);
+            assert_eq!(x, y, "same seed, same schedule");
+            let cap = (Duration::from_millis(10) * 2u32.pow(attempt)).min(Duration::from_millis(80));
+            assert!(x >= cap / 2 && x <= cap, "attempt {attempt}: {x:?} outside [{:?}, {cap:?}]", cap / 2);
+        }
+        // RetryPolicy::none never sleeps.
+        let none = RetryPolicy::none();
+        assert_eq!(backoff_with_jitter(&none, 3, &mut a), Duration::ZERO);
+    }
+
+    #[test]
+    fn transient_io_kinds_are_the_retryable_set() {
+        use std::io::ErrorKind::*;
+        for kind in [TimedOut, WouldBlock, ConnectionReset, ConnectionAborted, BrokenPipe, UnexpectedEof] {
+            assert!(transient_io(kind), "{kind:?}");
+        }
+        for kind in [ConnectionRefused, NotFound, PermissionDenied, InvalidData] {
+            assert!(!transient_io(kind), "{kind:?}");
+        }
     }
 
     #[test]

@@ -132,10 +132,11 @@ impl Artifact {
         w.to_bytes()
     }
 
-    /// Write a `.lrbi` file.
+    /// Write a `.lrbi` file crash-atomically (temp file + fsync +
+    /// rename), so a reader racing or surviving a crashed writer sees
+    /// either the previous artifact or the new one, never a torn file.
     pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
-        std::fs::write(&path, self.to_bytes())?;
-        Ok(())
+        crate::store::atomic::write_atomic(path, &self.to_bytes())
     }
 
     /// Parse container bytes into an artifact.

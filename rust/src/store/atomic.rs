@@ -1,0 +1,117 @@
+//! Crash-atomic file writes for the store layer.
+//!
+//! A publish that dies between "truncate the old file" and "finish
+//! writing the new bytes" must never leave a torn file where a
+//! manifest or artifact used to be. [`write_atomic`] gives the
+//! all-or-nothing guarantee the registry's publish path builds on:
+//!
+//! 1. write the full payload to a hidden temp file in the same
+//!    directory (same filesystem ⇒ `rename` cannot degrade to
+//!    copy+delete),
+//! 2. `fsync` the temp file (data is durable before it becomes
+//!    reachable),
+//! 3. atomically `rename` it over the destination,
+//! 4. `fsync` the directory, so the rename itself survives a crash.
+//!
+//! A reader (e.g. `Registry::open`) therefore sees either the old
+//! bytes or the new bytes, never a prefix — pinned by the
+//! kill-between-steps simulation in `store/registry.rs` tests.
+
+use crate::util::error::{Error, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Prefix of the temp files [`write_atomic`] stages next to the
+/// destination. Readers that scan directories (the registry) ignore
+/// names starting with this, so an orphaned temp from a killed
+/// process is invisible garbage, not a half-published artifact.
+pub const TMP_PREFIX: &str = ".lrbi-tmp.";
+
+/// Write `bytes` to `path` crash-atomically (temp file + fsync +
+/// rename + directory fsync). On any error the destination is
+/// untouched; a leftover temp file is cleaned up best-effort.
+pub fn write_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+    let path = path.as_ref();
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty()).unwrap_or(Path::new("."));
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| Error::store(format!("cannot write to {}: no file name", path.display())))?;
+    // pid-suffixed so concurrent publishers in different processes
+    // stage distinct temp files
+    let tmp = dir.join(format!("{TMP_PREFIX}{name}.{}", std::process::id()));
+    let res = (|| -> std::io::Result<()> {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)?;
+        sync_dir(dir)
+    })();
+    res.map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        Error::store(format!("atomic write of {} failed: {e}", path.display()))
+    })
+}
+
+/// Fsync a directory so a just-renamed entry survives a crash. On
+/// platforms where directories cannot be opened/synced this is a
+/// no-op — the rename is still atomic, only its durability window
+/// widens.
+fn sync_dir(dir: &Path) -> std::io::Result<()> {
+    match std::fs::File::open(dir) {
+        Ok(d) => match d.sync_all() {
+            Ok(()) => Ok(()),
+            // e.g. EACCES/EINVAL on filesystems that refuse dir fsync
+            Err(_) => Ok(()),
+        },
+        Err(_) => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("lrbi_atomic_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writes_then_overwrites() {
+        let d = tmp_dir("basic");
+        let p = d.join("file.bin");
+        write_atomic(&p, b"one").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"one");
+        write_atomic(&p, b"two-longer").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"two-longer");
+        // no temp residue after a successful write
+        let leftovers: Vec<_> = std::fs::read_dir(&d)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().starts_with(TMP_PREFIX))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn failed_write_leaves_destination_untouched() {
+        let d = tmp_dir("fail");
+        let p = d.join("file.bin");
+        write_atomic(&p, b"original").unwrap();
+        // a destination whose parent vanished cannot be staged
+        let gone = d.join("no_such_subdir").join("x.bin");
+        assert!(write_atomic(&gone, b"data").is_err());
+        assert_eq!(std::fs::read(&p).unwrap(), b"original");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn rejects_pathological_destination() {
+        assert!(write_atomic(Path::new("/"), b"x").is_err());
+    }
+}

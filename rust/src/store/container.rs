@@ -178,10 +178,10 @@ impl ContainerWriter {
         out
     }
 
-    /// Write the container to a file.
+    /// Write the container to a file crash-atomically (temp file +
+    /// fsync + rename via [`crate::store::atomic::write_atomic`]).
     pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
-        std::fs::write(path, self.to_bytes())?;
-        Ok(())
+        crate::store::atomic::write_atomic(path, &self.to_bytes())
     }
 }
 
@@ -262,9 +262,27 @@ impl Container {
     /// Read and validate a container file (single read syscall).
     pub fn read(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref();
-        let buf = std::fs::read(path).map_err(|e| {
+        let mut buf = std::fs::read(path).map_err(|e| {
             Error::store(format!("cannot read artifact {}: {e}", path.display()))
         })?;
+        // Chaos hooks (no-ops unless a fault plan is live): simulate a
+        // torn read and silent media corruption. Both must surface as
+        // typed store errors from the validation below, never a panic.
+        {
+            use crate::util::fault::{self, FaultPoint};
+            if fault::fire(FaultPoint::ArtifactShortRead).is_some() {
+                buf.truncate(buf.len() / 2);
+            }
+            if let Some(a) = fault::fire(FaultPoint::ArtifactBitflip) {
+                if !buf.is_empty() {
+                    // flip one seeded bit — whether it lands in the
+                    // header, the table, or a payload, validation must
+                    // reject it (the CRC sweep covers the payloads)
+                    let bit = a.seed as usize % (buf.len() * 8);
+                    buf[bit / 8] ^= 1 << (bit % 8);
+                }
+            }
+        }
         Self::from_bytes(buf)
     }
 

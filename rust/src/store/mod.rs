@@ -22,6 +22,7 @@
 //! See `docs/ARTIFACT_FORMAT.md` for the byte-level layout.
 
 pub mod artifact;
+pub mod atomic;
 pub mod container;
 pub mod registry;
 

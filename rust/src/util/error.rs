@@ -24,6 +24,10 @@ pub enum Error {
     /// mismatch, or a typed error frame received from a server
     /// (see `serve::protocol`).
     Protocol(String),
+    /// A request's deadline expired (or its predicted completion
+    /// overruns the remaining budget) before execution — the request
+    /// was shed, not failed (see docs/ROBUSTNESS.md).
+    Deadline(String),
 }
 
 impl std::fmt::Display for Error {
@@ -37,6 +41,7 @@ impl std::fmt::Display for Error {
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Store(m) => write!(f, "store error: {m}"),
             Error::Protocol(m) => write!(f, "protocol error: {m}"),
+            Error::Deadline(m) => write!(f, "deadline exceeded: {m}"),
         }
     }
 }

@@ -1,0 +1,416 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] names **injection points** (enum [`FaultPoint`])
+//! and, per point, *which hits* of that point should misbehave — by
+//! hit ordinal, not by probability, so a chaos run is exactly
+//! reproducible. The plan is process-global: production code asks
+//! [`fire`] at each injection point and acts on the returned
+//! [`FaultAction`] (stall, truncate, close, panic, corrupt, …
+//! — the *caller* owns the misbehavior; this module only decides
+//! whether this hit is faulted and how long a stall should be).
+//!
+//! Activation:
+//! - environment: `LRBI_FAULT="<plan>"` is parsed once, on the first
+//!   [`fire`] call (`lrbi serve` under `scripts/chaos_smoke.sh`);
+//! - programmatic: [`install`] / [`clear`] (the `tests/chaos.rs`
+//!   suite, which serializes tests around the global plan).
+//!
+//! Plan grammar (clauses separated by `,` or `;`, spaces ignored):
+//!
+//! ```text
+//! seed=<u64>                      # corruption seed (default 0x5EED)
+//! <point>=<start>[+<count>][:<ms>]
+//! ```
+//!
+//! A clause fires on hits `start .. start+count` of its point
+//! (1-based ordinals; `count` defaults to 1, `*` means "forever");
+//! `:<ms>` sets the stall duration for the stall/slow points
+//! (default 50 ms). Example: `read_stall=1:25, infer_overload=1+2`
+//! stalls the first frame read 25 ms and rejects the first two INFER
+//! requests as overloaded.
+//!
+//! Cost when disabled: [`fire`] is one relaxed atomic load and a
+//! predictable branch — no locks, no allocation — which is why the
+//! hooks stay compiled into release builds (`tests/chaos.rs` pins
+//! that a disabled plan leaves served logits byte-identical).
+//!
+//! Every injected fault increments the process-global
+//! `faults_injected` counter (surfaced through
+//! [`MetricsSnapshot`](crate::coordinator::metrics::MetricsSnapshot)
+//! and the `STATS` frame) and logs a `WARN` line naming the point and
+//! hit ordinal.
+
+use crate::util::error::{Error, Result};
+use crate::util::log::Level;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::Duration;
+
+/// Default stall for `:ms`-less stall clauses.
+const DEFAULT_STALL_MS: u64 = 50;
+/// Default corruption seed for `seed`-less plans.
+const DEFAULT_SEED: u64 = 0x5EED;
+
+/// Every place the serving stack asks "should this hit misbehave?".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// Stall before reading a frame from a connection.
+    ReadStall = 0,
+    /// Pretend the incoming frame arrived truncated (typed
+    /// `bad-frame` reply; the connection stays usable).
+    ReadTruncate = 1,
+    /// Drop the connection instead of serving the next frame.
+    ConnClose = 2,
+    /// Stall before writing a reply frame.
+    WriteStall = 3,
+    /// Stall shard 0 of a pooled plan execution.
+    SlowShard = 4,
+    /// Panic inside shard 0 of a pooled plan execution (surfaced as a
+    /// typed coordinator error by the worker pool's unwind fence).
+    ShardPanic = 5,
+    /// Flip one seeded bit of an artifact file's bytes at load
+    /// (caught by the container CRC as a typed store error).
+    ArtifactBitflip = 6,
+    /// Truncate an artifact file's bytes to half at load.
+    ArtifactShortRead = 7,
+    /// Reject an INFER request with an `overloaded` error frame
+    /// (transient-overload simulation for the client retry path).
+    InferOverload = 8,
+}
+
+/// Number of injection points (sizes the per-point hit counters).
+const POINTS: usize = 9;
+
+impl FaultPoint {
+    /// Every point, in discriminant order.
+    pub const ALL: [FaultPoint; POINTS] = [
+        FaultPoint::ReadStall,
+        FaultPoint::ReadTruncate,
+        FaultPoint::ConnClose,
+        FaultPoint::WriteStall,
+        FaultPoint::SlowShard,
+        FaultPoint::ShardPanic,
+        FaultPoint::ArtifactBitflip,
+        FaultPoint::ArtifactShortRead,
+        FaultPoint::InferOverload,
+    ];
+
+    /// Stable plan-grammar name.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultPoint::ReadStall => "read_stall",
+            FaultPoint::ReadTruncate => "read_truncate",
+            FaultPoint::ConnClose => "conn_close",
+            FaultPoint::WriteStall => "write_stall",
+            FaultPoint::SlowShard => "slow_shard",
+            FaultPoint::ShardPanic => "shard_panic",
+            FaultPoint::ArtifactBitflip => "artifact_bitflip",
+            FaultPoint::ArtifactShortRead => "artifact_short_read",
+            FaultPoint::InferOverload => "infer_overload",
+        }
+    }
+
+    fn from_name(name: &str) -> Option<FaultPoint> {
+        FaultPoint::ALL.into_iter().find(|p| p.name() == name)
+    }
+}
+
+/// One plan clause: fault hits `start .. start+count` of `point`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Clause {
+    point: FaultPoint,
+    /// First faulted hit (1-based ordinal).
+    start: u64,
+    /// Number of consecutive faulted hits (`u64::MAX` = forever).
+    count: u64,
+    /// Stall duration for the stall/slow points, in milliseconds.
+    millis: u64,
+}
+
+/// A parsed, deterministic fault plan (see the module docs for the
+/// grammar).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed for corruption faults (bit positions, …).
+    pub seed: u64,
+    clauses: Vec<Clause>,
+}
+
+impl FaultPlan {
+    /// Parse the `LRBI_FAULT` grammar. Unknown points and malformed
+    /// clauses are hard errors — a chaos run with a typo'd plan must
+    /// not silently test nothing.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan { seed: DEFAULT_SEED, clauses: Vec::new() };
+        for raw in spec.split([',', ';']) {
+            let clause = raw.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (name, value) = clause.split_once('=').ok_or_else(|| {
+                Error::invalid(format!("fault clause '{clause}' wants name=value"))
+            })?;
+            let (name, value) = (name.trim(), value.trim());
+            if name == "seed" {
+                plan.seed = value
+                    .parse()
+                    .map_err(|_| Error::invalid(format!("fault seed '{value}' is not a u64")))?;
+                continue;
+            }
+            let point = FaultPoint::from_name(name).ok_or_else(|| {
+                Error::invalid(format!(
+                    "unknown fault point '{name}' (known: {})",
+                    FaultPoint::ALL.map(|p| p.name()).join(", ")
+                ))
+            })?;
+            let (range, millis) = match value.split_once(':') {
+                Some((range, ms)) => (
+                    range.trim(),
+                    ms.trim().parse().map_err(|_| {
+                        Error::invalid(format!("fault stall '{ms}' is not a millisecond count"))
+                    })?,
+                ),
+                None => (value, DEFAULT_STALL_MS),
+            };
+            let (start, count) = match range.split_once('+') {
+                Some((s, c)) => {
+                    let count = if c.trim() == "*" {
+                        u64::MAX
+                    } else {
+                        c.trim().parse().map_err(|_| {
+                            Error::invalid(format!("fault count '{c}' is not a u64 or '*'"))
+                        })?
+                    };
+                    (s.trim(), count)
+                }
+                None => (range, 1),
+            };
+            let start: u64 = start
+                .parse()
+                .map_err(|_| Error::invalid(format!("fault start '{start}' is not a u64")))?;
+            if start == 0 || count == 0 {
+                return Err(Error::invalid(format!(
+                    "fault clause '{clause}': hit ordinals are 1-based and count must be > 0"
+                )));
+            }
+            plan.clauses.push(Clause { point, start, count, millis });
+        }
+        Ok(plan)
+    }
+
+    /// True when the plan has no fault clauses (a pure `seed=` plan).
+    pub fn is_empty(&self) -> bool {
+        self.clauses.is_empty()
+    }
+}
+
+/// What an injection point should do with a faulted hit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultAction {
+    /// The point that fired (callers with several nearby points can
+    /// share one match arm).
+    pub point: FaultPoint,
+    /// Stall duration for the stall/slow points.
+    pub delay: Duration,
+    /// The plan seed (bit positions for corruption points).
+    pub seed: u64,
+}
+
+/// The installed plan plus its per-point hit counters.
+struct Active {
+    plan: FaultPlan,
+    hits: [AtomicU64; POINTS],
+}
+
+/// Fast-path gate: `false` ⇒ [`fire`] returns `None` after one
+/// relaxed load.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ACTIVE: RwLock<Option<Arc<Active>>> = RwLock::new(None);
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+static ENV_PARSED: OnceLock<()> = OnceLock::new();
+
+fn set_active(active: Option<Arc<Active>>) {
+    let enabled = active.as_ref().is_some_and(|a| !a.plan.is_empty());
+    let mut guard = ACTIVE.write().unwrap_or_else(|p| p.into_inner());
+    *guard = active;
+    ENABLED.store(enabled, Ordering::SeqCst);
+}
+
+/// Parse `LRBI_FAULT` once (first [`fire`] from any thread). A
+/// malformed env plan logs an `ERROR` and injects nothing — a typo
+/// must not take the server down, but it must be visible.
+fn ensure_env() {
+    ENV_PARSED.get_or_init(|| {
+        if let Ok(spec) = std::env::var("LRBI_FAULT") {
+            if spec.trim().is_empty() {
+                return;
+            }
+            match FaultPlan::parse(&spec) {
+                Ok(plan) => install(plan),
+                Err(e) => {
+                    crate::lrbi_log!(Level::Error, "ignoring malformed LRBI_FAULT: {e}");
+                }
+            }
+        }
+    });
+}
+
+/// Install `plan` as the process-global fault plan (replacing any
+/// prior plan and resetting every hit counter).
+pub fn install(plan: FaultPlan) {
+    crate::lrbi_log!(Level::Warn, "fault plan installed: {plan:?}");
+    set_active(Some(Arc::new(Active { plan, hits: std::array::from_fn(|_| AtomicU64::new(0)) })));
+}
+
+/// Remove the installed plan; every subsequent [`fire`] is a no-op.
+pub fn clear() {
+    // Mark the env as handled so a later first-`fire` cannot
+    // resurrect an env plan a test explicitly cleared.
+    let _ = ENV_PARSED.set(());
+    set_active(None);
+}
+
+/// Total faults injected since process start (the `faults_injected`
+/// counter).
+pub fn injected_total() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+/// Record one hit of `point`; returns the action when the installed
+/// plan faults this hit. With no plan installed this is one relaxed
+/// atomic load.
+pub fn fire(point: FaultPoint) -> Option<FaultAction> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        ensure_env();
+        if !ENABLED.load(Ordering::Relaxed) {
+            return None;
+        }
+    }
+    let guard = ACTIVE.read().unwrap_or_else(|p| p.into_inner());
+    let active = guard.as_ref()?;
+    let hit = active.hits[point as usize].fetch_add(1, Ordering::Relaxed) + 1;
+    let clause = active
+        .plan
+        .clauses
+        .iter()
+        .find(|c| c.point == point && hit >= c.start && hit - c.start < c.count)?;
+    INJECTED.fetch_add(1, Ordering::Relaxed);
+    crate::lrbi_log!(
+        Level::Warn,
+        "fault injected: {} hit {hit} (stall {} ms)",
+        point.name(),
+        clause.millis
+    );
+    Some(FaultAction {
+        point,
+        delay: Duration::from_millis(clause.millis),
+        seed: active.plan.seed,
+    })
+}
+
+/// Convenience: sleep out a stall action.
+pub fn stall(action: &FaultAction) {
+    if !action.delay.is_zero() {
+        std::thread::sleep(action.delay);
+    }
+}
+
+/// Serialize tests that install a process-global plan: hold the
+/// returned guard across `install` … `clear`. Shared by the unit
+/// tests here, the pool/chaos suites, and anything else that mutates
+/// the global plan from a multi-threaded test harness.
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn with_plan<R>(spec: &str, f: impl FnOnce() -> R) -> R {
+        let _g = test_guard();
+        install(FaultPlan::parse(spec).unwrap());
+        let r = f();
+        clear();
+        r
+    }
+
+    #[test]
+    fn parse_accepts_the_documented_grammar() {
+        let p = FaultPlan::parse("seed=9; read_stall=1:25, infer_overload=2+3").unwrap();
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.clauses.len(), 2);
+        assert_eq!(
+            p.clauses[0],
+            Clause { point: FaultPoint::ReadStall, start: 1, count: 1, millis: 25 }
+        );
+        assert_eq!(
+            p.clauses[1],
+            Clause {
+                point: FaultPoint::InferOverload,
+                start: 2,
+                count: 3,
+                millis: DEFAULT_STALL_MS
+            }
+        );
+        let forever = FaultPlan::parse("slow_shard=1+*:5").unwrap();
+        assert_eq!(forever.clauses[0].count, u64::MAX);
+        assert_eq!(forever.clauses[0].millis, 5);
+        assert!(FaultPlan::parse("  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_typos_loudly() {
+        for bad in [
+            "read_stal=1",      // unknown point
+            "read_stall",       // no value
+            "read_stall=0",     // 0 is not a 1-based ordinal
+            "read_stall=1+0",   // empty range
+            "read_stall=1:ten", // non-numeric stall
+            "seed=minus",       // non-numeric seed
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn fire_follows_hit_ordinals_exactly() {
+        with_plan("read_truncate=2+2:7", || {
+            assert!(fire(FaultPoint::ReadTruncate).is_none(), "hit 1 clean");
+            let a = fire(FaultPoint::ReadTruncate).expect("hit 2 faulted");
+            assert_eq!(a.delay, Duration::from_millis(7));
+            assert_eq!(a.seed, DEFAULT_SEED);
+            assert!(fire(FaultPoint::ReadTruncate).is_some(), "hit 3 faulted");
+            assert!(fire(FaultPoint::ReadTruncate).is_none(), "hit 4 clean");
+            // other points are untouched by this clause
+            assert!(fire(FaultPoint::ConnClose).is_none());
+        });
+    }
+
+    #[test]
+    fn injected_total_is_monotonic_and_counts_fired_faults() {
+        let before = injected_total();
+        with_plan("conn_close=1", || {
+            assert!(fire(FaultPoint::ConnClose).is_some());
+        });
+        assert!(injected_total() >= before + 1);
+    }
+
+    #[test]
+    fn cleared_plan_is_a_noop() {
+        let _g = test_guard();
+        clear();
+        for p in FaultPoint::ALL {
+            assert!(fire(p).is_none());
+        }
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for p in FaultPoint::ALL {
+            assert_eq!(FaultPoint::from_name(p.name()), Some(p));
+        }
+        assert_eq!(FaultPoint::from_name("nope"), None);
+    }
+}

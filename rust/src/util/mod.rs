@@ -4,6 +4,7 @@ pub mod bench;
 pub mod bits;
 pub mod crc;
 pub mod error;
+pub mod fault;
 pub mod log;
 pub mod prop;
 pub mod rng;

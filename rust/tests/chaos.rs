@@ -1,0 +1,394 @@
+//! Chaos suite for the deterministic fault-injection harness
+//! (`util::fault`, ISSUE 8): every injection point is driven against
+//! a live localhost server and must degrade into a *typed* error — a
+//! reply frame, a clean close, or a typed `Error` — never a panic or
+//! a hang. Surviving requests stay byte-identical to direct
+//! in-process inference, and every injected fault moves the
+//! process-global `faults_injected` counter.
+//!
+//! The fault plan is process-global, so every test serializes around
+//! [`fault::test_guard`] and clears the plan before returning.
+
+use lrbi::coordinator::metrics::{self, Metrics};
+use lrbi::coordinator::pool::ExecCtx;
+use lrbi::serve::batcher::BatchPolicy;
+use lrbi::serve::engine::{InferenceBackend, MlpParams, NativeBackend};
+use lrbi::serve::protocol::{ErrorCode, Frame, RowBatch};
+use lrbi::serve::server::{
+    ClientOptions, ModelHub, NetClient, RetryPolicy, ServeOptions, Server,
+};
+use lrbi::store::Artifact;
+use lrbi::tensor::Matrix;
+use lrbi::util::bits::BitMatrix;
+use lrbi::util::error::{Error, Result};
+use lrbi::util::fault::{self, FaultPlan};
+use lrbi::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---------------------------------------------------------------- helpers
+
+/// Small model (6 → 20 → 30 → 4) so every chaos round trips in
+/// milliseconds even with stalls injected.
+fn small_params(seed: u64) -> MlpParams {
+    let mut rng = Rng::new(seed);
+    MlpParams {
+        w0: Matrix::gaussian(6, 20, 0.0, 0.5, &mut rng),
+        b0: vec![0.1; 20],
+        w1: Matrix::gaussian(20, 30, 0.0, 0.5, &mut rng),
+        b1: vec![0.2; 30],
+        w2: Matrix::gaussian(30, 4, 0.0, 0.5, &mut rng),
+        b2: vec![0.0; 4],
+    }
+}
+
+fn small_artifact(params: &MlpParams, format: &str, seed: u64) -> Artifact {
+    let mut rng = Rng::new(seed);
+    let ip = BitMatrix::from_fn(20, 4, |_, _| rng.bernoulli(0.3));
+    let iz = BitMatrix::from_fn(4, 30, |_, _| rng.bernoulli(0.3));
+    Artifact::pack_factors(params.clone(), format, &ip, &iz, "chaos test").unwrap()
+}
+
+/// Wider masked layer (20 → 160) so the dense kernel plans several
+/// output-column shards — the shard faults only exist on the pooled
+/// multi-shard path (`run_inner` falls back to inline for one shard).
+fn wide_artifact(seed: u64) -> Artifact {
+    let mut rng = Rng::new(seed);
+    let params = MlpParams {
+        w0: Matrix::gaussian(6, 20, 0.0, 0.5, &mut rng),
+        b0: vec![0.1; 20],
+        w1: Matrix::gaussian(20, 160, 0.0, 0.5, &mut rng),
+        b1: vec![0.2; 160],
+        w2: Matrix::gaussian(160, 4, 0.0, 0.5, &mut rng),
+        b2: vec![0.0; 4],
+    };
+    let ip = BitMatrix::from_fn(20, 4, |_, _| rng.bernoulli(0.3));
+    let iz = BitMatrix::from_fn(4, 160, |_, _| rng.bernoulli(0.3));
+    Artifact::pack_factors(params, "dense", &ip, &iz, "chaos test").unwrap()
+}
+
+/// Boot a server over `artifact` on an ephemeral port; `ctx` chooses
+/// single-threaded or pooled plan execution (the shard faults only
+/// exist on the pooled path).
+fn start_server(
+    artifact: &Artifact,
+    metrics: Arc<Metrics>,
+    ctx: Arc<ExecCtx>,
+) -> (
+    std::net::SocketAddr,
+    lrbi::serve::server::ServerHandle,
+    std::thread::JoinHandle<Result<()>>,
+) {
+    let hub = ModelHub::from_artifact(
+        "m",
+        artifact,
+        BatchPolicy::default(),
+        64,
+        metrics,
+        ctx,
+    )
+    .unwrap();
+    let server = Server::bind("127.0.0.1:0", Arc::new(hub), &ServeOptions::default()).unwrap();
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let runner = std::thread::spawn(move || server.run());
+    (addr, handle, runner)
+}
+
+fn one_row_batch(seed: u64) -> (Vec<f32>, RowBatch) {
+    let mut rng = Rng::new(seed);
+    let row: Vec<f32> = (0..6).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let batch = RowBatch::from_rows(&[row.clone()]).unwrap();
+    (row, batch)
+}
+
+/// Direct in-process logits for `row` — the byte-identity reference.
+fn direct_logits(artifact: &Artifact, row: &[f32]) -> Vec<f32> {
+    let mut direct = NativeBackend::from_artifact(artifact).unwrap();
+    let x = Matrix::from_fn(1, 6, |_, j| row[j]);
+    direct.predict(&x).unwrap().row(0).to_vec()
+}
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("lrbi_chaos_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ------------------------------------------------------ connection faults
+
+/// With no plan installed the hooks must be invisible: logits over
+/// the wire stay byte-identical to direct inference (the hooks are
+/// compiled into release builds, so this is the "chaos off" baseline
+/// every other test implicitly relies on).
+#[test]
+fn disabled_plan_serves_byte_identical_logits() {
+    let _g = fault::test_guard();
+    fault::clear();
+    let artifact = small_artifact(&small_params(70), "dense", 71);
+    let (addr, handle, runner) =
+        start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::single());
+    let mut client = NetClient::connect(addr).unwrap();
+    let (row, batch) = one_row_batch(72);
+    let got = client.infer("m", batch).unwrap();
+    assert_eq!(got.row(0), direct_logits(&artifact, &row).as_slice());
+    handle.shutdown();
+    runner.join().unwrap().unwrap();
+}
+
+/// `read_stall` delays the frame read but must not change a byte of
+/// the reply; every injected stall is counted.
+#[test]
+fn read_stall_delays_but_serves_identically() {
+    let _g = fault::test_guard();
+    let artifact = small_artifact(&small_params(73), "csr", 74);
+    let (addr, handle, runner) =
+        start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::single());
+    let injected_before = fault::injected_total();
+    fault::install(FaultPlan::parse("read_stall=1+2:20").unwrap());
+
+    let mut client = NetClient::connect(addr).unwrap();
+    let (row, batch) = one_row_batch(75);
+    let want = direct_logits(&artifact, &row);
+    for _ in 0..2 {
+        let got = client.infer("m", batch.clone()).unwrap();
+        assert_eq!(got.row(0), want.as_slice(), "stalled read must not corrupt logits");
+    }
+    assert!(fault::injected_total() >= injected_before + 2, "both stalls counted");
+
+    fault::clear();
+    handle.shutdown();
+    runner.join().unwrap().unwrap();
+}
+
+/// `read_truncate` turns the next frame into a typed `bad-frame`
+/// reply; the connection stays usable afterwards (a truncated frame
+/// is a *reply*, not a close).
+#[test]
+fn read_truncate_is_a_typed_bad_frame_and_the_conn_survives() {
+    let _g = fault::test_guard();
+    let artifact = small_artifact(&small_params(76), "bitmap", 77);
+    let metrics = Arc::new(Metrics::new());
+    let (addr, handle, runner) =
+        start_server(&artifact, Arc::clone(&metrics), ExecCtx::single());
+    fault::install(FaultPlan::parse("read_truncate=1").unwrap());
+
+    let mut client = NetClient::connect(addr).unwrap();
+    let (row, batch) = one_row_batch(78);
+    match client.call(&Frame::Infer { key: "m".into(), batch: batch.clone(), deadline_us: None }) {
+        Ok(Frame::Error { code, message }) => {
+            assert_eq!(code, ErrorCode::BadFrame);
+            assert!(message.contains("truncated"), "{message}");
+        }
+        other => panic!("expected ERROR(bad-frame), got {other:?}"),
+    }
+    assert!(metrics.snapshot().net_protocol_errors >= 1);
+
+    // Hit 2 is clean: the same connection serves correct logits.
+    let got = client.infer("m", batch).unwrap();
+    assert_eq!(got.row(0), direct_logits(&artifact, &row).as_slice());
+
+    fault::clear();
+    handle.shutdown();
+    runner.join().unwrap().unwrap();
+}
+
+/// `conn_close` drops the connection instead of serving: the client
+/// sees a typed error (close or reset, depending on timing — never a
+/// hang), and a fresh connection works because only hit 1 is faulted.
+#[test]
+fn conn_close_is_survivable_by_reconnecting() {
+    let _g = fault::test_guard();
+    let artifact = small_artifact(&small_params(79), "dense", 80);
+    let (addr, handle, runner) =
+        start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::single());
+    fault::install(FaultPlan::parse("conn_close=1").unwrap());
+
+    let mut client = NetClient::connect(addr).unwrap();
+    let (row, batch) = one_row_batch(81);
+    match client.infer("m", batch.clone()) {
+        Err(Error::Protocol(_)) | Err(Error::Io(_)) => {}
+        other => panic!("expected a typed close/reset error, got {other:?}"),
+    }
+
+    let mut fresh = NetClient::connect(addr).unwrap();
+    let got = fresh.infer("m", batch).unwrap();
+    assert_eq!(got.row(0), direct_logits(&artifact, &row).as_slice());
+
+    fault::clear();
+    handle.shutdown();
+    runner.join().unwrap().unwrap();
+}
+
+/// `write_stall` delays the reply write; the bytes that eventually
+/// arrive are untouched.
+#[test]
+fn write_stall_delays_the_reply_but_not_its_bytes() {
+    let _g = fault::test_guard();
+    let artifact = small_artifact(&small_params(82), "csr", 83);
+    let (addr, handle, runner) =
+        start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::single());
+    fault::install(FaultPlan::parse("write_stall=1:20").unwrap());
+
+    let mut client = NetClient::connect(addr).unwrap();
+    let (row, batch) = one_row_batch(84);
+    let got = client.infer("m", batch).unwrap();
+    assert_eq!(got.row(0), direct_logits(&artifact, &row).as_slice());
+
+    fault::clear();
+    handle.shutdown();
+    runner.join().unwrap().unwrap();
+}
+
+// --------------------------------------------------------- executor faults
+
+/// A panic injected into shard 0 of a pooled plan execution surfaces
+/// as a typed `internal` error frame — the worker pool's unwind fence
+/// catches it — and the pool keeps serving afterwards.
+#[test]
+fn shard_panic_is_typed_and_the_pool_survives() {
+    let _g = fault::test_guard();
+    fault::clear();
+    let artifact = wide_artifact(85);
+    let (addr, handle, runner) =
+        start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::new(2, None));
+    let mut client = NetClient::connect(addr).unwrap();
+    let (row, batch) = one_row_batch(87);
+
+    // Warm up on a clean path first, so the faulted hit ordinal below
+    // deterministically lands on *our* request's spmm.
+    client.infer("m", batch.clone()).unwrap();
+    fault::install(FaultPlan::parse("shard_panic=1").unwrap());
+
+    match client.infer("m", batch.clone()) {
+        Err(Error::Protocol(m)) => {
+            assert!(m.contains("parallel shard panicked"), "{m}");
+        }
+        other => panic!("expected ERROR(internal) with the panic message, got {other:?}"),
+    }
+
+    // Same connection, same pool: hit 2 is clean and byte-identical.
+    let got = client.infer("m", batch).unwrap();
+    assert_eq!(got.row(0), direct_logits(&artifact, &row).as_slice());
+
+    fault::clear();
+    handle.shutdown();
+    runner.join().unwrap().unwrap();
+}
+
+/// A stalled shard slows the flush but completes it — logits stay
+/// byte-identical to a clean pooled run.
+#[test]
+fn slow_shard_completes_with_identical_logits() {
+    let _g = fault::test_guard();
+    fault::clear();
+    let artifact = wide_artifact(88);
+    let (addr, handle, runner) =
+        start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::new(2, None));
+    let mut client = NetClient::connect(addr).unwrap();
+    let (row, batch) = one_row_batch(90);
+    client.infer("m", batch.clone()).unwrap(); // warm-up: pin hit ordinals
+
+    let injected_before = fault::injected_total();
+    fault::install(FaultPlan::parse("slow_shard=1:30").unwrap());
+    let got = client.infer("m", batch).unwrap();
+    assert_eq!(got.row(0), direct_logits(&artifact, &row).as_slice());
+    assert!(fault::injected_total() >= injected_before + 1);
+
+    fault::clear();
+    handle.shutdown();
+    runner.join().unwrap().unwrap();
+}
+
+// ----------------------------------------------------- client retry + shed
+
+/// ISSUE 8 acceptance: a client with a retry budget recovers from an
+/// injected transient overload — the first two INFERs are rejected
+/// `overloaded`, the third serves, and both retries are observed in
+/// the process-wide retry counter.
+#[test]
+fn retry_recovers_from_injected_transient_overload() {
+    let _g = fault::test_guard();
+    let artifact = small_artifact(&small_params(91), "dense", 92);
+    let metrics = Arc::new(Metrics::new());
+    let (addr, handle, runner) =
+        start_server(&artifact, Arc::clone(&metrics), ExecCtx::single());
+    fault::install(FaultPlan::parse("infer_overload=1+2").unwrap());
+
+    let opts = ClientOptions {
+        retry: RetryPolicy {
+            max_retries: 3,
+            base_backoff: Duration::from_millis(5),
+            ..RetryPolicy::default()
+        },
+        ..ClientOptions::default()
+    };
+    let retries_before = metrics::net_retries_total();
+    let overloads_before = metrics.snapshot().net_rejected_overload;
+    let mut client = NetClient::connect_with(addr, opts).unwrap();
+    let (row, batch) = one_row_batch(93);
+    let got = client.infer("m", batch).unwrap();
+    assert_eq!(got.row(0), direct_logits(&artifact, &row).as_slice());
+    assert!(metrics::net_retries_total() >= retries_before + 2, "two retries observed");
+    assert!(metrics.snapshot().net_rejected_overload >= overloads_before + 2);
+
+    fault::clear();
+    handle.shutdown();
+    runner.join().unwrap().unwrap();
+}
+
+/// Without a retry budget the same injected overload is surfaced to
+/// the caller as the typed `overloaded` protocol error.
+#[test]
+fn overload_without_retry_budget_is_a_typed_error() {
+    let _g = fault::test_guard();
+    let artifact = small_artifact(&small_params(94), "csr", 95);
+    let (addr, handle, runner) =
+        start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::single());
+    fault::install(FaultPlan::parse("infer_overload=1").unwrap());
+
+    let mut client = NetClient::connect(addr).unwrap();
+    let (_, batch) = one_row_batch(96);
+    match client.infer("m", batch) {
+        Err(Error::Protocol(m)) => assert!(m.starts_with("overloaded"), "{m}"),
+        other => panic!("expected ERROR(overloaded), got {other:?}"),
+    }
+
+    fault::clear();
+    handle.shutdown();
+    runner.join().unwrap().unwrap();
+}
+
+// --------------------------------------------------------- artifact faults
+
+/// Corrupted artifact loads (one flipped bit, a short read) must come
+/// back as typed [`Error::Store`] values — the CRC and the bounds
+/// checks catch them — and a clean re-read succeeds.
+#[test]
+fn artifact_corruption_is_a_typed_store_error() {
+    let _g = fault::test_guard();
+    fault::clear();
+    let dir = tmp_dir("artifact");
+    let path = dir.join("m.lrbi");
+    let artifact = small_artifact(&small_params(97), "lowrank", 98);
+    artifact.write(&path).unwrap();
+
+    fault::install(FaultPlan::parse("artifact_bitflip=1, seed=41").unwrap());
+    match Artifact::read(&path) {
+        Err(Error::Store(_)) => {} // typed, not a panic
+        other => panic!("bitflip: expected Error::Store, got {other:?}"),
+    }
+
+    fault::install(FaultPlan::parse("artifact_short_read=1").unwrap());
+    match Artifact::read(&path) {
+        Err(Error::Store(_)) => {}
+        other => panic!("short read: expected Error::Store, got {other:?}"),
+    }
+
+    // The file on disk was never touched: a clean read round-trips.
+    fault::clear();
+    let back = Artifact::read(&path).unwrap();
+    assert_eq!(back.meta.provenance, "chaos test");
+    let _ = std::fs::remove_dir_all(&dir);
+}

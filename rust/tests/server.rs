@@ -101,8 +101,13 @@ fn frame_encode_decode_round_trip_property() {
         let batch = RowBatch::new(rows, cols, data).unwrap();
         let key: String =
             (0..prop::dim(rng, 0, 12)).map(|_| (b'a' + rng.next_range(26) as u8) as char).collect();
+        let deadline_us = match rng.next_range(3) {
+            0 => None,
+            1 => Some(rng.next_range(5_000_000)),
+            _ => Some(rng.next_u64()),
+        };
         let frame = match rng.next_range(8) {
-            0 => Frame::Infer { key, batch },
+            0 => Frame::Infer { key, batch, deadline_us },
             1 => Frame::Logits(batch),
             2 => Frame::Error {
                 code: *prop::choose(rng, &ErrorCode::ALL),
@@ -129,7 +134,8 @@ fn frame_encode_decode_round_trip_property() {
 #[test]
 fn truncated_streams_yield_typed_errors_never_panics() {
     let batch = RowBatch::from_rows(&[vec![1.0, 2.0, 3.0]]).unwrap();
-    let wire = protocol::encode(&Frame::Infer { key: "k".into(), batch });
+    let wire =
+        protocol::encode(&Frame::Infer { key: "k".into(), batch, deadline_us: Some(1_000) });
     for cut in 0..wire.len() {
         let mut r = &wire[..cut];
         match protocol::read_frame(&mut r) {
@@ -148,7 +154,8 @@ fn corrupted_frames_never_panic_property() {
         let data: Vec<f32> = (0..rows * 5).map(|_| rng.next_f32()).collect();
         let batch = RowBatch::new(rows, 5, data).unwrap();
         let frame = if rng.next_range(2) == 0 {
-            Frame::Infer { key: "model".into(), batch }
+            let deadline_us = (rng.next_range(2) == 0).then(|| rng.next_u64());
+            Frame::Infer { key: "model".into(), batch, deadline_us }
         } else {
             Frame::Stats(vec![("requests".into(), rng.next_u64())])
         };
@@ -256,7 +263,10 @@ fn unknown_model_and_bad_shape_are_typed_error_frames() {
     let mut client = NetClient::connect(addr).unwrap();
 
     let good_row = RowBatch::from_rows(&[vec![0.5; 6]]).unwrap();
-    match client.call(&Frame::Infer { key: "nope".into(), batch: good_row }).unwrap() {
+    match client
+        .call(&Frame::Infer { key: "nope".into(), batch: good_row, deadline_us: None })
+        .unwrap()
+    {
         Frame::Error { code, message } => {
             assert_eq!(code, ErrorCode::UnknownModel);
             assert!(message.contains('m'), "lists available models: {message}");
@@ -265,7 +275,10 @@ fn unknown_model_and_bad_shape_are_typed_error_frames() {
     }
 
     let bad_row = RowBatch::from_rows(&[vec![0.5; 7]]).unwrap();
-    match client.call(&Frame::Infer { key: String::new(), batch: bad_row }).unwrap() {
+    match client
+        .call(&Frame::Infer { key: String::new(), batch: bad_row, deadline_us: None })
+        .unwrap()
+    {
         Frame::Error { code, .. } => assert_eq!(code, ErrorCode::BadShape),
         other => panic!("expected ERROR, got {}", other.type_name()),
     }
@@ -401,6 +414,7 @@ fn full_request_queue_returns_explicit_overload_frame() {
         .call(&Frame::Infer {
             key: "block".into(),
             batch: RowBatch::from_rows(&[vec![0.0; 6]]).unwrap(),
+            deadline_us: None,
         })
         .unwrap()
     {
@@ -463,6 +477,120 @@ fn connections_beyond_max_conns_get_rejection_frame() {
     }
     let mut third = NetClient::connect(addr).unwrap();
     assert!(third.infer("m", RowBatch::from_rows(&[vec![0.1; 6]]).unwrap()).is_ok());
+
+    handle.shutdown();
+    runner.join().unwrap().unwrap();
+}
+
+/// ISSUE 8 satellite: a slow-loris peer — half a length prefix, then
+/// silence — must be reaped by the idle timeout with a typed error,
+/// free its handler thread (the `--max-conns` slot), and count as a
+/// protocol error. Before PR 8 this connection held its slot for the
+/// full 300 s default.
+#[test]
+fn slow_loris_half_frame_is_reaped_and_frees_the_slot() {
+    use std::io::Write;
+    let params = small_params(55);
+    let artifact = small_artifact(&params, "dense", 56);
+    let metrics = Arc::new(Metrics::new());
+    let hub = ModelHub::from_artifact(
+        "m",
+        &artifact,
+        BatchPolicy::default(),
+        64,
+        Arc::clone(&metrics),
+        ExecCtx::single(),
+    )
+    .unwrap();
+    let opts = ServeOptions {
+        max_conns: 1,
+        idle_timeout: Duration::from_millis(200),
+        ..ServeOptions::default()
+    };
+    let (addr, handle, runner) = start_server(hub, &opts);
+
+    let mut loris = TcpStream::connect(addr).unwrap();
+    loris.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    loris.write_all(&[0x10, 0x00]).unwrap(); // 2 of 4 prefix bytes, then silence
+    match protocol::read_frame(&mut loris).unwrap() {
+        Some(Frame::Error { code, message }) => {
+            assert_eq!(code, ErrorCode::BadFrame);
+            assert!(message.contains("timed out inside"), "{message}");
+        }
+        other => panic!("expected ERROR(bad-frame), got {other:?}"),
+    }
+    assert!(
+        protocol::read_frame(&mut loris).unwrap().is_none(),
+        "a mid-frame stall cannot be re-synced: the server must close"
+    );
+    assert!(metrics.snapshot().net_protocol_errors >= 1);
+
+    // The handler thread (and with it the only connection slot) is
+    // free again: a healthy client is admitted and served.
+    while handle.active_connections() > 0 {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let mut client = NetClient::connect(addr).unwrap();
+    let logits = client.infer("m", RowBatch::from_rows(&[vec![0.4; 6]]).unwrap()).unwrap();
+    assert_eq!((logits.rows(), logits.cols()), (1, 4));
+
+    handle.shutdown();
+    runner.join().unwrap().unwrap();
+}
+
+/// ISSUE 8 tentpole, wire level: an INFER carrying `deadline_us: 0`
+/// (already expired on arrival) is answered DEADLINE_EXCEEDED, the
+/// shed is counted, and no spmm runs for it; a generous deadline on
+/// the same connection serves identically to a deadline-free request.
+#[test]
+fn expired_wire_deadline_is_shed_and_generous_one_serves() {
+    let params = small_params(57);
+    let artifact = small_artifact(&params, "csr", 58);
+    let metrics = Arc::new(Metrics::new());
+    let hub = ModelHub::from_artifact(
+        "m",
+        &artifact,
+        BatchPolicy::default(),
+        64,
+        Arc::clone(&metrics),
+        ExecCtx::single(),
+    )
+    .unwrap();
+    let (addr, handle, runner) = start_server(hub, &ServeOptions::default());
+    let mut client = NetClient::connect(addr).unwrap();
+
+    let mut rng = Rng::new(59);
+    let row = random_row(&mut rng, 6);
+    let batch = RowBatch::from_rows(&[row]).unwrap();
+    let spmms_before = metrics.snapshot().kernel_spmms;
+    match client
+        .call(&Frame::Infer { key: "m".into(), batch: batch.clone(), deadline_us: Some(0) })
+        .unwrap()
+    {
+        Frame::Error { code, message } => {
+            assert_eq!(code, ErrorCode::DeadlineExceeded);
+            assert!(message.contains("expired"), "{message}");
+        }
+        other => panic!("expected ERROR(deadline-exceeded), got {}", other.type_name()),
+    }
+    let snap = metrics.snapshot();
+    assert!(snap.net_deadline_exceeded >= 1, "shed must be counted");
+    assert_eq!(snap.kernel_spmms, spmms_before, "shed rows must never reach spmm");
+
+    // Same connection, 30 s budget: byte-identical to deadline-free.
+    let with = match client
+        .call(&Frame::Infer {
+            key: "m".into(),
+            batch: batch.clone(),
+            deadline_us: Some(30_000_000),
+        })
+        .unwrap()
+    {
+        Frame::Logits(l) => l,
+        other => panic!("expected LOGITS, got {}", other.type_name()),
+    };
+    let without = client.infer("m", batch).unwrap();
+    assert_eq!(with.data(), without.data(), "deadline must not change logits");
 
     handle.shutdown();
     runner.join().unwrap().unwrap();

@@ -1,0 +1,93 @@
+#!/usr/bin/env bash
+# Chaos smoke test: boot `lrbi serve --listen` under a deterministic
+# LRBI_FAULT plan (docs/ROBUSTNESS.md), then prove the stack degrades
+# the way the docs promise:
+#   - a client with a retry budget recovers from injected transient
+#     overload (and its retries are observed);
+#   - already-expired deadlines are shed with typed DEADLINE_EXCEEDED
+#     frames (and counted, without running spmm for them);
+#   - the shed/overload/fault counters all surface on the Prometheus
+#     page, so a live fault plan is one scrape away from discovery;
+#   - the server still shuts down gracefully over the wire.
+# Finishes with the chaos test suite (every injection point against a
+# live in-process server). Part of scripts/verify.sh and the CI
+# chaos-smoke job.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+LRBI=./target/release/lrbi
+[ -x "$LRBI" ] || cargo build --release
+
+log="$(mktemp)"
+srv_pid=""
+cleanup() {
+  [ -n "$srv_pid" ] && kill "$srv_pid" 2>/dev/null || true
+  rm -f "$log"
+}
+trap cleanup EXIT
+
+plan="read_stall=1:20, infer_overload=1+2"
+echo "== boot: serve --listen under LRBI_FAULT=\"$plan\""
+LRBI_FAULT="$plan" "$LRBI" serve --listen 127.0.0.1:0 \
+  --metrics-addr 127.0.0.1:0 --kernel lowrank --threads 2 \
+  --max-wait-ms 1 >"$log" 2>&1 &
+srv_pid=$!
+
+for _ in $(seq 1 100); do
+  grep -q "listening on " "$log" && break
+  kill -0 "$srv_pid" 2>/dev/null || { echo "server died:"; cat "$log"; exit 1; }
+  sleep 0.1
+done
+grep -q "listening on " "$log" || { echo "server never came up:"; cat "$log"; exit 1; }
+
+addr=$(sed -n 's/^listening on \([0-9.:]*\) .*/\1/p' "$log" | head -n1)
+maddr=$(sed -n 's|^metrics on http://\([0-9.:]*\) .*|\1|p' "$log" | head -n1)
+[ -n "$addr" ] || { echo "could not parse server address:"; cat "$log"; exit 1; }
+[ -n "$maddr" ] || { echo "could not parse metrics address:"; cat "$log"; exit 1; }
+echo "   server $addr, metrics $maddr"
+
+echo "== retry: the first two INFERs are injected 'overloaded'; --retries 3 recovers"
+out=$("$LRBI" serve --connect "$addr" --requests 8 --rows 1 \
+  --retries 3 --retry-base-ms 5)
+echo "   $out"
+retries=$(printf '%s\n' "$out" | sed -n 's/.* \([0-9]*\) retries observed.*/\1/p')
+[ -n "$retries" ] && [ "$retries" -ge 2 ] \
+  || { echo "expected >= 2 retries observed, got '${retries:-}'"; exit 1; }
+
+echo "== deadline: --deadline-ms 0 probes the expired-shed path"
+out=$("$LRBI" serve --connect "$addr" --requests 4 --rows 1 --deadline-ms 0)
+echo "   $out"
+shed=$(printf '%s\n' "$out" | sed -n 's/.* \([0-9]*\) shed by deadline.*/\1/p')
+[ "${shed:-0}" -eq 4 ] \
+  || { echo "expected all 4 expired requests shed, got '${shed:-}'"; exit 1; }
+
+echo "== scrape: shed/overload/fault counters surface on the metrics page"
+mhost=${maddr%:*}
+mport=${maddr##*:}
+exec 3<>"/dev/tcp/${mhost}/${mport}"
+printf 'GET /metrics HTTP/1.0\r\n\r\n' >&3
+scrape=$(cat <&3)
+exec 3<&- 3>&-
+body=$(printf '%s\n' "$scrape" | awk 'body{print} /^\r?$/{body=1}')
+
+counter() {
+  printf '%s\n' "$body" | sed -n "s/^lrbi_$1 \([0-9]*\).*/\1/p"
+}
+for want in "net_deadline_exceeded 4" "net_rejected_overload 2" "faults_injected 3"; do
+  name=${want% *}
+  floor=${want#* }
+  got=$(counter "$name")
+  [ -n "$got" ] && [ "$got" -ge "$floor" ] \
+    || { echo "expected lrbi_$name >= $floor, got '${got:-missing}'"; exit 1; }
+  echo "   lrbi_$name = $got (>= $floor)"
+done
+
+echo "== graceful shutdown over the wire (fault plan still installed)"
+"$LRBI" serve --connect "$addr" --requests 0 --shutdown >/dev/null
+wait "$srv_pid"
+srv_pid=""
+
+echo "== chaos suite: every injection point against a live server"
+cargo test -q --release --test chaos
+
+echo "chaos smoke: OK"

@@ -35,6 +35,9 @@ done
 echo "== telemetry smoke (serve --listen --metrics-addr + scrape + top + zero-alloc)"
 ../scripts/telemetry_smoke.sh
 
+echo "== chaos smoke (LRBI_FAULT plan + retry recovery + deadline shed + chaos suite)"
+../scripts/chaos_smoke.sh
+
 echo "== cargo doc --no-deps (warnings are errors)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
