@@ -172,6 +172,10 @@ fn print_usage() {
          \x20            --max-conns 64  --max-queue 256   admission control\n\
          \x20            --idle-timeout-ms 300000   reclaim silent connections\n\
          \x20            --metrics-addr HOST:PORT   Prometheus text scrape endpoint\n\
+         \x20            --worker HOST:PORT   serve as a cluster worker (= --listen)\n\
+         \x20            --router HOST:PORT --workers \"a:1|b:1,c:2\" [--shards N]\n\
+         \x20            \x20  scatter/gather over worker shards (docs/CLUSTER.md)\n\
+         \x20            --model KEY   model key the router asks workers for\n\
          \x20            --connect HOST:PORT [--requests N --rows R --shutdown]\n\
          \x20            \x20  drive INFER traffic at a running server instead\n\
          \x20            --deadline-ms D   per-call budget (0 = expired-shed probe)\n\
@@ -319,6 +323,15 @@ fn synthetic_backend(
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if let Some(addr) = args.flags.get("router") {
+        return serve_router(args, addr);
+    }
+    if let Some(addr) = args.flags.get("worker") {
+        // A worker is an ordinary wire server: the shared connection
+        // handler already answers SCATTER frames, so this is --listen
+        // under a name that makes cluster invocations read correctly.
+        return serve_listen(args, addr);
+    }
     if let Some(addr) = args.flags.get("listen") {
         return serve_listen(args, addr);
     }
@@ -495,6 +508,111 @@ fn serve_listen(args: &Args, addr: &str) -> Result<()> {
         snap.net_conns_rejected,
         snap.net_rejected_overload,
         snap.net_protocol_errors
+    );
+    Ok(())
+}
+
+/// `lrbi serve --router HOST:PORT --workers LIST`: front a fleet of
+/// `--worker` servers. Each `,`-separated entry of LIST is one output
+/// -column shard; `|` inside an entry lists fail-over replicas
+/// (`"a:1|b:1,c:2"` = two shards, the first replicated). The router
+/// probes the workers for the model's output width, splits the
+/// columns evenly, and serves ordinary INFER traffic whose logits are
+/// bit-identical to a single process; `SWAP name` rolls across every
+/// worker. See docs/CLUSTER.md.
+fn serve_router(args: &Args, addr: &str) -> Result<()> {
+    use crate::serve::router::ShardGroup;
+    use crate::serve::server::{ClientOptions, ModelHub, RetryPolicy, ServeOptions, Server};
+    let spec = args.flags.get("workers").ok_or_else(|| {
+        Error::InvalidArg(
+            "--router requires --workers HOST:PORT[|replica...][,shard...]".into(),
+        )
+    })?;
+    let metrics = std::sync::Arc::new(Metrics::new());
+    let defaults = ServeOptions::default();
+    let opts = ServeOptions {
+        max_conns: args.get("max-conns", 64usize)?,
+        max_queue: args.get("max-queue", 256usize)?,
+        // The router never batches locally — workers own the batcher.
+        policy: BatchPolicy::default(),
+        idle_timeout: std::time::Duration::from_millis(
+            args.get("idle-timeout-ms", defaults.idle_timeout.as_millis() as u64)?,
+        ),
+    };
+    let copts = ClientOptions {
+        connect_timeout: opt_ms(args, "connect-timeout-ms")?,
+        io_timeout: opt_ms(args, "io-timeout-ms")?,
+        // Fail-over between replicas is the router's retry mechanism;
+        // per-connection retries would multiply worker load.
+        retry: RetryPolicy::none(),
+        deadline: None,
+    };
+    // The key workers are asked for ("" = each worker's default).
+    let model = args.get_str("model", "");
+    let group = std::sync::Arc::new(ShardGroup::connect(
+        spec,
+        &model,
+        copts,
+        std::sync::Arc::clone(&metrics),
+    )?);
+    let shards: usize = args.get("shards", 0usize)?;
+    if shards != 0 && shards != group.shard_count() {
+        return Err(Error::InvalidArg(format!(
+            "--shards {shards} but --workers describes {} shard(s); \
+             shards are the comma-separated entries of --workers",
+            group.shard_count()
+        )));
+    }
+    let key = if model.is_empty() { "default" } else { model.as_str() };
+    println!(
+        "router over {} shard(s) of {} output column(s): {}",
+        group.shard_count(),
+        group.classes(),
+        group.describe()
+    );
+    let hub = ModelHub::from_remote(key, group);
+    let keys = hub.keys();
+    let default_key = hub.default_key().to_string();
+    let server = Server::bind(addr, std::sync::Arc::new(hub), &opts)?;
+    let metrics_server = match args.flags.get("metrics-addr") {
+        Some(maddr) => {
+            let ms = crate::serve::metrics_http::MetricsServer::bind(
+                maddr,
+                std::sync::Arc::clone(&metrics),
+            )?;
+            println!(
+                "metrics on http://{} (Prometheus text, docs/OBSERVABILITY.md)",
+                ms.local_addr()
+            );
+            Some(ms)
+        }
+        None => None,
+    };
+    // Keep the banner shape of serve_listen: scripts discover the
+    // bound address from the "listening on " line.
+    println!(
+        "listening on {} — {} model(s) {:?}, default '{default_key}', router mode, \
+         max-conns {}, max-queue {}",
+        server.local_addr(),
+        keys.len(),
+        keys,
+        opts.max_conns,
+        opts.max_queue
+    );
+    println!("send a SHUTDOWN frame to stop (see docs/PROTOCOL.md)");
+    server.run()?;
+    drop(metrics_server);
+    let snap = metrics.snapshot();
+    println!(
+        "routed {} wire requests over {} connections; {} worker calls \
+         ({} failures, {} failovers, {} unavailable), {} rolling swap step(s)",
+        snap.net_requests,
+        snap.net_conns_accepted,
+        snap.net_worker_requests,
+        snap.net_worker_failures,
+        snap.net_worker_failovers,
+        snap.net_worker_unavailable,
+        snap.net_worker_swaps
     );
     Ok(())
 }

@@ -112,6 +112,23 @@ pub struct Metrics {
     /// timeout failed — a connection is never allowed to run
     /// untimed (see `docs/ROBUSTNESS.md`).
     pub net_timeout_config_errors: AtomicU64,
+    /// `SCATTER` frames a router sent to worker replicas (one per
+    /// shard per request attempt; see `docs/CLUSTER.md`).
+    pub net_worker_requests: AtomicU64,
+    /// Worker scatter attempts that failed (connect error, I/O error,
+    /// or an error frame instead of a `PARTIAL`).
+    pub net_worker_failures: AtomicU64,
+    /// Failed scatter attempts that were recovered by failing over to
+    /// another replica of the same shard.
+    pub net_worker_failovers: AtomicU64,
+    /// Worker swap steps completed during coordinated rolling swaps.
+    pub net_worker_swaps: AtomicU64,
+    /// Worker swap steps that failed (the rolling swap aborts and the
+    /// shard group degrades until a later swap succeeds).
+    pub net_worker_swap_failures: AtomicU64,
+    /// Router requests answered with an `unavailable` error frame (no
+    /// replica of some shard reachable, or the group is degraded).
+    pub net_worker_unavailable: AtomicU64,
 }
 
 /// Client-side retries (`NetClient` backoff) observed in this process.
@@ -193,6 +210,18 @@ pub struct MetricsSnapshot {
     pub net_shed_predicted: u64,
     /// Connections closed because a socket timeout could not be armed.
     pub net_timeout_config_errors: u64,
+    /// `SCATTER` frames sent to worker replicas.
+    pub net_worker_requests: u64,
+    /// Worker scatter attempts that failed.
+    pub net_worker_failures: u64,
+    /// Scatter failures recovered by replica failover.
+    pub net_worker_failovers: u64,
+    /// Worker swap steps completed in rolling swaps.
+    pub net_worker_swaps: u64,
+    /// Worker swap steps that failed (group degraded).
+    pub net_worker_swap_failures: u64,
+    /// Router requests answered `unavailable`.
+    pub net_worker_unavailable: u64,
     /// Client-side retries observed in this process (process-global;
     /// see [`record_net_retry`]).
     pub net_retries_observed: u64,
@@ -251,6 +280,12 @@ impl Metrics {
             net_deadline_exceeded: self.net_deadline_exceeded.load(Ordering::Relaxed),
             net_shed_predicted: self.net_shed_predicted.load(Ordering::Relaxed),
             net_timeout_config_errors: self.net_timeout_config_errors.load(Ordering::Relaxed),
+            net_worker_requests: self.net_worker_requests.load(Ordering::Relaxed),
+            net_worker_failures: self.net_worker_failures.load(Ordering::Relaxed),
+            net_worker_failovers: self.net_worker_failovers.load(Ordering::Relaxed),
+            net_worker_swaps: self.net_worker_swaps.load(Ordering::Relaxed),
+            net_worker_swap_failures: self.net_worker_swap_failures.load(Ordering::Relaxed),
+            net_worker_unavailable: self.net_worker_unavailable.load(Ordering::Relaxed),
             net_retries_observed: net_retries_total(),
             faults_injected: crate::util::fault::injected_total(),
         }
@@ -367,6 +402,12 @@ impl MetricsSnapshot {
             ("net_deadline_exceeded", self.net_deadline_exceeded),
             ("net_shed_predicted", self.net_shed_predicted),
             ("net_timeout_config_errors", self.net_timeout_config_errors),
+            ("net_worker_requests", self.net_worker_requests),
+            ("net_worker_failures", self.net_worker_failures),
+            ("net_worker_failovers", self.net_worker_failovers),
+            ("net_worker_swaps", self.net_worker_swaps),
+            ("net_worker_swap_failures", self.net_worker_swap_failures),
+            ("net_worker_unavailable", self.net_worker_unavailable),
             ("net_retries_observed", self.net_retries_observed),
             ("faults_injected", self.faults_injected),
         ];
@@ -454,7 +495,7 @@ mod tests {
         let s = m.snapshot();
         let named = s.named_counters();
         // scalar fields + one entry per spmm kernel slot
-        assert_eq!(named.len(), 30 + SPMM_NS_COUNTER_NAMES.len());
+        assert_eq!(named.len(), 36 + SPMM_NS_COUNTER_NAMES.len());
         let mut names: Vec<&str> = named.iter().map(|(n, _)| *n).collect();
         names.sort_unstable();
         names.dedup();
@@ -468,6 +509,12 @@ mod tests {
         assert_eq!(get("net_deadline_exceeded"), 0);
         assert_eq!(get("net_shed_predicted"), 0);
         assert_eq!(get("net_timeout_config_errors"), 0);
+        assert_eq!(get("net_worker_requests"), 0);
+        assert_eq!(get("net_worker_failures"), 0);
+        assert_eq!(get("net_worker_failovers"), 0);
+        assert_eq!(get("net_worker_swaps"), 0);
+        assert_eq!(get("net_worker_swap_failures"), 0);
+        assert_eq!(get("net_worker_unavailable"), 0);
         // net_retries_observed / faults_injected are process-global
         // (other tests may have moved them) — presence is asserted by
         // the uniqueness sweep above, not a zero value.

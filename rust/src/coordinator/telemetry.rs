@@ -504,6 +504,14 @@ impl Telemetry {
         self.registry.histogram("request_ns", &[("model", model)])
     }
 
+    /// Get-or-create the per-worker scatter round-trip latency series
+    /// (`worker_ns{worker=...}`) — resolved once per replica by the
+    /// router's shard group, recorded on every `SCATTER`/`PARTIAL`
+    /// exchange (see `docs/CLUSTER.md`).
+    pub fn worker_histogram(&self, worker: &str) -> Arc<LatencyHistogram> {
+        self.registry.histogram("worker_ns", &[("worker", worker)])
+    }
+
     /// Snapshot every registered series (fixed + per-model).
     pub fn export(&self) -> Vec<SeriesSnapshot> {
         self.registry.export()

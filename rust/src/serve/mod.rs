@@ -6,6 +6,11 @@
 //!   typed error frames, admission control, `STATS`, hot-swap, and
 //!   graceful shutdown (specs: `docs/PROTOCOL.md`, ops guide:
 //!   `docs/SERVING.md`).
+//! - [`router`] / [`shard`]: the router/worker cluster tier — a
+//!   router scatters each request's rows to workers that each serve a
+//!   contiguous slice of output columns and gathers the partials in
+//!   fixed order, bit-identical to a single process (topology and
+//!   failure modes: `docs/CLUSTER.md`).
 //! - [`batcher`]: dynamic request batching — concurrent clients' rows
 //!   coalesce into shared executions behind a bounded submit queue
 //!   that *rejects* (never silently stalls) when full.
@@ -28,7 +33,9 @@ pub mod kernels;
 pub mod metrics_http;
 pub(crate) mod plan;
 pub mod protocol;
+pub mod router;
 pub mod server;
+pub mod shard;
 pub mod variants;
 
 pub use batcher::{BatchPolicy, DynamicBatcher, SubmitError};
@@ -42,6 +49,7 @@ pub use metrics_http::MetricsServer;
 pub use protocol::{
     ErrorCode, Frame, HistSummary, RowBatch, WireError, MAX_FRAME, PROTOCOL_VERSION,
 };
+pub use router::ShardGroup;
 pub use server::{
     ClientOptions, ModelHub, ModelSlot, NetClient, RetryPolicy, ServeOptions, Server, ServerHandle,
 };

@@ -50,6 +50,8 @@ const FT_OK: u8 = 0x07;
 const FT_SHUTDOWN: u8 = 0x08;
 const FT_STATS2_REQ: u8 = 0x09;
 const FT_STATS2: u8 = 0x0A;
+const FT_SCATTER: u8 = 0x0B;
+const FT_PARTIAL: u8 = 0x0C;
 
 /// Typed error codes carried by [`Frame::Error`] (wire values are
 /// stable; see `docs/PROTOCOL.md`).
@@ -80,11 +82,16 @@ pub enum ErrorCode {
     /// without running spmm (see `docs/ROBUSTNESS.md`). Retrying is
     /// only useful with a larger budget.
     DeadlineExceeded = 9,
+    /// A router could not reach any worker replica for some shard of
+    /// the model (or the shard group is degraded mid-swap), so the
+    /// request cannot be served right now. Transient: clients retry
+    /// this like [`ErrorCode::Overloaded`] (see `docs/CLUSTER.md`).
+    Unavailable = 10,
 }
 
 impl ErrorCode {
     /// Every code, in wire order.
-    pub const ALL: [ErrorCode; 9] = [
+    pub const ALL: [ErrorCode; 10] = [
         ErrorCode::BadVersion,
         ErrorCode::BadFrame,
         ErrorCode::TooLarge,
@@ -94,6 +101,7 @@ impl ErrorCode {
         ErrorCode::Internal,
         ErrorCode::ShuttingDown,
         ErrorCode::DeadlineExceeded,
+        ErrorCode::Unavailable,
     ];
 
     /// Decode a wire byte.
@@ -113,6 +121,7 @@ impl ErrorCode {
             ErrorCode::Internal => "internal",
             ErrorCode::ShuttingDown => "shutting-down",
             ErrorCode::DeadlineExceeded => "deadline-exceeded",
+            ErrorCode::Unavailable => "unavailable",
         }
     }
 }
@@ -315,6 +324,39 @@ pub enum Frame {
         /// registration order.
         histograms: Vec<HistSummary>,
     },
+    /// Router → worker: run a row batch through the model named `key`
+    /// and return only the contiguous output columns
+    /// `col_start..col_end` as a [`Frame::Partial`]. The worker
+    /// computes the full forward pass (every output column is produced
+    /// by the same kernel arithmetic as single-process serving) and
+    /// slices afterwards, so a fixed-order gather of disjoint partials
+    /// is bit-identical to an unsharded `INFER` (see
+    /// `docs/CLUSTER.md`).
+    Scatter {
+        /// Model key on the worker (empty selects the worker default).
+        key: String,
+        /// First output column of the requested slice (inclusive).
+        col_start: u32,
+        /// One past the last output column of the slice (exclusive).
+        col_end: u32,
+        /// Input rows, each `input_dim` wide.
+        batch: RowBatch,
+        /// Optional deadline budget in **microseconds** with the same
+        /// trailing-bytes encoding and semantics as
+        /// [`Frame::Infer::deadline_us`].
+        deadline_us: Option<u64>,
+    },
+    /// Worker → router: the output-column slice answering a
+    /// [`Frame::Scatter`] — `rows × (col_end - col_start)` logits.
+    Partial {
+        /// First output column covered (inclusive), echoed back so the
+        /// router can verify the gather order.
+        col_start: u32,
+        /// One past the last covered column (exclusive).
+        col_end: u32,
+        /// Per-row logits for exactly those columns.
+        batch: RowBatch,
+    },
 }
 
 impl Frame {
@@ -336,6 +378,8 @@ impl Frame {
             Frame::Shutdown => FT_SHUTDOWN,
             Frame::Stats2Request => FT_STATS2_REQ,
             Frame::Stats2 { .. } => FT_STATS2,
+            Frame::Scatter { .. } => FT_SCATTER,
+            Frame::Partial { .. } => FT_PARTIAL,
         }
     }
 
@@ -352,6 +396,8 @@ impl Frame {
             Frame::Shutdown => "SHUTDOWN",
             Frame::Stats2Request => "STATS2_REQ",
             Frame::Stats2 { .. } => "STATS2",
+            Frame::Scatter { .. } => "SCATTER",
+            Frame::Partial { .. } => "PARTIAL",
         }
     }
 }
@@ -450,6 +496,22 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
         }
         Frame::Swap { key } => put_short_str(&mut payload, key),
         Frame::Ok { message } => put_short_str(&mut payload, message),
+        Frame::Scatter { key, col_start, col_end, batch, deadline_us } => {
+            put_short_str(&mut payload, key);
+            put_u32(&mut payload, *col_start);
+            put_u32(&mut payload, *col_end);
+            put_batch(&mut payload, batch);
+            // Same optional trailing deadline as INFER: omitted for
+            // `None`, 8 LE bytes for `Some`.
+            if let Some(us) = deadline_us {
+                payload.extend_from_slice(&us.to_le_bytes());
+            }
+        }
+        Frame::Partial { col_start, col_end, batch } => {
+            put_u32(&mut payload, *col_start);
+            put_u32(&mut payload, *col_end);
+            put_batch(&mut payload, batch);
+        }
     }
     let mut wire = Vec::with_capacity(4 + payload.len());
     wire.extend_from_slice(&(payload.len() as u32).to_le_bytes());
@@ -609,6 +671,22 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
         FT_SWAP => Frame::Swap { key: cur.short_str("swap key")? },
         FT_OK => Frame::Ok { message: cur.short_str("ok message")? },
         FT_SHUTDOWN => Frame::Shutdown,
+        FT_SCATTER => {
+            let key = cur.short_str("model key")?;
+            let col_start = cur.u32("scatter col_start")?;
+            let col_end = cur.u32("scatter col_end")?;
+            let batch = cur.batch()?;
+            // Optional trailing deadline, exactly as in INFER.
+            let deadline_us =
+                if cur.remaining() == 8 { Some(cur.u64("deadline")?) } else { None };
+            Frame::Scatter { key, col_start, col_end, batch, deadline_us }
+        }
+        FT_PARTIAL => {
+            let col_start = cur.u32("partial col_start")?;
+            let col_end = cur.u32("partial col_end")?;
+            let batch = cur.batch()?;
+            Frame::Partial { col_start, col_end, batch }
+        }
         other => {
             return Err(WireError::new(
                 ErrorCode::BadFrame,
@@ -773,6 +851,67 @@ mod tests {
     }
 
     #[test]
+    fn scatter_and_partial_round_trip() {
+        let batch = RowBatch::new(2, 3, vec![1.0, -2.5, 0.0, 3.25, f32::MIN, f32::MAX]).unwrap();
+        let frames = [
+            Frame::Scatter {
+                key: "model-a".into(),
+                col_start: 0,
+                col_end: 5,
+                batch: batch.clone(),
+                deadline_us: None,
+            },
+            Frame::Scatter {
+                key: String::new(),
+                col_start: 5,
+                col_end: 10,
+                batch: batch.clone(),
+                deadline_us: Some(1500),
+            },
+            Frame::Scatter {
+                key: "m".into(),
+                col_start: u32::MAX - 1,
+                col_end: u32::MAX,
+                batch: RowBatch::new(0, 0, vec![]).unwrap(),
+                deadline_us: Some(0),
+            },
+            Frame::Partial { col_start: 0, col_end: 3, batch },
+            Frame::Partial {
+                col_start: 7,
+                col_end: 7,
+                batch: RowBatch::new(0, 0, vec![]).unwrap(),
+            },
+        ];
+        for f in &frames {
+            assert_eq!(&roundtrip(f), f, "{}", f.type_name());
+        }
+    }
+
+    #[test]
+    fn scatter_partial_trailing_deadline_is_rejected() {
+        let batch = RowBatch::new(1, 1, vec![0.5]).unwrap();
+        let mut wire = encode(&Frame::Scatter {
+            key: "k".into(),
+            col_start: 0,
+            col_end: 1,
+            batch,
+            deadline_us: Some(42),
+        });
+        // chop 3 of the 8 deadline bytes and fix up the length prefix
+        wire.truncate(wire.len() - 3);
+        let plen = (wire.len() - 4) as u32;
+        wire[..4].copy_from_slice(&plen.to_le_bytes());
+        let mut r = &wire[..];
+        match read_frame(&mut r) {
+            Err(ReadError::Wire(e)) => {
+                assert_eq!(e.code, ErrorCode::BadFrame);
+                assert!(e.message.contains("trailing"), "{}", e.message);
+            }
+            other => panic!("expected BadFrame, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn timed_read_reports_decode_nanos() {
         let wire = encode(&Frame::Stats(vec![("requests".into(), 1)]));
         let mut r = &wire[..];
@@ -796,8 +935,26 @@ mod tests {
         assert_eq!(Frame::Shutdown.type_byte(), 0x08);
         assert_eq!(Frame::Stats2Request.type_byte(), 0x09);
         assert_eq!(Frame::Stats2 { counters: vec![], histograms: vec![] }.type_byte(), 0x0A);
+        let empty = || RowBatch::new(0, 0, vec![]).unwrap();
+        assert_eq!(
+            Frame::Scatter {
+                key: String::new(),
+                col_start: 0,
+                col_end: 0,
+                batch: empty(),
+                deadline_us: None,
+            }
+            .type_byte(),
+            0x0B
+        );
+        assert_eq!(
+            Frame::Partial { col_start: 0, col_end: 0, batch: empty() }.type_byte(),
+            0x0C
+        );
         assert_eq!(ErrorCode::DeadlineExceeded as u8, 9);
         assert_eq!(ErrorCode::DeadlineExceeded.name(), "deadline-exceeded");
+        assert_eq!(ErrorCode::Unavailable as u8, 10);
+        assert_eq!(ErrorCode::Unavailable.name(), "unavailable");
         for code in ErrorCode::ALL {
             assert_eq!(ErrorCode::from_u8(code as u8), Some(code));
         }

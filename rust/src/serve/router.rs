@@ -1,0 +1,506 @@
+//! Router tier: scatter/gather over output-column worker shards.
+//!
+//! A [`ShardGroup`] is the router-side handle to one served model. It
+//! holds a fixed list of shards, each a fail-over chain of replica
+//! workers (ordinary `lrbi serve --worker` processes speaking the
+//! versioned wire protocol). On every request the router scatters the
+//! *full input batch* to one live replica per shard as a `SCATTER`
+//! frame, each worker runs the complete forward pass and answers a
+//! `PARTIAL` carrying only its contiguous slice of output columns, and
+//! the router reassembles the slices in fixed shard order with
+//! [`shard::assemble`]. No arithmetic runs on the router, so the
+//! gathered logits are bit-identical to a single-process
+//! `NativeBackend` — `tests/cluster.rs` pins this for every kernel
+//! format at shard counts {1, 2, 4}.
+//!
+//! Failure discipline (see `docs/CLUSTER.md`):
+//! - **Deterministic request errors** (bad shape, unknown model,
+//!   deadline exceeded, malformed frame) would fail identically on any
+//!   replica, so they propagate immediately without fail-over.
+//! - **Transient errors** (worker overloaded / shutting down / I/O
+//!   failure) advance to the next replica of the same shard; the dead
+//!   connection is dropped and re-dialled lazily on a later request.
+//! - When every replica of a shard fails, the request gets a typed
+//!   `unavailable` error — clients retry it like `overloaded`.
+//! - A rolling [`ShardGroup::rolling_swap`] walks the replicas in
+//!   fixed order under an exclusive lock (scatters hold it shared). If
+//!   any worker refuses the swap, the group is marked *degraded* and
+//!   answers `unavailable` until a later swap succeeds end-to-end —
+//!   the router never gathers logits from mixed artifact versions.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::telemetry::LatencyHistogram;
+use crate::serve::protocol::{ErrorCode, Frame, RowBatch, WireError};
+use crate::serve::server::{ClientOptions, NetClient};
+use crate::serve::shard;
+use crate::util::error::{Error, Result};
+use crate::util::fault::{self, FaultPoint};
+use crate::util::log::Level;
+
+/// Parse a worker topology spec: `,` separates shards, `|` separates
+/// replicas within a shard. `"a:1|b:1,c:2"` is two shards — the first
+/// with replicas `a:1` and `b:1`, the second with the single worker
+/// `c:2`. Whitespace around addresses is trimmed; empty entries are
+/// rejected.
+pub fn parse_workers(spec: &str) -> Result<Vec<Vec<String>>> {
+    let mut shards = Vec::new();
+    for (i, group) in spec.split(',').enumerate() {
+        let replicas: Vec<String> = group
+            .split('|')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect();
+        if replicas.is_empty() {
+            return Err(Error::InvalidArg(format!(
+                "worker spec '{spec}': shard {i} has no replicas \
+                 (expected HOST:PORT[|HOST:PORT...][,HOST:PORT...])"
+            )));
+        }
+        shards.push(replicas);
+    }
+    if shards.is_empty() {
+        return Err(Error::InvalidArg(
+            "worker spec is empty; expected HOST:PORT[|replica...][,shard...]".into(),
+        ));
+    }
+    Ok(shards)
+}
+
+/// One worker endpoint. The connection is lazy: dropped on any
+/// transport error and re-dialled on the next attempt, so a worker
+/// restart heals without router intervention.
+struct Replica {
+    addr: String,
+    conn: Option<NetClient>,
+    /// `worker_ns{worker=<addr>}` — full scatter round-trip latency.
+    hist: Arc<LatencyHistogram>,
+}
+
+enum Attempt {
+    /// The same request would fail the same way on any replica.
+    Fatal(WireError),
+    /// Worth trying the next replica of this shard.
+    Transient(WireError),
+}
+
+/// Router-side handle to one model served by a fixed shard topology.
+pub struct ShardGroup {
+    /// Model key sent to workers (may be `""` for the worker default).
+    key: String,
+    classes: usize,
+    ranges: Vec<(u32, u32)>,
+    shards: Vec<Vec<Mutex<Replica>>>,
+    /// Scatters take this shared; a rolling swap takes it exclusive so
+    /// no request can observe half-swapped workers.
+    swap_lock: RwLock<()>,
+    /// Set when a rolling swap aborts partway: workers may disagree on
+    /// the artifact, so infers answer `unavailable` until a swap
+    /// completes end-to-end.
+    degraded: AtomicBool,
+    metrics: Arc<Metrics>,
+    opts: ClientOptions,
+}
+
+impl ShardGroup {
+    /// Dial the topology in `spec` (see [`parse_workers`]), probe every
+    /// shard for the model's output width with an empty `INFER`, and
+    /// split the columns with [`shard::shard_cols`]. Fails if any shard
+    /// is unreachable on all replicas, if shards disagree on the output
+    /// width, or if there are more shards than output columns.
+    pub fn connect(
+        spec: &str,
+        key: &str,
+        opts: ClientOptions,
+        metrics: Arc<Metrics>,
+    ) -> Result<ShardGroup> {
+        let groups = parse_workers(spec)?;
+        let mut shards: Vec<Vec<Mutex<Replica>>> = Vec::with_capacity(groups.len());
+        let mut classes: Option<usize> = None;
+        for (si, addrs) in groups.iter().enumerate() {
+            let mut replicas: Vec<Replica> = addrs
+                .iter()
+                .map(|a| Replica {
+                    addr: a.clone(),
+                    conn: None,
+                    hist: metrics.telemetry.worker_histogram(a),
+                })
+                .collect();
+            let c = probe_shard(&mut replicas, key, &opts).map_err(|e| {
+                Error::Coordinator(format!(
+                    "cannot probe shard {si} ({}): {e}",
+                    addrs.join("|")
+                ))
+            })?;
+            match classes {
+                None => classes = Some(c),
+                Some(prev) if prev != c => {
+                    return Err(Error::Coordinator(format!(
+                        "workers disagree on output width: shard 0 reports {prev} \
+                         columns, shard {si} ({}) reports {c}",
+                        addrs.join("|")
+                    )));
+                }
+                Some(_) => {}
+            }
+            shards.push(replicas.into_iter().map(Mutex::new).collect());
+        }
+        let classes = classes.unwrap_or(0);
+        if classes == 0 {
+            return Err(Error::Coordinator(
+                "workers report a zero-column model; nothing to shard".into(),
+            ));
+        }
+        if shards.len() > classes {
+            return Err(Error::InvalidArg(format!(
+                "{} shards requested but the model has only {classes} output \
+                 column(s); use at most {classes}",
+                shards.len()
+            )));
+        }
+        let ranges = shard::shard_cols(classes, shards.len());
+        Ok(ShardGroup {
+            key: key.to_string(),
+            classes,
+            ranges,
+            shards,
+            swap_lock: RwLock::new(()),
+            degraded: AtomicBool::new(false),
+            metrics,
+            opts,
+        })
+    }
+
+    /// Output width discovered from the workers at connect time.
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub(crate) fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// One-line topology summary for the startup banner.
+    pub fn describe(&self) -> String {
+        self.ranges
+            .iter()
+            .zip(&self.shards)
+            .enumerate()
+            .map(|(i, ((s, e), reps))| format!("shard {i} cols {s}..{e} x{}", reps.len()))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+
+    /// Scatter `batch` to one live replica per shard, gather the
+    /// partials, and reassemble the full logits. Pure data movement —
+    /// bit-identical to an unsharded infer of the same batch.
+    pub(crate) fn scatter_gather(
+        &self,
+        batch: &RowBatch,
+        deadline: Option<Instant>,
+    ) -> std::result::Result<RowBatch, WireError> {
+        let _serving = self.swap_lock.read().unwrap_or_else(|p| p.into_inner());
+        if self.degraded.load(Ordering::SeqCst) {
+            self.metrics
+                .net_worker_unavailable
+                .fetch_add(1, Ordering::Relaxed);
+            return Err(WireError::new(
+                ErrorCode::Unavailable,
+                "shard group degraded by a failed rolling swap; retry after the \
+                 next successful SWAP",
+            ));
+        }
+        let mut parts = Vec::with_capacity(self.shards.len());
+        for (i, replicas) in self.shards.iter().enumerate() {
+            let (cs, ce) = self.ranges[i];
+            let part = self.scatter_one(i, replicas, cs, ce, batch, deadline)?;
+            parts.push((cs, ce, part));
+        }
+        shard::assemble(batch.rows(), self.classes, &parts)
+            .map_err(|e| WireError::new(ErrorCode::Internal, e.to_string()))
+    }
+
+    /// Try each replica of one shard in order until a `PARTIAL` lands.
+    fn scatter_one(
+        &self,
+        shard_idx: usize,
+        replicas: &[Mutex<Replica>],
+        col_start: u32,
+        col_end: u32,
+        batch: &RowBatch,
+        deadline: Option<Instant>,
+    ) -> std::result::Result<RowBatch, WireError> {
+        let mut last: Option<WireError> = None;
+        for (ri, cell) in replicas.iter().enumerate() {
+            let mut r = cell.lock().unwrap_or_else(|p| p.into_inner());
+            match self.try_replica(&mut r, col_start, col_end, batch, deadline) {
+                Ok(part) => return Ok(part),
+                Err(Attempt::Fatal(e)) => return Err(e),
+                Err(Attempt::Transient(e)) => {
+                    self.metrics
+                        .net_worker_failures
+                        .fetch_add(1, Ordering::Relaxed);
+                    if ri + 1 < replicas.len() {
+                        self.metrics
+                            .net_worker_failovers
+                            .fetch_add(1, Ordering::Relaxed);
+                        crate::lrbi_log!(
+                            Level::Warn,
+                            "shard {shard_idx} replica {} failed ({}); failing over \
+                             to the next replica",
+                            r.addr,
+                            e.message
+                        );
+                    }
+                    last = Some(e);
+                }
+            }
+        }
+        self.metrics
+            .net_worker_unavailable
+            .fetch_add(1, Ordering::Relaxed);
+        let detail = last
+            .map(|e| e.message)
+            .unwrap_or_else(|| "shard has no replicas".to_string());
+        Err(WireError::new(
+            ErrorCode::Unavailable,
+            format!(
+                "no replica of shard {shard_idx} (columns {col_start}..{col_end}) \
+                 could serve: {detail}; retry with backoff"
+            ),
+        ))
+    }
+
+    /// One scatter attempt against one replica. Drops the connection on
+    /// any transport or protocol surprise so the next attempt re-dials.
+    fn try_replica(
+        &self,
+        r: &mut Replica,
+        col_start: u32,
+        col_end: u32,
+        batch: &RowBatch,
+        deadline: Option<Instant>,
+    ) -> std::result::Result<RowBatch, Attempt> {
+        if let Some(action) = fault::fire(FaultPoint::WorkerConnDrop) {
+            fault::stall(&action);
+            r.conn = None;
+            return Err(Attempt::Transient(WireError::new(
+                ErrorCode::Unavailable,
+                format!("injected connection drop to worker {} (fault plan)", r.addr),
+            )));
+        }
+        if r.conn.is_none() {
+            match NetClient::connect_with(r.addr.as_str(), self.opts) {
+                Ok(c) => r.conn = Some(c),
+                Err(e) => {
+                    return Err(Attempt::Transient(WireError::new(
+                        ErrorCode::Unavailable,
+                        format!("cannot reach worker {}: {e}", r.addr),
+                    )));
+                }
+            }
+        }
+        let deadline_us = deadline.map(|d| {
+            let now = Instant::now();
+            if d > now {
+                (d - now).as_micros().min(u64::MAX as u128) as u64
+            } else {
+                0
+            }
+        });
+        self.metrics
+            .net_worker_requests
+            .fetch_add(1, Ordering::Relaxed);
+        let started = Instant::now();
+        let reply = r.conn.as_mut().expect("connected above").call(&Frame::Scatter {
+            key: self.key.clone(),
+            col_start,
+            col_end,
+            batch: batch.clone(),
+            deadline_us,
+        });
+        match reply {
+            Ok(Frame::Partial {
+                col_start: got_s,
+                col_end: got_e,
+                batch: part,
+            }) => {
+                if got_s != col_start || got_e != col_end || part.rows() != batch.rows() {
+                    r.conn = None;
+                    return Err(Attempt::Transient(WireError::new(
+                        ErrorCode::Internal,
+                        format!(
+                            "worker {} answered columns {got_s}..{got_e} ({} rows) to a \
+                             scatter for {col_start}..{col_end} ({} rows)",
+                            r.addr,
+                            part.rows(),
+                            batch.rows()
+                        ),
+                    )));
+                }
+                r.hist.record_since(started);
+                Ok(part)
+            }
+            Ok(Frame::Error { code, message }) => {
+                let tagged = WireError::new(code, format!("worker {}: {message}", r.addr));
+                match code {
+                    // The request itself is wrong (or out of time) — any
+                    // replica would refuse it identically.
+                    ErrorCode::BadShape
+                    | ErrorCode::UnknownModel
+                    | ErrorCode::DeadlineExceeded
+                    | ErrorCode::BadFrame
+                    | ErrorCode::BadVersion
+                    | ErrorCode::TooLarge => Err(Attempt::Fatal(tagged)),
+                    // Overloaded / Internal / ShuttingDown / Unavailable:
+                    // this replica is struggling, another may not be.
+                    _ => Err(Attempt::Transient(tagged)),
+                }
+            }
+            Ok(other) => {
+                r.conn = None;
+                Err(Attempt::Transient(WireError::new(
+                    ErrorCode::Internal,
+                    format!(
+                        "worker {} answered a scatter with an unexpected {} frame",
+                        r.addr,
+                        other.type_name()
+                    ),
+                )))
+            }
+            Err(e) => {
+                r.conn = None;
+                Err(Attempt::Transient(WireError::new(
+                    ErrorCode::Unavailable,
+                    format!("worker {} transport error: {e}", r.addr),
+                )))
+            }
+        }
+    }
+
+    /// Coordinated rolling `SWAP name` across every worker replica, in
+    /// fixed shard-then-replica order, exclusive with scatters. Aborts
+    /// at the first refusal and degrades the group (infers answer
+    /// `unavailable`) so mixed-artifact logits can never be gathered; a
+    /// later swap that completes end-to-end clears the degradation.
+    pub fn rolling_swap(&self, name: &str) -> Result<String> {
+        let _excl = self.swap_lock.write().unwrap_or_else(|p| p.into_inner());
+        let mut stepped = 0usize;
+        for replicas in &self.shards {
+            for cell in replicas {
+                let mut r = cell.lock().unwrap_or_else(|p| p.into_inner());
+                let step: Result<String> = if let Some(action) = fault::fire(FaultPoint::WorkerSwapFail)
+                {
+                    fault::stall(&action);
+                    Err(Error::Coordinator(format!(
+                        "injected swap failure at worker {} (fault plan)",
+                        r.addr
+                    )))
+                } else {
+                    self.swap_replica(&mut r, name)
+                };
+                match step {
+                    Ok(_) => {
+                        self.metrics.net_worker_swaps.fetch_add(1, Ordering::Relaxed);
+                        stepped += 1;
+                    }
+                    Err(e) => {
+                        self.metrics
+                            .net_worker_swap_failures
+                            .fetch_add(1, Ordering::Relaxed);
+                        self.degraded.store(true, Ordering::SeqCst);
+                        return Err(Error::Coordinator(format!(
+                            "rolling swap of '{name}' aborted at worker {} after \
+                             {stepped} completed step(s): {e}; shard group is degraded \
+                             (infers answer 'unavailable') until a SWAP succeeds",
+                            r.addr
+                        )));
+                    }
+                }
+            }
+        }
+        self.degraded.store(false, Ordering::SeqCst);
+        Ok(format!(
+            "rolling swap of '{name}' complete across {stepped} worker replica(s); \
+             in-flight batches finished on the old artifact"
+        ))
+    }
+
+    fn swap_replica(&self, r: &mut Replica, name: &str) -> Result<String> {
+        if r.conn.is_none() {
+            r.conn = Some(NetClient::connect_with(r.addr.as_str(), self.opts)?);
+        }
+        match r.conn.as_mut().expect("connected above").swap(name) {
+            Ok(msg) => Ok(msg),
+            Err(e) => {
+                r.conn = None;
+                Err(e)
+            }
+        }
+    }
+}
+
+/// Discover a shard's output width: an empty `INFER` (0 rows, 0 cols)
+/// takes the server's empty-batch fast path and echoes a `0 × classes`
+/// logits frame without touching a kernel. The probe connection is
+/// kept as the replica's initial connection.
+fn probe_shard(replicas: &mut [Replica], key: &str, opts: &ClientOptions) -> Result<usize> {
+    let mut last: Option<Error> = None;
+    for r in replicas.iter_mut() {
+        let attempt = (|| -> Result<usize> {
+            let mut conn = NetClient::connect_with(r.addr.as_str(), *opts)?;
+            let empty = RowBatch::new(0, 0, Vec::new())?;
+            let logits = conn.infer(key, empty)?;
+            r.conn = Some(conn);
+            Ok(logits.cols())
+        })();
+        match attempt {
+            Ok(c) => return Ok(c),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.unwrap_or_else(|| Error::InvalidArg("shard has no replicas".into())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_workers_splits_shards_and_replicas() {
+        assert_eq!(
+            parse_workers("127.0.0.1:9000").unwrap(),
+            vec![vec!["127.0.0.1:9000".to_string()]]
+        );
+        assert_eq!(
+            parse_workers("a:1,b:2,c:3").unwrap(),
+            vec![
+                vec!["a:1".to_string()],
+                vec!["b:2".to_string()],
+                vec!["c:3".to_string()],
+            ]
+        );
+        assert_eq!(
+            parse_workers(" a:1 | b:1 , c:2 ").unwrap(),
+            vec![
+                vec!["a:1".to_string(), "b:1".to_string()],
+                vec!["c:2".to_string()],
+            ]
+        );
+    }
+
+    #[test]
+    fn parse_workers_rejects_empty_entries() {
+        assert!(parse_workers("").is_err());
+        assert!(parse_workers("a:1,,b:2").is_err());
+        assert!(parse_workers("|").is_err());
+        assert!(parse_workers(" , ").is_err());
+    }
+}

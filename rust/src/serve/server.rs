@@ -65,6 +65,8 @@ use crate::coordinator::telemetry::{LatencyHistogram, Stage, StageNanos};
 use crate::serve::batcher::{BatchPolicy, SubmitError};
 use crate::serve::engine::{InferenceBackend, NativeBackend, ServingEngine};
 use crate::serve::protocol::{self, ErrorCode, Frame, HistSummary, ReadError, RowBatch, WireError};
+use crate::serve::router::ShardGroup;
+use crate::serve::shard;
 use crate::store::{Artifact, Registry};
 use crate::util::error::{Error, Result};
 use crate::util::log::Level;
@@ -133,10 +135,23 @@ impl Default for ServeOptions {
     }
 }
 
-/// One served model: a running [`ServingEngine`] plus the geometry
-/// the frontend validates requests against.
+/// What executes a slot's requests: an in-process engine, or — on a
+/// router — a scatter/gather over remote worker shards.
+enum SlotKind {
+    /// A running [`ServingEngine`] over a local backend.
+    Engine(ServingEngine),
+    /// Router tier: scatter `SCATTER` frames to worker shards and
+    /// gather their `PARTIAL` column slices (see `serve::router`).
+    Remote(Arc<ShardGroup>),
+}
+
+/// One served model: what executes it plus the geometry the frontend
+/// validates requests against.
 pub struct ModelSlot {
-    engine: ServingEngine,
+    kind: SlotKind,
+    /// Input width requests must match; `0` on remote slots — the
+    /// router cannot discover it, so the workers are the authority
+    /// and answer `bad-shape` themselves.
     input_dim: usize,
     classes: usize,
     kernel: &'static str,
@@ -155,12 +170,44 @@ impl ModelSlot {
         classes: usize,
         kernel: &'static str,
     ) -> Self {
-        ModelSlot { engine, input_dim, classes, kernel, request_hist: None }
+        ModelSlot {
+            kind: SlotKind::Engine(engine),
+            input_dim,
+            classes,
+            kernel,
+            request_hist: None,
+        }
     }
 
-    /// Input feature dimension requests must match.
+    /// Wrap a connected shard group (the router path). The output
+    /// width was probed from the workers; the input width is unknown
+    /// here (`input_dim` 0), so shape validation happens worker-side.
+    pub fn from_remote(group: Arc<ShardGroup>) -> Self {
+        let classes = group.classes();
+        ModelSlot {
+            kind: SlotKind::Remote(group),
+            input_dim: 0,
+            classes,
+            kernel: "remote",
+            request_hist: None,
+        }
+    }
+
+    /// Input feature dimension requests must match (0 on remote slots:
+    /// the workers validate shape).
     pub fn input_dim(&self) -> usize {
         self.input_dim
+    }
+
+    fn is_remote(&self) -> bool {
+        matches!(self.kind, SlotKind::Remote(_))
+    }
+
+    fn metrics(&self) -> Arc<Metrics> {
+        match &self.kind {
+            SlotKind::Engine(engine) => engine.metrics(),
+            SlotKind::Remote(group) => group.metrics(),
+        }
     }
 
     /// Output classes per row.
@@ -201,14 +248,17 @@ impl ModelSlot {
                 .map(|b| (b, StageNanos::default()))
                 .map_err(|e| WireError::new(ErrorCode::Internal, e));
         }
-        if batch.cols() != self.input_dim {
+        // Remote slots carry input_dim 0 (unknown at the router); the
+        // workers run this same check and their typed `bad-shape`
+        // propagates back without fail-over.
+        if self.input_dim != 0 && batch.cols() != self.input_dim {
             return Err(WireError::new(
                 ErrorCode::BadShape,
                 format!("rows are {} wide, model expects {}", batch.cols(), self.input_dim),
             ));
         }
         if let Some(d) = deadline {
-            let metrics = self.engine.metrics();
+            let metrics = self.metrics();
             let now = Instant::now();
             if now >= d {
                 metrics.net_deadline_exceeded.fetch_add(batch.rows() as u64, Ordering::Relaxed);
@@ -232,7 +282,18 @@ impl ModelSlot {
                 }
             }
         }
-        let client = self.engine.client();
+        let engine = match &self.kind {
+            // Router path: scatter to the workers, gather the column
+            // slices. Per-stage timings live on the workers (scraped
+            // via their own STATS2); the router reports defaults.
+            SlotKind::Remote(group) => {
+                return group
+                    .scatter_gather(batch, deadline)
+                    .map(|logits| (logits, StageNanos::default()));
+            }
+            SlotKind::Engine(engine) => engine,
+        };
+        let client = engine.client();
         let mut pending = Vec::with_capacity(batch.rows());
         for i in 0..batch.rows() {
             match client.try_submit_with(batch.row(i).to_vec(), deadline) {
@@ -327,6 +388,23 @@ impl ModelHub {
         let hub = Self::empty(key, None, policy, queue_cap, metrics, ctx);
         hub.install_backend(key, backend);
         hub
+    }
+
+    /// A router hub: one connected shard group under `key`
+    /// (`--router --workers LIST`). No local registry — `SWAP name`
+    /// rolls across the group's workers instead (see `docs/CLUSTER.md`).
+    pub fn from_remote(key: &str, group: Arc<ShardGroup>) -> Self {
+        let metrics = group.metrics();
+        let ctx = ExecCtx::single();
+        let hub = Self::empty(key, None, BatchPolicy::default(), 0, metrics, ctx);
+        hub.install_remote(key, group);
+        hub
+    }
+
+    /// Register (or replace) `key` with a router-side shard group
+    /// (model-key routing: one hub can front several worker fleets).
+    pub fn install_remote(&self, key: &str, group: Arc<ShardGroup>) {
+        self.install_slot(key, ModelSlot::from_remote(group));
     }
 
     /// One artifact under `key` (`--artifact model.lrbi`).
@@ -445,6 +523,22 @@ impl ModelHub {
     /// requests finish on the old kernel (they hold its slot);
     /// requests arriving after the swap see the new artifact.
     pub fn swap(&self, name: &str) -> Result<String> {
+        // Router tier: a remote slot swaps by rolling across its
+        // workers, not from a local registry. `SWAP name` rolls the
+        // group registered under `name`, falling back to the default
+        // model's group — which covers the usual flow of republishing
+        // a new artifact under the same registry name on the workers.
+        let remote = self
+            .get(name)
+            .filter(|slot| slot.is_remote())
+            .or_else(|| self.get("").filter(|slot| slot.is_remote()));
+        if let Some(slot) = remote {
+            if let SlotKind::Remote(group) = &slot.kind {
+                let message = group.rolling_swap(name)?;
+                self.metrics.hot_swaps.fetch_add(1, Ordering::Relaxed);
+                return Ok(message);
+            }
+        }
         let dir = self.registry_dir.as_ref().ok_or_else(|| {
             Error::invalid("hot swap requires a server started with --registry")
         })?;
@@ -871,6 +965,63 @@ fn handle_conn(
                     .collect();
                 Frame::Stats2 { counters, histograms }
             }
+            Frame::Scatter { key, col_start, col_end, batch, deadline_us } => {
+                // Worker half of the router tier (docs/CLUSTER.md):
+                // run the full forward pass, reply with only the
+                // requested output columns. Slicing happens after
+                // inference, so the PARTIAL is bitwise equal to those
+                // columns of an unsharded INFER of the same batch.
+                let deadline =
+                    deadline_us.map(|us| Instant::now() + Duration::from_micros(us));
+                metrics.net_requests.fetch_add(1, Ordering::Relaxed);
+                metrics.telemetry.record_stage(Stage::Decode, decode_ns);
+                if state.shutdown.load(Ordering::SeqCst) {
+                    Frame::error(ErrorCode::ShuttingDown, "server is shutting down")
+                } else {
+                    match hub.get(&key) {
+                        None => Frame::error(
+                            ErrorCode::UnknownModel,
+                            format!("no model '{key}' (available: {})", hub.keys().join(", ")),
+                        ),
+                        Some(slot) => {
+                            if col_start > col_end || col_end as usize > slot.classes() {
+                                Frame::error(
+                                    ErrorCode::BadShape,
+                                    format!(
+                                        "scatter columns {col_start}..{col_end} out of range \
+                                         for a {}-column model",
+                                        slot.classes()
+                                    ),
+                                )
+                            } else {
+                                match slot.infer_batch(&batch, deadline) {
+                                    Ok((logits, _stages)) => {
+                                        match shard::slice_columns(&logits, col_start, col_end) {
+                                            Ok(part) => {
+                                                if let Some(a) =
+                                                    fault::fire(FaultPoint::PartialStall)
+                                                {
+                                                    fault::stall(&a);
+                                                }
+                                                Frame::Partial { col_start, col_end, batch: part }
+                                            }
+                                            Err(e) => Frame::error(ErrorCode::Internal, e),
+                                        }
+                                    }
+                                    Err(e) => {
+                                        if e.code == ErrorCode::Overloaded {
+                                            metrics
+                                                .net_rejected_overload
+                                                .fetch_add(1, Ordering::Relaxed);
+                                        }
+                                        Frame::Error { code: e.code, message: e.message }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
             Frame::Swap { key } => match hub.swap(&key) {
                 Ok(message) => Frame::Ok { message },
                 Err(e) => Frame::error(ErrorCode::Internal, e),
@@ -897,8 +1048,8 @@ fn handle_conn(
     }
 }
 
-/// Client-side retry policy for transient failures: `overloaded`
-/// replies and timeout / connection-reset I/O errors are retried with
+/// Client-side retry policy for transient failures: `overloaded` and
+/// `unavailable` replies and timeout / connection-reset I/O errors are retried with
 /// capped exponential backoff plus equal jitter (deterministic per
 /// `seed`, so tests and the loadgen bench are reproducible). Anything
 /// typed — bad shape, unknown model, deadline exceeded — is never
@@ -1101,7 +1252,8 @@ impl NetClient {
     /// `deadline_us` (so the server never works on a request the
     /// client has abandoned), and a retry whose backoff would
     /// overshoot the budget returns the last failure instead of
-    /// sleeping past it. Retries fire on `overloaded` replies and on
+    /// sleeping past it. Retries fire on `overloaded` and
+    /// `unavailable` replies (a router shard mid-failover) and on
     /// transient I/O (timeout, reset, broken pipe — the connection is
     /// re-dialed first, since a half-read frame cannot be re-synced);
     /// every retry is counted in the process-wide
@@ -1135,7 +1287,9 @@ impl NetClient {
                 deadline_us,
             });
             let (retryable, reconnect) = match &result {
-                Ok(Frame::Error { code: ErrorCode::Overloaded, .. }) => (true, false),
+                Ok(Frame::Error {
+                    code: ErrorCode::Overloaded | ErrorCode::Unavailable, ..
+                }) => (true, false),
                 Err(Error::Io(e)) if transient_io(e.kind()) => (true, true),
                 _ => (false, false),
             };

@@ -1,0 +1,190 @@
+//! Output-column shard math for router/worker serving.
+//!
+//! The cluster tier (see `docs/CLUSTER.md`) splits a model's **final
+//! output columns** (classes) into contiguous, disjoint ranges — one
+//! per worker shard. Each worker runs the *full* forward pass with the
+//! same kernel arithmetic as a single-process server and returns only
+//! its column slice; the router concatenates the slices in fixed shard
+//! order. Because every output column is computed independently (one
+//! dot product against the last weight column), slicing after the fact
+//! reorders **nothing**: the gathered batch is bit-identical to an
+//! unsharded [`Frame::Infer`](crate::serve::protocol::Frame) at any
+//! shard count. This is the same output-disjoint discipline
+//! `serve::plan` uses in-process ("no merge step exists, so there is
+//! nothing to reorder"), lifted over the network.
+//!
+//! The alternative — sharding the *hidden* layer and summing partial
+//! products on the router — was rejected: a split reduction
+//! reassociates f32 partial sums (`(a+b)+(c+d) != ((a+b)+c)+d`), which
+//! breaks the repo-wide bit-identity contract. `tests/cluster.rs` pins
+//! the slice/assemble path against the unsharded kernel output.
+
+use crate::serve::protocol::RowBatch;
+use crate::util::error::{Error, Result};
+
+/// Split `classes` output columns into `shards` contiguous ranges
+/// `[(start, end), ...]` covering `0..classes` exactly, in ascending
+/// order, sized as evenly as possible (first ranges get the remainder;
+/// deterministic in both inputs). Asking for more shards than columns
+/// yields one range per column — empty ranges are never produced.
+pub fn shard_cols(classes: usize, shards: usize) -> Vec<(u32, u32)> {
+    if classes == 0 {
+        return Vec::new();
+    }
+    let count = shards.clamp(1, classes);
+    let per = classes / count;
+    let extra = classes % count;
+    let mut out = Vec::with_capacity(count);
+    let mut start = 0usize;
+    for i in 0..count {
+        let width = per + usize::from(i < extra);
+        out.push((start as u32, (start + width) as u32));
+        start += width;
+    }
+    debug_assert_eq!(start, classes);
+    out
+}
+
+/// Extract columns `col_start..col_end` of every row into a new batch
+/// (what a worker does to its full-width logits before replying with a
+/// `PARTIAL`). Pure copying — no arithmetic touches the values, so the
+/// slice is bitwise equal to the same columns of the source.
+pub fn slice_columns(batch: &RowBatch, col_start: u32, col_end: u32) -> Result<RowBatch> {
+    let (start, end) = (col_start as usize, col_end as usize);
+    if start > end || end > batch.cols() {
+        return Err(Error::Protocol(format!(
+            "column slice {col_start}..{col_end} out of range for a {}-column batch",
+            batch.cols()
+        )));
+    }
+    let width = end - start;
+    let mut data = Vec::with_capacity(batch.rows() * width);
+    for r in 0..batch.rows() {
+        data.extend_from_slice(&batch.row(r)[start..end]);
+    }
+    RowBatch::new(batch.rows(), width, data)
+}
+
+/// Reassemble gathered partials into the full `rows × classes` batch
+/// (what the router does after scattering). `parts` must arrive in
+/// ascending shard order and tile `0..classes` exactly — ranges are
+/// validated, never trusted — and every part must carry `rows` rows of
+/// exactly its declared width. Pure copying in fixed order: no
+/// floating-point operation runs here, so the result is bit-identical
+/// to the unsharded logits the partials were sliced from.
+pub fn assemble(rows: usize, classes: usize, parts: &[(u32, u32, RowBatch)]) -> Result<RowBatch> {
+    let mut expected_start = 0u32;
+    for (start, end, batch) in parts {
+        if *start != expected_start || end < start {
+            return Err(Error::Protocol(format!(
+                "partials do not tile the output: got columns {start}..{end}, \
+                 expected a slice starting at {expected_start}"
+            )));
+        }
+        if batch.rows() != rows || batch.cols() != (end - start) as usize {
+            return Err(Error::Protocol(format!(
+                "partial {start}..{end} is {}x{}, expected {rows}x{}",
+                batch.rows(),
+                batch.cols(),
+                end - start
+            )));
+        }
+        expected_start = *end;
+    }
+    if expected_start as usize != classes {
+        return Err(Error::Protocol(format!(
+            "partials cover columns 0..{expected_start}, model has {classes}"
+        )));
+    }
+    let mut data = Vec::with_capacity(rows * classes);
+    for r in 0..rows {
+        for (_, _, batch) in parts {
+            data.extend_from_slice(batch.row(r));
+        }
+    }
+    RowBatch::new(rows, classes, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn shard_cols_tiles_exactly_and_evenly() {
+        assert_eq!(shard_cols(10, 1), vec![(0, 10)]);
+        assert_eq!(shard_cols(10, 2), vec![(0, 5), (5, 10)]);
+        assert_eq!(shard_cols(10, 4), vec![(0, 3), (3, 6), (6, 8), (8, 10)]);
+        assert_eq!(shard_cols(4, 4), vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+        // more shards than columns clamps to one column per shard
+        assert_eq!(shard_cols(3, 8), vec![(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(shard_cols(0, 4), Vec::<(u32, u32)>::new());
+        assert_eq!(shard_cols(7, 0), vec![(0, 7)]);
+    }
+
+    #[test]
+    fn shard_cols_property_contiguous_cover() {
+        prop::check("shard_cols tiles 0..classes", 200, |rng| {
+            let classes = prop::dim(rng, 1, 64);
+            let shards = prop::dim(rng, 1, 12);
+            let ranges = shard_cols(classes, shards);
+            assert!(!ranges.is_empty());
+            assert!(ranges.len() <= shards.min(classes));
+            let mut next = 0u32;
+            for (s, e) in &ranges {
+                assert_eq!(*s, next, "contiguous");
+                assert!(e > s, "non-empty");
+                next = *e;
+            }
+            assert_eq!(next as usize, classes, "full cover");
+            // near-even: widths differ by at most one
+            let widths: Vec<u32> = ranges.iter().map(|(s, e)| e - s).collect();
+            let (min, max) = (widths.iter().min().unwrap(), widths.iter().max().unwrap());
+            assert!(max - min <= 1, "uneven split {widths:?}");
+        });
+    }
+
+    #[test]
+    fn slice_then_assemble_is_identity() {
+        prop::check("slice/assemble round-trips any batch", 100, |rng| {
+            let rows = prop::dim(rng, 0, 6);
+            let classes = prop::dim(rng, 1, 24);
+            let shards = prop::dim(rng, 1, 6);
+            let data: Vec<f32> = (0..rows * classes).map(|_| rng.next_f32() - 0.5).collect();
+            let full = RowBatch::new(rows, classes, data).unwrap();
+            let parts: Vec<(u32, u32, RowBatch)> = shard_cols(classes, shards)
+                .into_iter()
+                .map(|(s, e)| (s, e, slice_columns(&full, s, e).unwrap()))
+                .collect();
+            let got = assemble(rows, classes, &parts).unwrap();
+            assert_eq!(got, full, "bitwise identity");
+        });
+    }
+
+    #[test]
+    fn slice_columns_rejects_bad_ranges() {
+        let b = RowBatch::new(2, 4, vec![0.0; 8]).unwrap();
+        assert!(slice_columns(&b, 2, 1).is_err(), "inverted");
+        assert!(slice_columns(&b, 0, 5).is_err(), "past the end");
+        assert_eq!(slice_columns(&b, 4, 4).unwrap().cols(), 0, "empty tail slice ok");
+    }
+
+    #[test]
+    fn assemble_rejects_gaps_overlaps_and_bad_shapes() {
+        let full = RowBatch::new(1, 4, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let part = |s: u32, e: u32| (s, e, slice_columns(&full, s, e).unwrap());
+        // gap: 0..2 then 3..4
+        assert!(assemble(1, 4, &[part(0, 2), part(3, 4)]).is_err());
+        // overlap: 0..3 then 2..4
+        assert!(assemble(1, 4, &[part(0, 3), part(2, 4)]).is_err());
+        // short cover: 0..3 only
+        assert!(assemble(1, 4, &[part(0, 3)]).is_err());
+        // wrong row count
+        assert!(assemble(2, 4, &[part(0, 4)]).is_err());
+        // wrong declared width
+        let lying = (0u32, 4u32, slice_columns(&full, 0, 2).unwrap());
+        assert!(assemble(1, 4, &[lying]).is_err());
+        // exact cover succeeds
+        assert_eq!(assemble(1, 4, &[part(0, 2), part(2, 4)]).unwrap(), full);
+    }
+}

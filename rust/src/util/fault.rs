@@ -76,10 +76,21 @@ pub enum FaultPoint {
     /// Reject an INFER request with an `overloaded` error frame
     /// (transient-overload simulation for the client retry path).
     InferOverload = 8,
+    /// Router-side: drop the connection to a worker replica just
+    /// before sending it a SCATTER (the router must fail over to the
+    /// next replica or answer with a typed `unavailable`).
+    WorkerConnDrop = 9,
+    /// Worker-side: stall before writing a PARTIAL reply, so the
+    /// router's I/O timeout fires mid-gather.
+    PartialStall = 10,
+    /// Router-side: fail one worker's step of a coordinated rolling
+    /// swap (the swap aborts typed and the shard group degrades —
+    /// never mixed-artifact logits).
+    WorkerSwapFail = 11,
 }
 
 /// Number of injection points (sizes the per-point hit counters).
-const POINTS: usize = 9;
+const POINTS: usize = 12;
 
 impl FaultPoint {
     /// Every point, in discriminant order.
@@ -93,6 +104,9 @@ impl FaultPoint {
         FaultPoint::ArtifactBitflip,
         FaultPoint::ArtifactShortRead,
         FaultPoint::InferOverload,
+        FaultPoint::WorkerConnDrop,
+        FaultPoint::PartialStall,
+        FaultPoint::WorkerSwapFail,
     ];
 
     /// Stable plan-grammar name.
@@ -107,6 +121,9 @@ impl FaultPoint {
             FaultPoint::ArtifactBitflip => "artifact_bitflip",
             FaultPoint::ArtifactShortRead => "artifact_short_read",
             FaultPoint::InferOverload => "infer_overload",
+            FaultPoint::WorkerConnDrop => "worker_conn_drop",
+            FaultPoint::PartialStall => "partial_stall",
+            FaultPoint::WorkerSwapFail => "worker_swap_fail",
         }
     }
 

@@ -392,3 +392,256 @@ fn artifact_corruption_is_a_typed_store_error() {
     assert_eq!(back.meta.provenance, "chaos test");
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+// ------------------------------------------------------ worker-tier faults
+
+type Running = (
+    std::net::SocketAddr,
+    lrbi::serve::server::ServerHandle,
+    std::thread::JoinHandle<Result<()>>,
+);
+
+/// A router server over worker addresses in `spec` (`|` = replicas,
+/// `,` = shards), dialing workers with `copts`.
+fn start_router(spec: &str, copts: ClientOptions, metrics: Arc<Metrics>) -> Running {
+    use lrbi::serve::router::ShardGroup;
+    let group = Arc::new(ShardGroup::connect(spec, "m", copts, metrics).unwrap());
+    let hub = ModelHub::from_remote("m", group);
+    let server = Server::bind("127.0.0.1:0", Arc::new(hub), &ServeOptions::default()).unwrap();
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let runner = std::thread::spawn(move || server.run());
+    (addr, handle, runner)
+}
+
+fn stop((_, handle, runner): Running) {
+    handle.shutdown();
+    runner.join().unwrap().unwrap();
+}
+
+/// `worker_conn_drop` with a replica behind it: the router counts the
+/// failure, fails over to the replica, and the served logits stay
+/// byte-identical — the client never sees the fault.
+#[test]
+fn worker_conn_drop_fails_over_to_the_replica() {
+    let _g = fault::test_guard();
+    fault::clear();
+    let artifact = small_artifact(&small_params(200), "dense", 201);
+    let metrics = Arc::new(Metrics::new());
+    let replica_a = start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::single());
+    let replica_b = start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::single());
+    let spec = format!("{}|{}", replica_a.0, replica_b.0);
+    let router = start_router(&spec, ClientOptions::default(), Arc::clone(&metrics));
+    let mut client = NetClient::connect(router.0).unwrap();
+    let (row, batch) = one_row_batch(202);
+
+    // Hit 1 = replica A's scatter attempt; replica B's is hit 2 and
+    // stays clean, so fail-over must serve the request.
+    fault::install(FaultPlan::parse("worker_conn_drop=1").unwrap());
+    let got = client.infer("m", batch).unwrap();
+    assert_eq!(
+        got.row(0),
+        direct_logits(&artifact, &row).as_slice(),
+        "failed-over logits must stay byte-identical"
+    );
+    let snap = metrics.snapshot();
+    assert!(snap.net_worker_failures >= 1, "the drop is counted");
+    assert!(snap.net_worker_failovers >= 1, "the fail-over is counted");
+    assert_eq!(snap.net_worker_unavailable, 0, "the request was served");
+
+    fault::clear();
+    stop(router);
+    stop(replica_a);
+    stop(replica_b);
+}
+
+/// `worker_conn_drop` with no replica: a typed `unavailable` error —
+/// never a panic or wrong logits — and the very next request heals by
+/// re-dialing; a client with a retry budget absorbs the whole episode.
+#[test]
+fn worker_conn_drop_without_replica_is_typed_unavailable_then_recovers() {
+    let _g = fault::test_guard();
+    fault::clear();
+    let artifact = small_artifact(&small_params(203), "csr", 204);
+    let metrics = Arc::new(Metrics::new());
+    let worker = start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::single());
+    let router =
+        start_router(&worker.0.to_string(), ClientOptions::default(), Arc::clone(&metrics));
+    let mut client = NetClient::connect(router.0).unwrap();
+    let (row, batch) = one_row_batch(205);
+
+    fault::install(FaultPlan::parse("worker_conn_drop=1").unwrap());
+    match client
+        .call(&Frame::Infer { key: "m".into(), batch: batch.clone(), deadline_us: None })
+        .unwrap()
+    {
+        Frame::Error { code, message } => {
+            assert_eq!(code, ErrorCode::Unavailable);
+            assert!(message.contains("no replica"), "{message}");
+        }
+        other => panic!("expected ERROR(unavailable), got {other:?}"),
+    }
+    assert!(metrics.snapshot().net_worker_unavailable >= 1);
+
+    // Only hit 1 was faulted: the same connection heals on the next
+    // request because the router re-dials the dropped worker.
+    let got = client.infer("m", batch.clone()).unwrap();
+    assert_eq!(got.row(0), direct_logits(&artifact, &row).as_slice());
+
+    // A retrying client rides straight through the same fault:
+    // `unavailable` is retried like `overloaded`.
+    fault::install(FaultPlan::parse("worker_conn_drop=1").unwrap());
+    let retries_before = metrics::net_retries_total();
+    let opts = ClientOptions {
+        retry: RetryPolicy {
+            max_retries: 3,
+            base_backoff: Duration::from_millis(5),
+            ..RetryPolicy::default()
+        },
+        ..ClientOptions::default()
+    };
+    let mut retrying = NetClient::connect_with(router.0, opts).unwrap();
+    let got = retrying.infer("m", batch).unwrap();
+    assert_eq!(got.row(0), direct_logits(&artifact, &row).as_slice());
+    assert!(metrics::net_retries_total() >= retries_before + 1, "the retry is observed");
+
+    fault::clear();
+    stop(router);
+    stop(worker);
+}
+
+/// `partial_stall` longer than the router's worker I/O timeout: the
+/// router abandons the stalled worker with a typed `unavailable`
+/// (never a hang), drops the poisoned connection so the late PARTIAL
+/// can't pollute a later request, and the next request serves
+/// correct bytes on a fresh dial.
+#[test]
+fn partial_stall_outlasting_the_io_timeout_is_typed_and_recovers() {
+    let _g = fault::test_guard();
+    fault::clear();
+    let artifact = small_artifact(&small_params(206), "lowrank", 207);
+    let metrics = Arc::new(Metrics::new());
+    let worker = start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::single());
+    let copts = ClientOptions {
+        io_timeout: Some(Duration::from_millis(100)),
+        ..ClientOptions::default()
+    };
+    let router = start_router(&worker.0.to_string(), copts, Arc::clone(&metrics));
+    let mut client = NetClient::connect(router.0).unwrap();
+    let (row, batch) = one_row_batch(208);
+
+    fault::install(FaultPlan::parse("partial_stall=1:400").unwrap());
+    match client
+        .call(&Frame::Infer { key: "m".into(), batch: batch.clone(), deadline_us: None })
+        .unwrap()
+    {
+        Frame::Error { code, .. } => assert_eq!(code, ErrorCode::Unavailable),
+        other => panic!("expected ERROR(unavailable), got {other:?}"),
+    }
+    assert!(metrics.snapshot().net_worker_failures >= 1);
+
+    // Give the stalled worker handler time to finish its late write
+    // into the dropped connection, then serve cleanly on a fresh one.
+    std::thread::sleep(Duration::from_millis(400));
+    let got = client.infer("m", batch).unwrap();
+    assert_eq!(got.row(0), direct_logits(&artifact, &row).as_slice());
+
+    fault::clear();
+    stop(router);
+    stop(worker);
+}
+
+/// `worker_swap_fail` aborts a rolling swap partway: the swap is a
+/// typed error, the group degrades (infers answer `unavailable`, so
+/// mixed-artifact logits can never be gathered), and a later clean
+/// SWAP heals the group onto the new artifact's exact bytes.
+#[test]
+fn worker_swap_fail_degrades_until_a_later_swap_succeeds() {
+    let _g = fault::test_guard();
+    fault::clear();
+    let params = small_params(209);
+    let old = small_artifact(&params, "lowrank", 210);
+    let new = small_artifact(&params, "csr", 211);
+
+    let mut dirs = Vec::new();
+    let mut registries = Vec::new();
+    let mut workers = Vec::new();
+    for w in 0..2 {
+        let dir = tmp_dir(&format!("swapfail_{w}"));
+        let mut registry = lrbi::store::Registry::create(dir.join("reg")).unwrap();
+        registry.publish("m", &old).unwrap();
+        let hub = ModelHub::from_registry(
+            dir.join("reg"),
+            BatchPolicy::default(),
+            64,
+            Arc::new(Metrics::new()),
+            ExecCtx::single(),
+        )
+        .unwrap();
+        let server =
+            Server::bind("127.0.0.1:0", Arc::new(hub), &ServeOptions::default()).unwrap();
+        let addr = server.local_addr();
+        let handle = server.handle();
+        let runner = std::thread::spawn(move || server.run());
+        workers.push((addr, handle, runner));
+        registries.push(registry);
+        dirs.push(dir);
+    }
+    let spec = format!("{},{}", workers[0].0, workers[1].0);
+    let metrics = Arc::new(Metrics::new());
+    let router = start_router(&spec, ClientOptions::default(), Arc::clone(&metrics));
+    let mut client = NetClient::connect(router.0).unwrap();
+    let (row, batch) = one_row_batch(212);
+
+    let before = client.infer("m", batch.clone()).unwrap();
+    assert_eq!(before.row(0), direct_logits(&old, &row).as_slice());
+
+    for registry in &mut registries {
+        registry.publish("m", &new).unwrap();
+    }
+
+    // Hit 1 = the first worker's swap step: the roll aborts with a
+    // typed error before any worker swapped.
+    fault::install(FaultPlan::parse("worker_swap_fail=1").unwrap());
+    match client.swap("m") {
+        Err(Error::Protocol(m)) => assert!(m.contains("aborted"), "{m}"),
+        other => panic!("expected a typed swap failure, got {other:?}"),
+    }
+    let snap = metrics.snapshot();
+    assert_eq!(snap.net_worker_swap_failures, 1);
+    assert_eq!(snap.net_worker_swaps, 0, "no worker swapped before the abort");
+
+    // Degraded: infers answer `unavailable` — never logits that might
+    // mix artifact versions across shards.
+    match client
+        .call(&Frame::Infer { key: "m".into(), batch: batch.clone(), deadline_us: None })
+        .unwrap()
+    {
+        Frame::Error { code, message } => {
+            assert_eq!(code, ErrorCode::Unavailable);
+            assert!(message.contains("degraded"), "{message}");
+        }
+        other => panic!("expected ERROR(unavailable) while degraded, got {other:?}"),
+    }
+    assert!(metrics.snapshot().net_worker_unavailable >= 1);
+
+    // A clean SWAP heals the group end-to-end onto the new bytes.
+    fault::clear();
+    let message = client.swap("m").unwrap();
+    assert!(message.contains("rolling swap"), "{message}");
+    let after = client.infer("m", batch).unwrap();
+    assert_eq!(
+        after.row(0),
+        direct_logits(&new, &row).as_slice(),
+        "healed group serves the new artifact's exact bytes"
+    );
+    assert_eq!(metrics.snapshot().net_worker_swaps, 2);
+
+    stop(router);
+    for w in workers {
+        stop(w);
+    }
+    for dir in dirs {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,418 @@
+//! Cross-process router/worker cluster tests (see `docs/CLUSTER.md`):
+//! a router scatters each INFER's rows to worker servers that each
+//! serve a contiguous slice of output columns, gathers the `PARTIAL`
+//! replies in fixed shard order, and must hand back logits
+//! **byte-identical** to a single-process `NativeBackend` — for every
+//! kernel format, at shard counts {1, 2, 4}, with worker thread pools
+//! of {1, 4}, and straight through a coordinated rolling `SWAP`. Also
+//! pins model-key routing across two worker fleets and the typed
+//! `unknown-model` error for a key the router does not serve.
+
+use lrbi::coordinator::metrics::Metrics;
+use lrbi::coordinator::pool::ExecCtx;
+use lrbi::formats::StoredIndex;
+use lrbi::serve::batcher::BatchPolicy;
+use lrbi::serve::engine::{InferenceBackend, MlpParams, NativeBackend};
+use lrbi::serve::protocol::{ErrorCode, Frame, RowBatch};
+use lrbi::serve::router::ShardGroup;
+use lrbi::serve::server::{ClientOptions, ModelHub, NetClient, ServeOptions, Server};
+use lrbi::store::{Artifact, ArtifactMeta, Registry};
+use lrbi::tensor::Matrix;
+use lrbi::tiling::{TileFactors, TilePlan, TiledLowRankIndex};
+use lrbi::util::bits::BitMatrix;
+use lrbi::util::error::Result;
+use lrbi::util::prop;
+use lrbi::util::rng::Rng;
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+// ---------------------------------------------------------------- helpers
+
+/// Small model (6 → 20 → 30 → 4) so a whole cluster boots in
+/// milliseconds; 4 output columns means 4 shards degrade to one
+/// column per worker — the extreme split.
+fn small_params(seed: u64) -> MlpParams {
+    let mut rng = Rng::new(seed);
+    MlpParams {
+        w0: Matrix::gaussian(6, 20, 0.0, 0.5, &mut rng),
+        b0: vec![0.1; 20],
+        w1: Matrix::gaussian(20, 30, 0.0, 0.5, &mut rng),
+        b1: vec![0.2; 30],
+        w2: Matrix::gaussian(30, 4, 0.0, 0.5, &mut rng),
+        b2: vec![0.0; 4],
+    }
+}
+
+fn small_artifact(params: &MlpParams, format: &str, seed: u64) -> Artifact {
+    let mut rng = Rng::new(seed);
+    let ip = BitMatrix::from_fn(20, 4, |_, _| rng.bernoulli(0.3));
+    let iz = BitMatrix::from_fn(4, 30, |_, _| rng.bernoulli(0.3));
+    Artifact::pack_factors(params.clone(), format, &ip, &iz, "cluster test").unwrap()
+}
+
+fn tiled_artifact(params: &MlpParams, seed: u64) -> Artifact {
+    let (m, n) = (params.w1.rows(), params.w1.cols());
+    let plan = TilePlan::new(2, 3);
+    let mut rng = Rng::new(seed);
+    let tiles: Vec<TileFactors> = plan
+        .tiles(m, n)
+        .unwrap()
+        .iter()
+        .map(|s| {
+            let k = 3 + s.id % 2;
+            TileFactors {
+                rank: k,
+                ip: BitMatrix::from_fn(s.rows(), k, |_, _| rng.bernoulli(0.3)),
+                iz: BitMatrix::from_fn(k, s.cols(), |_, _| rng.bernoulli(0.3)),
+            }
+        })
+        .collect();
+    Artifact {
+        params: params.clone(),
+        index: StoredIndex::Tiled(TiledLowRankIndex::new(m, n, plan, tiles).unwrap()),
+        meta: ArtifactMeta { sparsity: 0.0, cost: 0.0, rank: 0, provenance: "cluster test".into() },
+    }
+}
+
+/// The full kernel-format matrix the repo's bit-identity contract
+/// covers: six packable formats plus the tiled artifact path.
+fn all_format_artifacts(params: &MlpParams, seed: u64) -> Vec<Artifact> {
+    let mut artifacts = vec![tiled_artifact(params, seed)];
+    for format in ["dense", "csr", "relative", "lowrank", "viterbi", "dcsr"] {
+        artifacts.push(small_artifact(params, format, seed + 1));
+    }
+    artifacts
+}
+
+type Running = (SocketAddr, lrbi::serve::server::ServerHandle, JoinHandle<Result<()>>);
+
+/// Bind on an ephemeral port and run the server on its own thread.
+fn start_server(hub: ModelHub, opts: &ServeOptions) -> Running {
+    let server = Server::bind("127.0.0.1:0", Arc::new(hub), opts).unwrap();
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let runner = std::thread::spawn(move || server.run());
+    (addr, handle, runner)
+}
+
+/// One worker: an ordinary wire server over `artifact` (key "m") with
+/// an spmm plan pool of `threads` threads.
+fn start_worker(artifact: &Artifact, threads: usize) -> Running {
+    let metrics = Arc::new(Metrics::new());
+    let ctx = ExecCtx::new(threads, Some(Arc::clone(&metrics)));
+    let hub = ModelHub::from_artifact(
+        "m",
+        artifact,
+        BatchPolicy::default(),
+        64,
+        metrics,
+        ctx,
+    )
+    .unwrap();
+    start_server(hub, &ServeOptions::default())
+}
+
+/// A router over one shard per worker address, asking workers for
+/// model "m" and exposing it under the same key.
+fn start_router(workers: &[SocketAddr], metrics: Arc<Metrics>) -> Running {
+    let spec: Vec<String> = workers.iter().map(|a| a.to_string()).collect();
+    let group = Arc::new(
+        ShardGroup::connect(&spec.join(","), "m", ClientOptions::default(), metrics).unwrap(),
+    );
+    assert_eq!(group.shard_count(), workers.len());
+    start_server(ModelHub::from_remote("m", group), &ServeOptions::default())
+}
+
+fn stop((_, handle, runner): Running) {
+    handle.shutdown();
+    runner.join().unwrap().unwrap();
+}
+
+fn random_row(rng: &mut Rng, dim: usize) -> Vec<f32> {
+    (0..dim).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+}
+
+// ------------------------------------------------ bit-identity test matrix
+
+/// The headline contract: for every kernel format × shard count
+/// {1, 2, 4} × worker thread pool {1, 4}, logits served through the
+/// router are byte-identical to a direct in-process `NativeBackend`
+/// over the same artifact. With 4 output columns, 4 shards means each
+/// worker contributes exactly one column.
+#[test]
+fn router_logits_bit_identical_for_every_format_shard_count_and_thread_pool() {
+    let params = small_params(100);
+    for artifact in all_format_artifacts(&params, 101) {
+        let format = artifact.index.format_name();
+        let mut direct = NativeBackend::from_artifact(&artifact).unwrap();
+        for threads in [1usize, 4] {
+            for shard_count in [1usize, 2, 4] {
+                let workers: Vec<Running> =
+                    (0..shard_count).map(|_| start_worker(&artifact, threads)).collect();
+                let worker_addrs: Vec<SocketAddr> = workers.iter().map(|w| w.0).collect();
+                let router_metrics = Arc::new(Metrics::new());
+                let router = start_router(&worker_addrs, Arc::clone(&router_metrics));
+
+                let mut client = NetClient::connect(router.0).unwrap();
+                let mut rng = Rng::new(110);
+                for rows in [1usize, 3, 5] {
+                    let inputs: Vec<Vec<f32>> =
+                        (0..rows).map(|_| random_row(&mut rng, 6)).collect();
+                    let got =
+                        client.infer("m", RowBatch::from_rows(&inputs).unwrap()).unwrap();
+                    assert_eq!(got.rows(), rows);
+                    assert_eq!(got.cols(), 4);
+                    for (i, input) in inputs.iter().enumerate() {
+                        let x = Matrix::from_fn(1, 6, |_, j| input[j]);
+                        assert_eq!(
+                            got.row(i),
+                            direct.predict(&x).unwrap().row(0),
+                            "format {format}, {shard_count} shard(s), {threads} thread(s), \
+                             row {i}: routed logits must be byte-identical"
+                        );
+                    }
+                }
+                // Empty batches take the router's fast path and still
+                // carry the model's width.
+                let empty = client.infer("m", RowBatch::new(0, 0, Vec::new()).unwrap()).unwrap();
+                assert_eq!((empty.rows(), empty.cols()), (0, 4));
+
+                let snap = router_metrics.snapshot();
+                assert!(
+                    snap.net_worker_requests >= (3 * shard_count) as u64,
+                    "format {format}: scatters must be counted \
+                     (saw {})",
+                    snap.net_worker_requests
+                );
+                assert_eq!(snap.net_worker_failures, 0, "healthy cluster: no failures");
+
+                stop(router);
+                for w in workers {
+                    stop(w);
+                }
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------- rolling swap
+
+/// A coordinated rolling SWAP across every worker keeps the
+/// bit-identity contract: before the swap the router serves the old
+/// artifact's bytes, after it the new artifact's — never a mixture.
+#[test]
+fn rolling_swap_switches_every_worker_and_stays_bit_identical() {
+    let params = small_params(120);
+    let old = small_artifact(&params, "lowrank", 121);
+    let new = small_artifact(&params, "csr", 122);
+
+    // Each worker serves its own registry so SWAP has a reload source.
+    let mut dirs = Vec::new();
+    let mut registries = Vec::new();
+    let mut workers = Vec::new();
+    for w in 0..2 {
+        let dir = std::env::temp_dir()
+            .join(format!("lrbi_cluster_swap_{}_{w}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut registry = Registry::create(&dir).unwrap();
+        registry.publish("m", &old).unwrap();
+        let hub = ModelHub::from_registry(
+            &dir,
+            BatchPolicy::default(),
+            64,
+            Arc::new(Metrics::new()),
+            ExecCtx::single(),
+        )
+        .unwrap();
+        workers.push(start_server(hub, &ServeOptions::default()));
+        registries.push(registry);
+        dirs.push(dir);
+    }
+    let worker_addrs: Vec<SocketAddr> = workers.iter().map(|w| w.0).collect();
+    let router_metrics = Arc::new(Metrics::new());
+    let router = start_router(&worker_addrs, Arc::clone(&router_metrics));
+    let mut client = NetClient::connect(router.0).unwrap();
+
+    let mut rng = Rng::new(123);
+    let input = random_row(&mut rng, 6);
+    let batch = RowBatch::from_rows(&[input.clone()]).unwrap();
+    let x = Matrix::from_fn(1, 6, |_, j| input[j]);
+
+    let before = client.infer("m", batch.clone()).unwrap();
+    let mut direct_old = NativeBackend::from_artifact(&old).unwrap();
+    assert_eq!(before.row(0), direct_old.predict(&x).unwrap().row(0));
+
+    // Republish under the same name on every worker, then one SWAP to
+    // the router rolls all of them.
+    for registry in &mut registries {
+        registry.publish("m", &new).unwrap();
+    }
+    let message = client.swap("m").unwrap();
+    assert!(message.contains("rolling swap"), "{message}");
+
+    let after = client.infer("m", batch).unwrap();
+    assert_ne!(after.data(), before.data(), "swap must change the logits");
+    let mut direct_new = NativeBackend::from_artifact(&new).unwrap();
+    assert_eq!(
+        after.row(0),
+        direct_new.predict(&x).unwrap().row(0),
+        "post-swap routed logits bit-identical to the new artifact"
+    );
+    let snap = router_metrics.snapshot();
+    assert_eq!(snap.net_worker_swaps, 2, "one swap step per worker");
+    assert_eq!(snap.net_worker_swap_failures, 0);
+    assert_eq!(snap.hot_swaps, 1, "the coordinated swap counts once");
+
+    stop(router);
+    for w in workers {
+        stop(w);
+    }
+    for dir in dirs {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+// --------------------------------------------- split/reassemble property
+
+/// Property: any batch shape routed through any shard count
+/// reassembles to exactly the unsharded bytes — the gather is a
+/// fixed-order copy, so there is no floating-point reassociation to
+/// observe. Workers boot once; each case connects a fresh router over
+/// a prefix of them.
+#[test]
+fn random_batch_and_shard_splits_reassemble_exactly() {
+    let params = small_params(130);
+    let artifact = small_artifact(&params, "csr", 131);
+    let mut direct = NativeBackend::from_artifact(&artifact).unwrap();
+    let workers: Vec<Running> = (0..4).map(|_| start_worker(&artifact, 1)).collect();
+    let worker_addrs: Vec<SocketAddr> = workers.iter().map(|w| w.0).collect();
+
+    prop::check("router split/reassemble", 12, |rng| {
+        let shard_count = 1 + rng.next_range(4) as usize;
+        let rows = 1 + rng.next_range(7) as usize;
+        let router_metrics = Arc::new(Metrics::new());
+        let router = start_router(&worker_addrs[..shard_count], router_metrics);
+        let mut client = NetClient::connect(router.0).unwrap();
+        let inputs: Vec<Vec<f32>> = (0..rows).map(|_| random_row(rng, 6)).collect();
+        let got = client.infer("m", RowBatch::from_rows(&inputs).unwrap()).unwrap();
+        for (i, input) in inputs.iter().enumerate() {
+            let x = Matrix::from_fn(1, 6, |_, j| input[j]);
+            assert_eq!(
+                got.row(i),
+                direct.predict(&x).unwrap().row(0),
+                "{rows} row(s) across {shard_count} shard(s), row {i}"
+            );
+        }
+        stop(router);
+    });
+
+    for w in workers {
+        stop(w);
+    }
+}
+
+// ------------------------------------------------------ model-key routing
+
+/// A router can front several worker fleets under different model
+/// keys; each key's logits match its own fleet's artifact, and a key
+/// the router does not serve is a typed `unknown-model` error.
+#[test]
+fn model_key_routing_selects_the_right_worker_fleet() {
+    let params = small_params(140);
+    let art_a = small_artifact(&params, "dense", 141);
+    let art_b = small_artifact(&params, "relative", 142);
+    let worker_a = start_worker(&art_a, 1);
+    let worker_b = start_worker(&art_b, 1);
+
+    let metrics = Arc::new(Metrics::new());
+    let group_a = Arc::new(
+        ShardGroup::connect(
+            &worker_a.0.to_string(),
+            "m",
+            ClientOptions::default(),
+            Arc::clone(&metrics),
+        )
+        .unwrap(),
+    );
+    let group_b = Arc::new(
+        ShardGroup::connect(
+            &worker_b.0.to_string(),
+            "m",
+            ClientOptions::default(),
+            Arc::clone(&metrics),
+        )
+        .unwrap(),
+    );
+    let hub = ModelHub::from_remote("alpha", group_a);
+    hub.install_remote("beta", group_b);
+    let router = start_server(hub, &ServeOptions::default());
+    let mut client = NetClient::connect(router.0).unwrap();
+
+    let mut rng = Rng::new(143);
+    let input = random_row(&mut rng, 6);
+    let batch = RowBatch::from_rows(&[input.clone()]).unwrap();
+    let x = Matrix::from_fn(1, 6, |_, j| input[j]);
+
+    let got_a = client.infer("alpha", batch.clone()).unwrap();
+    let got_b = client.infer("beta", batch.clone()).unwrap();
+    let mut direct_a = NativeBackend::from_artifact(&art_a).unwrap();
+    let mut direct_b = NativeBackend::from_artifact(&art_b).unwrap();
+    assert_eq!(got_a.row(0), direct_a.predict(&x).unwrap().row(0), "alpha fleet");
+    assert_eq!(got_b.row(0), direct_b.predict(&x).unwrap().row(0), "beta fleet");
+    // An empty key resolves to the hub's default remote slot.
+    let got_default = client.infer("", batch.clone()).unwrap();
+    assert_eq!(got_default.data(), got_a.data(), "default key is alpha");
+
+    match client
+        .call(&Frame::Infer { key: "gamma".into(), batch, deadline_us: None })
+        .unwrap()
+    {
+        Frame::Error { code, message } => {
+            assert_eq!(code, ErrorCode::UnknownModel);
+            assert!(message.contains("gamma"), "{message}");
+        }
+        other => panic!("expected a typed error, got {}", other.type_name()),
+    }
+
+    stop(router);
+    stop(worker_a);
+    stop(worker_b);
+}
+
+// ------------------------------------------------- replicated shards
+
+/// Replicas within a shard (`a|b` spec) are interchangeable: the
+/// router serves identical bytes no matter which replica answers, and
+/// the spec parser's shard count reflects groups, not endpoints.
+#[test]
+fn replicated_shard_serves_identical_bytes() {
+    let params = small_params(150);
+    let artifact = small_artifact(&params, "lowrank", 151);
+    let mut direct = NativeBackend::from_artifact(&artifact).unwrap();
+    // Shard 0 has two replicas over the same artifact; shard 1 has one.
+    let replica_a = start_worker(&artifact, 1);
+    let replica_b = start_worker(&artifact, 1);
+    let solo = start_worker(&artifact, 1);
+    let spec = format!("{}|{},{}", replica_a.0, replica_b.0, solo.0);
+    let metrics = Arc::new(Metrics::new());
+    let group =
+        Arc::new(ShardGroup::connect(&spec, "m", ClientOptions::default(), metrics).unwrap());
+    assert_eq!(group.shard_count(), 2, "replicas do not add shards");
+    assert_eq!(group.classes(), 4);
+    let router = start_server(ModelHub::from_remote("m", group), &ServeOptions::default());
+    let mut client = NetClient::connect(router.0).unwrap();
+
+    let mut rng = Rng::new(152);
+    for _ in 0..4 {
+        let input = random_row(&mut rng, 6);
+        let got = client.infer("m", RowBatch::from_rows(&[input.clone()]).unwrap()).unwrap();
+        let x = Matrix::from_fn(1, 6, |_, j| input[j]);
+        assert_eq!(got.row(0), direct.predict(&x).unwrap().row(0));
+    }
+
+    stop(router);
+    stop(replica_a);
+    stop(replica_b);
+    stop(solo);
+}

@@ -8,6 +8,18 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 fail=0
+
+# The docs the rest of the suite links to by name must exist — the
+# glob below only checks files that are present, so a deleted doc
+# would otherwise pass silently.
+for required in docs/PROTOCOL.md docs/SERVING.md docs/CLUSTER.md \
+  docs/OBSERVABILITY.md docs/ROBUSTNESS.md; do
+  if [ ! -e "$required" ]; then
+    echo "missing required doc: $required"
+    fail=1
+  fi
+done
+
 for md in README.md docs/*.md; do
   dir=$(dirname "$md")
   # extract the (target) of every [text](target) link

@@ -1,0 +1,116 @@
+#!/usr/bin/env bash
+# Cluster smoke test: boot two `lrbi serve --worker` processes and a
+# `--router` over them (one output-column shard each, docs/CLUSTER.md),
+# then prove the tier behaves the way the docs promise:
+#   - INFER traffic routed through the scatter/gather path serves
+#     cleanly and the per-worker counters surface on the router's
+#     Prometheus page (net_worker_requests grows with shard fan-out);
+#   - killing a worker degrades into a *typed* client failure (never a
+#     hang) and moves net_worker_failures / net_worker_unavailable;
+#   - the router and the surviving worker still shut down gracefully
+#     over the wire.
+# Finishes with the cluster test suite (cross-process bit-identity for
+# every kernel format × shard count, rolling swap, model-key routing).
+# Part of scripts/verify.sh and the CI cluster-smoke job.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+LRBI=./target/release/lrbi
+[ -x "$LRBI" ] || cargo build --release
+
+w1_log="$(mktemp)"; w2_log="$(mktemp)"; r_log="$(mktemp)"
+w1_pid=""; w2_pid=""; r_pid=""
+cleanup() {
+  for pid in "$r_pid" "$w1_pid" "$w2_pid"; do
+    [ -n "$pid" ] && kill "$pid" 2>/dev/null || true
+  done
+  rm -f "$w1_log" "$w2_log" "$r_log"
+}
+trap cleanup EXIT
+
+# Wait for a server log to print its bound address, then echo it.
+wait_addr() { # $1=log $2=pid $3=name
+  for _ in $(seq 1 100); do
+    grep -q "listening on " "$1" && break
+    kill -0 "$2" 2>/dev/null || { echo "$3 died:" >&2; cat "$1" >&2; exit 1; }
+    sleep 0.1
+  done
+  grep -q "listening on " "$1" || { echo "$3 never came up:" >&2; cat "$1" >&2; exit 1; }
+  sed -n 's/^listening on \([0-9.:]*\) .*/\1/p' "$1" | head -n1
+}
+
+echo "== boot: two workers (synthetic lowrank model, 10 output columns)"
+"$LRBI" serve --worker 127.0.0.1:0 --kernel lowrank --threads 2 --max-wait-ms 1 \
+  >"$w1_log" 2>&1 &
+w1_pid=$!
+"$LRBI" serve --worker 127.0.0.1:0 --kernel lowrank --threads 2 --max-wait-ms 1 \
+  >"$w2_log" 2>&1 &
+w2_pid=$!
+w1=$(wait_addr "$w1_log" "$w1_pid" "worker 1")
+w2=$(wait_addr "$w2_log" "$w2_pid" "worker 2")
+echo "   workers $w1, $w2"
+
+echo "== boot: router over 2 shards (columns split 0..5, 5..10)"
+"$LRBI" serve --router 127.0.0.1:0 --workers "$w1,$w2" --shards 2 \
+  --metrics-addr 127.0.0.1:0 >"$r_log" 2>&1 &
+r_pid=$!
+raddr=$(wait_addr "$r_log" "$r_pid" "router")
+maddr=$(sed -n 's|^metrics on http://\([0-9.:]*\) .*|\1|p' "$r_log" | head -n1)
+[ -n "$maddr" ] || { echo "could not parse router metrics address:"; cat "$r_log"; exit 1; }
+grep -q "router over 2 shard(s)" "$r_log" \
+  || { echo "router banner missing the shard map:"; cat "$r_log"; exit 1; }
+echo "   router $raddr, metrics $maddr"
+
+echo "== traffic: 16 INFERs routed through scatter/gather"
+out=$("$LRBI" serve --connect "$raddr" --requests 16 --rows 2)
+echo "   $out"
+
+scrape_body() {
+  local mhost=${maddr%:*} mport=${maddr##*:}
+  exec 3<>"/dev/tcp/${mhost}/${mport}"
+  printf 'GET /metrics HTTP/1.0\r\n\r\n' >&3
+  cat <&3 | awk 'body{print} /^\r?$/{body=1}'
+  exec 3<&- 3>&-
+}
+
+counter() { # $1=body $2=name
+  printf '%s\n' "$1" | sed -n "s/^lrbi_$2 \([0-9]*\).*/\1/p"
+}
+
+echo "== scrape: worker-tier counters surface on the router's metrics page"
+body=$(scrape_body)
+# 16 requests x 2 shards = 32 scatters minimum.
+for want in "net_worker_requests 32" "net_requests 16"; do
+  name=${want% *}; floor=${want#* }
+  got=$(counter "$body" "$name")
+  [ -n "$got" ] && [ "$got" -ge "$floor" ] \
+    || { echo "expected lrbi_$name >= $floor, got '${got:-missing}'"; exit 1; }
+  echo "   lrbi_$name = $got (>= $floor)"
+done
+fails=$(counter "$body" "net_worker_failures")
+[ "${fails:-0}" -eq 0 ] || { echo "healthy cluster reported $fails worker failures"; exit 1; }
+
+echo "== worker loss: killing worker 2 must be a typed failure, not a hang"
+kill "$w2_pid"; wait "$w2_pid" 2>/dev/null || true; w2_pid=""
+if "$LRBI" serve --connect "$raddr" --requests 2 --rows 1 >/dev/null 2>&1; then
+  echo "expected a typed 'unavailable' failure after losing a shard"; exit 1
+fi
+echo "   client failed with a typed error, as documented"
+body=$(scrape_body)
+for name in net_worker_failures net_worker_unavailable; do
+  got=$(counter "$body" "$name")
+  [ -n "$got" ] && [ "$got" -ge 1 ] \
+    || { echo "expected lrbi_$name >= 1 after worker loss, got '${got:-missing}'"; exit 1; }
+  echo "   lrbi_$name = $got (>= 1)"
+done
+
+echo "== graceful shutdown over the wire (router, then surviving worker)"
+"$LRBI" serve --connect "$raddr" --requests 0 --shutdown >/dev/null
+wait "$r_pid"; r_pid=""
+"$LRBI" serve --connect "$w1" --requests 0 --shutdown >/dev/null
+wait "$w1_pid"; w1_pid=""
+
+echo "== cluster suite: cross-process bit-identity, rolling swap, key routing"
+cargo test -q --release --test cluster
+
+echo "cluster smoke: OK"

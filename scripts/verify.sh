@@ -5,6 +5,11 @@
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
+command -v cargo >/dev/null 2>&1 || {
+  echo "verify.sh: cargo not found; install a Rust toolchain (rustup.rs) to run the verify gate" >&2
+  exit 1
+}
+
 echo "== cargo build --release"
 cargo build --release
 
@@ -37,6 +42,9 @@ echo "== telemetry smoke (serve --listen --metrics-addr + scrape + top + zero-al
 
 echo "== chaos smoke (LRBI_FAULT plan + retry recovery + deadline shed + chaos suite)"
 ../scripts/chaos_smoke.sh
+
+echo "== cluster smoke (router + 2 workers: scatter/gather, worker-loss probe, cluster suite)"
+../scripts/cluster_smoke.sh
 
 echo "== cargo doc --no-deps (warnings are errors)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
