@@ -176,8 +176,14 @@ fn print_usage() {
          \x20            --router HOST:PORT --workers \"a:1|b:1,c:2\" [--shards N]\n\
          \x20            \x20  scatter/gather over worker shards (docs/CLUSTER.md)\n\
          \x20            --model KEY   model key the router asks workers for\n\
+         \x20            --health-interval-ms 1000   PING prober cadence (0 = off)\n\
+         \x20            --hedge-ms N   hedge a stalled shard after N ms\n\
+         \x20            \x20  (absent = adaptive from worker_ns p95; 0 = never)\n\
+         \x20            --breaker-failures 3  --breaker-cooldown-ms 1000\n\
+         \x20            --breaker-successes 2   per-replica circuit breaker\n\
          \x20            --connect HOST:PORT [--requests N --rows R --shutdown]\n\
          \x20            \x20  drive INFER traffic at a running server instead\n\
+         \x20            --print-logits    print each reply as hex f32 bits\n\
          \x20            --deadline-ms D   per-call budget (0 = expired-shed probe)\n\
          \x20            --retries N  --retry-base-ms 10   retry transient failures\n\
          \x20            --connect-timeout-ms T  --io-timeout-ms T   socket bounds\n\
@@ -521,7 +527,7 @@ fn serve_listen(args: &Args, addr: &str) -> Result<()> {
 /// bit-identical to a single process; `SWAP name` rolls across every
 /// worker. See docs/CLUSTER.md.
 fn serve_router(args: &Args, addr: &str) -> Result<()> {
-    use crate::serve::router::ShardGroup;
+    use crate::serve::router::{start_supervisor, HedgePolicy, ShardGroup, SupervisorOptions};
     use crate::serve::server::{ClientOptions, ModelHub, RetryPolicy, ServeOptions, Server};
     let spec = args.flags.get("workers").ok_or_else(|| {
         Error::InvalidArg(
@@ -549,12 +555,36 @@ fn serve_router(args: &Args, addr: &str) -> Result<()> {
     };
     // The key workers are asked for ("" = each worker's default).
     let model = args.get_str("model", "");
-    let group = std::sync::Arc::new(ShardGroup::connect(
+    // Supervision knobs (docs/CLUSTER.md): `--hedge-ms 0` disables
+    // hedging, absent = adaptive off the live worker_ns p95;
+    // `--health-interval-ms 0` disables the background prober.
+    let sup_defaults = SupervisorOptions::default();
+    let sup = SupervisorOptions {
+        health_interval: std::time::Duration::from_millis(
+            args.get("health-interval-ms", sup_defaults.health_interval.as_millis() as u64)?,
+        ),
+        hedge: match opt_ms(args, "hedge-ms")? {
+            None => HedgePolicy::Adaptive,
+            Some(d) if d.is_zero() => HedgePolicy::Disabled,
+            Some(d) => HedgePolicy::Fixed(d),
+        },
+        breaker_failures: args.get("breaker-failures", sup_defaults.breaker_failures)?,
+        breaker_cooldown: std::time::Duration::from_millis(
+            args.get("breaker-cooldown-ms", sup_defaults.breaker_cooldown.as_millis() as u64)?,
+        ),
+        breaker_successes: args.get("breaker-successes", sup_defaults.breaker_successes)?,
+        ..sup_defaults
+    };
+    let group = std::sync::Arc::new(ShardGroup::connect_with(
         spec,
         &model,
         copts,
+        sup,
         std::sync::Arc::clone(&metrics),
     )?);
+    // The supervisor heals the fleet in the background: health probes,
+    // breaker transitions, auto-reintegration, degraded-swap retries.
+    let supervisor = start_supervisor(&group);
     let shards: usize = args.get("shards", 0usize)?;
     if shards != 0 && shards != group.shard_count() {
         return Err(Error::InvalidArg(format!(
@@ -601,6 +631,7 @@ fn serve_router(args: &Args, addr: &str) -> Result<()> {
     );
     println!("send a SHUTDOWN frame to stop (see docs/PROTOCOL.md)");
     server.run()?;
+    supervisor.stop();
     drop(metrics_server);
     let snap = metrics.snapshot();
     println!(
@@ -613,6 +644,17 @@ fn serve_router(args: &Args, addr: &str) -> Result<()> {
         snap.net_worker_failovers,
         snap.net_worker_unavailable,
         snap.net_worker_swaps
+    );
+    println!(
+        "supervision: {} health probes, breaker {}/{}/{} opens/half-opens/closes, \
+         {} hedges fired ({} won), {} reintegration(s)",
+        snap.net_health_probes,
+        snap.net_breaker_opens,
+        snap.net_breaker_half_opens,
+        snap.net_breaker_closes,
+        snap.net_hedges_fired,
+        snap.net_hedges_won,
+        snap.net_reintegrations
     );
     Ok(())
 }
@@ -670,6 +712,11 @@ fn serve_connect(args: &Args, addr: &str) -> Result<()> {
             .map(std::time::Duration::from_millis),
     };
     let mut client = NetClient::connect_with(addr, opts)?;
+    // Inputs come from a fixed seed, so two invocations with the same
+    // flags send identical rows — with `--print-logits`, their outputs
+    // diff clean iff the server's bytes are identical (the smoke
+    // scripts' cross-restart byte-identity check).
+    let print_logits = args.flags.contains_key("print-logits");
     let mut rng = crate::util::rng::Rng::new(23);
     let mut shed = 0usize;
     let t0 = Instant::now();
@@ -699,7 +746,16 @@ fn serve_connect(args: &Args, addr: &str) -> Result<()> {
             }
         } else {
             match client.infer(&key, batch) {
-                Ok(_) => {}
+                Ok(logits) => {
+                    if print_logits {
+                        let words: Vec<String> = logits
+                            .data()
+                            .iter()
+                            .map(|v| format!("{:08x}", v.to_bits()))
+                            .collect();
+                        println!("logits {}", words.join(""));
+                    }
+                }
                 // A shed request is an expected outcome under an
                 // aggressive budget, not a client failure.
                 Err(Error::Protocol(m)) if m.starts_with("deadline-exceeded") => shed += 1,

@@ -129,6 +129,28 @@ pub struct Metrics {
     /// Router requests answered with an `unavailable` error frame (no
     /// replica of some shard reachable, or the group is degraded).
     pub net_worker_unavailable: AtomicU64,
+    /// `PING` health probes a router's supervisor sent to replicas
+    /// (successful or not; see `docs/CLUSTER.md`).
+    pub net_health_probes: AtomicU64,
+    /// Circuit-breaker transitions closed → open (a replica was
+    /// quarantined after consecutive failures).
+    pub net_breaker_opens: AtomicU64,
+    /// Circuit-breaker transitions open → half-open (cooldown expired,
+    /// the replica is being re-probed).
+    pub net_breaker_half_opens: AtomicU64,
+    /// Circuit-breaker transitions half-open → closed (the replica
+    /// passed its probation and serves traffic again).
+    pub net_breaker_closes: AtomicU64,
+    /// Hedged scatters fired: a shard's partial was still outstanding
+    /// after the hedge cut, so the same `SCATTER` was sent to the next
+    /// healthy replica.
+    pub net_hedges_fired: AtomicU64,
+    /// Hedged scatters where the hedge (not the primary) produced the
+    /// reply that was used.
+    pub net_hedges_won: AtomicU64,
+    /// Replicas reintegrated into serving after quarantine (passed
+    /// consecutive health probes plus the class-agreement re-probe).
+    pub net_reintegrations: AtomicU64,
 }
 
 /// Client-side retries (`NetClient` backoff) observed in this process.
@@ -222,6 +244,20 @@ pub struct MetricsSnapshot {
     pub net_worker_swap_failures: u64,
     /// Router requests answered `unavailable`.
     pub net_worker_unavailable: u64,
+    /// Supervisor `PING` health probes sent.
+    pub net_health_probes: u64,
+    /// Breaker transitions closed → open.
+    pub net_breaker_opens: u64,
+    /// Breaker transitions open → half-open.
+    pub net_breaker_half_opens: u64,
+    /// Breaker transitions half-open → closed.
+    pub net_breaker_closes: u64,
+    /// Hedged scatters fired at a second replica.
+    pub net_hedges_fired: u64,
+    /// Hedged scatters won by the hedge.
+    pub net_hedges_won: u64,
+    /// Quarantined replicas reintegrated into serving.
+    pub net_reintegrations: u64,
     /// Client-side retries observed in this process (process-global;
     /// see [`record_net_retry`]).
     pub net_retries_observed: u64,
@@ -286,6 +322,13 @@ impl Metrics {
             net_worker_swaps: self.net_worker_swaps.load(Ordering::Relaxed),
             net_worker_swap_failures: self.net_worker_swap_failures.load(Ordering::Relaxed),
             net_worker_unavailable: self.net_worker_unavailable.load(Ordering::Relaxed),
+            net_health_probes: self.net_health_probes.load(Ordering::Relaxed),
+            net_breaker_opens: self.net_breaker_opens.load(Ordering::Relaxed),
+            net_breaker_half_opens: self.net_breaker_half_opens.load(Ordering::Relaxed),
+            net_breaker_closes: self.net_breaker_closes.load(Ordering::Relaxed),
+            net_hedges_fired: self.net_hedges_fired.load(Ordering::Relaxed),
+            net_hedges_won: self.net_hedges_won.load(Ordering::Relaxed),
+            net_reintegrations: self.net_reintegrations.load(Ordering::Relaxed),
             net_retries_observed: net_retries_total(),
             faults_injected: crate::util::fault::injected_total(),
         }
@@ -408,6 +451,13 @@ impl MetricsSnapshot {
             ("net_worker_swaps", self.net_worker_swaps),
             ("net_worker_swap_failures", self.net_worker_swap_failures),
             ("net_worker_unavailable", self.net_worker_unavailable),
+            ("net_health_probes", self.net_health_probes),
+            ("net_breaker_opens", self.net_breaker_opens),
+            ("net_breaker_half_opens", self.net_breaker_half_opens),
+            ("net_breaker_closes", self.net_breaker_closes),
+            ("net_hedges_fired", self.net_hedges_fired),
+            ("net_hedges_won", self.net_hedges_won),
+            ("net_reintegrations", self.net_reintegrations),
             ("net_retries_observed", self.net_retries_observed),
             ("faults_injected", self.faults_injected),
         ];
@@ -495,7 +545,7 @@ mod tests {
         let s = m.snapshot();
         let named = s.named_counters();
         // scalar fields + one entry per spmm kernel slot
-        assert_eq!(named.len(), 36 + SPMM_NS_COUNTER_NAMES.len());
+        assert_eq!(named.len(), 43 + SPMM_NS_COUNTER_NAMES.len());
         let mut names: Vec<&str> = named.iter().map(|(n, _)| *n).collect();
         names.sort_unstable();
         names.dedup();
@@ -515,6 +565,13 @@ mod tests {
         assert_eq!(get("net_worker_swaps"), 0);
         assert_eq!(get("net_worker_swap_failures"), 0);
         assert_eq!(get("net_worker_unavailable"), 0);
+        assert_eq!(get("net_health_probes"), 0);
+        assert_eq!(get("net_breaker_opens"), 0);
+        assert_eq!(get("net_breaker_half_opens"), 0);
+        assert_eq!(get("net_breaker_closes"), 0);
+        assert_eq!(get("net_hedges_fired"), 0);
+        assert_eq!(get("net_hedges_won"), 0);
+        assert_eq!(get("net_reintegrations"), 0);
         // net_retries_observed / faults_injected are process-global
         // (other tests may have moved them) — presence is asserted by
         // the uniqueness sweep above, not a zero value.

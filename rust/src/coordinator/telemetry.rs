@@ -512,6 +512,17 @@ impl Telemetry {
         self.registry.histogram("worker_ns", &[("worker", worker)])
     }
 
+    /// Get-or-create the per-replica health gauge series
+    /// (`replica_healthy{worker=...}`). The router's supervisor
+    /// records a `1` sample per successful health probe and a `0` per
+    /// failure, so the series' p50 tracks the replica's recent state,
+    /// `count` is the probe total, and `sum / count` is its success
+    /// ratio — exported through `STATS2` and the Prometheus page like
+    /// every other series (see `docs/CLUSTER.md`).
+    pub fn replica_health_histogram(&self, worker: &str) -> Arc<LatencyHistogram> {
+        self.registry.histogram("replica_healthy", &[("worker", worker)])
+    }
+
     /// Snapshot every registered series (fixed + per-model).
     pub fn export(&self) -> Vec<SeriesSnapshot> {
         self.registry.export()
@@ -691,6 +702,23 @@ mod tests {
         m.record(42);
         assert_eq!(t.request_histogram("default").count(), 1);
         assert_eq!(t.export().len(), export.len() + 1);
+    }
+
+    #[test]
+    fn replica_health_gauge_registers_per_worker_and_deduplicates() {
+        let t = Telemetry::new();
+        let fixed = t.export().len();
+        let h = t.replica_health_histogram("127.0.0.1:9001");
+        h.record(1);
+        h.record(1);
+        h.record(0);
+        // same address returns the same series; another address is new
+        assert_eq!(t.replica_health_histogram("127.0.0.1:9001").count(), 3);
+        t.replica_health_histogram("127.0.0.1:9002").record(1);
+        assert_eq!(t.export().len(), fixed + 2);
+        let snap = t.replica_health_histogram("127.0.0.1:9001").snapshot();
+        assert_eq!((snap.count, snap.sum), (3, 2), "2 healthy of 3 probes");
+        assert_eq!(snap.quantile(0.5), 1, "recent-majority health reads 1");
     }
 
     #[test]

@@ -52,6 +52,8 @@ const FT_STATS2_REQ: u8 = 0x09;
 const FT_STATS2: u8 = 0x0A;
 const FT_SCATTER: u8 = 0x0B;
 const FT_PARTIAL: u8 = 0x0C;
+const FT_PING: u8 = 0x0D;
+const FT_PONG: u8 = 0x0E;
 
 /// Typed error codes carried by [`Frame::Error`] (wire values are
 /// stable; see `docs/PROTOCOL.md`).
@@ -357,6 +359,15 @@ pub enum Frame {
         /// Per-row logits for exactly those columns.
         batch: RowBatch,
     },
+    /// Liveness probe (empty body). A router's health supervisor sends
+    /// this instead of an empty `INFER` so probes never ride the
+    /// inference path or inflate `net_requests` / `request_ns` (see
+    /// `docs/CLUSTER.md`). Any v1 server with this frame compiled in
+    /// answers [`Frame::Pong`]; a pre-PING server answers `bad-frame`,
+    /// which a prober treats as "alive but old".
+    Ping,
+    /// Liveness reply to [`Frame::Ping`] (empty body).
+    Pong,
 }
 
 impl Frame {
@@ -380,6 +391,8 @@ impl Frame {
             Frame::Stats2 { .. } => FT_STATS2,
             Frame::Scatter { .. } => FT_SCATTER,
             Frame::Partial { .. } => FT_PARTIAL,
+            Frame::Ping => FT_PING,
+            Frame::Pong => FT_PONG,
         }
     }
 
@@ -398,6 +411,8 @@ impl Frame {
             Frame::Stats2 { .. } => "STATS2",
             Frame::Scatter { .. } => "SCATTER",
             Frame::Partial { .. } => "PARTIAL",
+            Frame::Ping => "PING",
+            Frame::Pong => "PONG",
         }
     }
 }
@@ -480,7 +495,8 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             payload.push(*code as u8);
             put_short_str(&mut payload, message);
         }
-        Frame::StatsRequest | Frame::Shutdown | Frame::Stats2Request => {}
+        Frame::StatsRequest | Frame::Shutdown | Frame::Stats2Request | Frame::Ping
+        | Frame::Pong => {}
         Frame::Stats(entries) => put_counters(&mut payload, entries),
         Frame::Stats2 { counters, histograms } => {
             put_counters(&mut payload, counters);
@@ -687,6 +703,8 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
             let batch = cur.batch()?;
             Frame::Partial { col_start, col_end, batch }
         }
+        FT_PING => Frame::Ping,
+        FT_PONG => Frame::Pong,
         other => {
             return Err(WireError::new(
                 ErrorCode::BadFrame,
@@ -820,6 +838,8 @@ mod tests {
             Frame::Ok { message: "swapped".into() },
             Frame::Shutdown,
             Frame::Stats2Request,
+            Frame::Ping,
+            Frame::Pong,
             Frame::Stats2 { counters: vec![], histograms: vec![] },
             Frame::Stats2 {
                 counters: vec![("requests".into(), 42)],
@@ -912,6 +932,47 @@ mod tests {
     }
 
     #[test]
+    fn ping_pong_are_empty_bodied_and_reject_any_payload() {
+        // The 6-byte wire image is the whole frame: length 2, version,
+        // type. Pin it byte-for-byte so PING stays cheap forever.
+        assert_eq!(encode(&Frame::Ping), vec![2, 0, 0, 0, PROTOCOL_VERSION, 0x0D]);
+        assert_eq!(encode(&Frame::Pong), vec![2, 0, 0, 0, PROTOCOL_VERSION, 0x0E]);
+        // Truncation fuzz: every strict prefix of the wire image fails
+        // to decode as a complete frame, and any trailing byte is a
+        // typed bad-frame — an empty body is *exactly* empty.
+        for ft in [0x0Du8, 0x0E] {
+            let wire = vec![2, 0, 0, 0, PROTOCOL_VERSION, ft];
+            for cut in 1..wire.len() {
+                let mut r = &wire[..cut];
+                match read_frame(&mut r) {
+                    Err(ReadError::Wire(e)) => assert_eq!(e.code, ErrorCode::BadFrame),
+                    Ok(Some(_)) => panic!("prefix of {cut} bytes decoded as a frame"),
+                    // a bare length prefix with no payload is mid-frame EOF
+                    other => panic!("cut={cut}: unexpected {other:?}"),
+                }
+            }
+            let mut fat = vec![3, 0, 0, 0, PROTOCOL_VERSION, ft, 0xAA];
+            let mut r = &fat[..];
+            match read_frame(&mut r) {
+                Err(ReadError::Wire(e)) => {
+                    assert_eq!(e.code, ErrorCode::BadFrame);
+                    assert!(e.message.contains("trailing"), "{}", e.message);
+                }
+                other => panic!("expected BadFrame on trailing byte, got {other:?}"),
+            }
+            // and a wrong version byte is still caught first
+            fat[4] = PROTOCOL_VERSION + 1;
+            fat.truncate(6);
+            fat[0] = 2;
+            let mut r = &fat[..];
+            match read_frame(&mut r) {
+                Err(ReadError::Wire(e)) => assert_eq!(e.code, ErrorCode::BadVersion),
+                other => panic!("expected BadVersion, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
     fn timed_read_reports_decode_nanos() {
         let wire = encode(&Frame::Stats(vec![("requests".into(), 1)]));
         let mut r = &wire[..];
@@ -951,6 +1012,10 @@ mod tests {
             Frame::Partial { col_start: 0, col_end: 0, batch: empty() }.type_byte(),
             0x0C
         );
+        assert_eq!(Frame::Ping.type_byte(), 0x0D);
+        assert_eq!(Frame::Pong.type_byte(), 0x0E);
+        assert_eq!(Frame::Ping.type_name(), "PING");
+        assert_eq!(Frame::Pong.type_name(), "PONG");
         assert_eq!(ErrorCode::DeadlineExceeded as u8, 9);
         assert_eq!(ErrorCode::DeadlineExceeded.name(), "deadline-exceeded");
         assert_eq!(ErrorCode::Unavailable as u8, 10);

@@ -27,19 +27,41 @@
 //!   any worker refuses the swap, the group is marked *degraded* and
 //!   answers `unavailable` until a later swap succeeds end-to-end —
 //!   the router never gathers logits from mixed artifact versions.
+//!
+//! Supervision (PR 10, see `docs/CLUSTER.md`): the group is
+//! *self-healing*. Every replica carries a [`CircuitBreaker`]
+//! (closed → open on consecutive failures → half-open after a cooldown
+//! → closed again after `breaker_successes` probe successes), so the
+//! scatter path skips a dead worker without paying its dial/IO
+//! timeout; lazy re-dials back off exponentially with equal jitter
+//! (reusing [`RetryPolicy`]) instead of connect-storming a rebooting
+//! worker; a [`start_supervisor`] thread probes every replica with
+//! dedicated `PING`/`PONG` frames on a jittered interval (probes never
+//! ride the `INFER` path, so they pollute no request counters), closes
+//! breakers only after the *artifact re-probe* agrees on the output
+//! width (a worker that slept through a rolling swap must not rejoin
+//! serving stale bytes — counted in `net_reintegrations`), and retries
+//! a degraded group's swap until it un-degrades without operator
+//! action. Scatters *hedge*: if a shard's partial is still outstanding
+//! after the hedge cut (`--hedge-ms`, or adaptively the live
+//! `worker_ns` p95), the same `SCATTER` is fired at the next healthy
+//! replica and the first reply wins — replicas are bit-identical by
+//! construction, so the winner cannot change the output.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock, Weak};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::telemetry::LatencyHistogram;
 use crate::serve::protocol::{ErrorCode, Frame, RowBatch, WireError};
-use crate::serve::server::{ClientOptions, NetClient};
+use crate::serve::server::{backoff_with_jitter, ClientOptions, NetClient, RetryPolicy};
 use crate::serve::shard;
 use crate::util::error::{Error, Result};
 use crate::util::fault::{self, FaultPoint};
 use crate::util::log::Level;
+use crate::util::rng::Rng;
 
 /// Parse a worker topology spec: `,` separates shards, `|` separates
 /// replicas within a shard. `"a:1|b:1,c:2"` is two shards — the first
@@ -70,14 +92,214 @@ pub fn parse_workers(spec: &str) -> Result<Vec<Vec<String>>> {
     Ok(shards)
 }
 
+/// When (if ever) a scatter fires a second attempt at the next healthy
+/// replica of the same shard while the first is still outstanding.
+#[derive(Debug, Clone, Copy)]
+pub enum HedgePolicy {
+    /// Never hedge (`--hedge-ms 0`).
+    Disabled,
+    /// Hedge after a fixed wait (`--hedge-ms N`).
+    Fixed(Duration),
+    /// Hedge after the primary replica's live `worker_ns` p95 (clamped
+    /// to [1ms, 1s]); a cold series (< 32 samples) never hedges, so an
+    /// idle cluster cannot hedge off noise.
+    Adaptive,
+}
+
+/// Supervision knobs for a [`ShardGroup`]: health probing, circuit
+/// breaking, hedging, and dial backoff. All deterministic given
+/// `seed` (jitter reuses the seeded [`Rng`]).
+#[derive(Debug, Clone, Copy)]
+pub struct SupervisorOptions {
+    /// Cadence of the background health prober
+    /// (`--health-interval-ms`); `ZERO` disables the thread entirely.
+    /// Each tick sleeps a jittered `[interval/2, interval]` so a fleet
+    /// of routers never probes in lockstep.
+    pub health_interval: Duration,
+    /// Hedged-scatter policy (`--hedge-ms`).
+    pub hedge: HedgePolicy,
+    /// Consecutive failures that open a replica's breaker
+    /// (`--breaker-failures`).
+    pub breaker_failures: u32,
+    /// How long an open breaker rejects attempts before probing again
+    /// (half-open) (`--breaker-cooldown-ms`).
+    pub breaker_cooldown: Duration,
+    /// Successful probes a half-open replica must pass — *plus* the
+    /// artifact re-probe — before it rejoins serving
+    /// (`--breaker-successes`).
+    pub breaker_successes: u32,
+    /// Backoff schedule for lazy re-dials of an unreachable worker
+    /// (the PR 8 retry policy, reused: capped exponential with equal
+    /// jitter), so a dead worker is not connect-stormed once per
+    /// request.
+    pub dial_backoff: RetryPolicy,
+    /// Seed for probe-interval and dial-backoff jitter.
+    pub seed: u64,
+}
+
+impl Default for SupervisorOptions {
+    fn default() -> Self {
+        SupervisorOptions {
+            health_interval: Duration::from_millis(1000),
+            hedge: HedgePolicy::Adaptive,
+            breaker_failures: 3,
+            breaker_cooldown: Duration::from_millis(1000),
+            breaker_successes: 2,
+            dial_backoff: RetryPolicy::default(),
+            seed: 0xC1AD,
+        }
+    }
+}
+
+/// Circuit-breaker states (docs/CLUSTER.md has the diagram).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: requests flow, consecutive failures are counted.
+    Closed,
+    /// Quarantined: every attempt is skipped without dialing until the
+    /// cooldown elapses.
+    Open,
+    /// Trial: attempts are admitted; successes accumulate toward
+    /// close, any failure re-opens.
+    HalfOpen,
+}
+
+/// Per-replica circuit breaker. Pure state machine — every method
+/// takes `now` explicitly, so tests drive it with a synthetic clock —
+/// counting its transitions into the shared [`Metrics`]
+/// (`net_breaker_opens` / `net_breaker_half_opens` /
+/// `net_breaker_closes`).
+pub struct CircuitBreaker {
+    state: BreakerState,
+    failures: u32,
+    successes: u32,
+    opened_at: Option<Instant>,
+    fail_threshold: u32,
+    cooldown: Duration,
+    close_after: u32,
+}
+
+impl CircuitBreaker {
+    /// `fail_threshold` consecutive failures open the breaker; after
+    /// `cooldown` it half-opens; `close_after` gated successes close it.
+    pub fn new(fail_threshold: u32, cooldown: Duration, close_after: u32) -> Self {
+        CircuitBreaker {
+            state: BreakerState::Closed,
+            failures: 0,
+            successes: 0,
+            opened_at: None,
+            fail_threshold: fail_threshold.max(1),
+            cooldown,
+            close_after: close_after.max(1),
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// May an attempt proceed at `now`? An open breaker whose cooldown
+    /// has elapsed transitions to half-open here (counted) and admits
+    /// the trial.
+    pub fn admit(&mut self, now: Instant, metrics: &Metrics) -> bool {
+        match self.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open => {
+                let elapsed = self
+                    .opened_at
+                    .map(|t| now.saturating_duration_since(t) >= self.cooldown)
+                    .unwrap_or(true);
+                if elapsed {
+                    self.state = BreakerState::HalfOpen;
+                    self.successes = 0;
+                    metrics.net_breaker_half_opens.fetch_add(1, Ordering::Relaxed);
+                }
+                elapsed
+            }
+        }
+    }
+
+    /// Record a failed attempt/probe. Opens from closed at the
+    /// threshold; re-opens instantly from half-open (a trial that
+    /// fails restarts the cooldown).
+    pub fn record_failure(&mut self, now: Instant, metrics: &Metrics) {
+        match self.state {
+            BreakerState::Closed => {
+                self.failures = self.failures.saturating_add(1);
+                if self.failures >= self.fail_threshold {
+                    self.state = BreakerState::Open;
+                    self.opened_at = Some(now);
+                    metrics.net_breaker_opens.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            BreakerState::HalfOpen => {
+                self.state = BreakerState::Open;
+                self.opened_at = Some(now);
+                self.successes = 0;
+                metrics.net_breaker_opens.fetch_add(1, Ordering::Relaxed);
+            }
+            BreakerState::Open => {}
+        }
+    }
+
+    /// Record a successful attempt/probe; returns `true` when this
+    /// success closed the breaker. Closing from half-open requires
+    /// `close_gate` — the caller's confirmation that reintegration
+    /// preconditions hold (the supervisor passes it only after the
+    /// artifact re-probe agrees), so ordinary scatter successes can
+    /// never sneak a stale worker back in.
+    pub fn record_success(&mut self, close_gate: bool, metrics: &Metrics) -> bool {
+        match self.state {
+            BreakerState::Closed => {
+                self.failures = 0;
+                false
+            }
+            BreakerState::HalfOpen => {
+                let next = self.successes.saturating_add(1);
+                if close_gate && next >= self.close_after {
+                    self.state = BreakerState::Closed;
+                    self.failures = 0;
+                    self.successes = 0;
+                    metrics.net_breaker_closes.fetch_add(1, Ordering::Relaxed);
+                    true
+                } else {
+                    // Without the gate, successes saturate one short of
+                    // the closing count: the gated caller still decides.
+                    self.successes =
+                        if close_gate { next } else { next.min(self.close_after - 1) };
+                    false
+                }
+            }
+            BreakerState::Open => false,
+        }
+    }
+
+    /// Would one more *gated* success close the breaker? The
+    /// supervisor runs the (non-free) artifact re-probe only when this
+    /// is true.
+    pub fn pending_close(&self) -> bool {
+        self.state == BreakerState::HalfOpen
+            && self.successes.saturating_add(1) >= self.close_after
+    }
+}
+
 /// One worker endpoint. The connection is lazy: dropped on any
-/// transport error and re-dialled on the next attempt, so a worker
-/// restart heals without router intervention.
+/// transport error and re-dialled on the next attempt — but only after
+/// the replica's jittered dial backoff elapses, so a dead worker costs
+/// a bounded number of dials, not one per request.
 struct Replica {
     addr: String,
     conn: Option<NetClient>,
     /// `worker_ns{worker=<addr>}` — full scatter round-trip latency.
     hist: Arc<LatencyHistogram>,
+    /// `replica_healthy{worker=<addr>}` — 1 per successful probe,
+    /// 0 per failure (p50 tracks state; sum/count = success ratio).
+    health: Arc<LatencyHistogram>,
+    breaker: CircuitBreaker,
+    /// Consecutive dial failures (drives the backoff exponent).
+    dial_failures: u32,
+    /// No re-dial before this instant.
+    next_dial: Option<Instant>,
 }
 
 enum Attempt {
@@ -85,6 +307,9 @@ enum Attempt {
     Fatal(WireError),
     /// Worth trying the next replica of this shard.
     Transient(WireError),
+    /// Not attempted at all (breaker open / dial backoff): advance to
+    /// the next replica without counting a worker failure.
+    Skipped(WireError),
 }
 
 /// Router-side handle to one model served by a fixed shard topology.
@@ -93,16 +318,24 @@ pub struct ShardGroup {
     key: String,
     classes: usize,
     ranges: Vec<(u32, u32)>,
-    shards: Vec<Vec<Mutex<Replica>>>,
+    shards: Vec<Vec<Arc<Mutex<Replica>>>>,
     /// Scatters take this shared; a rolling swap takes it exclusive so
     /// no request can observe half-swapped workers.
     swap_lock: RwLock<()>,
     /// Set when a rolling swap aborts partway: workers may disagree on
     /// the artifact, so infers answer `unavailable` until a swap
-    /// completes end-to-end.
+    /// completes end-to-end (or the supervisor's retry succeeds).
     degraded: AtomicBool,
+    /// Name of the last requested rolling swap, so a degraded group's
+    /// supervisor can retry it without operator action.
+    last_swap: Mutex<Option<String>>,
+    /// Total TCP dials attempted (probe + scatter + swap paths);
+    /// observable so tests can pin the connect-storm fix. Arc'd so
+    /// detached scatter-attempt threads can hold it past the request.
+    dials: Arc<AtomicU64>,
     metrics: Arc<Metrics>,
     opts: ClientOptions,
+    sup: SupervisorOptions,
 }
 
 impl ShardGroup {
@@ -117,8 +350,21 @@ impl ShardGroup {
         opts: ClientOptions,
         metrics: Arc<Metrics>,
     ) -> Result<ShardGroup> {
+        Self::connect_with(spec, key, opts, SupervisorOptions::default(), metrics)
+    }
+
+    /// [`ShardGroup::connect`] with explicit supervision knobs
+    /// (breaker thresholds, hedge policy, dial backoff, probe
+    /// interval) — the `--router` CLI path.
+    pub fn connect_with(
+        spec: &str,
+        key: &str,
+        opts: ClientOptions,
+        sup: SupervisorOptions,
+        metrics: Arc<Metrics>,
+    ) -> Result<ShardGroup> {
         let groups = parse_workers(spec)?;
-        let mut shards: Vec<Vec<Mutex<Replica>>> = Vec::with_capacity(groups.len());
+        let mut shards: Vec<Vec<Arc<Mutex<Replica>>>> = Vec::with_capacity(groups.len());
         let mut classes: Option<usize> = None;
         for (si, addrs) in groups.iter().enumerate() {
             let mut replicas: Vec<Replica> = addrs
@@ -127,6 +373,14 @@ impl ShardGroup {
                     addr: a.clone(),
                     conn: None,
                     hist: metrics.telemetry.worker_histogram(a),
+                    health: metrics.telemetry.replica_health_histogram(a),
+                    breaker: CircuitBreaker::new(
+                        sup.breaker_failures,
+                        sup.breaker_cooldown,
+                        sup.breaker_successes,
+                    ),
+                    dial_failures: 0,
+                    next_dial: None,
                 })
                 .collect();
             let c = probe_shard(&mut replicas, key, &opts).map_err(|e| {
@@ -146,7 +400,7 @@ impl ShardGroup {
                 }
                 Some(_) => {}
             }
-            shards.push(replicas.into_iter().map(Mutex::new).collect());
+            shards.push(replicas.into_iter().map(|r| Arc::new(Mutex::new(r))).collect());
         }
         let classes = classes.unwrap_or(0);
         if classes == 0 {
@@ -169,9 +423,19 @@ impl ShardGroup {
             shards,
             swap_lock: RwLock::new(()),
             degraded: AtomicBool::new(false),
+            last_swap: Mutex::new(None),
+            dials: Arc::new(AtomicU64::new(0)),
             metrics,
             opts,
+            sup,
         })
+    }
+
+    /// Total TCP dials attempted so far (tests pin the connect-storm
+    /// fix: a dead replica must cost a bounded number of dials, not
+    /// one per request).
+    pub fn dial_attempts(&self) -> u64 {
+        self.dials.load(Ordering::Relaxed)
     }
 
     /// Output width discovered from the workers at connect time.
@@ -227,40 +491,172 @@ impl ShardGroup {
             .map_err(|e| WireError::new(ErrorCode::Internal, e.to_string()))
     }
 
-    /// Try each replica of one shard in order until a `PARTIAL` lands.
+    /// The hedge cut for one shard: how long the primary's partial may
+    /// stay outstanding before the same scatter fires at the next
+    /// replica. `None` disables hedging (single replica, explicit
+    /// `--hedge-ms 0`, or a cold adaptive series).
+    fn hedge_delay(&self, replicas: &[Arc<Mutex<Replica>>]) -> Option<Duration> {
+        if replicas.len() < 2 {
+            return None;
+        }
+        match self.sup.hedge {
+            HedgePolicy::Disabled => None,
+            HedgePolicy::Fixed(d) if d.is_zero() => None,
+            HedgePolicy::Fixed(d) => Some(d),
+            HedgePolicy::Adaptive => {
+                let hist = {
+                    let r = replicas[0].lock().unwrap_or_else(|p| p.into_inner());
+                    Arc::clone(&r.hist)
+                };
+                let snap = hist.snapshot();
+                if snap.count < 32 {
+                    return None;
+                }
+                let p95 = snap.quantile(0.95);
+                Some(
+                    Duration::from_nanos(p95)
+                        .max(Duration::from_millis(1))
+                        .min(Duration::from_secs(1)),
+                )
+            }
+        }
+    }
+
+    /// Serve one shard: launch the first admissible replica, hedge to
+    /// the next after [`ShardGroup::hedge_delay`] if the partial is
+    /// still outstanding, take whichever `PARTIAL` lands first, and
+    /// fail over sequentially past transient errors. Replicas are
+    /// byte-identical, so the winner cannot change the gathered
+    /// logits. Breaker-open and backoff-window replicas are skipped
+    /// without dialing (and without inflating `net_worker_failures`).
     fn scatter_one(
         &self,
         shard_idx: usize,
-        replicas: &[Mutex<Replica>],
+        replicas: &[Arc<Mutex<Replica>>],
         col_start: u32,
         col_end: u32,
         batch: &RowBatch,
         deadline: Option<Instant>,
     ) -> std::result::Result<RowBatch, WireError> {
+        type Outcome = (usize, std::result::Result<RowBatch, Attempt>);
+        let n = replicas.len();
+        let hedge_after = self.hedge_delay(replicas);
+        let (tx, rx) = mpsc::channel::<Outcome>();
+        // Attempts run on detached threads so a stalled replica cannot
+        // pin the request: the first PARTIAL wins, losers finish into
+        // a dropped receiver. Each thread owns clones of everything it
+        // touches (the replica cell is Arc'd), so no borrow outlives
+        // this call.
+        let spawn_attempt = |idx: usize, is_primary: bool| {
+            let cell = Arc::clone(&replicas[idx]);
+            let key = self.key.clone();
+            let opts = self.opts;
+            let sup = self.sup;
+            let metrics = Arc::clone(&self.metrics);
+            let dials = Arc::clone(&self.dials);
+            let batch = batch.clone();
+            let txc = tx.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("lrbi-scatter-{shard_idx}-{idx}"))
+                .spawn(move || {
+                    let out = attempt_scatter(
+                        &cell, &key, &opts, &sup, &metrics, &dials, col_start, col_end,
+                        &batch, deadline, is_primary,
+                    );
+                    let _ = txc.send((idx, out));
+                });
+            if spawned.is_err() {
+                // Thread exhaustion: report a transient failure so the
+                // orchestrator advances instead of waiting forever.
+                let _ = tx.send((
+                    idx,
+                    Err(Attempt::Transient(WireError::new(
+                        ErrorCode::Internal,
+                        "cannot spawn a scatter attempt thread",
+                    ))),
+                ));
+            }
+        };
+        let forever = Duration::from_secs(86_400);
+        let mut next = 0usize;
+        let mut in_flight = 0usize;
+        let mut hedged = false;
+        let mut hedge_idx: Option<usize> = None;
         let mut last: Option<WireError> = None;
-        for (ri, cell) in replicas.iter().enumerate() {
-            let mut r = cell.lock().unwrap_or_else(|p| p.into_inner());
-            match self.try_replica(&mut r, col_start, col_end, batch, deadline) {
-                Ok(part) => return Ok(part),
-                Err(Attempt::Fatal(e)) => return Err(e),
-                Err(Attempt::Transient(e)) => {
-                    self.metrics
-                        .net_worker_failures
-                        .fetch_add(1, Ordering::Relaxed);
-                    if ri + 1 < replicas.len() {
-                        self.metrics
-                            .net_worker_failovers
-                            .fetch_add(1, Ordering::Relaxed);
-                        crate::lrbi_log!(
-                            Level::Warn,
-                            "shard {shard_idx} replica {} failed ({}); failing over \
-                             to the next replica",
-                            r.addr,
-                            e.message
-                        );
-                    }
-                    last = Some(e);
+        spawn_attempt(next, true);
+        next += 1;
+        in_flight += 1;
+        loop {
+            let mut wait =
+                if !hedged && next < n { hedge_after.unwrap_or(forever) } else { forever };
+            if let Some(d) = deadline {
+                let now = Instant::now();
+                if d <= now {
+                    return Err(WireError::new(
+                        ErrorCode::DeadlineExceeded,
+                        format!(
+                            "scatter budget exhausted awaiting shard {shard_idx} \
+                             (columns {col_start}..{col_end})"
+                        ),
+                    ));
                 }
+                wait = wait.min(d - now);
+            }
+            match rx.recv_timeout(wait) {
+                Ok((idx, Ok(part))) => {
+                    if hedge_idx == Some(idx) {
+                        self.metrics.net_hedges_won.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Ok(part);
+                }
+                Ok((_idx, Err(att))) => {
+                    in_flight -= 1;
+                    match att {
+                        Attempt::Fatal(e) => return Err(e),
+                        Attempt::Transient(e) => {
+                            self.metrics.net_worker_failures.fetch_add(1, Ordering::Relaxed);
+                            if in_flight > 0 || next < n {
+                                self.metrics
+                                    .net_worker_failovers
+                                    .fetch_add(1, Ordering::Relaxed);
+                                crate::lrbi_log!(
+                                    Level::Warn,
+                                    "shard {shard_idx} replica failed ({}); failing over \
+                                     to the next replica",
+                                    e.message
+                                );
+                            }
+                            last = Some(e);
+                        }
+                        Attempt::Skipped(e) => last = Some(e),
+                    }
+                    if in_flight == 0 {
+                        if next < n {
+                            spawn_attempt(next, false);
+                            next += 1;
+                            in_flight += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if !hedged && next < n && in_flight > 0 {
+                        // The primary's partial is still outstanding
+                        // past the hedge cut: race the next replica.
+                        hedged = true;
+                        hedge_idx = Some(next);
+                        self.metrics.net_hedges_fired.fetch_add(1, Ordering::Relaxed);
+                        spawn_attempt(next, false);
+                        next += 1;
+                        in_flight += 1;
+                    } else if in_flight == 0 {
+                        break;
+                    }
+                    // else: deadline-capped wait expired with work in
+                    // flight; the loop re-checks the deadline above.
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
         self.metrics
@@ -278,109 +674,101 @@ impl ShardGroup {
         ))
     }
 
-    /// One scatter attempt against one replica. Drops the connection on
-    /// any transport or protocol surprise so the next attempt re-dials.
-    fn try_replica(
-        &self,
-        r: &mut Replica,
-        col_start: u32,
-        col_end: u32,
-        batch: &RowBatch,
-        deadline: Option<Instant>,
-    ) -> std::result::Result<RowBatch, Attempt> {
-        if let Some(action) = fault::fire(FaultPoint::WorkerConnDrop) {
-            fault::stall(&action);
-            r.conn = None;
-            return Err(Attempt::Transient(WireError::new(
-                ErrorCode::Unavailable,
-                format!("injected connection drop to worker {} (fault plan)", r.addr),
-            )));
-        }
-        if r.conn.is_none() {
-            match NetClient::connect_with(r.addr.as_str(), self.opts) {
-                Ok(c) => r.conn = Some(c),
-                Err(e) => {
-                    return Err(Attempt::Transient(WireError::new(
-                        ErrorCode::Unavailable,
-                        format!("cannot reach worker {}: {e}", r.addr),
-                    )));
-                }
-            }
-        }
-        let deadline_us = deadline.map(|d| {
-            let now = Instant::now();
-            if d > now {
-                (d - now).as_micros().min(u64::MAX as u128) as u64
-            } else {
-                0
-            }
-        });
-        self.metrics
-            .net_worker_requests
-            .fetch_add(1, Ordering::Relaxed);
-        let started = Instant::now();
-        let reply = r.conn.as_mut().expect("connected above").call(&Frame::Scatter {
-            key: self.key.clone(),
-            col_start,
-            col_end,
-            batch: batch.clone(),
-            deadline_us,
-        });
-        match reply {
-            Ok(Frame::Partial {
-                col_start: got_s,
-                col_end: got_e,
-                batch: part,
-            }) => {
-                if got_s != col_start || got_e != col_end || part.rows() != batch.rows() {
-                    r.conn = None;
-                    return Err(Attempt::Transient(WireError::new(
-                        ErrorCode::Internal,
-                        format!(
-                            "worker {} answered columns {got_s}..{got_e} ({} rows) to a \
-                             scatter for {col_start}..{col_end} ({} rows)",
-                            r.addr,
-                            part.rows(),
-                            batch.rows()
-                        ),
-                    )));
-                }
-                r.hist.record_since(started);
-                Ok(part)
-            }
-            Ok(Frame::Error { code, message }) => {
-                let tagged = WireError::new(code, format!("worker {}: {message}", r.addr));
-                match code {
-                    // The request itself is wrong (or out of time) — any
-                    // replica would refuse it identically.
-                    ErrorCode::BadShape
-                    | ErrorCode::UnknownModel
-                    | ErrorCode::DeadlineExceeded
-                    | ErrorCode::BadFrame
-                    | ErrorCode::BadVersion
-                    | ErrorCode::TooLarge => Err(Attempt::Fatal(tagged)),
-                    // Overloaded / Internal / ShuttingDown / Unavailable:
-                    // this replica is struggling, another may not be.
-                    _ => Err(Attempt::Transient(tagged)),
-                }
-            }
-            Ok(other) => {
-                r.conn = None;
-                Err(Attempt::Transient(WireError::new(
-                    ErrorCode::Internal,
-                    format!(
-                        "worker {} answered a scatter with an unexpected {} frame",
-                        r.addr,
-                        other.type_name()
+    /// One supervision pass: retry a degraded group's swap, then
+    /// health-probe every replica (dedicated `PING` frames — probes
+    /// never touch `net_requests` or any request latency series).
+    /// Public so tests can drive supervision deterministically without
+    /// the background thread; [`start_supervisor`] calls it on a
+    /// jittered interval.
+    pub fn supervise_tick(&self) {
+        if self.degraded.load(Ordering::SeqCst) {
+            let pending =
+                self.last_swap.lock().unwrap_or_else(|p| p.into_inner()).clone();
+            if let Some(name) = pending {
+                match self.rolling_swap(&name) {
+                    Ok(msg) => {
+                        crate::lrbi_log!(Level::Info, "supervisor retried swap: {msg}")
+                    }
+                    Err(e) => crate::lrbi_log!(
+                        Level::Warn,
+                        "supervisor swap retry failed (still degraded): {e}"
                     ),
-                )))
+                }
             }
-            Err(e) => {
+        }
+        for replicas in &self.shards {
+            for cell in replicas {
+                let mut r = cell.lock().unwrap_or_else(|p| p.into_inner());
+                self.probe_replica(&mut r);
+            }
+        }
+    }
+
+    /// Health-probe one replica and feed its breaker. A quarantined
+    /// replica (breaker not closed) rejoins only after
+    /// `breaker_successes` consecutive probe successes *plus* the
+    /// artifact re-probe: `PONG` proves liveness, but only
+    /// class-agreement proves the worker did not sleep through a
+    /// rolling swap. Each rejoin is counted in `net_reintegrations`.
+    fn probe_replica(&self, r: &mut Replica) {
+        let m = &*self.metrics;
+        m.net_health_probes.fetch_add(1, Ordering::Relaxed);
+        let now = Instant::now();
+        let mut ok = false;
+        if fault::fire(FaultPoint::HealthProbeFail).is_none() {
+            if ensure_conn(r, &self.opts, &self.sup, &self.dials).is_ok() {
+                match r.conn.as_mut().expect("connected above").ping() {
+                    Ok(()) => ok = true,
+                    Err(_) => r.conn = None,
+                }
+            }
+        }
+        r.health.record(u64::from(ok));
+        if !ok {
+            r.breaker.record_failure(now, m);
+            return;
+        }
+        let _ = r.breaker.admit(now, m);
+        if r.breaker.pending_close() {
+            let agreed = self.reprobe_classes(r);
+            if agreed == Some(self.classes) {
+                if r.breaker.record_success(true, m) {
+                    m.net_reintegrations.fetch_add(1, Ordering::Relaxed);
+                    crate::lrbi_log!(
+                        Level::Info,
+                        "worker {} reintegrated: consecutive health checks and the \
+                         artifact re-probe all passed",
+                        r.addr
+                    );
+                }
+            } else {
+                crate::lrbi_log!(
+                    Level::Warn,
+                    "worker {} answers PING but fails the artifact re-probe \
+                     ({agreed:?} columns vs {} expected) — likely serving stale \
+                     bytes; kept quarantined",
+                    r.addr,
+                    self.classes
+                );
+                r.breaker.record_failure(now, m);
                 r.conn = None;
-                Err(Attempt::Transient(WireError::new(
-                    ErrorCode::Unavailable,
-                    format!("worker {} transport error: {e}", r.addr),
-                )))
+            }
+        } else {
+            let _ = r.breaker.record_success(false, m);
+        }
+    }
+
+    /// The class-agreement re-probe: an empty `INFER` echoing the
+    /// worker's output width (the same probe `connect` used). `None`
+    /// means the probe itself failed.
+    fn reprobe_classes(&self, r: &mut Replica) -> Option<usize> {
+        let conn = r.conn.as_mut()?;
+        let empty = RowBatch::new(0, 0, Vec::new()).ok()?;
+        match conn.infer(&self.key, empty) {
+            Ok(logits) => Some(logits.cols()),
+            Err(_) => {
+                r.conn = None;
+                None
             }
         }
     }
@@ -392,6 +780,9 @@ impl ShardGroup {
     /// later swap that completes end-to-end clears the degradation.
     pub fn rolling_swap(&self, name: &str) -> Result<String> {
         let _excl = self.swap_lock.write().unwrap_or_else(|p| p.into_inner());
+        // Remember the requested swap so a degraded group's supervisor
+        // can retry it without operator action.
+        *self.last_swap.lock().unwrap_or_else(|p| p.into_inner()) = Some(name.to_string());
         let mut stepped = 0usize;
         for replicas in &self.shards {
             for cell in replicas {
@@ -435,7 +826,19 @@ impl ShardGroup {
 
     fn swap_replica(&self, r: &mut Replica, name: &str) -> Result<String> {
         if r.conn.is_none() {
-            r.conn = Some(NetClient::connect_with(r.addr.as_str(), self.opts)?);
+            // A swap is an explicit (operator or supervisor) action:
+            // dial regardless of the lazy-path backoff window, but
+            // still count the attempt and reset the schedule on
+            // success.
+            self.dials.fetch_add(1, Ordering::Relaxed);
+            match NetClient::connect_with(r.addr.as_str(), self.opts) {
+                Ok(c) => {
+                    r.conn = Some(c);
+                    r.dial_failures = 0;
+                    r.next_dial = None;
+                }
+                Err(e) => return Err(e),
+            }
         }
         match r.conn.as_mut().expect("connected above").swap(name) {
             Ok(msg) => Ok(msg),
@@ -445,6 +848,289 @@ impl ShardGroup {
             }
         }
     }
+}
+
+/// One scatter attempt against one replica, run on its own thread so
+/// the orchestrator can hedge past a stall. Consults the breaker and
+/// the dial-backoff window before paying any network cost; feeds the
+/// breaker with the outcome. Drops the connection on any transport or
+/// protocol surprise so the next attempt re-dials.
+#[allow(clippy::too_many_arguments)]
+fn attempt_scatter(
+    cell: &Mutex<Replica>,
+    key: &str,
+    opts: &ClientOptions,
+    sup: &SupervisorOptions,
+    metrics: &Metrics,
+    dials: &AtomicU64,
+    col_start: u32,
+    col_end: u32,
+    batch: &RowBatch,
+    deadline: Option<Instant>,
+    is_primary: bool,
+) -> std::result::Result<RowBatch, Attempt> {
+    let mut r = cell.lock().unwrap_or_else(|p| p.into_inner());
+    // Supervised groups (a health prober exists) never route traffic
+    // at a non-closed replica: reintegration belongs to the
+    // supervisor's probe + artifact re-probe, and a stale worker must
+    // not see a trial scatter it could answer with foreign bytes. An
+    // unsupervised group has no prober, so the serving path itself
+    // walks the half-open trial.
+    let admitted = if sup.health_interval.is_zero() {
+        r.breaker.admit(Instant::now(), metrics)
+    } else {
+        r.breaker.state() == BreakerState::Closed
+    };
+    if !admitted {
+        return Err(Attempt::Skipped(WireError::new(
+            ErrorCode::Unavailable,
+            format!("worker {}: circuit open, skipped without dialing", r.addr),
+        )));
+    }
+    if is_primary {
+        // Router-side hedge exercise point: stalls only the primary
+        // attempt, so a hedge deterministically fires and wins.
+        if let Some(action) = fault::fire(FaultPoint::HedgeStall) {
+            fault::stall(&action);
+        }
+    }
+    if let Some(action) = fault::fire(FaultPoint::WorkerConnDrop) {
+        fault::stall(&action);
+        r.conn = None;
+        r.breaker.record_failure(Instant::now(), metrics);
+        return Err(Attempt::Transient(WireError::new(
+            ErrorCode::Unavailable,
+            format!("injected connection drop to worker {} (fault plan)", r.addr),
+        )));
+    }
+    match ensure_conn(&mut r, opts, sup, dials) {
+        Ok(()) => {}
+        Err(att) => {
+            if matches!(att, Attempt::Transient(_)) {
+                r.breaker.record_failure(Instant::now(), metrics);
+            }
+            return Err(att);
+        }
+    }
+    let deadline_us = deadline.map(|d| {
+        let now = Instant::now();
+        if d > now {
+            (d - now).as_micros().min(u64::MAX as u128) as u64
+        } else {
+            0
+        }
+    });
+    metrics.net_worker_requests.fetch_add(1, Ordering::Relaxed);
+    let started = Instant::now();
+    let reply = r.conn.as_mut().expect("connected above").call(&Frame::Scatter {
+        key: key.to_string(),
+        col_start,
+        col_end,
+        batch: batch.clone(),
+        deadline_us,
+    });
+    match reply {
+        Ok(Frame::Partial {
+            col_start: got_s,
+            col_end: got_e,
+            batch: part,
+        }) => {
+            if got_s != col_start || got_e != col_end || part.rows() != batch.rows() {
+                r.conn = None;
+                r.breaker.record_failure(Instant::now(), metrics);
+                return Err(Attempt::Transient(WireError::new(
+                    ErrorCode::Internal,
+                    format!(
+                        "worker {} answered columns {got_s}..{got_e} ({} rows) to a \
+                         scatter for {col_start}..{col_end} ({} rows)",
+                        r.addr,
+                        part.rows(),
+                        batch.rows()
+                    ),
+                )));
+            }
+            r.hist.record_since(started);
+            // Serving successes reset the closed breaker's failure run
+            // but never close a half-open one: reintegration stays
+            // gated on the supervisor's artifact re-probe.
+            let _ = r.breaker.record_success(false, metrics);
+            Ok(part)
+        }
+        Ok(Frame::Error { code, message }) => {
+            let tagged = WireError::new(code, format!("worker {}: {message}", r.addr));
+            match code {
+                // The request itself is wrong (or out of time) — any
+                // replica would refuse it identically. Not the
+                // replica's fault: the breaker is untouched.
+                ErrorCode::BadShape
+                | ErrorCode::UnknownModel
+                | ErrorCode::DeadlineExceeded
+                | ErrorCode::BadFrame
+                | ErrorCode::BadVersion
+                | ErrorCode::TooLarge => Err(Attempt::Fatal(tagged)),
+                // Overloaded / Internal / ShuttingDown / Unavailable:
+                // this replica is struggling, another may not be.
+                _ => {
+                    r.breaker.record_failure(Instant::now(), metrics);
+                    Err(Attempt::Transient(tagged))
+                }
+            }
+        }
+        Ok(other) => {
+            r.conn = None;
+            r.breaker.record_failure(Instant::now(), metrics);
+            Err(Attempt::Transient(WireError::new(
+                ErrorCode::Internal,
+                format!(
+                    "worker {} answered a scatter with an unexpected {} frame",
+                    r.addr,
+                    other.type_name()
+                ),
+            )))
+        }
+        Err(e) => {
+            r.conn = None;
+            r.breaker.record_failure(Instant::now(), metrics);
+            Err(Attempt::Transient(WireError::new(
+                ErrorCode::Unavailable,
+                format!("worker {} transport error: {e}", r.addr),
+            )))
+        }
+    }
+}
+
+/// Lazily (re)connect a replica, honoring its jittered dial-backoff
+/// window: inside the window the attempt is [`Attempt::Skipped`]
+/// (no dial, no failure counted); a failed dial schedules the next one
+/// with the capped equal-jitter exponential from [`RetryPolicy`].
+/// Breaker-free — callers decide whether a skip or failure feeds it.
+fn ensure_conn(
+    r: &mut Replica,
+    opts: &ClientOptions,
+    sup: &SupervisorOptions,
+    dials: &AtomicU64,
+) -> std::result::Result<(), Attempt> {
+    if r.conn.is_some() {
+        return Ok(());
+    }
+    let now = Instant::now();
+    if let Some(at) = r.next_dial {
+        if now < at {
+            return Err(Attempt::Skipped(WireError::new(
+                ErrorCode::Unavailable,
+                format!(
+                    "worker {} in dial backoff for another {}ms",
+                    r.addr,
+                    at.saturating_duration_since(now).as_millis()
+                ),
+            )));
+        }
+    }
+    dials.fetch_add(1, Ordering::Relaxed);
+    match NetClient::connect_with(r.addr.as_str(), *opts) {
+        Ok(c) => {
+            r.conn = Some(c);
+            r.dial_failures = 0;
+            r.next_dial = None;
+            Ok(())
+        }
+        Err(e) => {
+            // Deterministic jitter, decorrelated across replicas by
+            // hashing the address into the seed.
+            let mut rng =
+                Rng::new(sup.dial_backoff.seed ^ addr_seed(&r.addr) ^ u64::from(r.dial_failures));
+            let backoff =
+                backoff_with_jitter(&sup.dial_backoff, r.dial_failures.min(16), &mut rng);
+            r.dial_failures = r.dial_failures.saturating_add(1);
+            r.next_dial = Some(now + backoff);
+            Err(Attempt::Transient(WireError::new(
+                ErrorCode::Unavailable,
+                format!("cannot reach worker {}: {e}; next dial in {backoff:?}", r.addr),
+            )))
+        }
+    }
+}
+
+/// FNV-1a hash of a worker address (dial-jitter decorrelation).
+fn addr_seed(addr: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in addr.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// Handle to a running supervisor thread; stopping (or dropping) it
+/// signals the thread and joins it. The thread holds only a `Weak` to
+/// the group, so an abandoned group shuts its supervisor down too.
+pub struct SupervisorHandle {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl SupervisorHandle {
+    /// Signal the prober loop and wait for it to exit.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SupervisorHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Start the background supervisor for `group`: every jittered
+/// `health_interval` (uniform in `[interval/2, interval]`, seeded, so
+/// a fleet of routers never probes in lockstep) it runs one
+/// [`ShardGroup::supervise_tick`] — health probes, breaker
+/// transitions, reintegration re-probes, and degraded-swap retries. A
+/// `ZERO` interval disables supervision: the handle is inert and no
+/// thread is spawned.
+pub fn start_supervisor(group: &Arc<ShardGroup>) -> SupervisorHandle {
+    let stop = Arc::new(AtomicBool::new(false));
+    let interval = group.sup.health_interval;
+    if interval.is_zero() {
+        return SupervisorHandle { stop, handle: None };
+    }
+    let seed = group.sup.seed;
+    let weak: Weak<ShardGroup> = Arc::downgrade(group);
+    let stop2 = Arc::clone(&stop);
+    let handle = std::thread::Builder::new()
+        .name("lrbi-supervisor".into())
+        .spawn(move || {
+            let mut rng = Rng::new(seed ^ 0x5EED_5EED);
+            while !stop2.load(Ordering::SeqCst) {
+                // Jittered sleep in short slices so stop() never waits
+                // a whole interval.
+                let half_ns = (interval.as_nanos() / 2).min(u64::MAX as u128) as u64;
+                let sleep = Duration::from_nanos(half_ns + rng.next_range(half_ns + 1));
+                let start = Instant::now();
+                while start.elapsed() < sleep && !stop2.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(
+                        10.min((sleep - start.elapsed().min(sleep)).as_millis() as u64).max(1),
+                    ));
+                }
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                match weak.upgrade() {
+                    Some(g) => g.supervise_tick(),
+                    None => break,
+                }
+            }
+        })
+        .ok();
+    SupervisorHandle { stop, handle }
 }
 
 /// Discover a shard's output width: an empty `INFER` (0 rows, 0 cols)
@@ -502,5 +1188,85 @@ mod tests {
         assert!(parse_workers("a:1,,b:2").is_err());
         assert!(parse_workers("|").is_err());
         assert!(parse_workers(" , ").is_err());
+    }
+
+    /// The full breaker lifecycle under an injected clock: every
+    /// `Instant` below derives from one origin, so the transitions are
+    /// deterministic regardless of scheduler noise.
+    #[test]
+    fn breaker_walks_closed_open_half_open_closed() {
+        let m = Metrics::new();
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut b = CircuitBreaker::new(3, Duration::from_millis(100), 2);
+        assert_eq!(b.state(), BreakerState::Closed);
+        // Two failures stay closed; an interleaved success resets the run.
+        b.record_failure(at(0), &m);
+        b.record_failure(at(1), &m);
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(!b.record_success(false, &m));
+        b.record_failure(at(2), &m);
+        b.record_failure(at(3), &m);
+        assert_eq!(b.state(), BreakerState::Closed, "success reset the failure run");
+        // The third consecutive failure opens.
+        b.record_failure(at(4), &m);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(m.snapshot().net_breaker_opens, 1);
+        // Inside the cooldown nothing is admitted (no dial, no timeout).
+        assert!(!b.admit(at(50), &m));
+        assert_eq!(b.state(), BreakerState::Open);
+        // Cooldown elapsed: the next admit half-opens and admits the trial.
+        assert!(b.admit(at(104), &m));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert_eq!(m.snapshot().net_breaker_half_opens, 1);
+        // First gated success is not enough (close_after = 2)…
+        assert!(!b.pending_close());
+        assert!(!b.record_success(true, &m));
+        // …the second closes, and the counters carry the floor.
+        assert!(b.pending_close());
+        assert!(b.record_success(true, &m));
+        assert_eq!(b.state(), BreakerState::Closed);
+        let snap = m.snapshot();
+        assert_eq!(
+            (snap.net_breaker_opens, snap.net_breaker_half_opens, snap.net_breaker_closes),
+            (1, 1, 1)
+        );
+    }
+
+    /// A failed half-open trial re-opens immediately, and ungated
+    /// successes (the scatter path) can never close the breaker — the
+    /// supervisor's artifact re-probe owns reintegration.
+    #[test]
+    fn breaker_reopens_on_trial_failure_and_gates_closing() {
+        let m = Metrics::new();
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut b = CircuitBreaker::new(1, Duration::from_millis(10), 2);
+        b.record_failure(at(0), &m);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(b.admit(at(20), &m));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.record_failure(at(21), &m);
+        assert_eq!(b.state(), BreakerState::Open, "failed trial re-opens");
+        assert!(!b.admit(at(25), &m), "cooldown restarted from the re-open");
+        assert!(b.admit(at(35), &m));
+        // Ungated successes saturate short of closing, forever.
+        for _ in 0..10 {
+            assert!(!b.record_success(false, &m));
+        }
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(b.pending_close(), "saturated one short: next gated success closes");
+        assert!(b.record_success(true, &m));
+        assert_eq!(b.state(), BreakerState::Closed);
+        let snap = m.snapshot();
+        assert_eq!(snap.net_breaker_opens, 2);
+        assert_eq!(snap.net_breaker_half_opens, 2);
+        assert_eq!(snap.net_breaker_closes, 1);
+    }
+
+    #[test]
+    fn addr_seed_decorrelates_and_is_stable() {
+        assert_eq!(addr_seed("a:1"), addr_seed("a:1"));
+        assert_ne!(addr_seed("a:1"), addr_seed("a:2"));
     }
 }

@@ -1022,6 +1022,13 @@ fn handle_conn(
                     }
                 }
             }
+            // Liveness probe (router supervisor, docs/CLUSTER.md):
+            // answered inline without touching the hub, so probes
+            // never inflate `net_requests` or any latency series. A
+            // pre-PING server falls through to the catch-all below and
+            // answers `bad-frame` — which a prober may still read as
+            // "alive, but old".
+            Frame::Ping => Frame::Pong,
             Frame::Swap { key } => match hub.swap(&key) {
                 Ok(message) => Frame::Ok { message },
                 Err(e) => Frame::error(ErrorCode::Internal, e),
@@ -1147,7 +1154,7 @@ fn transient_io(kind: std::io::ErrorKind) -> bool {
 /// Backoff before retry `attempt`: `base * 2^attempt` capped at
 /// `max_backoff`, equal-jittered into `[cap/2, cap]` so synchronized
 /// clients do not re-stampede the server on the same tick.
-fn backoff_with_jitter(
+pub(crate) fn backoff_with_jitter(
     policy: &RetryPolicy,
     attempt: u32,
     rng: &mut crate::util::rng::Rng,
@@ -1335,6 +1342,17 @@ impl NetClient {
         let reply = self.call(&Frame::Stats2Request)?;
         expect_reply(reply, "STATS2", |frame| match frame {
             Frame::Stats2 { counters, histograms } => Ok((counters, histograms)),
+            other => Err(other),
+        })
+    }
+
+    /// Liveness probe: send `PING`, expect `PONG`. Deliberately does
+    /// not retry — the caller (the router's supervisor) owns the
+    /// failure policy, and a probe that needs retries *is* the signal.
+    pub fn ping(&mut self) -> Result<()> {
+        let reply = self.call(&Frame::Ping)?;
+        expect_reply(reply, "PONG", |frame| match frame {
+            Frame::Pong => Ok(()),
             other => Err(other),
         })
     }

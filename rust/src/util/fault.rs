@@ -87,10 +87,18 @@ pub enum FaultPoint {
     /// swap (the swap aborts typed and the shard group degrades —
     /// never mixed-artifact logits).
     WorkerSwapFail = 11,
+    /// Router-side: fail a supervisor health probe against a replica
+    /// (the PING is never sent; the probe counts as a failure, so the
+    /// circuit breaker opens after enough consecutive hits).
+    HealthProbeFail = 12,
+    /// Router-side: stall the primary replica's scatter attempt just
+    /// before it is sent, so a hedged scatter fires at the next
+    /// healthy replica and wins.
+    HedgeStall = 13,
 }
 
 /// Number of injection points (sizes the per-point hit counters).
-const POINTS: usize = 12;
+const POINTS: usize = 14;
 
 impl FaultPoint {
     /// Every point, in discriminant order.
@@ -107,6 +115,8 @@ impl FaultPoint {
         FaultPoint::WorkerConnDrop,
         FaultPoint::PartialStall,
         FaultPoint::WorkerSwapFail,
+        FaultPoint::HealthProbeFail,
+        FaultPoint::HedgeStall,
     ];
 
     /// Stable plan-grammar name.
@@ -124,6 +134,8 @@ impl FaultPoint {
             FaultPoint::WorkerConnDrop => "worker_conn_drop",
             FaultPoint::PartialStall => "partial_stall",
             FaultPoint::WorkerSwapFail => "worker_swap_fail",
+            FaultPoint::HealthProbeFail => "health_probe_fail",
+            FaultPoint::HedgeStall => "hedge_stall",
         }
     }
 

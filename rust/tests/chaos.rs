@@ -24,7 +24,7 @@ use lrbi::util::error::{Error, Result};
 use lrbi::util::fault::{self, FaultPlan};
 use lrbi::util::rng::Rng;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 // ---------------------------------------------------------------- helpers
 
@@ -644,4 +644,356 @@ fn worker_swap_fail_degrades_until_a_later_swap_succeeds() {
     for dir in dirs {
         let _ = std::fs::remove_dir_all(&dir);
     }
+}
+
+// --------------------------------------------------- supervision (ISSUE 10)
+
+use lrbi::serve::router::{HedgePolicy, ShardGroup, SupervisorOptions};
+
+/// Worker bound to an *exact* address — a crashed worker restarting on
+/// its old port, which the supervisor must reintegrate (or, serving
+/// stale bytes, refuse to).
+fn start_server_at(
+    addr: std::net::SocketAddr,
+    artifact: &Artifact,
+    metrics: Arc<Metrics>,
+) -> Running {
+    let hub = ModelHub::from_artifact(
+        "m",
+        artifact,
+        BatchPolicy::default(),
+        64,
+        metrics,
+        ExecCtx::single(),
+    )
+    .unwrap();
+    let server = Server::bind(addr, Arc::new(hub), &ServeOptions::default()).unwrap();
+    let local = server.local_addr();
+    let handle = server.handle();
+    let runner = std::thread::spawn(move || server.run());
+    (local, handle, runner)
+}
+
+/// Router whose `ShardGroup` stays reachable, so tests can drive
+/// `supervise_tick()` deterministically instead of racing a
+/// background prober thread.
+fn start_router_sup(
+    spec: &str,
+    copts: ClientOptions,
+    sup: SupervisorOptions,
+    metrics: Arc<Metrics>,
+) -> (Running, Arc<ShardGroup>) {
+    let group =
+        Arc::new(ShardGroup::connect_with(spec, "m", copts, sup, metrics).unwrap());
+    let hub = ModelHub::from_remote("m", Arc::clone(&group));
+    let server = Server::bind("127.0.0.1:0", Arc::new(hub), &ServeOptions::default()).unwrap();
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let runner = std::thread::spawn(move || server.run());
+    ((addr, handle, runner), group)
+}
+
+/// Supervision knobs scaled for a test: a nonzero (but never-firing)
+/// health interval marks the group *supervised* — the scatter path
+/// skips non-closed replicas and leaves reintegration to the ticks
+/// the test drives by hand.
+fn fast_sup() -> SupervisorOptions {
+    SupervisorOptions {
+        health_interval: Duration::from_secs(3600),
+        hedge: HedgePolicy::Disabled,
+        breaker_failures: 2,
+        breaker_cooldown: Duration::from_millis(50),
+        breaker_successes: 2,
+        dial_backoff: RetryPolicy {
+            base_backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_millis(40),
+            ..RetryPolicy::default()
+        },
+        ..SupervisorOptions::default()
+    }
+}
+
+/// A replica stalled mid-PARTIAL past `--hedge-ms`: the hedge fires at
+/// the second replica, its reply wins, and the served logits are
+/// byte-identical to direct inference — workers compute the full
+/// forward pass and `assemble` only copies, so either replica's
+/// PARTIAL is byte-substitutable.
+#[test]
+fn hedged_scatter_rides_out_a_partial_stall_with_identical_bytes() {
+    let _g = fault::test_guard();
+    fault::clear();
+    let artifact = small_artifact(&small_params(220), "dense", 221);
+    let metrics = Arc::new(Metrics::new());
+    let a = start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::single());
+    let b = start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::single());
+    let spec = format!("{}|{}", a.0, b.0);
+    let sup = SupervisorOptions {
+        hedge: HedgePolicy::Fixed(Duration::from_millis(40)),
+        ..fast_sup()
+    };
+    let (router, _group) =
+        start_router_sup(&spec, ClientOptions::default(), sup, Arc::clone(&metrics));
+    let mut client = NetClient::connect(router.0).unwrap();
+    let (row, batch) = one_row_batch(222);
+
+    // Hit 1 = replica A's PARTIAL write, stalled well past the hedge
+    // delay; replica B's (hit 2) is clean and must win the race.
+    fault::install(FaultPlan::parse("partial_stall=1:400").unwrap());
+    let t0 = Instant::now();
+    let got = client.infer("m", batch.clone()).unwrap();
+    assert_eq!(
+        got.row(0),
+        direct_logits(&artifact, &row).as_slice(),
+        "hedged logits must stay byte-identical"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_millis(350),
+        "the hedge answered before the stall cleared ({:?})",
+        t0.elapsed()
+    );
+    let snap = metrics.snapshot();
+    assert!(snap.net_hedges_fired >= 1, "the hedge is counted");
+    assert!(snap.net_hedges_won >= 1, "the hedge win is counted");
+    assert_eq!(snap.net_worker_unavailable, 0, "the request was served");
+    fault::clear();
+
+    // The stalled attempt drains into a dropped channel; once it
+    // finishes, the primary serves cleanly again.
+    std::thread::sleep(Duration::from_millis(400));
+    let got = client.infer("m", batch).unwrap();
+    assert_eq!(got.row(0), direct_logits(&artifact, &row).as_slice());
+    stop(router);
+    stop(a);
+    stop(b);
+}
+
+/// `hedge_stall` — the router-side injection point: the *primary
+/// attempt thread* stalls before writing its SCATTER, so the hedge
+/// timer (not a worker timeout) is what rescues the request.
+#[test]
+fn hedge_stall_on_the_primary_is_won_by_the_second_replica() {
+    let _g = fault::test_guard();
+    fault::clear();
+    let artifact = small_artifact(&small_params(223), "csr", 224);
+    let metrics = Arc::new(Metrics::new());
+    let a = start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::single());
+    let b = start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::single());
+    let spec = format!("{}|{}", a.0, b.0);
+    let sup = SupervisorOptions {
+        hedge: HedgePolicy::Fixed(Duration::from_millis(30)),
+        ..fast_sup()
+    };
+    let (router, _group) =
+        start_router_sup(&spec, ClientOptions::default(), sup, Arc::clone(&metrics));
+    let mut client = NetClient::connect(router.0).unwrap();
+    let (row, batch) = one_row_batch(225);
+
+    let injected_before = fault::injected_total();
+    fault::install(FaultPlan::parse("hedge_stall=1:300").unwrap());
+    let t0 = Instant::now();
+    let got = client.infer("m", batch.clone()).unwrap();
+    assert_eq!(got.row(0), direct_logits(&artifact, &row).as_slice());
+    assert!(
+        t0.elapsed() < Duration::from_millis(250),
+        "the hedge answered while the primary was still stalled ({:?})",
+        t0.elapsed()
+    );
+    assert!(fault::injected_total() > injected_before, "the stall was injected");
+    let snap = metrics.snapshot();
+    assert!(snap.net_hedges_fired >= 1);
+    assert!(snap.net_hedges_won >= 1);
+    fault::clear();
+
+    std::thread::sleep(Duration::from_millis(300));
+    let got = client.infer("m", batch).unwrap();
+    assert_eq!(got.row(0), direct_logits(&artifact, &row).as_slice());
+    stop(router);
+    stop(a);
+    stop(b);
+}
+
+/// Regression for the connect storm: a replica that is *down* must
+/// not be re-dialed on every request. Seeded equal-jitter exponential
+/// backoff gates the re-dials, and the breaker stops them entirely —
+/// 50 requests may cost only a handful of dial attempts.
+#[test]
+fn dead_replica_redials_are_bounded_by_backoff_and_breaker() {
+    let _g = fault::test_guard();
+    fault::clear();
+    let artifact = small_artifact(&small_params(226), "dense", 227);
+    let metrics = Arc::new(Metrics::new());
+    let live = start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::single());
+    // A port that was bound once and released: connecting is refused
+    // immediately, exactly like a crashed worker.
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap()
+    };
+    let spec = format!("{dead}|{}", live.0);
+    let (router, group) =
+        start_router_sup(&spec, ClientOptions::default(), fast_sup(), Arc::clone(&metrics));
+    let mut client = NetClient::connect(router.0).unwrap();
+    let (row, batch) = one_row_batch(228);
+    let reference = direct_logits(&artifact, &row);
+
+    for _ in 0..50 {
+        let got = client.infer("m", batch.clone()).unwrap();
+        assert_eq!(got.row(0), reference.as_slice(), "fail-over stays byte-identical");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let dials = group.dial_attempts();
+    assert!(dials >= 1, "the dead replica was tried at least once");
+    assert!(
+        dials <= 10,
+        "50 requests must not storm the dead replica with dials, got {dials}"
+    );
+    let snap = metrics.snapshot();
+    assert!(snap.net_breaker_opens >= 1, "repeated dial failures open the breaker");
+    assert_eq!(snap.net_worker_unavailable, 0, "every request was served");
+    stop(router);
+    stop(live);
+}
+
+/// A quarantined worker that restarts serving a *stale* artifact
+/// (wrong head width) passes the liveness PING but fails the
+/// artifact re-probe: it must stay quarantined — rejoining would
+/// gather mixed-artifact logits.
+#[test]
+fn stale_worker_fails_the_reintegration_reprobe_and_stays_out() {
+    let _g = fault::test_guard();
+    fault::clear();
+    let params = small_params(230);
+    let art4 = small_artifact(&params, "dense", 231);
+    // Same trunk, 3-class head — the shape a worker left behind by a
+    // fleet-wide swap would serve.
+    let art3 = {
+        let mut rng = Rng::new(232);
+        let params3 = MlpParams {
+            w2: Matrix::gaussian(30, 3, 0.0, 0.5, &mut rng),
+            b2: vec![0.0; 3],
+            ..params.clone()
+        };
+        let ip = BitMatrix::from_fn(20, 4, |_, _| rng.bernoulli(0.3));
+        let iz = BitMatrix::from_fn(4, 30, |_, _| rng.bernoulli(0.3));
+        Artifact::pack_factors(params3, "dense", &ip, &iz, "chaos test").unwrap()
+    };
+    let metrics = Arc::new(Metrics::new());
+    let x = start_server(&art4, Arc::new(Metrics::new()), ExecCtx::single());
+    let y = start_server(&art4, Arc::new(Metrics::new()), ExecCtx::single());
+    let sup = SupervisorOptions {
+        breaker_failures: 1,
+        breaker_cooldown: Duration::from_millis(20),
+        breaker_successes: 1,
+        ..fast_sup()
+    };
+    let (router, group) = start_router_sup(
+        &format!("{}|{}", x.0, y.0),
+        ClientOptions::default(),
+        sup,
+        Arc::clone(&metrics),
+    );
+    let mut client = NetClient::connect(router.0).unwrap();
+    let (row, batch) = one_row_batch(234);
+    let reference = direct_logits(&art4, &row);
+    assert_eq!(client.infer("m", batch.clone()).unwrap().row(0), reference.as_slice());
+
+    let x_addr = x.0;
+    stop(x);
+    // The health probe finds the dead conn; threshold 1 opens x.
+    group.supervise_tick();
+    assert!(metrics.snapshot().net_breaker_opens >= 1, "the probe opened x's breaker");
+
+    // x "restarts" on its old address — but serving the stale bytes.
+    let x_stale = start_server_at(x_addr, &art3, Arc::new(Metrics::new()));
+    std::thread::sleep(Duration::from_millis(30)); // past the cooldown
+    for _ in 0..3 {
+        group.supervise_tick();
+        std::thread::sleep(Duration::from_millis(30));
+    }
+    let snap = metrics.snapshot();
+    assert_eq!(snap.net_reintegrations, 0, "a stale worker must never rejoin");
+    assert!(snap.net_breaker_half_opens >= 1, "the probe did walk half-open");
+    assert!(snap.net_breaker_opens >= 2, "the failed re-probe re-quarantined x");
+    assert_eq!(snap.net_breaker_closes, 0);
+
+    // Traffic keeps flowing — on the healthy replica, correct bytes.
+    assert_eq!(client.infer("m", batch).unwrap().row(0), reference.as_slice());
+    stop(router);
+    stop(x_stale);
+    stop(y);
+}
+
+/// The acceptance drill (ISSUE 10): 2 shards x 2 replicas; one
+/// replica is killed mid-load. Every request keeps serving
+/// byte-identical logits, the dead replica's breaker opens, and when
+/// the worker restarts on its old address the supervisor reintegrates
+/// it — no operator SWAP, no router restart — after which scatters
+/// demonstrably reach it again.
+#[test]
+fn killed_replica_quarantines_then_reintegrates_without_an_operator() {
+    let _g = fault::test_guard();
+    fault::clear();
+    let artifact = small_artifact(&small_params(240), "dense", 241);
+    let metrics = Arc::new(Metrics::new());
+    let a = start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::single());
+    let b = start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::single());
+    let c = start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::single());
+    let d = start_server(&artifact, Arc::new(Metrics::new()), ExecCtx::single());
+    let spec = format!("{}|{},{}|{}", a.0, b.0, c.0, d.0);
+    let (router, group) =
+        start_router_sup(&spec, ClientOptions::default(), fast_sup(), Arc::clone(&metrics));
+    let mut client = NetClient::connect(router.0).unwrap();
+    let (row, batch) = one_row_batch(242);
+    let reference = direct_logits(&artifact, &row);
+
+    for _ in 0..5 {
+        assert_eq!(client.infer("m", batch.clone()).unwrap().row(0), reference.as_slice());
+    }
+
+    // Kill shard 0's primary mid-load.
+    let a_addr = a.0;
+    stop(a);
+    for _ in 0..5 {
+        assert_eq!(
+            client.infer("m", batch.clone()).unwrap().row(0),
+            reference.as_slice(),
+            "every request during the outage still serves identical bytes"
+        );
+    }
+    let snap = metrics.snapshot();
+    assert!(snap.net_breaker_opens >= 1, "the dead replica's breaker opened");
+    assert_eq!(snap.net_worker_unavailable, 0, "no request was lost");
+    assert_eq!(snap.net_worker_swaps, 0, "no operator SWAP");
+
+    // The worker restarts on its original address with the same
+    // artifact; supervision ticks walk it cooldown -> half-open ->
+    // artifact re-probe -> closed.
+    let a2_metrics = Arc::new(Metrics::new());
+    let a2 = start_server_at(a_addr, &artifact, Arc::clone(&a2_metrics));
+    let mut reintegrated = false;
+    for _ in 0..20 {
+        std::thread::sleep(Duration::from_millis(60));
+        group.supervise_tick();
+        if metrics.snapshot().net_reintegrations >= 1 {
+            reintegrated = true;
+            break;
+        }
+    }
+    assert!(reintegrated, "the replica rejoins without a SWAP or router restart");
+
+    // Subsequent scatters actually reach the reintegrated primary.
+    let base = a2_metrics.snapshot().net_requests;
+    for _ in 0..3 {
+        assert_eq!(client.infer("m", batch.clone()).unwrap().row(0), reference.as_slice());
+    }
+    assert!(
+        a2_metrics.snapshot().net_requests >= base + 3,
+        "scatters reach the reintegrated replica"
+    );
+    assert_eq!(metrics.snapshot().net_worker_swaps, 0, "still no operator action");
+    stop(router);
+    stop(a2);
+    stop(b);
+    stop(c);
+    stop(d);
 }

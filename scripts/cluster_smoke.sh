@@ -6,9 +6,14 @@
 #     cleanly and the per-worker counters surface on the router's
 #     Prometheus page (net_worker_requests grows with shard fan-out);
 #   - killing a worker degrades into a *typed* client failure (never a
-#     hang) and moves net_worker_failures / net_worker_unavailable;
-#   - the router and the surviving worker still shut down gracefully
-#     over the wire.
+#     hang), moves net_worker_unavailable, and the supervisor opens the
+#     dead replica's circuit breaker (net_breaker_opens);
+#   - restarting the worker on its original port reintegrates it with
+#     no operator SWAP and no router restart (net_reintegrations), and
+#     the re-driven traffic's logits are byte-identical to the pre-kill
+#     capture;
+#   - the router and both workers still shut down gracefully over the
+#     wire.
 # Finishes with the cluster test suite (cross-process bit-identity for
 # every kernel format × shard count, rolling swap, model-key routing).
 # Part of scripts/verify.sh and the CI cluster-smoke job.
@@ -18,13 +23,13 @@ cd "$(dirname "$0")/../rust"
 LRBI=./target/release/lrbi
 [ -x "$LRBI" ] || cargo build --release
 
-w1_log="$(mktemp)"; w2_log="$(mktemp)"; r_log="$(mktemp)"
-w1_pid=""; w2_pid=""; r_pid=""
+w1_log="$(mktemp)"; w2_log="$(mktemp)"; w2b_log="$(mktemp)"; r_log="$(mktemp)"
+w1_pid=""; w2_pid=""; w2b_pid=""; r_pid=""
 cleanup() {
-  for pid in "$r_pid" "$w1_pid" "$w2_pid"; do
+  for pid in "$r_pid" "$w1_pid" "$w2_pid" "$w2b_pid"; do
     [ -n "$pid" ] && kill "$pid" 2>/dev/null || true
   done
-  rm -f "$w1_log" "$w2_log" "$r_log"
+  rm -f "$w1_log" "$w2_log" "$w2b_log" "$r_log"
 }
 trap cleanup EXIT
 
@@ -50,8 +55,10 @@ w1=$(wait_addr "$w1_log" "$w1_pid" "worker 1")
 w2=$(wait_addr "$w2_log" "$w2_pid" "worker 2")
 echo "   workers $w1, $w2"
 
-echo "== boot: router over 2 shards (columns split 0..5, 5..10)"
+echo "== boot: router over 2 shards (columns split 0..5, 5..10), fast supervision"
 "$LRBI" serve --router 127.0.0.1:0 --workers "$w1,$w2" --shards 2 \
+  --health-interval-ms 200 --breaker-failures 1 --breaker-cooldown-ms 200 \
+  --breaker-successes 1 \
   --metrics-addr 127.0.0.1:0 >"$r_log" 2>&1 &
 r_pid=$!
 raddr=$(wait_addr "$r_log" "$r_pid" "router")
@@ -77,6 +84,19 @@ counter() { # $1=body $2=name
   printf '%s\n' "$1" | sed -n "s/^lrbi_$2 \([0-9]*\).*/\1/p"
 }
 
+# Poll the scrape until a counter reaches a floor (supervision is
+# asynchronous: probes tick every ~200ms under the flags above).
+wait_counter() { # $1=name $2=floor $3=iterations (x 0.2s)
+  local got=""
+  for _ in $(seq 1 "$3"); do
+    got=$(counter "$(scrape_body)" "$1")
+    if [ -n "$got" ] && [ "$got" -ge "$2" ]; then echo "$got"; return 0; fi
+    sleep 0.2
+  done
+  echo "timed out waiting for lrbi_$1 >= $2 (last: '${got:-missing}')" >&2
+  return 1
+}
+
 echo "== scrape: worker-tier counters surface on the router's metrics page"
 body=$(scrape_body)
 # 16 requests x 2 shards = 32 scatters minimum.
@@ -90,25 +110,53 @@ done
 fails=$(counter "$body" "net_worker_failures")
 [ "${fails:-0}" -eq 0 ] || { echo "healthy cluster reported $fails worker failures"; exit 1; }
 
+echo "== capture: reference logits before the fault (fixed-seed inputs)"
+pre_logits=$("$LRBI" serve --connect "$raddr" --requests 4 --rows 2 --print-logits \
+  | grep '^logits')
+[ -n "$pre_logits" ] || { echo "no logits captured"; exit 1; }
+
 echo "== worker loss: killing worker 2 must be a typed failure, not a hang"
 kill "$w2_pid"; wait "$w2_pid" 2>/dev/null || true; w2_pid=""
 if "$LRBI" serve --connect "$raddr" --requests 2 --rows 1 >/dev/null 2>&1; then
   echo "expected a typed 'unavailable' failure after losing a shard"; exit 1
 fi
 echo "   client failed with a typed error, as documented"
-body=$(scrape_body)
-for name in net_worker_failures net_worker_unavailable; do
-  got=$(counter "$body" "$name")
-  [ -n "$got" ] && [ "$got" -ge 1 ] \
-    || { echo "expected lrbi_$name >= 1 after worker loss, got '${got:-missing}'"; exit 1; }
-  echo "   lrbi_$name = $got (>= 1)"
-done
+got=$(counter "$(scrape_body)" "net_worker_unavailable")
+[ -n "$got" ] && [ "$got" -ge 1 ] \
+  || { echo "expected lrbi_net_worker_unavailable >= 1, got '${got:-missing}'"; exit 1; }
+echo "   lrbi_net_worker_unavailable = $got (>= 1)"
 
-echo "== graceful shutdown over the wire (router, then surviving worker)"
+echo "== supervision: the dead replica's breaker opens (no operator action)"
+got=$(wait_counter net_breaker_opens 1 50)
+echo "   lrbi_net_breaker_opens = $got (>= 1)"
+got=$(wait_counter net_health_probes 1 50)
+echo "   lrbi_net_health_probes = $got (>= 1)"
+
+echo "== restart: worker 2 comes back on its original port ($w2)"
+"$LRBI" serve --worker "$w2" --kernel lowrank --threads 2 --max-wait-ms 1 \
+  >"$w2b_log" 2>&1 &
+w2b_pid=$!
+wait_addr "$w2b_log" "$w2b_pid" "worker 2 (restarted)" >/dev/null
+
+echo "== supervision: automatic reintegration — no SWAP, no router restart"
+got=$(wait_counter net_reintegrations 1 75)
+echo "   lrbi_net_reintegrations = $got (>= 1)"
+kill -0 "$r_pid" 2>/dev/null || { echo "router died during reintegration"; exit 1; }
+
+echo "== traffic: re-driven logits are byte-identical to the pre-kill capture"
+post_logits=$("$LRBI" serve --connect "$raddr" --requests 4 --rows 2 --print-logits \
+  | grep '^logits')
+[ "$pre_logits" = "$post_logits" ] \
+  || { echo "logits changed across kill/reintegration"; exit 1; }
+echo "   4 requests, identical bytes through the reintegrated fleet"
+
+echo "== graceful shutdown over the wire (router, then both workers)"
 "$LRBI" serve --connect "$raddr" --requests 0 --shutdown >/dev/null
 wait "$r_pid"; r_pid=""
 "$LRBI" serve --connect "$w1" --requests 0 --shutdown >/dev/null
 wait "$w1_pid"; w1_pid=""
+"$LRBI" serve --connect "$w2" --requests 0 --shutdown >/dev/null
+wait "$w2b_pid"; w2b_pid=""
 
 echo "== cluster suite: cross-process bit-identity, rolling swap, key routing"
 cargo test -q --release --test cluster
